@@ -1,0 +1,83 @@
+//! BERT-pretraining scenario (Figures 1 & 2 + Table 1 in one driver).
+//!
+//! Runs the paper's three-way comparison (Adam vs 1-bit Adam vs 0/1
+//! Adam) on the BERT proxy, with the simulated 128-GPU Ethernet clock,
+//! then probes the pretrained checkpoints on the GLUE-proxy tasks.
+//!
+//! ```text
+//! cargo run --release --example bert_pretrain -- --steps 1200 [--profile]
+//! ```
+
+use zo_adam::benchkit::Table;
+use zo_adam::config::BERT_BASE;
+use zo_adam::eval::glue::{GlueProxy, GLUE_TASKS};
+use zo_adam::exp::convergence::{run_convergence, run_profiling, ConvOpts};
+use zo_adam::exp::Algo;
+use zo_adam::runtime::Runtime;
+use zo_adam::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let p = Args::new("bert_pretrain", "BERT proxy pretraining comparison")
+        .opt("steps", "1000", "training steps")
+        .opt("workers", "4", "simulated workers")
+        .opt("model", "lm_tiny", "proxy model")
+        .flag("profile", "also run the Figure-1 moment profiling")
+        .flag("glue", "probe checkpoints on GLUE-proxy tasks")
+        .parse_env();
+
+    let rt = Runtime::new("artifacts")?;
+    let mut opts = ConvOpts::quick(&BERT_BASE, p.get_u64("steps"));
+    opts.model = p.get("model").to_string();
+    opts.workers = p.get_usize("workers");
+    opts.verbose = true;
+
+    if p.get_flag("profile") {
+        println!("=== Figure 1: Adam moment profiling ===");
+        let rows = run_profiling(&rt, &opts)?;
+        for row in rows.iter().step_by((rows.len() / 10).max(1)) {
+            println!(
+                "t={:<6} |Δv|={:.5}  |v_loc−v|={:.5}  |Δm|={:.5}  |m_loc−m|={:.5}",
+                row[0].1, row[1].1, row[2].1, row[3].1, row[4].1
+            );
+        }
+        println!();
+    }
+
+    println!("=== Figure 2: convergence comparison ===");
+    let runs = run_convergence(&rt, &opts, &Algo::main_three())?;
+    let mut t = Table::new(
+        "BERT proxy — sample-wise & simulated time-wise",
+        &["algo", "final loss", "eval", "bits/param", "sim hours @128GPU-eth"],
+    );
+    for (algo, res) in &runs {
+        res.log
+            .write_csv(format!("results/bert_pretrain_{}.csv", algo.name()))?;
+        t.row(vec![
+            algo.name().to_string(),
+            format!("{:.4}", res.log.tail_loss(5).unwrap()),
+            format!("{:.4}", res.final_eval.unwrap_or(f32::NAN)),
+            format!("{:.3}", res.ledger.bits_per_param()),
+            format!("{:.2}", res.sim_total_s / 3600.0),
+        ]);
+    }
+    t.print();
+
+    if p.get_flag("glue") {
+        println!("\n=== Table 1: GLUE-proxy probes ===");
+        let glue = GlueProxy::new(&rt, &opts.model, 0)?;
+        let mut headers: Vec<&str> = vec!["checkpoint"];
+        headers.extend(GLUE_TASKS);
+        headers.push("Avg");
+        let mut t = Table::new("GLUE-proxy dev accuracy", &headers);
+        for (algo, res) in &runs {
+            let accs = glue.evaluate(&res.final_params)?;
+            let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+            let mut row = vec![algo.name().to_string()];
+            row.extend(accs.iter().map(|a| format!("{:.1}", a * 100.0)));
+            row.push(format!("{:.1}", avg * 100.0));
+            t.row(row);
+        }
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! GPT-2 pretraining scenario (Figure 6 + Table 2 LM columns).
+//!
+//! Compares 1-bit Adam and 0/1 Adam on the GPT proxy (causal LM over a
+//! Markov corpus), reporting training loss and validation perplexity
+//! against tokens consumed, plus the zero-shot-style evaluations
+//! (perplexity + final-token cloze accuracy).
+//!
+//! ```text
+//! cargo run --release --example gpt2_pretrain -- --steps 1000
+//! ```
+
+use zo_adam::benchkit::Table;
+use zo_adam::config::GPT2;
+use zo_adam::eval::{perplexity, LmEvaluator};
+use zo_adam::exp::convergence::{run_convergence, ConvOpts};
+use zo_adam::exp::Algo;
+use zo_adam::runtime::Runtime;
+use zo_adam::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let p = Args::new("gpt2_pretrain", "GPT-2 proxy pretraining (Figure 6)")
+        .opt("steps", "1000", "training steps")
+        .opt("workers", "4", "simulated workers")
+        .opt("model", "lm_tiny", "proxy model (lm_tiny|lm_small|lm_medium)")
+        .parse_env();
+
+    let rt = Runtime::new("artifacts")?;
+    let mut opts = ConvOpts::quick(&GPT2, p.get_u64("steps"));
+    opts.model = p.get("model").to_string();
+    opts.workers = p.get_usize("workers");
+    opts.sim_gpus = 64; // the paper uses 64 GPUs for GPT-2
+    opts.verbose = true;
+
+    let entry = rt.manifest.model(&opts.model)?;
+    let tokens_per_step =
+        (entry.cfg("batch")? * (entry.cfg("seq_len")? - 1) * opts.workers) as u64;
+
+    let runs = run_convergence(&rt, &opts, &[Algo::OneBitAdam, Algo::ZeroOneAdam])?;
+
+    println!("\n== Figure 6 — loss / val perplexity vs tokens ==");
+    for (algo, res) in &runs {
+        println!("\n--- {} ---", algo.name());
+        for r in res.log.records.iter().step_by((res.log.records.len() / 12).max(1)) {
+            let ppl = r.eval_loss.map(|l| format!("{:8.2}", l.exp())).unwrap_or_else(|| "   -".into());
+            println!(
+                "tokens {:>9}  loss {:.4}  val-ppl {ppl}",
+                (r.t + 1) * tokens_per_step,
+                r.loss
+            );
+        }
+        res.log
+            .write_csv(format!("results/gpt2_pretrain_{}.csv", algo.name()))?;
+    }
+
+    println!();
+    let evaluator = LmEvaluator::new(&rt, &opts.model, opts.seed)?;
+    let mut t = Table::new(
+        "Table 2 (LM columns) — zero-shot proxy evaluation",
+        &["algo", "wikitext-proxy ppl", "lambada-proxy acc %", "tokens seen"],
+    );
+    for (algo, res) in &runs {
+        let loss = evaluator.eval_loss(&res.final_params, 8)?;
+        let cloze = evaluator.cloze_accuracy(&res.final_params, 8)?;
+        t.row(vec![
+            algo.name().to_string(),
+            format!("{:.2}", perplexity(loss)),
+            format!("{:.2}", cloze * 100.0),
+            (opts.steps * tokens_per_step).to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! ImageNet/ResNet18 proxy scenario (Figure 2d/3d + Table 2 column 1).
+//!
+//! Trains the MLP image classifier on synthetic Gaussian-blob classes
+//! with all three optimizers, reports top-1 accuracy parity and the
+//! simulated small-cluster throughput sweep (the paper runs ImageNet on
+//! 4–32 GPUs because the model/batch are small).
+//!
+//! ```text
+//! cargo run --release --example imagenet_resnet_proxy -- --steps 1500
+//! ```
+
+use zo_adam::benchkit::Table;
+use zo_adam::comm::ETHERNET;
+use zo_adam::config::IMAGENET;
+use zo_adam::exp::convergence::{run_convergence, ConvOpts};
+use zo_adam::exp::{tables, Algo};
+use zo_adam::grad::hlo::HloMlpSource;
+use zo_adam::runtime::Runtime;
+use zo_adam::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let p = Args::new("imagenet_resnet_proxy", "ImageNet proxy training")
+        .opt("steps", "1500", "training steps")
+        .opt("workers", "4", "simulated workers")
+        .parse_env();
+
+    let rt = Runtime::new("artifacts")?;
+    let mut opts = ConvOpts::quick(&IMAGENET, p.get_u64("steps"));
+    opts.workers = p.get_usize("workers");
+    opts.sim_gpus = 32;
+    opts.verbose = true;
+
+    let runs = run_convergence(&rt, &opts, &Algo::main_three())?;
+
+    let mut t = Table::new(
+        "Table 2 (ImageNet column) — top-1 accuracy parity",
+        &["algo", "top-1 %", "final train loss", "bits/param"],
+    );
+    for (algo, res) in &runs {
+        let mut src = HloMlpSource::new(&rt, &opts.model, opts.seed)?;
+        let acc = src.eval_accuracy(&res.final_params, 8);
+        t.row(vec![
+            algo.name().to_string(),
+            format!("{:.2}", acc * 100.0),
+            format!("{:.4}", res.log.tail_loss(5).unwrap()),
+            format!("{:.3}", res.ledger.bits_per_param()),
+        ]);
+        res.log
+            .write_csv(format!("results/imagenet_proxy_{}.csv", algo.name()))?;
+    }
+    t.print();
+
+    println!("\n(Figure 3d) simulated throughput sweep, 4–32 GPUs, Ethernet:");
+    tables::fig3_throughput(&IMAGENET, &ETHERNET, &[4, 8, 16, 32]).print();
+    Ok(())
+}

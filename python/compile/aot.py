@@ -1,0 +1,295 @@
+"""AOT pipeline: lower every (function x model-size) pair to HLO text.
+
+Python runs ONCE, at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.  For each model config this emits:
+
+  {name}_train_step.hlo.txt   (params, batch...)        -> (loss, grads)
+  {name}_eval_loss.hlo.txt    (params, batch...)        -> (loss,)
+  {name}_features.hlo.txt     (params, tokens)          -> (pooled,)    [LM only]
+  {name}_logits.hlo.txt       (params, images)          -> (logits,)   [MLP only]
+  {name}_zo_local_step.hlo.txt  (gamma,g,m,x,u,rsv)     -> (m',x',u')  [Pallas]
+  {name}_zo_sync_step.hlo.txt   (gsum,xa,ubar,rsv)      -> (m',x')     [Pallas]
+  {name}_adam_step.hlo.txt      (gamma,g,m,v,x)         -> (m',v',x')  [Pallas]
+  {name}_ef_quantize.hlo.txt    (z,err)                 -> (q,err',scale) [Pallas]
+  {name}_init.f32             flat f32 init parameters (binary, little-endian)
+
+plus ``manifest.json`` describing configs, the flat parameter layout,
+artifact I/O signatures, and golden outputs on deterministic inputs that
+the Rust integration tests regenerate and compare against.
+
+Interchange format is HLO **text** (not ``.serialize()``): jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import adam_step as K_adam
+from .kernels import fused_step as K_fused
+from .kernels import onebit as K_onebit
+
+# Paper hyperparameters (Section 6 / Appendix C).
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Deterministic golden inputs (mirrored bit-for-bit by rust/src/runtime)
+# ---------------------------------------------------------------------------
+
+def golden_tokens(batch: int, seq: int, vocab: int) -> np.ndarray:
+    b = np.arange(batch, dtype=np.int64)[:, None]
+    s = np.arange(seq, dtype=np.int64)[None, :]
+    return ((1 + 31 * b + 7 * s) % vocab).astype(np.int32)
+
+
+def golden_images(batch: int, dim: int) -> np.ndarray:
+    b = np.arange(batch, dtype=np.float64)[:, None]
+    i = np.arange(dim, dtype=np.float64)[None, :]
+    return np.sin(0.1 * b + 0.01 * i).astype(np.float32)
+
+
+def golden_labels(batch: int, classes: int) -> np.ndarray:
+    return (np.arange(batch) % classes).astype(np.int32)
+
+
+def golden_vec(d: int, phase: float, scale: float) -> np.ndarray:
+    """Deterministic pseudo-gradient vector: scale * sin(phase + 0.001*i)."""
+    i = np.arange(d, dtype=np.float64)
+    return (scale * np.sin(phase + 0.001 * i)).astype(np.float32)
+
+
+def _head(a, k=4):
+    return [float(x) for x in np.asarray(a).reshape(-1)[:k]]
+
+
+def _norm(a):
+    return float(np.linalg.norm(np.asarray(a, dtype=np.float64)))
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+def _sig(args):
+    """JSON-able I/O signature from ShapeDtypeStructs."""
+    return [{"dtype": str(a.dtype), "shape": list(a.shape)} for a in args]
+
+
+def lower_artifact(out_dir, name, fn, example_args, run_golden=True):
+    """Lower ``fn`` at the example shapes; write HLO text; return the
+    manifest entry (with golden outputs if requested)."""
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in example_args]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    entry = {"file": fname, "inputs": _sig(example_args)}
+    if run_golden:
+        outs = jax.jit(fn)(*example_args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        entry["outputs"] = _sig([jax.ShapeDtypeStruct(o.shape, o.dtype)
+                                 for o in outs])
+        entry["golden"] = [
+            {"head": _head(o), "norm": _norm(o)} for o in outs
+        ]
+    print(f"  wrote {fname}  ({len(text)/1e6:.2f} MB hlo text)")
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Per-model pipelines
+# ---------------------------------------------------------------------------
+
+def build_lm(out_dir, cfg: M.LmConfig):
+    layout = M.lm_param_layout(cfg)
+    d = M.layout_size(layout)
+    print(f"model {cfg.name}: d={d}")
+    params = M.init_lm(cfg, seed=0)
+    assert params.shape == (d,)
+    np.asarray(params, dtype="<f4").tofile(
+        os.path.join(out_dir, f"{cfg.name}_init.f32"))
+
+    tokens = jnp.asarray(golden_tokens(cfg.batch, cfg.seq_len, cfg.vocab))
+    feat_tokens = tokens[:, :-1]
+
+    arts = {}
+    arts["train_step"] = lower_artifact(
+        out_dir, f"{cfg.name}_train_step",
+        functools.partial(M.lm_train_step, cfg=cfg), (params, tokens))
+    arts["eval_loss"] = lower_artifact(
+        out_dir, f"{cfg.name}_eval_loss",
+        lambda p, t: (M.lm_loss(p, t, cfg),), (params, tokens))
+    arts["features"] = lower_artifact(
+        out_dir, f"{cfg.name}_features",
+        lambda p, t: (M.lm_features(p, t, cfg),), (params, feat_tokens))
+    arts["last_logits"] = lower_artifact(
+        out_dir, f"{cfg.name}_last_logits",
+        lambda p, t: (M.lm_last_logits(p, t, cfg),), (params, feat_tokens))
+    arts.update(build_kernels(out_dir, cfg.name, d))
+
+    return {
+        "kind": "lm",
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "seq_len": cfg.seq_len, "d_ff": cfg.d_ff, "batch": cfg.batch,
+        },
+        "param_count": d,
+        "layout": layout_json(layout),
+        "init_file": f"{cfg.name}_init.f32",
+        "init_norm": _norm(params),
+        "artifacts": arts,
+    }
+
+
+def build_mlp(out_dir, cfg: M.MlpConfig):
+    layout = M.mlp_param_layout(cfg)
+    d = M.layout_size(layout)
+    print(f"model {cfg.name}: d={d}")
+    params = M.init_mlp(cfg, seed=0)
+    np.asarray(params, dtype="<f4").tofile(
+        os.path.join(out_dir, f"{cfg.name}_init.f32"))
+
+    images = jnp.asarray(golden_images(cfg.batch, cfg.input_dim))
+    labels = jnp.asarray(golden_labels(cfg.batch, cfg.classes))
+
+    arts = {}
+    arts["train_step"] = lower_artifact(
+        out_dir, f"{cfg.name}_train_step",
+        functools.partial(M.mlp_train_step, cfg=cfg),
+        (params, images, labels))
+    arts["eval_loss"] = lower_artifact(
+        out_dir, f"{cfg.name}_eval_loss",
+        lambda p, x, y: (M.mlp_loss(p, x, y, cfg),),
+        (params, images, labels))
+    arts["logits"] = lower_artifact(
+        out_dir, f"{cfg.name}_logits",
+        lambda p, x: (M.mlp_logits(p, x, cfg),), (params, images))
+    arts.update(build_kernels(out_dir, cfg.name, d))
+
+    return {
+        "kind": "mlp",
+        "config": {
+            "input_dim": cfg.input_dim, "hidden": list(cfg.hidden),
+            "classes": cfg.classes, "batch": cfg.batch,
+        },
+        "param_count": d,
+        "layout": layout_json(layout),
+        "init_file": f"{cfg.name}_init.f32",
+        "init_norm": _norm(params),
+        "artifacts": arts,
+    }
+
+
+def build_kernels(out_dir, name, d):
+    """Lower the Pallas optimizer kernels at this model's flat dimension.
+
+    These are the device-side hot-path twins of the Rust native step
+    engine; the Rust integration tests execute them via PJRT and compare
+    against both the manifest goldens and the native engine.
+    """
+    g = jnp.asarray(golden_vec(d, 0.3, 0.1))
+    m = jnp.asarray(golden_vec(d, 1.1, 0.05))
+    v = jnp.abs(jnp.asarray(golden_vec(d, 2.3, 0.2))) + 1e-3
+    x = jnp.asarray(golden_vec(d, 3.7, 1.0))
+    u = jnp.asarray(golden_vec(d, 4.9, 0.02))
+    rsv = 1.0 / jnp.sqrt(v + EPS)
+    gamma = jnp.asarray([1e-3], jnp.float32)
+    gsum = jnp.asarray([4e-3], jnp.float32)
+
+    arts = {}
+    arts["zo_local_step"] = lower_artifact(
+        out_dir, f"{name}_zo_local_step",
+        lambda gam, g_, m_, x_, u_, r_: K_fused.zo_local_step(
+            g_, m_, x_, u_, r_, gam, beta1=BETA1),
+        (gamma, g, m, x, u, rsv))
+    arts["zo_sync_step"] = lower_artifact(
+        out_dir, f"{name}_zo_sync_step",
+        lambda gs, xa, ub, r_: K_fused.zo_sync_step(xa, ub, r_, gs),
+        (gsum, x, u, rsv))
+    arts["adam_step"] = lower_artifact(
+        out_dir, f"{name}_adam_step",
+        lambda gam, g_, m_, v_, x_: K_adam.adam_step(
+            g_, m_, v_, x_, gam, beta1=BETA1, beta2=BETA2, eps=EPS),
+        (gamma, g, m, v, x))
+    arts["ef_quantize"] = lower_artifact(
+        out_dir, f"{name}_ef_quantize",
+        lambda z, e: K_onebit.ef_quantize(z, e),
+        (g, m))
+    return arts
+
+
+def layout_json(layout):
+    out = []
+    off = 0
+    for name, shape in layout:
+        n = int(math.prod(shape))
+        out.append({"name": name, "shape": list(shape), "offset": off,
+                    "size": n})
+        off += n
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="lm_tiny,lm_small,lm_medium,img_mlp",
+                    help="comma-separated config names "
+                         f"(LM: {list(M.LM_CONFIGS)}, MLP: {list(M.MLP_CONFIGS)})")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "tile": K_fused.TILE,
+        "hyper": {"beta1": BETA1, "beta2": BETA2, "eps": EPS},
+        "models": {},
+    }
+    for name in args.models.split(","):
+        name = name.strip()
+        if name in M.LM_CONFIGS:
+            manifest["models"][name] = build_lm(args.out_dir,
+                                                M.LM_CONFIGS[name])
+        elif name in M.MLP_CONFIGS:
+            manifest["models"][name] = build_mlp(args.out_dir,
+                                                 M.MLP_CONFIGS[name])
+        else:
+            raise SystemExit(f"unknown model config: {name}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Pallas kernel for the baseline fused Adam step (paper Equation 3).
+
+Same tile-streaming structure as fused_step.py (see its docstring for the
+TPU mapping).  This is the kernel the original-Adam and the 1-bit Adam
+full-precision-stage paths execute; the variance update makes it one
+extra input + output stream compared to the frozen-variance local step
+(6 in + 3 out = 2.25 MiB live VMEM per grid step at the default tile).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_step import TILE, _pad_to_tile
+
+
+def _adam_step_kernel(gamma_ref, g_ref, m_ref, v_ref, x_ref,
+                      m_out, v_out, x_out, *, beta1, beta2, eps):
+    """One tile of Equation 3 (conventional post-update m, v)."""
+    gamma = gamma_ref[0]
+    g = g_ref[...]
+    m_new = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v_new = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    m_out[...] = m_new
+    v_out[...] = v_new
+    x_out[...] = x_ref[...] - gamma * m_new * jax.lax.rsqrt(v_new + eps)
+
+
+def adam_step(g, m, v, x, gamma, *, beta1, beta2, eps, tile=TILE,
+              interpret=True):
+    """Fused Adam step over flat f32 vectors.
+
+    Args:
+      g, m, v, x: f32[d] gradient / momentum / variance / model vectors.
+      gamma: f32[1] learning rate.
+      beta1, beta2, eps: static Adam hyperparameters.
+
+    Returns:
+      (m_new, v_new, x_new), each f32[d].
+    """
+    (g, d), (m, _), (x, _) = (_pad_to_tile(g, tile), _pad_to_tile(m, tile),
+                              _pad_to_tile(x, tile))
+    # Pad v with 1.0 (not 0.0) so rsqrt on the padded tail stays finite.
+    rem = d % tile
+    if rem != 0:
+        v = jnp.concatenate([v, jnp.ones(tile - rem, v.dtype)])
+    dp = g.shape[0]
+    grid = (dp // tile,)
+    spec = pl.BlockSpec((tile,), lambda i: (i,))
+    out_shape = jax.ShapeDtypeStruct((dp,), g.dtype)
+    m_new, v_new, x_new = pl.pallas_call(
+        functools.partial(_adam_step_kernel, beta1=beta1, beta2=beta2,
+                          eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))] + [spec] * 4,
+        out_specs=[spec] * 3,
+        out_shape=[out_shape] * 3,
+        interpret=interpret,
+    )(gamma, g, m, v, x)
+    return m_new[:d], v_new[:d], x_new[:d]

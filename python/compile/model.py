@@ -1,0 +1,296 @@
+"""L2: JAX compute graphs lowered to HLO for the Rust coordinator.
+
+Two model families, both exposed as *flat-parameter* train steps so the
+Rust side can treat the model as a single f32[d] vector (the shape every
+distributed-optimizer paper, including 0/1 Adam, works with):
+
+  * Decoder-only transformer LM  -- the BERT/GPT-2 pre-training proxy.
+    train_step(params: f32[d], tokens: i32[B,S]) -> (loss: f32[], grads: f32[d])
+  * MLP image classifier         -- the ResNet18/ImageNet proxy.
+    train_step(params: f32[d], images: f32[B,IN], labels: i32[B]) -> (loss, grads)
+
+The parameter layout (name, shape, offset) is deterministic and exported
+in the artifact manifest so Rust and Python agree on the flattening.
+
+Design notes:
+  * value_and_grad => loss is never recomputed for the backward pass.
+  * No dropout: runs are deterministic, which the convergence-parity
+    experiments (Fig 2) rely on.
+  * Final logits are tied to the token embedding (standard for small LMs,
+    keeps d dominated by the transformer body as in the paper's models).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LmConfig:
+    """Decoder-only transformer LM configuration."""
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int          # includes the shifted target position
+    d_ff: int
+    batch: int            # per-worker batch baked into the artifact
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    """MLP image-classifier configuration (ResNet/ImageNet proxy)."""
+    name: str
+    input_dim: int
+    hidden: Tuple[int, ...]
+    classes: int
+    batch: int
+
+
+# The registry of model sizes the AOT pipeline lowers. Convergence
+# experiments use lm_tiny/lm_small (gradients actually computed on CPU);
+# lm_medium is the end-to-end example model; communication-volume and
+# throughput experiments use the paper's real parameter counts (110M/340M/
+# 117M/12M), where only d matters and no gradients are evaluated.
+LM_CONFIGS: Dict[str, LmConfig] = {
+    c.name: c for c in [
+        LmConfig("lm_tiny", vocab=256, d_model=64, n_layers=2, n_heads=4,
+                 seq_len=32, d_ff=256, batch=4),
+        LmConfig("lm_small", vocab=2048, d_model=128, n_layers=4, n_heads=4,
+                 seq_len=64, d_ff=512, batch=4),
+        LmConfig("lm_medium", vocab=8192, d_model=256, n_layers=6, n_heads=8,
+                 seq_len=64, d_ff=1024, batch=4),
+    ]
+}
+
+MLP_CONFIGS: Dict[str, MlpConfig] = {
+    c.name: c for c in [
+        MlpConfig("img_mlp", input_dim=768, hidden=(256, 128), classes=100,
+                  batch=16),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout (shared by Python init and Rust state management)
+# ---------------------------------------------------------------------------
+
+def lm_param_layout(cfg: LmConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list defining the flat layout."""
+    layout: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos_embed", (cfg.seq_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        layout += [
+            (p + "ln1.scale", (cfg.d_model,)),
+            (p + "ln1.bias", (cfg.d_model,)),
+            (p + "attn.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "attn.bqkv", (3 * cfg.d_model,)),
+            (p + "attn.wo", (cfg.d_model, cfg.d_model)),
+            (p + "attn.bo", (cfg.d_model,)),
+            (p + "ln2.scale", (cfg.d_model,)),
+            (p + "ln2.bias", (cfg.d_model,)),
+            (p + "mlp.w1", (cfg.d_model, cfg.d_ff)),
+            (p + "mlp.b1", (cfg.d_ff,)),
+            (p + "mlp.w2", (cfg.d_ff, cfg.d_model)),
+            (p + "mlp.b2", (cfg.d_model,)),
+        ]
+    layout += [("ln_f.scale", (cfg.d_model,)), ("ln_f.bias", (cfg.d_model,))]
+    return layout
+
+
+def mlp_param_layout(cfg: MlpConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    layout: List[Tuple[str, Tuple[int, ...]]] = []
+    dims = (cfg.input_dim,) + cfg.hidden + (cfg.classes,)
+    for i in range(len(dims) - 1):
+        layout += [(f"fc{i}.w", (dims[i], dims[i + 1])),
+                   (f"fc{i}.b", (dims[i + 1],))]
+    return layout
+
+
+def layout_size(layout: List[Tuple[str, Tuple[int, ...]]]) -> int:
+    return sum(int(math.prod(s)) for _, s in layout)
+
+
+def unflatten(flat: jnp.ndarray,
+              layout: List[Tuple[str, Tuple[int, ...]]]) -> Dict[str, jnp.ndarray]:
+    """Slice the flat vector into named tensors per the layout."""
+    params = {}
+    off = 0
+    for name, shape in layout:
+        n = int(math.prod(shape))
+        params[name] = flat[off:off + n].reshape(shape)
+        off += n
+    assert off == flat.shape[0], (off, flat.shape)
+    return params
+
+
+def flatten(params: Dict[str, jnp.ndarray],
+            layout: List[Tuple[str, Tuple[int, ...]]]) -> jnp.ndarray:
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in layout])
+
+
+# ---------------------------------------------------------------------------
+# Initialization (Python owns init; the flat vector ships as an artifact)
+# ---------------------------------------------------------------------------
+
+def init_lm(cfg: LmConfig, seed: int = 0) -> jnp.ndarray:
+    """Scaled-normal init, flattened. Output projections get the usual
+    1/sqrt(2*n_layers) residual scaling (GPT-2 style)."""
+    layout = lm_param_layout(cfg)
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    resid_scale = 1.0 / math.sqrt(2.0 * cfg.n_layers)
+    for name, shape in layout:
+        key, sub = jax.random.split(key)
+        if name.endswith(".scale"):
+            parts.append(jnp.ones(shape, jnp.float32).reshape(-1))
+        elif name.endswith((".bias", ".b1", ".b2", ".bqkv", ".bo")):
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            std = 0.02
+            if name.endswith(("attn.wo", "mlp.w2")):
+                std *= resid_scale
+            parts.append(
+                (std * jax.random.normal(sub, shape, jnp.float32)).reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def init_mlp(cfg: MlpConfig, seed: int = 0) -> jnp.ndarray:
+    layout = mlp_param_layout(cfg)
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in layout:
+        key, sub = jax.random.split(key)
+        if name.endswith(".b"):
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            std = 1.0 / math.sqrt(shape[0])
+            parts.append(
+                (std * jax.random.normal(sub, shape, jnp.float32)).reshape(-1))
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Transformer forward
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _attention(x, p, prefix, cfg: LmConfig):
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    qkv = x @ p[prefix + "attn.wqkv"] + p[prefix + "attn.bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    att = jnp.where(causal, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(B, S, D)
+    return out @ p[prefix + "attn.wo"] + p[prefix + "attn.bo"]
+
+
+def _lm_trunk(params_flat: jnp.ndarray, tokens: jnp.ndarray,
+              cfg: LmConfig) -> jnp.ndarray:
+    """Embedding + transformer stack + final LN. tokens: i32[B, S_in]."""
+    p = unflatten(params_flat, lm_param_layout(cfg))
+    S_in = tokens.shape[1]
+    x = p["embed"][tokens] + p["pos_embed"][:S_in][None, :, :]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = _layer_norm(x, p[pre + "ln1.scale"], p[pre + "ln1.bias"])
+        x = x + _attention(h, p, pre, cfg)
+        h = _layer_norm(x, p[pre + "ln2.scale"], p[pre + "ln2.bias"])
+        h = jax.nn.gelu(h @ p[pre + "mlp.w1"] + p[pre + "mlp.b1"])
+        x = x + h @ p[pre + "mlp.w2"] + p[pre + "mlp.b2"]
+    return _layer_norm(x, p["ln_f.scale"], p["ln_f.bias"])
+
+
+def lm_logits(params_flat: jnp.ndarray, tokens: jnp.ndarray,
+              cfg: LmConfig) -> jnp.ndarray:
+    """Final hidden -> logits over the vocab (tied embedding head)."""
+    p = unflatten(params_flat, lm_param_layout(cfg))
+    return _lm_trunk(params_flat, tokens, cfg) @ p["embed"].T
+
+
+def lm_loss(params_flat: jnp.ndarray, tokens: jnp.ndarray,
+            cfg: LmConfig) -> jnp.ndarray:
+    """Mean next-token cross-entropy. tokens: i32[B, S]."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = lm_logits(params_flat, inputs, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def lm_features(params_flat: jnp.ndarray, tokens: jnp.ndarray,
+                cfg: LmConfig) -> jnp.ndarray:
+    """Mean-pooled final hidden state, f32[B, D] — the GLUE-proxy probe
+    input (the analogue of BERT's [CLS] representation). tokens: i32[B, S-1]."""
+    return jnp.mean(_lm_trunk(params_flat, tokens, cfg), axis=1)
+
+
+def lm_last_logits(params_flat: jnp.ndarray, tokens: jnp.ndarray,
+                   cfg: LmConfig) -> jnp.ndarray:
+    """Logits for the final position only, f32[B, V] — the LAMBADA-style
+    cloze evaluation head (predict the last token of a context).
+    tokens: i32[B, S-1]."""
+    p = unflatten(params_flat, lm_param_layout(cfg))
+    h = _lm_trunk(params_flat, tokens, cfg)[:, -1, :]
+    return h @ p["embed"].T
+
+
+def lm_train_step(params_flat, tokens, cfg: LmConfig):
+    """(loss, grads_flat) via value_and_grad — the per-worker unit of
+    compute the coordinator executes every step."""
+    loss, grads = jax.value_and_grad(lm_loss)(params_flat, tokens, cfg)
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier forward
+# ---------------------------------------------------------------------------
+
+def mlp_logits(params_flat, images, cfg: MlpConfig):
+    p = unflatten(params_flat, mlp_param_layout(cfg))
+    x = images
+    n = len(cfg.hidden)
+    for i in range(n):
+        x = jax.nn.relu(x @ p[f"fc{i}.w"] + p[f"fc{i}.b"])
+    return x @ p[f"fc{n}.w"] + p[f"fc{n}.b"]
+
+
+def mlp_loss(params_flat, images, labels, cfg: MlpConfig):
+    logits = mlp_logits(params_flat, images, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)
+    return jnp.mean(nll)
+
+
+def mlp_train_step(params_flat, images, labels, cfg: MlpConfig):
+    loss, grads = jax.value_and_grad(mlp_loss)(params_flat, images, labels, cfg)
+    return loss, grads

@@ -1,0 +1,95 @@
+"""AOT pipeline tests: manifest structure, HLO text validity, goldens."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_models_complete():
+    man = _manifest()
+    for name, entry in man["models"].items():
+        assert entry["kind"] in ("lm", "mlp")
+        assert entry["param_count"] > 0
+        for art_name, art in entry["artifacts"].items():
+            path = os.path.join(ART, art["file"])
+            assert os.path.exists(path), f"{name}/{art_name} missing"
+            assert "golden" in art, f"{name}/{art_name} has no golden"
+
+
+def test_manifest_layout_matches_model():
+    man = _manifest()
+    for name, entry in man["models"].items():
+        if entry["kind"] == "lm" and name in M.LM_CONFIGS:
+            layout = M.lm_param_layout(M.LM_CONFIGS[name])
+            assert entry["param_count"] == M.layout_size(layout)
+            assert len(entry["layout"]) == len(layout)
+            assert entry["layout"][0]["offset"] == 0
+
+
+def test_init_file_matches_param_count():
+    man = _manifest()
+    for name, entry in man["models"].items():
+        path = os.path.join(ART, entry["init_file"])
+        data = np.fromfile(path, dtype="<f4")
+        assert data.shape[0] == entry["param_count"]
+        assert np.isfinite(data).all()
+        norm = float(np.linalg.norm(data.astype(np.float64)))
+        np.testing.assert_allclose(norm, entry["init_norm"], rtol=1e-6)
+
+
+def test_hlo_text_is_parseable_header():
+    """HLO text artifacts must start with an HloModule header (the format
+    the xla crate's text parser accepts)."""
+    man = _manifest()
+    for entry in man["models"].values():
+        for art in entry["artifacts"].values():
+            with open(os.path.join(ART, art["file"])) as f:
+                head = f.read(200)
+            assert head.startswith("HloModule"), art["file"]
+
+
+def test_train_step_golden_reproducible():
+    """Re-running the lowered train step must reproduce the manifest
+    golden (loss head + grad norm) — guards against nondeterminism that
+    would break the Rust integration checks."""
+    man = _manifest()
+    for name, entry in man["models"].items():
+        if entry["kind"] != "lm" or name not in M.LM_CONFIGS:
+            continue
+        cfg = M.LM_CONFIGS[name]
+        params = np.fromfile(os.path.join(ART, entry["init_file"]),
+                             dtype="<f4")
+        tokens = aot.golden_tokens(cfg.batch, cfg.seq_len, cfg.vocab)
+        import jax.numpy as jnp
+        loss, grads = M.lm_train_step(jnp.asarray(params),
+                                      jnp.asarray(tokens), cfg)
+        golden = entry["artifacts"]["train_step"]["golden"]
+        np.testing.assert_allclose(float(loss), golden[0]["head"][0],
+                                   rtol=1e-5)
+        np.testing.assert_allclose(
+            float(np.linalg.norm(np.asarray(grads, dtype=np.float64))),
+            golden[1]["norm"], rtol=1e-4)
+        break  # one model is enough; this test is slow
+
+
+def test_golden_vec_formula():
+    """Spot-check the pseudo-vector formula the Rust side mirrors."""
+    v = aot.golden_vec(10, 0.3, 0.1)
+    assert v.dtype == np.float32
+    np.testing.assert_allclose(v[0], 0.1 * np.sin(0.3), rtol=1e-6)
+    np.testing.assert_allclose(v[7], 0.1 * np.sin(0.3 + 0.007), rtol=1e-6)

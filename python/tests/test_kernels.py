@@ -1,0 +1,137 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes, tiles, seeds and hyperparameters; every Pallas
+kernel must match its pure-jnp oracle in ref.py within f32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adam_step as K_adam
+from compile.kernels import fused_step as K_fused
+from compile.kernels import onebit as K_onebit
+from compile.kernels import ref
+
+# Hot-path tolerance: kernels fuse multiplies differently from the jnp
+# oracle (fma/association), so exact equality is not expected.
+RTOL, ATOL = 1e-5, 1e-6
+
+
+def ac(a, b):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=RTOL, atol=ATOL)
+
+
+def vecs(rng, d, n):
+    return [jnp.asarray(rng.normal(size=d).astype(np.float32))
+            for _ in range(n)]
+
+
+dims = st.integers(min_value=1, max_value=5000)
+tiles = st.sampled_from([32, 256, 1024])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=dims, tile=tiles, seed=seeds,
+       beta1=st.floats(0.0, 0.999), gamma=st.floats(1e-6, 1.0))
+def test_zo_local_step_matches_ref(d, tile, seed, beta1, gamma):
+    rng = np.random.default_rng(seed)
+    g, m, x, u = vecs(rng, d, 4)
+    v = jnp.asarray(rng.uniform(1e-4, 2.0, size=d).astype(np.float32))
+    rsv = 1.0 / jnp.sqrt(v + 1e-8)
+    gam = jnp.asarray([gamma], jnp.float32)
+    got = K_fused.zo_local_step(g, m, x, u, rsv, gam, beta1=beta1, tile=tile)
+    want = ref.zo_local_step_ref(g, m, x, u, rsv, gam, beta1=beta1)
+    for a, b in zip(got, want):
+        ac(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=dims, tile=tiles, seed=seeds,
+       beta1=st.floats(0.0, 0.999), beta2=st.floats(0.9, 0.9999))
+def test_adam_step_matches_ref(d, tile, seed, beta1, beta2):
+    rng = np.random.default_rng(seed)
+    g, m, x = vecs(rng, d, 3)
+    v = jnp.asarray(rng.uniform(0.0, 2.0, size=d).astype(np.float32))
+    gam = jnp.asarray([3e-4], jnp.float32)
+    got = K_adam.adam_step(g, m, v, x, gam, beta1=beta1, beta2=beta2,
+                           eps=1e-8, tile=tile)
+    want = ref.adam_step_ref(g, m, v, x, gam, beta1=beta1, beta2=beta2,
+                             eps=1e-8)
+    for a, b in zip(got, want):
+        ac(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=dims, tile=tiles, seed=seeds)
+def test_ef_quantize_matches_ref(d, tile, seed):
+    rng = np.random.default_rng(seed)
+    z, e = vecs(rng, d, 2)
+    q, e2, s = K_onebit.ef_quantize(z, e, tile=tile)
+    qr, er, sr = ref.ef_quantize_ref(z, e)
+    ac(q, qr)
+    ac(e2, er)
+    ac(s, sr)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=dims, tile=tiles, seed=seeds)
+def test_zo_sync_step_matches_ref(d, tile, seed):
+    rng = np.random.default_rng(seed)
+    xa, ub = vecs(rng, d, 2)
+    v = jnp.asarray(rng.uniform(1e-4, 2.0, size=d).astype(np.float32))
+    rsv = 1.0 / jnp.sqrt(v + 1e-8)
+    gs = jnp.asarray([0.004], jnp.float32)
+    got = K_fused.zo_sync_step(xa, ub, rsv, gs)
+    want = ref.sync_step_ref(xa, ub, rsv, gs)
+    for a, b in zip(got, want):
+        ac(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Semantic invariants of the compressor (paper Eq. 4 / Assumption 6)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(d=dims, seed=seeds)
+def test_compressor_preserves_l1_norm(d, seed):
+    """||C[a]||_1 == ||a||_1 exactly (scale = mean |a|, d signs)."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    c = ref.onebit_compress_ref(a)
+    np.testing.assert_allclose(np.abs(np.asarray(c)).sum(),
+                               np.abs(np.asarray(a)).sum(), rtol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(d=st.integers(2, 5000), seed=seeds)
+def test_compressor_contraction(d, seed):
+    """Empirical Assumption 6: E||C[x]-x||^2 <= omega ||x||^2, omega < 1
+    requires ||C[x]-x|| < ||x|| which holds because C[x] is the best
+    {-s,+s} approximation in sign and the scale is the L2-optimal ...
+    actually only <= 1 is guaranteed in general; check <= (1+1e-6)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=d).astype(np.float32)
+    c = np.asarray(ref.onebit_compress_ref(jnp.asarray(x)))
+    err = np.linalg.norm(c - x)
+    assert err <= np.linalg.norm(x) * (1 + 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=dims, seed=seeds)
+def test_ef_quantize_telescopes(d, seed):
+    """q + err' == z + err exactly (error feedback loses nothing)."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    e = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    q, e2, _ = ref.ef_quantize_ref(z, e)
+    ac(np.asarray(q) + np.asarray(e2), np.asarray(z) + np.asarray(e))
+
+
+def test_compress_sign_of_zero_is_positive():
+    a = jnp.asarray(np.array([0.0, -1.0, 2.0], np.float32))
+    c = np.asarray(ref.onebit_compress_ref(a))
+    assert c[0] > 0  # sign(0) -> +1, matches the 1-bit wire codec

@@ -1,0 +1,32 @@
+//! Microbenchmark: full-precision vs error-feedback 1-bit AllReduce
+//! (paper Algorithms 3 and 2) across worker counts.
+
+use zo_adam::benchkit::Bench;
+use zo_adam::comm::allreduce::{allreduce_mean, EfAllReduce};
+use zo_adam::tensor::Rng;
+
+fn main() {
+    println!("== bench_allreduce ==");
+    let d = 1 << 20;
+    for &n in &[4usize, 16] {
+        let mut rng = Rng::new(2);
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut out = vec![0.0f32; d];
+        let mut ef = EfAllReduce::new(n, d);
+
+        let mut b = Bench::new().with_elements((n * d) as u64);
+        b.run(&format!("fp_allreduce/n{n}/1M"), || {
+            allreduce_mean(&refs, &mut out);
+        });
+        b.run(&format!("ef_1bit_allreduce/n{n}/1M"), || {
+            ef.reduce(&refs, &mut out);
+        });
+    }
+}

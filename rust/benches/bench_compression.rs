@@ -1,0 +1,36 @@
+//! Microbenchmark: the 1-bit codec hot path (compress / decompress /
+//! accumulate / fused compress+error) at realistic buffer sizes.
+//!
+//! This is the L3 analogue of the paper's compression-kernel cost (the
+//! dominant share of Table 3's "Others" column).
+
+use zo_adam::benchkit::Bench;
+use zo_adam::comm::compress::{self, OneBit};
+use zo_adam::tensor::Rng;
+
+fn main() {
+    println!("== bench_compression ==");
+    for &d in &[1usize << 20, 12 << 20] {
+        let mut rng = Rng::new(1);
+        let mut src = vec![0.0f32; d];
+        rng.fill_normal(&mut src, 1.0);
+        let mut packed = OneBit::zeros(d);
+        let mut err = vec![0.0f32; d];
+        let mut dense = vec![0.0f32; d];
+        let label = format!("{}M", d >> 20);
+
+        let mut b = Bench::new().with_elements(d as u64);
+        b.run(&format!("compress_into/{label}"), || {
+            compress::compress_into(&src, &mut packed);
+        });
+        b.run(&format!("compress_with_error/{label}"), || {
+            compress::compress_with_error_into(&src, &mut packed, &mut err);
+        });
+        b.run(&format!("decompress_into/{label}"), || {
+            compress::decompress_into(&packed, &mut dense);
+        });
+        b.run(&format!("accumulate_into/{label}"), || {
+            compress::accumulate_into(&packed, 0.25, &mut dense);
+        });
+    }
+}

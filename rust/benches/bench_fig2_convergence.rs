@@ -1,0 +1,62 @@
+//! Figure 2 reproduction bench: sample-wise + (simulated) time-wise
+//! convergence of Adam vs 1-bit Adam vs 0/1 Adam on the BERT proxy
+//! with real PJRT gradients.
+//!
+//! Prints the same series the paper plots (loss at sample/time
+//! checkpoints) and the end-to-end speedup factors. Steps default low
+//! enough for `cargo bench`; use the CLI (`zo-adam fig2`) for longer
+//! runs.
+
+use zo_adam::benchkit::Table;
+use zo_adam::config::BERT_BASE;
+use zo_adam::exp::convergence::{run_convergence, ConvOpts};
+use zo_adam::exp::Algo;
+use zo_adam::runtime::Runtime;
+
+fn main() {
+    let steps: u64 = std::env::var("ZO_FIG2_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let Ok(rt) = Runtime::new("artifacts") else {
+        println!("bench_fig2: artifacts not built (run `make artifacts`); skipping");
+        return;
+    };
+    let mut opts = ConvOpts::quick(&BERT_BASE, steps);
+    opts.log_every = (steps / 20).max(1);
+    let runs = run_convergence(&rt, &opts, &Algo::main_three()).expect("fig2 run");
+
+    let mut t = Table::new(
+        "Figure 2 — BERT-Base proxy convergence (128-GPU Ethernet clock)",
+        &["algo", "loss@25%", "loss@50%", "loss@100%", "eval", "sim hours", "time speedup vs adam"],
+    );
+    let adam_time = runs.iter().find(|(a, _)| *a == Algo::Adam).unwrap().1.sim_total_s;
+    for (algo, res) in &runs {
+        let at = |frac: f64| {
+            let idx = ((res.log.records.len() - 1) as f64 * frac) as usize;
+            res.log.records[idx].loss
+        };
+        t.row(vec![
+            algo.name().to_string(),
+            format!("{:.4}", at(0.25)),
+            format!("{:.4}", at(0.5)),
+            format!("{:.4}", at(1.0)),
+            format!("{:.4}", res.final_eval.unwrap_or(f32::NAN)),
+            format!("{:.2}", res.sim_total_s / 3600.0),
+            format!("{:.2}x", adam_time / res.sim_total_s),
+        ]);
+        res.log
+            .write_csv(format!("results/fig2_bench_{}.csv", algo.name()))
+            .ok();
+    }
+    t.print();
+    t.write_csv("results/fig2_bench_summary.csv").ok();
+
+    // Paper shape assertions (reported, not fatal):
+    let loss_of = |a: Algo| runs.iter().find(|(x, _)| *x == a).unwrap().1.log.tail_loss(3).unwrap();
+    let spread = (loss_of(Algo::ZeroOneAdam) - loss_of(Algo::Adam)).abs();
+    println!("\nsample-wise parity: |01adam − adam| final loss = {spread:.4}");
+    let zo = runs.iter().find(|(a, _)| *a == Algo::ZeroOneAdam).unwrap().1.sim_total_s;
+    let ob = runs.iter().find(|(a, _)| *a == Algo::OneBitAdam).unwrap().1.sim_total_s;
+    println!("time-wise: 0/1 Adam finishes {:.2}x faster than 1-bit Adam", ob / zo);
+}

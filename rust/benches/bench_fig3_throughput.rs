@@ -1,0 +1,38 @@
+//! Figure 3 reproduction bench: end-to-end throughput vs GPU count on
+//! both fabrics for every task (analytic schedule replay at true paper
+//! scale), plus harness timing of the replay itself.
+
+use zo_adam::benchkit::Bench;
+use zo_adam::comm::{ETHERNET, INFINIBAND};
+use zo_adam::config::{BERT_BASE, BERT_LARGE, GPT2, IMAGENET};
+use zo_adam::exp::analytic::simulate_run;
+use zo_adam::exp::{tables, Algo};
+
+fn main() {
+    for task in [&BERT_BASE, &BERT_LARGE] {
+        for fabric in [&ETHERNET, &INFINIBAND] {
+            let t = tables::fig3_throughput(task, fabric, &[4, 8, 16, 32, 64, 128]);
+            t.print();
+            t.write_csv(&format!("results/fig3_{}_{}.csv", task.name, fabric.name))
+                .ok();
+        }
+    }
+    tables::fig3_throughput(&IMAGENET, &ETHERNET, &[4, 8, 16, 32]).print();
+    tables::fig3_throughput(&GPT2, &ETHERNET, &[16, 32, 64]).print();
+
+    // The paper's cross-fabric headline.
+    let zo_eth = simulate_run(Algo::ZeroOneAdam, &BERT_LARGE, &ETHERNET, 128);
+    let ob_ib = simulate_run(Algo::OneBitAdam, &BERT_LARGE, &INFINIBAND, 128);
+    println!(
+        "\n0/1@Ethernet = {:.0} samples/s vs 1bit@InfiniBand = {:.0} samples/s ({:.2}x)",
+        zo_eth.throughput,
+        ob_ib.throughput,
+        zo_eth.throughput / ob_ib.throughput
+    );
+
+    // Harness cost: one full-schedule replay (153K-450K steps).
+    let mut b = Bench::new();
+    b.run("simulate_run/bert_base/128gpu", || {
+        simulate_run(Algo::ZeroOneAdam, &BERT_BASE, &ETHERNET, 128);
+    });
+}

@@ -1,0 +1,32 @@
+//! Figure 4 reproduction bench: bits/parameter + communication-round
+//! reduction across all four paper tasks (exact ledger replay of the
+//! full training schedules).
+
+use zo_adam::benchkit::Bench;
+use zo_adam::config::BERT_BASE;
+use zo_adam::exp::analytic::ledger_for;
+use zo_adam::exp::{tables, Algo};
+
+fn main() {
+    let t = tables::fig4_volume();
+    t.print();
+    t.write_csv("results/fig4_volume.csv").ok();
+
+    // Paper headline numbers.
+    let zo = ledger_for(Algo::ZeroOneAdam, &BERT_BASE);
+    let ob = ledger_for(Algo::OneBitAdam, &BERT_BASE);
+    println!(
+        "\nBERT-Base: 0/1 Adam reduces data volume by {:.1}% and rounds by {:.1}% vs 1-bit Adam",
+        (1.0 - zo.bits_per_param() / ob.bits_per_param()) * 100.0,
+        (1.0 - zo.rounds_per_step() / ob.rounds_per_step()) * 100.0
+    );
+    println!(
+        "0/1 Adam average volume: {:.3} bits/param (the \"between 0 and 1 bit\" claim)",
+        zo.bits_per_param()
+    );
+
+    let mut b = Bench::new();
+    b.run("ledger_replay/bert_base/153K-steps", || {
+        ledger_for(Algo::ZeroOneAdam, &BERT_BASE);
+    });
+}

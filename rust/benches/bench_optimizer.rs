@@ -1,0 +1,56 @@
+//! Microbenchmark: one full optimizer step per algorithm at d = 1M,
+//! n = 4 workers (the L3 hot loop), plus the PJRT-executed Pallas
+//! kernel path for the 0/1 Adam local step (the L1 hot loop).
+
+use zo_adam::benchkit::Bench;
+use zo_adam::exp::convergence::{build_optimizer, ConvOpts};
+use zo_adam::exp::Algo;
+use zo_adam::runtime::{golden_vec, HostTensor, Runtime};
+use zo_adam::tensor::Rng;
+
+fn main() {
+    println!("== bench_optimizer ==");
+    let d = 1 << 20;
+    let n = 4;
+    let opts = ConvOpts::quick(&zo_adam::config::BERT_BASE, 100_000);
+    let mut rng = Rng::new(3);
+    let grads: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 0.1);
+            v
+        })
+        .collect();
+
+    for algo in [Algo::Adam, Algo::OneBitAdam, Algo::ZeroOneAdam, Algo::ZeroOneNoLocal] {
+        let mut opt = build_optimizer(algo, vec![0.0f32; d], &opts);
+        let mut t = 0u64;
+        let mut b = Bench::new().with_elements(d as u64);
+        b.run(&format!("step/{}/d1M/n4", algo.name()), || {
+            opt.step(t, &grads);
+            t += 1;
+        });
+    }
+
+    // L1 path: the lowered Pallas zo_local_step via PJRT (artifact d).
+    if let Ok(rt) = Runtime::new("artifacts") {
+        let model = "lm_small";
+        if let Ok(exe) = rt.load(model, "zo_local_step") {
+            let kd = rt.manifest.model(model).unwrap().param_count;
+            let inputs = vec![
+                HostTensor::f32(vec![1e-3], &[1]),
+                HostTensor::f32(golden_vec(kd, 0.3, 0.1), &[kd]),
+                HostTensor::f32(golden_vec(kd, 1.1, 0.05), &[kd]),
+                HostTensor::f32(golden_vec(kd, 3.7, 1.0), &[kd]),
+                HostTensor::f32(golden_vec(kd, 4.9, 0.02), &[kd]),
+                HostTensor::f32(golden_vec(kd, 2.3, 0.2).iter().map(|v| v.abs() + 1.0).collect(), &[kd]),
+            ];
+            let mut b = Bench::new().with_elements(kd as u64);
+            b.run(&format!("pallas_zo_local_step/pjrt/{model}"), || {
+                exe.run(&inputs).unwrap();
+            });
+        }
+    } else {
+        println!("(artifacts not built; skipping PJRT kernel bench)");
+    }
+}

@@ -1,0 +1,24 @@
+//! Table 3 reproduction bench: per-step computation vs per-round fixed
+//! cost across cluster scales — the decomposition that motivates local
+//! steps (fixed costs grow with scale while computation shrinks).
+
+use zo_adam::comm::ETHERNET;
+use zo_adam::config::BERT_BASE;
+use zo_adam::exp::tables;
+
+fn main() {
+    let t = tables::table3_fixed_cost();
+    t.print();
+    t.write_csv("results/table3_fixed_cost.csv").ok();
+
+    // The crossover the paper argues from: at 128 GPUs the fixed cost
+    // exceeds half the computation for BERT-class models.
+    let cm = BERT_BASE.compute_model();
+    let fixed = ETHERNET.fixed_cost_ms(BERT_BASE.d, 128);
+    println!(
+        "\nBERT-Base @128 GPUs: computation {:.0} ms vs fixed cost {:.0} ms — skipping rounds \
+         (local steps) is the only way past this floor",
+        cm.step_ms(128),
+        fixed
+    );
+}

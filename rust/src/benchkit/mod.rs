@@ -1,0 +1,241 @@
+//! Self-contained benchmark harness (the offline environment ships no
+//! criterion). Used by every `cargo bench` target (`harness = false`).
+//!
+//! Features: warmup, timed iterations with adaptive batching, mean /
+//! p50 / p95 / min, optional throughput (elements/s), and a compact
+//! criterion-like report. Also provides [`Table`] for printing the
+//! paper-figure reproduction tables.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A benchmark group with shared settings.
+pub struct Bench {
+    /// Target measurement time per benchmark (seconds).
+    pub measure_secs: f64,
+    pub warmup_secs: f64,
+    /// Elements processed per iteration → throughput reporting.
+    pub elements: Option<u64>,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // Respect quick-mode for CI-style runs: ZO_BENCH_QUICK=1.
+        let quick = std::env::var("ZO_BENCH_QUICK").is_ok();
+        Bench {
+            measure_secs: if quick { 0.2 } else { 1.5 },
+            warmup_secs: if quick { 0.05 } else { 0.3 },
+            elements: None,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_elements(mut self, n: u64) -> Self {
+        self.elements = Some(n);
+        self
+    }
+
+    /// Run one benchmark: `f` is a single iteration.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed().as_secs_f64() < self.warmup_secs || warm_iters < 1 {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = w0.elapsed().as_secs_f64() / warm_iters as f64;
+
+        // Sample in batches sized so each sample is ≥ ~1ms.
+        let batch = ((1e-3 / per_iter.max(1e-9)).ceil() as u64).max(1);
+        let mut samples: Vec<f64> = Vec::new();
+        let m0 = Instant::now();
+        let mut total_iters = 0u64;
+        while m0.elapsed().as_secs_f64() < self.measure_secs || samples.len() < 8 {
+            let s0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(s0.elapsed().as_secs_f64() * 1e9 / batch as f64);
+            total_iters += batch;
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            p50_ns: pct(0.5),
+            p95_ns: pct(0.95),
+            min_ns: samples[0],
+            throughput: self.elements.map(|e| e as f64 / (mean / 1e9)),
+        };
+        self.report(&result);
+        self.results.push(result.clone());
+        result
+    }
+
+    fn report(&self, r: &BenchResult) {
+        let tp = r
+            .throughput
+            .map(|t| {
+                if t > 1e9 {
+                    format!("  [{:.2} Gelem/s]", t / 1e9)
+                } else {
+                    format!("  [{:.1} Melem/s]", t / 1e6)
+                }
+            })
+            .unwrap_or_default();
+        println!(
+            "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}  min {:>10}{tp}",
+            r.name,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.p50_ns),
+            fmt_ns(r.p95_ns),
+            fmt_ns(r.min_ns),
+        );
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Plain-text table printer for the figure/table reproduction benches.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Write as CSV next to the bench output (results/<name>.csv).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut text = self.headers.join(",") + "\n";
+        for row in &self.rows {
+            text.push_str(&row.join(","));
+            text.push('\n');
+        }
+        std::fs::write(path, text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("ZO_BENCH_QUICK", "1");
+        let mut b = Bench::new().with_elements(1000);
+        let mut acc = 0u64;
+        let r = b.run("noop-loop", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+        assert!(r.min_ns <= r.mean_ns * 1.5);
+        assert!(r.throughput.unwrap() > 0.0);
+        assert!(acc > 0 || acc == 0); // keep acc alive
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["algo", "x"]);
+        t.row(vec!["adam".into(), "1.0".into()]);
+        t.row(vec!["01adam".into(), "2.0".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("01adam"));
+        assert_eq!(s.lines().count(), 6);
+    }
+}

@@ -1,0 +1,308 @@
+//! Full-precision server-style AllReduce (paper Algorithm 3) and the
+//! error-feedback 1-bit AllReduce (paper Algorithm 2, Appendix A).
+//!
+//! Both run *bit-exactly* inside the coordinator process — workers are
+//! replicas in one address space — while the byte counts they would put
+//! on a real fabric are reported via [`WireStats`] and priced by
+//! `comm::network`.
+
+use super::compress::{self, OneBit};
+
+/// Bytes a single round moved per direction, per worker.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WireStats {
+    /// Bytes each worker uploads to the reduction.
+    pub up_bytes: u64,
+    /// Bytes each worker receives back.
+    pub down_bytes: u64,
+    /// Number of logical communication rounds (1 per call).
+    pub rounds: u32,
+    /// True if the payload was 1-bit compressed.
+    pub compressed: bool,
+}
+
+impl WireStats {
+    pub fn total_per_worker(&self) -> u64 {
+        self.up_bytes + self.down_bytes
+    }
+}
+
+/// Algorithm 3: out = (1/n) Σ bufs[i]; every element fp16 on the wire
+/// (the paper trains with fp16 communication enabled for all methods).
+pub fn allreduce_mean(bufs: &[&[f32]], out: &mut [f32]) -> WireStats {
+    let n = bufs.len();
+    assert!(n > 0, "allreduce over zero workers");
+    let d = out.len();
+    out.copy_from_slice(bufs[0]);
+    for buf in &bufs[1..] {
+        assert_eq!(buf.len(), d);
+        crate::tensor::axpy(out, 1.0, buf);
+    }
+    crate::tensor::scale(out, 1.0 / n as f32);
+    WireStats {
+        up_bytes: (d * 2) as u64,   // fp16 per element
+        down_bytes: (d * 2) as u64,
+        rounds: 1,
+        compressed: false,
+    }
+}
+
+/// Error-feedback 1-bit AllReduce (Algorithm 2).
+///
+/// Persistent state: one compression-error vector per worker (δᵢ) and
+/// one on the server (δ̄), both initialized to zero at t = 0 and carried
+/// across every call for the rest of training (Appendix A).
+///
+/// All scratch is pre-allocated at construction: the hot path performs
+/// zero heap allocation.
+pub struct EfAllReduce {
+    n: usize,
+    d: usize,
+    pub worker_err: Vec<Vec<f32>>,
+    pub server_err: Vec<f32>,
+    // scratch
+    sum: Vec<f32>,
+    packed: OneBit,
+}
+
+impl EfAllReduce {
+    pub fn new(n: usize, d: usize) -> Self {
+        EfAllReduce {
+            n,
+            d,
+            worker_err: vec![vec![0.0; d]; n],
+            server_err: vec![0.0; d],
+            sum: vec![0.0; d],
+            packed: OneBit::zeros(d),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// One EF-1bit round: `out` receives the twice-compressed mean that
+    /// every worker observes (they all see identical bytes).
+    pub fn reduce(&mut self, bufs: &[&[f32]], out: &mut [f32]) -> WireStats {
+        assert_eq!(bufs.len(), self.n, "worker count changed");
+        assert_eq!(out.len(), self.d);
+        let inv_n = 1.0 / self.n as f32;
+
+        // Workers: ẑᵢ = C[zᵢ + δᵢ]; δᵢ ← zᵢ + δᵢ − ẑᵢ. The server
+        // accumulates the mean of the ẑᵢ on the fly.
+        //
+        // Fused two-pass worker leg (no shifted-scratch materialization;
+        // see EXPERIMENTS.md §Perf):
+        //   pass 1: ‖z+δ‖₁ + sign bits, computing s = z + δ inline;
+        //   pass 2: δ ← s − (±scale) and sum += (±scale)/n, one sweep.
+        self.sum.iter_mut().for_each(|v| *v = 0.0);
+        for (buf, err) in bufs.iter().zip(self.worker_err.iter_mut()) {
+            // pass 1: ‖z+δ‖₁ and sign words, s computed inline.
+            self.packed.len = self.d;
+            let mut l1 = 0.0f64;
+            for ((word_slot, bchunk), echunk) in self
+                .packed
+                .signs
+                .iter_mut()
+                .zip(buf.chunks(64))
+                .zip(err.chunks(64))
+            {
+                let mut word = 0u64;
+                let mut csum = 0.0f32;
+                for (b, (&z, &e)) in bchunk.iter().zip(echunk).enumerate() {
+                    let s = z + e;
+                    csum += s.abs();
+                    word |= ((s >= 0.0) as u64) << b;
+                }
+                l1 += csum as f64;
+                *word_slot = word;
+            }
+            self.packed.scale = (l1 / self.d as f64) as f32;
+            // pass 2: δ update + server-mean accumulation, one sweep.
+            let s_bits = self.packed.scale.to_bits();
+            let acc_bits = (self.packed.scale * inv_n).to_bits();
+            for (((&word, bchunk), echunk), schunk) in self
+                .packed
+                .signs
+                .iter()
+                .zip(buf.chunks(64))
+                .zip(err.chunks_mut(64))
+                .zip(self.sum.chunks_mut(64))
+            {
+                for (b, ((&z, e), acc)) in bchunk
+                    .iter()
+                    .zip(echunk.iter_mut())
+                    .zip(schunk.iter_mut())
+                    .enumerate()
+                {
+                    let neg = (!(word >> b) & 1) as u32;
+                    *e = (z + *e) - f32::from_bits(s_bits | (neg << 31));
+                    *acc += f32::from_bits(acc_bits | (neg << 31));
+                }
+            }
+        }
+
+        // Server: z̄ = C[(1/n) Σ ẑᵢ + δ̄]; δ̄ ← ... − z̄; broadcast z̄.
+        for (s, e) in self.sum.iter_mut().zip(&self.server_err) {
+            *s += e;
+        }
+        compress::compress_with_error_into(&self.sum, &mut self.packed, &mut self.server_err);
+        compress::decompress_into(&self.packed, out);
+
+        let wire = compress::wire_bytes(self.d) as u64;
+        WireStats {
+            up_bytes: wire,
+            down_bytes: wire,
+            rounds: 1,
+            compressed: true,
+        }
+    }
+
+    /// Reset all error state (used when an optimizer stage boundary
+    /// explicitly restarts compression, e.g. 1-bit Adam at T₀).
+    pub fn reset(&mut self) {
+        for e in &mut self.worker_err {
+            e.iter_mut().for_each(|v| *v = 0.0);
+        }
+        self.server_err.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// L2 norm of all error state — used by tests and the theory checks
+    /// (Lemma 1 bounds this by a constant multiple of the buffer norm).
+    pub fn error_norm(&self) -> f64 {
+        let w: f64 = self
+            .worker_err
+            .iter()
+            .map(|e| crate::tensor::norm2(e).powi(2))
+            .sum();
+        (w + crate::tensor::norm2(&self.server_err).powi(2)).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn rand_bufs(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fp_allreduce_is_exact_mean() {
+        let bufs = rand_bufs(4, 100, 1);
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut out = vec![0.0; 100];
+        let stats = allreduce_mean(&refs, &mut out);
+        for j in 0..100 {
+            let mean: f32 = bufs.iter().map(|b| b[j]).sum::<f32>() / 4.0;
+            assert!((out[j] - mean).abs() < 1e-6);
+        }
+        assert_eq!(stats.up_bytes, 200);
+        assert!(!stats.compressed);
+    }
+
+    #[test]
+    fn ef_output_is_one_bit_valued() {
+        // The broadcast value has exactly one magnitude: |out[j]| = scale.
+        let bufs = rand_bufs(3, 257, 2);
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut ef = EfAllReduce::new(3, 257);
+        let mut out = vec![0.0; 257];
+        let stats = ef.reduce(&refs, &mut out);
+        let mag = out[0].abs();
+        assert!(out.iter().all(|v| (v.abs() - mag).abs() < 1e-7));
+        assert!(stats.compressed);
+        assert_eq!(stats.up_bytes, compress::wire_bytes(257) as u64);
+    }
+
+    #[test]
+    fn ef_telescoping_identity() {
+        // Over T rounds: Σ out_t = Σ mean(bufs_t) + (δ_0 − δ_T) summed
+        // over workers/server — i.e. the EF mechanism loses nothing.
+        let n = 4;
+        let d = 64;
+        let mut ef = EfAllReduce::new(n, d);
+        let mut sum_out = vec![0.0f64; d];
+        let mut sum_mean = vec![0.0f64; d];
+        let mut out = vec![0.0f32; d];
+        for t in 0..50 {
+            let bufs = rand_bufs(n, d, 100 + t);
+            let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            ef.reduce(&refs, &mut out);
+            for j in 0..d {
+                sum_out[j] += out[j] as f64;
+                sum_mean[j] +=
+                    bufs.iter().map(|b| b[j] as f64).sum::<f64>() / n as f64;
+            }
+        }
+        // residual = mean worker error + server error (δ_T, since δ_0=0)
+        for j in 0..d {
+            let resid: f64 = ef
+                .worker_err
+                .iter()
+                .map(|e| e[j] as f64)
+                .sum::<f64>()
+                / n as f64
+                + ef.server_err[j] as f64;
+            let lhs = sum_out[j] + resid;
+            assert!(
+                (lhs - sum_mean[j]).abs() < 1e-3,
+                "j={j}: {lhs} vs {}",
+                sum_mean[j]
+            );
+        }
+    }
+
+    #[test]
+    fn ef_error_stays_bounded() {
+        // Lemma 1: error norms stay O(buffer norm) — no blow-up over time.
+        let n = 2;
+        let d = 128;
+        let mut ef = EfAllReduce::new(n, d);
+        let mut out = vec![0.0f32; d];
+        let mut max_err: f64 = 0.0;
+        for t in 0..200 {
+            let bufs = rand_bufs(n, d, 500 + t);
+            let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            ef.reduce(&refs, &mut out);
+            max_err = max_err.max(ef.error_norm());
+        }
+        // buffers have norm ~ sqrt(d) ≈ 11.3; errors should stay within
+        // a small constant multiple.
+        assert!(max_err < 80.0, "error norm grew to {max_err}");
+    }
+
+    #[test]
+    fn ef_reset_clears_state() {
+        let mut ef = EfAllReduce::new(2, 8);
+        let bufs = rand_bufs(2, 8, 9);
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut out = vec![0.0f32; 8];
+        ef.reduce(&refs, &mut out);
+        assert!(ef.error_norm() > 0.0);
+        ef.reset();
+        assert_eq!(ef.error_norm(), 0.0);
+    }
+
+    #[test]
+    fn identical_buffers_roundtrip_sign_pattern() {
+        // With all workers equal and zero error state, the first round's
+        // output signs equal the input signs.
+        let buf = vec![1.0f32, -2.0, 3.0, -4.0];
+        let refs: Vec<&[f32]> = vec![&buf, &buf];
+        let mut ef = EfAllReduce::new(2, 4);
+        let mut out = vec![0.0f32; 4];
+        ef.reduce(&refs, &mut out);
+        for j in 0..4 {
+            assert_eq!(out[j] >= 0.0, buf[j] >= 0.0);
+        }
+    }
+}

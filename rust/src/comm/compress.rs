@@ -1,0 +1,281 @@
+//! 1-bit compression codec (paper Equation 4) and ablation codecs.
+//!
+//! `C[a] = (||a||_1 / d) * sign(a)` — each coordinate carries one sign
+//! bit; a single f32 scale is shared by the whole tensor. On the wire
+//! the signs are packed 64-per-u64 (bit set ⇔ non-negative, matching
+//! `sign(0) = +1` in the Python reference and Pallas kernel).
+//!
+//! Also provides the TernGrad-style ternary codec and a top-k sparsifier
+//! used by the related-work ablation benches.
+
+/// Packed 1-bit tensor: sign bitmap + shared magnitude.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OneBit {
+    pub signs: Vec<u64>,
+    pub scale: f32,
+    pub len: usize,
+}
+
+impl OneBit {
+    pub fn zeros(len: usize) -> Self {
+        OneBit { signs: vec![0; len.div_ceil(64)], scale: 0.0, len }
+    }
+
+    /// Exact wire size: packed bits + one f32 scale.
+    pub fn wire_bytes(&self) -> usize {
+        wire_bytes(self.len)
+    }
+}
+
+/// Wire bytes for a d-element 1-bit tensor.
+pub fn wire_bytes(d: usize) -> usize {
+    d.div_ceil(8) + 4
+}
+
+/// Compress `src` into `dst` (reusing its buffers).
+pub fn compress_into(src: &[f32], dst: &mut OneBit) {
+    let d = src.len();
+    dst.len = d;
+    dst.signs.clear();
+    dst.signs.resize(d.div_ceil(64), 0);
+    // ‖·‖₁ accumulates in f32 within each 64-element chunk (exact
+    // enough) and in f64 across chunks (no drift at d ~ 10^8).
+    let mut l1 = 0.0f64;
+    for (w, chunk) in src.chunks(64).enumerate() {
+        let mut word = 0u64;
+        let mut csum = 0.0f32;
+        for (b, &v) in chunk.iter().enumerate() {
+            csum += v.abs();
+            // sign(0) -> +1: bit set for v >= 0 (branchless).
+            word |= ((v >= 0.0) as u64) << b;
+        }
+        l1 += csum as f64;
+        dst.signs[w] = word;
+    }
+    dst.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
+}
+
+pub fn compress(src: &[f32]) -> OneBit {
+    let mut out = OneBit::zeros(src.len());
+    compress_into(src, &mut out);
+    out
+}
+
+/// Decompress into a dense vector: out[i] = ±scale.
+///
+/// Hot path: processes one 64-bit sign word per 64 outputs and applies
+/// the sign branchlessly through the f32 sign bit (scale ≥ 0 by
+/// construction), which lets the loop vectorize (§Perf in
+/// EXPERIMENTS.md: 141 → >1000 Melem/s).
+pub fn decompress_into(src: &OneBit, out: &mut [f32]) {
+    assert_eq!(out.len(), src.len);
+    let s_bits = src.scale.to_bits();
+    for (w, chunk) in out.chunks_mut(64).enumerate() {
+        let word = src.signs[w];
+        for (b, o) in chunk.iter_mut().enumerate() {
+            let neg = (!(word >> b) & 1) as u32; // 1 ⇔ negative
+            *o = f32::from_bits(s_bits | (neg << 31));
+        }
+    }
+}
+
+/// out[i] += ±scale — the accumulate form used by the server-side mean
+/// (avoids materializing each worker's dense decompression).
+/// Word-hoisted + branchless like [`decompress_into`].
+pub fn accumulate_into(src: &OneBit, weight: f32, out: &mut [f32]) {
+    assert_eq!(out.len(), src.len);
+    let s = src.scale * weight;
+    let s_bits = s.abs().to_bits();
+    let base_sign = ((s.to_bits() >> 31) & 1) as u32;
+    for (w, chunk) in out.chunks_mut(64).enumerate() {
+        let word = src.signs[w];
+        for (b, o) in chunk.iter_mut().enumerate() {
+            let neg = ((!(word >> b) & 1) as u32) ^ base_sign;
+            *o += f32::from_bits(s_bits | (neg << 31));
+        }
+    }
+}
+
+/// Fused compress(src) + error update: err ← src − C[src] and returns
+/// C packed into `dst`. `src` here is already z + err (caller adds).
+///
+/// Two passes (the scale is a global statistic, so the error update
+/// cannot start before the ‖·‖₁ pass finishes), both word-hoisted.
+pub fn compress_with_error_into(src: &[f32], dst: &mut OneBit, err: &mut [f32]) {
+    compress_into(src, dst);
+    let s_bits = dst.scale.to_bits();
+    for ((w, echunk), vchunk) in err.chunks_mut(64).enumerate().zip(src.chunks(64)) {
+        let word = dst.signs[w];
+        for (b, (e, v)) in echunk.iter_mut().zip(vchunk).enumerate() {
+            let neg = (!(word >> b) & 1) as u32;
+            *e = v - f32::from_bits(s_bits | (neg << 31));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ablation codecs (related work, Section 2)
+// ---------------------------------------------------------------------
+
+/// TernGrad-style ternary quantization: {-s, 0, +s} with s = max |a|,
+/// stochastic rounding of |a|/s. 2 bits/coordinate on the wire.
+pub fn ternary_compress(src: &[f32], rng: &mut crate::tensor::Rng) -> (Vec<i8>, f32) {
+    let s = crate::tensor::norm_inf(src);
+    if s == 0.0 {
+        return (vec![0; src.len()], 0.0);
+    }
+    let q = src
+        .iter()
+        .map(|&v| {
+            let p = (v.abs() / s) as f64;
+            let keep = rng.uniform() < p;
+            if !keep {
+                0
+            } else if v >= 0.0 {
+                1
+            } else {
+                -1
+            }
+        })
+        .collect();
+    (q, s)
+}
+
+pub fn ternary_wire_bytes(d: usize) -> usize {
+    d.div_ceil(4) + 4
+}
+
+/// Top-k sparsification: keep the k largest-|.| coordinates.
+/// Wire: k * (4B index + 4B value).
+pub fn topk_compress(src: &[f32], k: usize) -> Vec<(u32, f32)> {
+    let mut idx: Vec<u32> = (0..src.len() as u32).collect();
+    let k = k.min(src.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        src[b as usize]
+            .abs()
+            .partial_cmp(&src[a as usize].abs())
+            .unwrap()
+    });
+    idx.truncate(k);
+    idx.iter().map(|&i| (i, src[i as usize])).collect()
+}
+
+pub fn topk_wire_bytes(k: usize) -> usize {
+    k * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{norm1, norm2, Rng};
+
+    #[test]
+    fn roundtrip_signs_and_scale() {
+        let src = vec![1.0f32, -2.0, 0.0, 4.0, -0.5];
+        let c = compress(&src);
+        assert!((c.scale - 7.5 / 5.0).abs() < 1e-6);
+        let mut out = vec![0.0; 5];
+        decompress_into(&c, &mut out);
+        assert_eq!(out, vec![1.5, -1.5, 1.5, 1.5, -1.5]);
+    }
+
+    #[test]
+    fn l1_norm_preserved() {
+        let mut rng = Rng::new(1);
+        let mut src = vec![0.0f32; 777];
+        rng.fill_normal(&mut src, 1.0);
+        let c = compress(&src);
+        let mut out = vec![0.0; 777];
+        decompress_into(&c, &mut out);
+        assert!((norm1(&out) - norm1(&src)).abs() / norm1(&src) < 1e-5);
+    }
+
+    #[test]
+    fn wire_bytes_exact() {
+        assert_eq!(wire_bytes(0), 4);
+        assert_eq!(wire_bytes(1), 5);
+        assert_eq!(wire_bytes(8), 5);
+        assert_eq!(wire_bytes(9), 6);
+        assert_eq!(wire_bytes(1_000_000), 125_000 + 4);
+    }
+
+    #[test]
+    fn compression_is_contraction() {
+        // Empirical Assumption 6: ||C[x] - x|| <= ||x|| for gaussians.
+        let mut rng = Rng::new(7);
+        for trial in 0..20 {
+            let d = 10 + trial * 37;
+            let mut src = vec![0.0f32; d];
+            rng.fill_normal(&mut src, 2.0);
+            let c = compress(&src);
+            let mut out = vec![0.0; d];
+            decompress_into(&c, &mut out);
+            let err: f64 = out
+                .iter()
+                .zip(&src)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            assert!(err <= norm2(&src) * (1.0 + 1e-6), "d={d}");
+        }
+    }
+
+    #[test]
+    fn error_update_telescopes() {
+        // q + err == src per coordinate up to one rounding of the
+        // subtraction err = src - q.
+        let src = vec![0.3f32, -0.7, 2.0, -0.01];
+        let mut dst = OneBit::zeros(4);
+        let mut err = vec![0.0f32; 4];
+        compress_with_error_into(&src, &mut dst, &mut err);
+        let mut q = vec![0.0f32; 4];
+        decompress_into(&dst, &mut q);
+        for i in 0..4 {
+            assert!((q[i] + err[i] - src[i]).abs() <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn accumulate_matches_decompress() {
+        let src = vec![1.0f32, -1.0, 3.0];
+        let c = compress(&src);
+        let mut a = vec![10.0f32; 3];
+        accumulate_into(&c, 2.0, &mut a);
+        let mut dec = vec![0.0f32; 3];
+        decompress_into(&c, &mut dec);
+        for i in 0..3 {
+            assert!((a[i] - (10.0 + 2.0 * dec[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ternary_levels_and_magnitude() {
+        let mut rng = Rng::new(3);
+        let src = vec![1.0f32, -3.0, 0.5, 0.0];
+        let (q, s) = ternary_compress(&src, &mut rng);
+        assert_eq!(s, 3.0);
+        assert!(q.iter().all(|&v| v == -1 || v == 0 || v == 1));
+        // the max-|.| element is always kept
+        assert_eq!(q[1], -1);
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let src = vec![0.1f32, -5.0, 0.2, 3.0, -0.05];
+        let mut kept = topk_compress(&src, 2);
+        kept.sort_by_key(|&(i, _)| i);
+        assert_eq!(kept, vec![(1, -5.0), (3, 3.0)]);
+        assert_eq!(topk_wire_bytes(2), 16);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let c = compress(&[]);
+        assert_eq!(c.scale, 0.0);
+        let c = compress(&[-2.0]);
+        assert_eq!(c.scale, 2.0);
+        let mut out = vec![0.0f32];
+        decompress_into(&c, &mut out);
+        assert_eq!(out[0], -2.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Communication substrate: codecs, AllReduce algorithms (paper
+//! Algorithms 2 & 3), the analytic network-timing model, and the
+//! volume/round ledger behind Figure 4.
+
+pub mod allreduce;
+pub mod compress;
+pub mod network;
+pub mod volume;
+
+pub use allreduce::{allreduce_mean, EfAllReduce, WireStats};
+pub use compress::{compress, decompress_into, wire_bytes, OneBit};
+pub use network::{ComputeModel, Fabric, ETHERNET, INFINIBAND};
+pub use volume::VolumeLedger;

@@ -1,0 +1,144 @@
+//! Communication-volume and round accounting (paper Figure 4).
+//!
+//! The ledger accumulates the exact bytes each optimizer would put on
+//! the wire (per worker) plus the number of communication rounds, and
+//! reports the paper's two Figure-4 metrics:
+//!   * average bits per parameter per step
+//!   * communication rounds, normalized by total steps
+
+use super::allreduce::WireStats;
+
+#[derive(Debug, Clone, Default)]
+pub struct VolumeLedger {
+    pub d: usize,
+    pub steps: u64,
+    pub fp_rounds: u64,
+    pub onebit_rounds: u64,
+    pub skipped_steps: u64,
+    /// Total wire bytes per worker (up + down) over the run.
+    pub bytes_total: u64,
+}
+
+impl VolumeLedger {
+    pub fn new(d: usize) -> Self {
+        VolumeLedger { d, ..Default::default() }
+    }
+
+    /// Record one optimizer step's communication (possibly none).
+    pub fn record_step(&mut self, rounds: &[WireStats]) {
+        self.steps += 1;
+        if rounds.is_empty() {
+            self.skipped_steps += 1;
+        }
+        for s in rounds {
+            self.bytes_total += s.total_per_worker();
+            if s.compressed {
+                self.onebit_rounds += s.rounds as u64;
+            } else {
+                self.fp_rounds += s.rounds as u64;
+            }
+        }
+    }
+
+    pub fn rounds_total(&self) -> u64 {
+        self.fp_rounds + self.onebit_rounds
+    }
+
+    /// Average bits each parameter coordinate spends on the wire per
+    /// step (the Figure 4 "bits per parameter" y-axis). Counts upload
+    /// only, matching the paper's per-parameter volume accounting.
+    pub fn bits_per_param(&self) -> f64 {
+        if self.steps == 0 || self.d == 0 {
+            return 0.0;
+        }
+        // bytes_total counts up+down; per-param volume uses one direction.
+        (self.bytes_total as f64 / 2.0) * 8.0 / (self.d as f64 * self.steps as f64)
+    }
+
+    /// Rounds normalized by steps (Figure 4 right panel).
+    pub fn rounds_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.rounds_total() as f64 / self.steps as f64
+    }
+
+    /// Fraction of steps that communicated at all.
+    pub fn comm_step_fraction(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        1.0 - self.skipped_steps as f64 / self.steps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::compress::wire_bytes;
+
+    fn fp(d: usize) -> WireStats {
+        WireStats { up_bytes: (2 * d) as u64, down_bytes: (2 * d) as u64, rounds: 1, compressed: false }
+    }
+
+    fn ob(d: usize) -> WireStats {
+        let w = wire_bytes(d) as u64;
+        WireStats { up_bytes: w, down_bytes: w, rounds: 1, compressed: true }
+    }
+
+    #[test]
+    fn fp16_every_step_is_16_bits_per_param() {
+        let d = 1 << 20;
+        let mut l = VolumeLedger::new(d);
+        for _ in 0..100 {
+            l.record_step(&[fp(d)]);
+        }
+        assert!((l.bits_per_param() - 16.0).abs() < 1e-9);
+        assert_eq!(l.rounds_per_step(), 1.0);
+        assert_eq!(l.comm_step_fraction(), 1.0);
+    }
+
+    #[test]
+    fn onebit_every_step_is_about_1_bit() {
+        let d = 1 << 20;
+        let mut l = VolumeLedger::new(d);
+        for _ in 0..100 {
+            l.record_step(&[ob(d)]);
+        }
+        let b = l.bits_per_param();
+        assert!((b - 1.0).abs() < 0.01, "bits/param = {b}");
+    }
+
+    #[test]
+    fn skipping_rounds_drops_below_1_bit() {
+        // The "0/1" in 0/1 Adam: with local steps the average volume
+        // falls between 0 and 1 bits per parameter.
+        let d = 1 << 20;
+        let mut l = VolumeLedger::new(d);
+        for t in 0..100u64 {
+            if t % 4 == 0 {
+                l.record_step(&[ob(d)]);
+            } else {
+                l.record_step(&[]);
+            }
+        }
+        let b = l.bits_per_param();
+        assert!(b < 0.3 && b > 0.2, "bits/param = {b}");
+        assert_eq!(l.comm_step_fraction(), 0.25);
+        assert_eq!(l.skipped_steps, 75);
+    }
+
+    #[test]
+    fn mixed_rounds_accumulate() {
+        let d = 1000;
+        let mut l = VolumeLedger::new(d);
+        l.record_step(&[fp(d), ob(d)]); // a T_v step with both rounds
+        assert_eq!(l.fp_rounds, 1);
+        assert_eq!(l.onebit_rounds, 1);
+        assert_eq!(l.rounds_total(), 2);
+        assert_eq!(
+            l.bytes_total,
+            (4 * d) as u64 + 2 * wire_bytes(d) as u64
+        );
+    }
+}

@@ -1,0 +1,139 @@
+//! Experiment presets: the paper's four workloads with their real
+//! parameter counts, batch sizes, schedules and policies, plus the
+//! proxy-model bindings used when gradients are actually computed.
+
+use crate::comm::network::ComputeModel;
+use crate::optim::policy::{SyncPolicy, SyncSchedule, VarPolicy, VarSchedule};
+use crate::optim::{BertLr, CosineLr, LrSchedule, MilestoneLr};
+
+/// One paper workload at its true scale (used by the analytic
+/// volume/throughput experiments where only d, T, batch matter).
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub name: &'static str,
+    /// True parameter count (the d of the communication).
+    pub d: usize,
+    /// Global batch size (samples per step across the cluster).
+    pub global_batch: usize,
+    /// Total training steps in the paper's recipe.
+    pub total_steps: u64,
+    /// 1-bit Adam full-precision stage length (paper Appendix C).
+    pub onebit_t0: u64,
+    /// Proxy model artifact for gradient-real runs.
+    pub proxy_model: &'static str,
+}
+
+pub const BERT_BASE: Task = Task {
+    name: "bert_base",
+    d: 110_000_000,
+    global_batch: 4096,
+    // 1-bit Adam's T0=16K is "~15% of total" per the paper's Section 3
+    // footnote arithmetic => T ≈ 107K for Base; we use the same 153K as
+    // Large for a uniform seq-128 recipe (T0 fractions then match the
+    // paper's 10–15% range).
+    total_steps: 153_000,
+    onebit_t0: 16_000,
+    proxy_model: "lm_tiny",
+};
+
+pub const BERT_LARGE: Task = Task {
+    name: "bert_large",
+    d: 340_000_000,
+    global_batch: 4096,
+    // Section 3 footnote: T0=23K is 15% of total => T ≈ 153K.
+    total_steps: 153_000,
+    onebit_t0: 23_000,
+    proxy_model: "lm_small",
+};
+
+pub const GPT2: Task = Task {
+    name: "gpt2",
+    d: 117_000_000,
+    global_batch: 512,
+    total_steps: 300_000,
+    onebit_t0: 80_000,
+    proxy_model: "lm_tiny",
+};
+
+pub const IMAGENET: Task = Task {
+    name: "imagenet",
+    d: 12_000_000,
+    global_batch: 256,
+    total_steps: 450_450, // 90 epochs × 5005 steps
+    onebit_t0: 50_050,
+    proxy_model: "img_mlp",
+};
+
+pub const ALL_TASKS: [&Task; 4] = [&BERT_BASE, &BERT_LARGE, &GPT2, &IMAGENET];
+
+impl Task {
+    pub fn by_name(name: &str) -> Option<&'static Task> {
+        ALL_TASKS.iter().find(|t| t.name == name).copied()
+    }
+
+    /// Paper-calibrated per-step compute model (Appendix B Table 3).
+    pub fn compute_model(&self) -> ComputeModel {
+        // GPT-2 and BERT-Large share the BERT-class compute profile;
+        // see ComputeModel::paper.
+        ComputeModel::paper(self.name)
+    }
+
+    /// The paper's learning-rate schedule for this task.
+    pub fn lr_schedule(&self) -> Box<dyn LrSchedule> {
+        match self.name {
+            "imagenet" => Box::new(MilestoneLr::paper_imagenet()),
+            "gpt2" => Box::new(CosineLr::paper_gpt2(1.5e-4)),
+            _ => Box::new(BertLr::paper()),
+        }
+    }
+
+    /// The paper's T_u policy for this task.
+    pub fn sync_schedule(&self) -> SyncSchedule {
+        match self.name {
+            "imagenet" => SyncSchedule::paper_imagenet(),
+            _ => SyncSchedule::paper_bert(),
+        }
+    }
+
+    /// The paper's T_v policy (κ = 16 everywhere).
+    pub fn var_schedule(&self) -> VarSchedule {
+        VarSchedule::new(VarPolicy::ExpInterval { kappa: 16 })
+    }
+
+    /// The Figure-5 ablation T_u (sync every step).
+    pub fn sync_always(&self) -> SyncSchedule {
+        SyncSchedule::new(SyncPolicy::Always)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Task::by_name("bert_base").unwrap().d, 110_000_000);
+        assert_eq!(Task::by_name("gpt2").unwrap().onebit_t0, 80_000);
+        assert!(Task::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn paper_constants() {
+        assert_eq!(BERT_LARGE.d, 340_000_000);
+        assert_eq!(IMAGENET.total_steps, 450_450);
+        assert_eq!(GPT2.global_batch, 512);
+        // 1-bit Adam stage lengths from Appendix C
+        assert_eq!(BERT_BASE.onebit_t0, 16_000);
+        assert_eq!(BERT_LARGE.onebit_t0, 23_000);
+    }
+
+    #[test]
+    fn schedules_construct() {
+        for t in ALL_TASKS {
+            let _ = t.lr_schedule();
+            let _ = t.sync_schedule();
+            let _ = t.var_schedule();
+            let _ = t.compute_model();
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Metric records and writers (CSV + JSON) for every experiment.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One logged training step.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub t: u64,
+    pub loss: f64,
+    pub lr: f64,
+    pub synced: bool,
+    pub var_updated: bool,
+    /// Wire bytes this step (per worker, up+down).
+    pub wire_bytes: u64,
+    /// Simulated cluster time consumed by this step (ms).
+    pub sim_ms: f64,
+    /// Cumulative simulated time at the end of this step (s).
+    pub sim_total_s: f64,
+    /// Held-out eval loss, when measured this step.
+    pub eval_loss: Option<f64>,
+}
+
+/// An in-memory metric log with file writers.
+#[derive(Debug, Default, Clone)]
+pub struct MetricLog {
+    pub records: Vec<StepRecord>,
+    pub run_name: String,
+}
+
+impl MetricLog {
+    pub fn new(run_name: &str) -> Self {
+        MetricLog { records: Vec::new(), run_name: run_name.to_string() }
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the final `k` records (smoother convergence read).
+    pub fn tail_loss(&self, k: usize) -> Option<f64> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(k)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "step,loss,lr,synced,var_updated,wire_bytes,sim_ms,sim_total_s,eval_loss\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{:.6},{:.8},{},{},{},{:.4},{:.4},{}\n",
+                r.t,
+                r.loss,
+                r.lr,
+                r.synced as u8,
+                r.var_updated as u8,
+                r.wire_bytes,
+                r.sim_ms,
+                r.sim_total_s,
+                r.eval_loss.map(|e| format!("{e:.6}")).unwrap_or_default(),
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("run", Json::Str(self.run_name.clone())),
+            (
+                "records",
+                Json::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("t", Json::Num(r.t as f64)),
+                                ("loss", Json::Num(r.loss)),
+                                ("lr", Json::Num(r.lr)),
+                                ("synced", Json::Bool(r.synced)),
+                                ("wire_bytes", Json::Num(r.wire_bytes as f64)),
+                                ("sim_ms", Json::Num(r.sim_ms)),
+                                ("sim_total_s", Json::Num(r.sim_total_s)),
+                                (
+                                    "eval_loss",
+                                    r.eval_loss.map(Json::Num).unwrap_or(Json::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: u64, loss: f64) -> StepRecord {
+        StepRecord {
+            t,
+            loss,
+            lr: 1e-3,
+            synced: true,
+            var_updated: false,
+            wire_bytes: 100,
+            sim_ms: 2.0,
+            sim_total_s: 0.002 * (t + 1) as f64,
+            eval_loss: None,
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = MetricLog::new("test");
+        log.push(rec(0, 5.0));
+        log.push(rec(1, 4.0));
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("step,loss"));
+        assert!(csv.contains("1,4.000000"));
+    }
+
+    #[test]
+    fn tail_loss_averages() {
+        let mut log = MetricLog::new("test");
+        for t in 0..10 {
+            log.push(rec(t, t as f64));
+        }
+        assert_eq!(log.tail_loss(2), Some(8.5));
+        assert_eq!(log.last_loss(), Some(9.0));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut log = MetricLog::new("r");
+        log.push(rec(0, 1.0));
+        let j = log.to_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.get("records").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! The L3 coordinator: training-loop orchestration, metrics, profiling.
+
+pub mod metrics;
+pub mod profiling;
+pub mod trainer;
+
+pub use metrics::{MetricLog, StepRecord};
+pub use profiling::MomentProfiler;
+pub use trainer::{NoObserver, RunResult, StepObserver, Trainer, TrainerConfig};

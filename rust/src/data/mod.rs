@@ -1,0 +1,14 @@
+//! Synthetic workloads (DESIGN.md §Hardware-Adaptation):
+//! * [`text::MarkovCorpus`] — heavy-tailed token streams standing in
+//!   for Wikipedia/BooksCorpus/OpenWebText.
+//! * [`image::BlobImages`] — Gaussian class-prototype images standing
+//!   in for ImageNet-1k.
+//!
+//! Both are deterministic in (seed, worker, step): runs are exactly
+//! reproducible and workers see disjoint shards by stream construction.
+
+pub mod image;
+pub mod text;
+
+pub use image::BlobImages;
+pub use text::MarkovCorpus;

@@ -1,0 +1,177 @@
+//! GLUE-proxy downstream evaluation (Table 1 reproduction).
+//!
+//! The paper fine-tunes BERT checkpoints on the 9 GLUE tasks and shows
+//! that 0/1 Adam's checkpoints match Adam's and 1-bit Adam's scores.
+//! Our proxy: 9 synthetic sequence-classification tasks (each class is
+//! a distinct Markov dynamics — see `MarkovCorpus::classed_batch`);
+//! the probe is a logistic head on the pretrained model's pooled
+//! features (the `features` artifact = our [CLS] analogue). The claim
+//! shape preserved: *checkpoints trained by different optimizers reach
+//! the same downstream accuracy on identical tasks*.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::data::MarkovCorpus;
+use crate::runtime::{Executable, HostTensor, Runtime};
+use crate::tensor::Rng;
+
+/// The paper's Table-1 task names (our tasks are synthetic proxies
+/// indexed in this order).
+pub const GLUE_TASKS: [&str; 9] =
+    ["RTE", "MRPC", "STS-B", "CoLA", "SST-2", "QNLI", "QQP", "MNLI-m", "MNLI-mm"];
+
+pub struct GlueProxy {
+    features_exe: Rc<Executable>,
+    corpus: MarkovCorpus,
+    d: usize,
+    feat_dim: usize,
+    batch: usize,
+    seq: usize,
+    /// Train/dev batches per class per task.
+    pub train_batches: usize,
+    pub dev_batches: usize,
+}
+
+impl GlueProxy {
+    pub fn new(rt: &Runtime, model: &str, seed: u64) -> Result<Self> {
+        let entry = rt.manifest.model(model)?;
+        let batch = entry.cfg("batch")?;
+        let seq = entry.cfg("seq_len")? - 1; // features take S-1 tokens
+        let vocab = entry.cfg("vocab")?;
+        let feat_dim = entry.cfg("d_model")?;
+        Ok(GlueProxy {
+            features_exe: rt.load(model, "features")?,
+            corpus: MarkovCorpus::new(vocab, 8, seed),
+            d: entry.param_count,
+            feat_dim,
+            batch,
+            seq,
+            train_batches: 12,
+            dev_batches: 12,
+        })
+    }
+
+    fn features(&self, params: &[f32], tokens: Vec<i32>) -> Result<Vec<f32>> {
+        let outs = self.features_exe.run(&[
+            HostTensor::f32(params.to_vec(), &[self.d]),
+            HostTensor::i32(tokens, &[self.batch, self.seq]),
+        ])?;
+        Ok(outs[0].as_f32()?.to_vec())
+    }
+
+    /// Gather (features, labels) for one task from `n_batches` batches
+    /// per class.
+    fn task_data(
+        &self,
+        params: &[f32],
+        task: u64,
+        n_batches: usize,
+        index_base: u64,
+    ) -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
+        let mut feats = Vec::new();
+        let mut labels = Vec::new();
+        for class in 0..2u32 {
+            for i in 0..n_batches {
+                let toks =
+                    self.corpus
+                        .classed_batch(self.batch, self.seq, task, class, index_base + i as u64);
+                let f = self.features(params, toks)?;
+                for b in 0..self.batch {
+                    feats.push(f[b * self.feat_dim..(b + 1) * self.feat_dim].to_vec());
+                    labels.push(if class == 0 { -1.0 } else { 1.0 });
+                }
+            }
+        }
+        Ok((feats, labels))
+    }
+
+    /// Evaluate one checkpoint on all 9 proxy tasks; returns accuracies
+    /// in GLUE_TASKS order.
+    pub fn evaluate(&self, params: &[f32]) -> Result<Vec<f64>> {
+        let mut accs = Vec::with_capacity(GLUE_TASKS.len());
+        for task in 0..GLUE_TASKS.len() as u64 {
+            let (xtr, ytr) = self.task_data(params, task, self.train_batches, 0)?;
+            let (xdev, ydev) = self.task_data(params, task, self.dev_batches, 10_000)?;
+            let w = train_probe(&xtr, &ytr, 300, 0.5, task);
+            let correct = xdev
+                .iter()
+                .zip(&ydev)
+                .filter(|(x, &y)| {
+                    let score = probe_score(&w, x);
+                    (score >= 0.0) == (y >= 0.0)
+                })
+                .count();
+            accs.push(correct as f64 / ydev.len() as f64);
+        }
+        Ok(accs)
+    }
+}
+
+fn probe_score(w: &[f32], x: &[f32]) -> f32 {
+    // last weight is the bias
+    crate::tensor::dot(&w[..x.len()], x) as f32 + w[x.len()]
+}
+
+/// L2-regularized logistic-regression probe trained with full-batch GD.
+pub fn train_probe(xs: &[Vec<f32>], ys: &[f32], epochs: usize, lr: f32, seed: u64) -> Vec<f32> {
+    let dim = xs[0].len();
+    let mut w = vec![0.0f32; dim + 1];
+    let mut rng = Rng::new(seed ^ 0x9b0b);
+    rng.fill_normal(&mut w, 0.01);
+    let n = xs.len() as f32;
+    let mut grad = vec![0.0f32; dim + 1];
+    for _ in 0..epochs {
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        for (x, &y) in xs.iter().zip(ys) {
+            let z = y * probe_score(&w, x);
+            let s = -y / (1.0 + z.exp());
+            for j in 0..dim {
+                grad[j] += s * x[j] / n;
+            }
+            grad[dim] += s / n;
+        }
+        // small ridge term
+        for j in 0..=dim {
+            grad[j] += 1e-4 * w[j];
+        }
+        crate::tensor::axpy(&mut w, -lr, &grad);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_learns_linearly_separable_data() {
+        let mut rng = Rng::new(1);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..200 {
+            let y: f32 = if rng.below(2) == 0 { -1.0 } else { 1.0 };
+            let x: Vec<f32> = (0..8)
+                .map(|j| y * (j as f32 * 0.1 + 0.2) + 0.3 * rng.normal() as f32)
+                .collect();
+            xs.push(x);
+            ys.push(y);
+        }
+        let w = train_probe(&xs, &ys, 200, 0.5, 0);
+        let acc = xs
+            .iter()
+            .zip(&ys)
+            .filter(|(x, &y)| (probe_score(&w, x) >= 0.0) == (y >= 0.0))
+            .count() as f64
+            / ys.len() as f64;
+        assert!(acc > 0.95, "probe acc {acc}");
+    }
+
+    #[test]
+    fn task_names_match_paper_table1() {
+        assert_eq!(GLUE_TASKS.len(), 9);
+        assert_eq!(GLUE_TASKS[0], "RTE");
+        assert_eq!(GLUE_TASKS[8], "MNLI-mm");
+    }
+}

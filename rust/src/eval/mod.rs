@@ -1,0 +1,106 @@
+//! Downstream evaluation: perplexity, cloze accuracy (LAMBADA proxy)
+//! and the GLUE-proxy linear probes (Table 1/2 reproductions).
+
+pub mod glue;
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::data::MarkovCorpus;
+use crate::runtime::{Executable, HostTensor, Runtime};
+
+/// Perplexity from a mean token cross-entropy.
+pub fn perplexity(loss: f64) -> f64 {
+    loss.exp()
+}
+
+/// LM evaluation bundle over held-out synthetic batches.
+pub struct LmEvaluator {
+    eval_exe: Rc<Executable>,
+    last_logits_exe: Rc<Executable>,
+    corpus: MarkovCorpus,
+    d: usize,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+}
+
+impl LmEvaluator {
+    pub fn new(rt: &Runtime, model: &str, seed: u64) -> Result<Self> {
+        let entry = rt.manifest.model(model)?;
+        let batch = entry.cfg("batch")?;
+        let seq = entry.cfg("seq_len")?;
+        let vocab = entry.cfg("vocab")?;
+        Ok(LmEvaluator {
+            eval_exe: rt.load(model, "eval_loss")?,
+            last_logits_exe: rt.load(model, "last_logits")?,
+            corpus: MarkovCorpus::new(vocab, 8, seed),
+            d: entry.param_count,
+            batch,
+            seq,
+            vocab,
+        })
+    }
+
+    /// Mean held-out loss over `n` batches (WikiText-perplexity proxy).
+    pub fn eval_loss(&self, params: &[f32], n: usize) -> Result<f64> {
+        let mut total = 0.0f64;
+        for i in 0..n {
+            let toks = self.corpus.eval_batch(self.batch, self.seq, i as u64);
+            let outs = self.eval_exe.run(&[
+                HostTensor::f32(params.to_vec(), &[self.d]),
+                HostTensor::i32(toks, &[self.batch, self.seq]),
+            ])?;
+            total += outs[0].scalar_f32()? as f64;
+        }
+        Ok(total / n as f64)
+    }
+
+    /// Cloze accuracy: predict the final token of held-out contexts
+    /// (the LAMBADA-style zero-shot metric of Table 2).
+    pub fn cloze_accuracy(&self, params: &[f32], n: usize) -> Result<f64> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for i in 0..n {
+            let toks = self.corpus.eval_batch(self.batch, self.seq, 1000 + i as u64);
+            // context = all but last token; target = last token.
+            let mut ctx = vec![0i32; self.batch * (self.seq - 1)];
+            let mut targets = vec![0i32; self.batch];
+            for b in 0..self.batch {
+                let row = &toks[b * self.seq..(b + 1) * self.seq];
+                ctx[b * (self.seq - 1)..(b + 1) * (self.seq - 1)]
+                    .copy_from_slice(&row[..self.seq - 1]);
+                targets[b] = row[self.seq - 1];
+            }
+            let outs = self.last_logits_exe.run(&[
+                HostTensor::f32(params.to_vec(), &[self.d]),
+                HostTensor::i32(ctx, &[self.batch, self.seq - 1]),
+            ])?;
+            let logits = outs[0].as_f32()?;
+            for b in 0..self.batch {
+                let row = &logits[b * self.vocab..(b + 1) * self.vocab];
+                let arg = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                    .unwrap()
+                    .0;
+                if arg as i32 == targets[b] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn perplexity_of_zero_loss_is_one() {
+        assert_eq!(super::perplexity(0.0), 1.0);
+        assert!((super::perplexity(2.0) - 7.389056).abs() < 1e-4);
+    }
+}

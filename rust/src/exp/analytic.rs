@@ -1,0 +1,207 @@
+//! Analytic schedule replay: the communication pattern of each
+//! algorithm over a full paper-scale run, *without* computing gradients.
+//!
+//! Drives Figures 3, 4, 5 and Table 3: at their true scale (250K–450K
+//! steps, 110M–340M parameters) these experiments depend only on which
+//! rounds happen and how many bytes each moves — exactly what the real
+//! optimizers report per step — so we replay the same policy objects
+//! (`VarSchedule`, `SyncSchedule`) the optimizers use.
+
+use crate::comm::allreduce::WireStats;
+use crate::comm::network::Fabric;
+use crate::comm::volume::VolumeLedger;
+use crate::comm::{compress, ETHERNET, INFINIBAND};
+use crate::config::Task;
+
+use super::Algo;
+
+/// Wire stats of one fp16 AllReduce of d params.
+pub fn fp_round(d: usize) -> WireStats {
+    WireStats {
+        up_bytes: (2 * d) as u64,
+        down_bytes: (2 * d) as u64,
+        rounds: 1,
+        compressed: false,
+    }
+}
+
+/// Wire stats of one EF-1-bit AllReduce of d params.
+pub fn onebit_round(d: usize) -> WireStats {
+    let w = compress::wire_bytes(d) as u64;
+    WireStats { up_bytes: w, down_bytes: w, rounds: 1, compressed: true }
+}
+
+/// Replay one algorithm's full communication schedule for `task`.
+/// `visit` receives (step, rounds-this-step).
+pub fn replay<F: FnMut(u64, &[WireStats])>(algo: Algo, task: &Task, mut visit: F) {
+    let d = task.d;
+    let t_total = task.total_steps;
+    match algo {
+        Algo::Adam => {
+            let r = [fp_round(d)];
+            for t in 0..t_total {
+                visit(t, &r);
+            }
+        }
+        Algo::OneBitAdam => {
+            let fp = [fp_round(d)];
+            let ob = [onebit_round(d)];
+            for t in 0..t_total {
+                visit(t, if t < task.onebit_t0 { &fp } else { &ob });
+            }
+        }
+        Algo::ZeroOneAdam => {
+            let mut var = task.var_schedule();
+            let mut sync = task.sync_schedule();
+            replay_zeroone(d, t_total, &mut var, &mut sync, &mut visit);
+        }
+        Algo::ZeroOneNoLocal => {
+            let mut var = task.var_schedule();
+            let mut sync = task.sync_always();
+            replay_zeroone(d, t_total, &mut var, &mut sync, &mut visit);
+        }
+    }
+}
+
+fn replay_zeroone<F: FnMut(u64, &[WireStats])>(
+    d: usize,
+    t_total: u64,
+    var: &mut crate::optim::policy::VarSchedule,
+    sync: &mut crate::optim::policy::SyncSchedule,
+    visit: &mut F,
+) {
+    // Mirrors ZeroOneAdam::step's round emission order (T_v first, then
+    // the sync round) and the variance stop rule.
+    let mut rounds: Vec<WireStats> = Vec::with_capacity(2);
+    for t in 0..t_total {
+        rounds.clear();
+        if var.is_update_step(t) {
+            rounds.push(fp_round(d));
+        }
+        let synced = sync.is_sync_step(t);
+        if synced {
+            rounds.push(onebit_round(d));
+            if sync.interval_at(t) > 1 && !var.is_stopped() {
+                var.stop();
+            }
+        }
+        visit(t, &rounds);
+    }
+}
+
+/// Full-run ledger for (algo, task).
+pub fn ledger_for(algo: Algo, task: &Task) -> VolumeLedger {
+    let mut ledger = VolumeLedger::new(task.d);
+    replay(algo, task, |_, rounds| ledger.record_step(rounds));
+    ledger
+}
+
+/// Simulated end-to-end run summary on a fabric at `n_gpus`.
+#[derive(Debug, Clone)]
+pub struct SimSummary {
+    pub algo: Algo,
+    pub n_gpus: usize,
+    pub fabric_name: &'static str,
+    /// Total simulated time (hours).
+    pub total_hours: f64,
+    /// Average samples/second.
+    pub throughput: f64,
+    /// Average per-step communication ms.
+    pub comm_ms_per_step: f64,
+    /// Average per-step compute ms.
+    pub compute_ms_per_step: f64,
+}
+
+/// Simulate a full run's wall-clock on the fabric (Figures 2-time, 3, 5).
+pub fn simulate_run(algo: Algo, task: &Task, fabric: &Fabric, n_gpus: usize) -> SimSummary {
+    let compute_ms = task.compute_model().step_ms(n_gpus);
+    let mut comm_ms = 0.0f64;
+    replay(algo, task, |_, rounds| {
+        for r in rounds {
+            comm_ms += fabric.round_ms(r, task.d, n_gpus);
+        }
+    });
+    let total_ms = comm_ms + compute_ms * task.total_steps as f64;
+    let total_s = total_ms / 1e3;
+    SimSummary {
+        algo,
+        n_gpus,
+        fabric_name: fabric.name,
+        total_hours: total_s / 3600.0,
+        throughput: task.global_batch as f64 * task.total_steps as f64 / total_s,
+        comm_ms_per_step: comm_ms / task.total_steps as f64,
+        compute_ms_per_step: compute_ms,
+    }
+}
+
+/// Convenience: both paper fabrics.
+pub fn fabrics() -> [Fabric; 2] {
+    [ETHERNET, INFINIBAND]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BERT_BASE, IMAGENET};
+
+    #[test]
+    fn adam_is_16_bits_every_step() {
+        let l = ledger_for(Algo::Adam, &IMAGENET);
+        assert_eq!(l.steps, IMAGENET.total_steps);
+        assert!((l.bits_per_param() - 16.0).abs() < 1e-9);
+        assert_eq!(l.rounds_per_step(), 1.0);
+    }
+
+    #[test]
+    fn onebit_adam_volume_between_1_and_16_bits() {
+        let l = ledger_for(Algo::OneBitAdam, &BERT_BASE);
+        let b = l.bits_per_param();
+        // 16 bits for 16K/250K steps + ~1 bit for the rest ≈ 1.96
+        assert!(b > 1.5 && b < 3.0, "bits/param {b}");
+        assert_eq!(l.rounds_per_step(), 1.0);
+    }
+
+    #[test]
+    fn zeroone_cuts_volume_and_rounds() {
+        let zo = ledger_for(Algo::ZeroOneAdam, &BERT_BASE);
+        let ob = ledger_for(Algo::OneBitAdam, &BERT_BASE);
+        // Paper: up to ~87% data-volume and ~54% round reduction.
+        let vol_red = 1.0 - (zo.bits_per_param() / ob.bits_per_param());
+        let round_red = 1.0 - (zo.rounds_per_step() / ob.rounds_per_step());
+        assert!(vol_red > 0.5, "volume reduction {vol_red}");
+        assert!(round_red > 0.3, "round reduction {round_red}");
+        // And it stays in the "0 to 1 bit" regime the name promises.
+        assert!(zo.bits_per_param() < 1.0, "{}", zo.bits_per_param());
+    }
+
+    #[test]
+    fn nolocal_is_about_one_bit_every_step() {
+        let l = ledger_for(Algo::ZeroOneNoLocal, &BERT_BASE);
+        let b = l.bits_per_param();
+        assert!(b > 0.9 && b < 1.3, "bits/param {b}");
+        // no skipped steps
+        assert_eq!(l.comm_step_fraction(), 1.0);
+    }
+
+    #[test]
+    fn throughput_ordering_matches_paper_on_ethernet() {
+        // At 128 GPUs over Ethernet: 0/1 Adam > 1-bit Adam > Adam.
+        let zo = simulate_run(Algo::ZeroOneAdam, &BERT_BASE, &ETHERNET, 128);
+        let ob = simulate_run(Algo::OneBitAdam, &BERT_BASE, &ETHERNET, 128);
+        let ad = simulate_run(Algo::Adam, &BERT_BASE, &ETHERNET, 128);
+        assert!(zo.throughput > ob.throughput && ob.throughput > ad.throughput,
+                "zo={} ob={} adam={}", zo.throughput, ob.throughput, ad.throughput);
+        // Headline claim: up to ~2x over 1-bit Adam (allow 1.2–3x here).
+        let speedup = zo.throughput / ob.throughput;
+        assert!(speedup > 1.2 && speedup < 3.5, "speedup {speedup}");
+    }
+
+    #[test]
+    fn ethernet_zeroone_competitive_with_ib_onebit() {
+        // Paper Section 6.2: 0/1 Adam on Ethernet ≈ 1-bit Adam on IB.
+        let zo_eth = simulate_run(Algo::ZeroOneAdam, &BERT_BASE, &ETHERNET, 128);
+        let ob_ib = simulate_run(Algo::OneBitAdam, &BERT_BASE, &INFINIBAND, 128);
+        let ratio = zo_eth.throughput / ob_ib.throughput;
+        assert!(ratio > 0.5, "ratio {ratio}");
+    }
+}

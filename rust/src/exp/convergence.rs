@@ -1,0 +1,216 @@
+//! Gradient-real convergence experiments (Figures 1, 2, 6): proxy
+//! models trained through the PJRT runtime with each optimizer.
+
+use anyhow::Result;
+
+use crate::config::Task;
+use crate::coordinator::{MomentProfiler, NoObserver, RunResult, Trainer, TrainerConfig};
+use crate::grad::hlo::{HloLmSource, HloMlpSource};
+use crate::grad::GradientSource;
+use crate::optim::policy::{SyncSchedule, VarSchedule};
+use crate::optim::{
+    Adam, BertLr, DistOptimizer, FrozenVarAdam, Hyper, LrSchedule, ZeroOneAdam,
+};
+use crate::runtime::Runtime;
+
+use super::Algo;
+
+/// Options for a convergence comparison run.
+#[derive(Debug, Clone)]
+pub struct ConvOpts {
+    /// Proxy model artifact name (lm_tiny / lm_small / img_mlp).
+    pub model: String,
+    pub workers: usize,
+    pub steps: u64,
+    pub seed: u64,
+    /// Paper task whose schedules/policies get scaled to this run (and
+    /// whose scale is used for the simulated time axis).
+    pub task: &'static Task,
+    /// Simulated cluster size for the time axis.
+    pub sim_gpus: usize,
+    pub log_every: u64,
+    pub eval_every: u64,
+    pub verbose: bool,
+}
+
+impl ConvOpts {
+    pub fn quick(task: &'static Task, steps: u64) -> Self {
+        ConvOpts {
+            model: task.proxy_model.to_string(),
+            workers: 4,
+            steps,
+            seed: 0,
+            task,
+            sim_gpus: 128,
+            log_every: (steps / 100).max(1),
+            eval_every: (steps / 10).max(1),
+            verbose: false,
+        }
+    }
+}
+
+/// Scaled LR schedule for a proxy run (keeps the paper's shape).
+fn proxy_lr(opts: &ConvOpts) -> Box<dyn LrSchedule> {
+    match opts.task.name {
+        // milestone/cosine shapes also scale fine via BertLr for the
+        // proxy; what matters for parity is all algos share it.
+        _ => Box::new(BertLr::scaled_to(opts.steps)),
+    }
+}
+
+/// Build the optimizer for `algo` with policies scaled to the run.
+pub fn build_optimizer(algo: Algo, init: Vec<f32>, opts: &ConvOpts) -> Box<dyn DistOptimizer> {
+    let h = Hyper::default();
+    let n = opts.workers;
+    match algo {
+        Algo::Adam => Box::new(Adam::new(init, n, h, proxy_lr(opts))),
+        Algo::OneBitAdam => {
+            // scale T0 by the paper's fraction of total steps
+            let frac = opts.task.onebit_t0 as f64 / opts.task.total_steps as f64;
+            let t0 = ((opts.steps as f64 * frac) as u64).max(4);
+            Box::new(FrozenVarAdam::onebit_adam(init, n, h, proxy_lr(opts), t0))
+        }
+        Algo::ZeroOneAdam => Box::new(ZeroOneAdam::new(
+            init,
+            n,
+            h,
+            proxy_lr(opts),
+            VarSchedule::paper(),
+            SyncSchedule::scaled_bert(opts.steps),
+        )),
+        Algo::ZeroOneNoLocal => Box::new(ZeroOneAdam::new(
+            init,
+            n,
+            h,
+            proxy_lr(opts),
+            VarSchedule::paper(),
+            SyncSchedule::new(crate::optim::policy::SyncPolicy::Always),
+        )),
+    }
+}
+
+/// Build a gradient source for the proxy model.
+pub fn build_source(rt: &Runtime, opts: &ConvOpts) -> Result<Box<dyn GradientSource>> {
+    let kind = rt.manifest.model(&opts.model)?.kind.clone();
+    Ok(match kind.as_str() {
+        "lm" => Box::new(HloLmSource::new(rt, &opts.model, opts.seed)?),
+        _ => Box::new(HloMlpSource::new(rt, &opts.model, opts.seed)?),
+    })
+}
+
+fn trainer_config(opts: &ConvOpts) -> TrainerConfig {
+    TrainerConfig {
+        steps: opts.steps,
+        log_every: opts.log_every,
+        eval_every: opts.eval_every,
+        // Time axis at paper scale: Ethernet, paper d, paper compute.
+        fabric: Some(crate::comm::ETHERNET),
+        sim_gpus: opts.sim_gpus,
+        compute_ms: opts.task.compute_model().step_ms(opts.sim_gpus),
+        verbose: opts.verbose,
+    }
+}
+
+/// Figure 2 / Figure 6: run each algorithm on the same proxy + data.
+///
+/// The *sample-wise* axis is real (losses from real gradients); the
+/// *time-wise* axis is the simulated cluster clock — but note the wire
+/// bytes are proxy-d-sized, so the clock is rescaled to paper-d in
+/// [`rescale_sim_time`] before reporting.
+pub fn run_convergence(rt: &Runtime, opts: &ConvOpts, algos: &[Algo]) -> Result<Vec<(Algo, RunResult)>> {
+    let init = rt.manifest.load_init(&opts.model)?;
+    let mut out = Vec::new();
+    for &algo in algos {
+        let mut source = build_source(rt, opts)?;
+        let mut opt = build_optimizer(algo, init.clone(), opts);
+        let cfg = trainer_config(opts);
+        crate::info!("fig-convergence: {} for {} steps", algo.name(), opts.steps);
+        let mut res = Trainer::run(source.as_mut(), opt.as_mut(), &cfg, &mut NoObserver);
+        rescale_sim_time(&mut res, opts);
+        out.push((algo, res));
+    }
+    Ok(out)
+}
+
+/// Rescale each record's simulated time from proxy-d wire bytes to the
+/// paper task's d (fixed costs + transfer are both linear in d; compute
+/// is unchanged).
+fn rescale_sim_time(res: &mut RunResult, opts: &ConvOpts) {
+    let proxy_d = res.final_params.len() as f64;
+    let factor = opts.task.d as f64 / proxy_d;
+    let compute = opts.task.compute_model().step_ms(opts.sim_gpus);
+    let mut total = 0.0;
+    let mut prev_t = 0u64;
+    for r in res.log.records.iter_mut() {
+        // comm share of this logged step's time, scaled by d-ratio;
+        // intermediate (unlogged) steps are approximated by the same
+        // per-step rate — exact at log_every=1.
+        let steps_since = (r.t - prev_t).max(1) as f64;
+        let comm_ms = (r.sim_ms - compute).max(0.0) * factor;
+        total += (compute + comm_ms) * steps_since;
+        r.sim_ms = compute + comm_ms;
+        r.sim_total_s = total / 1e3;
+        prev_t = r.t;
+    }
+    res.sim_total_s = total / 1e3;
+}
+
+/// Figure 1: profile momentum/variance during an original-Adam run.
+pub fn run_profiling(rt: &Runtime, opts: &ConvOpts) -> Result<Vec<Vec<(String, f64)>>> {
+    let init = rt.manifest.load_init(&opts.model)?;
+    let d = init.len();
+    let mut source = build_source(rt, opts)?;
+    let mut opt = Adam::new(init, opts.workers, Hyper::default(), proxy_lr(opts));
+    let mut prof = MomentProfiler::new(d, Hyper::default(), opts.log_every);
+    let cfg = trainer_config(opts);
+    let res = Trainer::run(source.as_mut(), &mut opt, &cfg, &mut prof);
+    Ok(res.observer_rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BERT_BASE;
+    use crate::grad::synthetic::NoisyQuadratic;
+
+    #[test]
+    fn optimizers_build_for_all_algos() {
+        let opts = ConvOpts::quick(&BERT_BASE, 100);
+        for algo in [Algo::Adam, Algo::OneBitAdam, Algo::ZeroOneAdam, Algo::ZeroOneNoLocal] {
+            let opt = build_optimizer(algo, vec![0.0; 16], &opts);
+            assert_eq!(opt.dim(), 16);
+            assert_eq!(opt.n_workers(), 4);
+        }
+    }
+
+    #[test]
+    fn scaled_t0_is_paper_fraction() {
+        let opts = ConvOpts::quick(&BERT_BASE, 1000);
+        // 16K/250K = 6.4% → 64 steps
+        let opt = build_optimizer(Algo::OneBitAdam, vec![0.0; 4], &opts);
+        assert_eq!(opt.name(), "1bit-adam");
+    }
+
+    #[test]
+    fn all_algos_converge_comparably_on_quadratic() {
+        // The Fig-2 parity claim in miniature: on the same noisy
+        // objective, all four algorithms reach similar loss.
+        let opts = ConvOpts::quick(&BERT_BASE, 400);
+        let mut finals = Vec::new();
+        for algo in [Algo::Adam, Algo::OneBitAdam, Algo::ZeroOneAdam, Algo::ZeroOneNoLocal] {
+            let mut src = NoisyQuadratic::new(64, 5.0, 0.05, 3);
+            let mut opt = build_optimizer(algo, vec![1.0; 64], &opts);
+            let cfg = TrainerConfig { steps: 400, log_every: 50, ..Default::default() };
+            let res = Trainer::run(&mut src, opt.as_mut(), &cfg, &mut NoObserver);
+            finals.push((algo, res.final_eval.unwrap() as f64));
+        }
+        // Parity shape: every algorithm descends, and no algorithm is
+        // dramatically worse than the best (the BERT-shaped LR peaks at
+        // 4e-4, so absolute progress on this toy objective is modest).
+        let worst = finals.iter().map(|(_, l)| *l).fold(0.0, f64::max);
+        let best = finals.iter().map(|(_, l)| *l).fold(f64::MAX, f64::min);
+        let init_loss: f64 = 0.5 * (0..64).map(|i| ((1.0f64 / 5.0).ln() * (1.0 - i as f64 / 63.0)).exp()).sum::<f64>();
+        assert!(worst < init_loss, "no descent: {finals:?} vs init {init_loss}");
+        assert!(worst / best < 2.0, "optimizers diverged from parity: {finals:?}");
+    }
+}

@@ -1,0 +1,74 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §4).
+//!
+//! Shared between the `zo-adam` CLI, the examples and the `cargo bench`
+//! harnesses, so every figure is regenerable from several entry points.
+
+pub mod analytic;
+pub mod convergence;
+pub mod tables;
+pub mod theory;
+
+use crate::comm::WireStats;
+
+/// The algorithms under comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// Original Adam (full-precision comm every step).
+    Adam,
+    /// 1-bit Adam [Tang et al. 2021] (two-stage).
+    OneBitAdam,
+    /// 0/1 Adam (paper Algorithm 1, adaptive T_v + local steps).
+    ZeroOneAdam,
+    /// 0/1 Adam with T_u = every step (Figure 5 ablation).
+    ZeroOneNoLocal,
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Adam => "adam",
+            Algo::OneBitAdam => "1bit-adam",
+            Algo::ZeroOneAdam => "01adam",
+            Algo::ZeroOneNoLocal => "01adam-nolocal",
+        }
+    }
+
+    pub fn main_three() -> [Algo; 3] {
+        [Algo::Adam, Algo::OneBitAdam, Algo::ZeroOneAdam]
+    }
+
+    pub fn by_name(name: &str) -> Option<Algo> {
+        match name {
+            "adam" => Some(Algo::Adam),
+            "1bit-adam" | "onebit" => Some(Algo::OneBitAdam),
+            "01adam" | "zeroone" => Some(Algo::ZeroOneAdam),
+            "01adam-nolocal" | "nolocal" => Some(Algo::ZeroOneNoLocal),
+            _ => None,
+        }
+    }
+}
+
+/// Default results directory (CSV outputs of every driver).
+pub fn results_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("ZO_RESULTS_DIR").unwrap_or_else(|_| "results".to_string()),
+    )
+}
+
+/// Sum of wire bytes across rounds (per worker).
+pub fn step_bytes(rounds: &[WireStats]) -> u64 {
+    rounds.iter().map(|r| r.total_per_worker()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for a in [Algo::Adam, Algo::OneBitAdam, Algo::ZeroOneAdam, Algo::ZeroOneNoLocal] {
+            assert_eq!(Algo::by_name(a.name()), Some(a));
+        }
+        assert!(Algo::by_name("x").is_none());
+    }
+}

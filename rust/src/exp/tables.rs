@@ -1,0 +1,232 @@
+//! Table/figure builders: Figures 3–5, Tables 1–3.
+
+use anyhow::Result;
+
+use crate::benchkit::Table;
+use crate::comm::network::Fabric;
+use crate::config::{Task, ALL_TASKS, BERT_BASE, BERT_LARGE, GPT2, IMAGENET};
+use crate::coordinator::{NoObserver, Trainer, TrainerConfig};
+use crate::eval::glue::{GlueProxy, GLUE_TASKS};
+use crate::eval::LmEvaluator;
+use crate::grad::hlo::HloMlpSource;
+use crate::runtime::Runtime;
+
+use super::analytic::{ledger_for, simulate_run};
+use super::convergence::{build_optimizer, run_convergence, ConvOpts};
+use super::Algo;
+
+/// Figure 3: end-to-end throughput vs #GPUs on a fabric.
+pub fn fig3_throughput(task: &Task, fabric: &Fabric, gpu_counts: &[usize]) -> Table {
+    let mut table = Table::new(
+        &format!("Figure 3 — {} throughput (samples/s), {}", task.name, fabric.name),
+        &["gpus", "adam", "1bit-adam", "01adam", "01/1bit speedup"],
+    );
+    for &n in gpu_counts {
+        let ad = simulate_run(Algo::Adam, task, fabric, n);
+        let ob = simulate_run(Algo::OneBitAdam, task, fabric, n);
+        let zo = simulate_run(Algo::ZeroOneAdam, task, fabric, n);
+        table.row(vec![
+            n.to_string(),
+            format!("{:.0}", ad.throughput),
+            format!("{:.0}", ob.throughput),
+            format!("{:.0}", zo.throughput),
+            format!("{:.2}x", zo.throughput / ob.throughput),
+        ]);
+    }
+    table
+}
+
+/// Figure 4: bits/param and normalized rounds per task.
+pub fn fig4_volume() -> Table {
+    let mut table = Table::new(
+        "Figure 4 — per-parameter volume (bits) and rounds/step",
+        &["task", "algo", "bits/param", "rounds/step", "vs 1bit-adam volume", "vs 1bit-adam rounds"],
+    );
+    for task in ALL_TASKS {
+        let ob = ledger_for(Algo::OneBitAdam, task);
+        for algo in [Algo::Adam, Algo::OneBitAdam, Algo::ZeroOneAdam, Algo::ZeroOneNoLocal] {
+            let l = ledger_for(algo, task);
+            table.row(vec![
+                task.name.to_string(),
+                algo.name().to_string(),
+                format!("{:.3}", l.bits_per_param()),
+                format!("{:.3}", l.rounds_per_step()),
+                format!("{:+.1}%", (l.bits_per_param() / ob.bits_per_param() - 1.0) * 100.0),
+                format!("{:+.1}%", (l.rounds_per_step() / ob.rounds_per_step() - 1.0) * 100.0),
+            ]);
+        }
+    }
+    table
+}
+
+/// Figure 5: the local-steps ablation — throughput of 0/1 Adam with
+/// T_u = every step vs the full policy.
+pub fn fig5_ablation(fabric: &Fabric, gpu_counts: &[usize]) -> Table {
+    let mut table = Table::new(
+        &format!("Figure 5 — local-steps ablation (samples/s), {}", fabric.name),
+        &["task", "gpus", "01adam", "01adam-nolocal", "1bit-adam", "nolocal gain vs 1bit"],
+    );
+    for task in [&BERT_BASE, &BERT_LARGE] {
+        for &n in gpu_counts {
+            let zo = simulate_run(Algo::ZeroOneAdam, task, fabric, n);
+            let nl = simulate_run(Algo::ZeroOneNoLocal, task, fabric, n);
+            let ob = simulate_run(Algo::OneBitAdam, task, fabric, n);
+            table.row(vec![
+                task.name.to_string(),
+                n.to_string(),
+                format!("{:.0}", zo.throughput),
+                format!("{:.0}", nl.throughput),
+                format!("{:.0}", ob.throughput),
+                format!("{:.2}x", nl.throughput / ob.throughput),
+            ]);
+        }
+    }
+    table
+}
+
+/// Table 3: per-round computation vs fixed ("Others") cost.
+pub fn table3_fixed_cost() -> Table {
+    let mut table = Table::new(
+        "Table 3 — per-step computation vs per-round fixed cost (ms, Ethernet)",
+        &["task", "gpus", "computation (paper)", "fixed cost (model)", "fixed cost (paper)"],
+    );
+    let paper_fixed: &[(&str, [f64; 4])] = &[
+        ("imagenet", [8.0, 6.0, 21.0, 19.0]),
+        ("bert_base", [153.0, 250.0, 397.0, 658.0]),
+        ("bert_large", [340.0, 510.0, 590.0, 931.0]),
+    ];
+    for (task_name, fixed) in paper_fixed {
+        let task = Task::by_name(task_name).unwrap();
+        let cm = task.compute_model();
+        for (i, &n) in [16usize, 32, 64, 128].iter().enumerate() {
+            let model_fixed = crate::comm::ETHERNET.fixed_cost_ms(task.d, n);
+            table.row(vec![
+                task.name.to_string(),
+                n.to_string(),
+                format!("{:.0}", cm.step_ms(n)),
+                format!("{:.0}", model_fixed),
+                format!("{:.0}", fixed[i]),
+            ]);
+        }
+    }
+    table
+}
+
+/// Table 1: GLUE-proxy scores for checkpoints pretrained by each
+/// optimizer. `pretrain_steps` controls the proxy pretraining length.
+pub fn table1_glue(rt: &Runtime, pretrain_steps: u64, workers: usize) -> Result<Table> {
+    let opts = ConvOpts {
+        workers,
+        ..ConvOpts::quick(&BERT_BASE, pretrain_steps)
+    };
+    let runs = run_convergence(rt, &opts, &Algo::main_three())?;
+    let glue = GlueProxy::new(rt, &opts.model, 0)?;
+
+    let mut table = Table::new(
+        "Table 1 — GLUE-proxy dev accuracy by pretraining optimizer",
+        &["checkpoint", "RTE", "MRPC", "STS-B", "CoLA", "SST-2", "QNLI", "QQP", "MNLI-m", "MNLI-mm", "Avg"],
+    );
+    for (algo, res) in &runs {
+        let accs = glue.evaluate(&res.final_params)?;
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        let mut row = vec![algo.name().to_string()];
+        row.extend(accs.iter().map(|a| format!("{:.1}", a * 100.0)));
+        row.push(format!("{:.1}", avg * 100.0));
+        table.row(row);
+    }
+    debug_assert_eq!(GLUE_TASKS.len() + 2, table.headers.len());
+    Ok(table)
+}
+
+/// Table 2: ImageNet-proxy top-1 accuracy + LM zero-shot metrics.
+pub fn table2_accuracy(rt: &Runtime, img_steps: u64, lm_steps: u64, workers: usize) -> Result<Table> {
+    let mut table = Table::new(
+        "Table 2 — final quality by optimizer",
+        &["algo", "imagenet-proxy top1 %", "wikitext-proxy ppl", "lambada-proxy acc %"],
+    );
+
+    // Image runs.
+    let img_opts = ConvOpts { workers, ..ConvOpts::quick(&IMAGENET, img_steps) };
+    let img_runs = run_convergence(rt, &img_opts, &Algo::main_three())?;
+    // LM runs (GPT-2 stand-in).
+    let lm_opts = ConvOpts { workers, ..ConvOpts::quick(&GPT2, lm_steps) };
+    let lm_runs = run_convergence(rt, &lm_opts, &Algo::main_three())?;
+    let evaluator = LmEvaluator::new(rt, &lm_opts.model, lm_opts.seed)?;
+
+    for ((algo, img_res), (_, lm_res)) in img_runs.iter().zip(&lm_runs) {
+        let mut img_src = HloMlpSource::new(rt, &img_opts.model, img_opts.seed)?;
+        let top1 = img_src.eval_accuracy(&img_res.final_params, 8);
+        let loss = evaluator.eval_loss(&lm_res.final_params, 16)?;
+        let cloze = evaluator.cloze_accuracy(&lm_res.final_params, 48)?;
+        table.row(vec![
+            algo.name().to_string(),
+            format!("{:.2}", top1 * 100.0),
+            format!("{:.2}", crate::eval::perplexity(loss)),
+            format!("{:.2}", cloze * 100.0),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Train the ImageNet proxy with one algorithm and return top-1.
+pub fn imagenet_proxy_accuracy(rt: &Runtime, algo: Algo, steps: u64, workers: usize) -> Result<f32> {
+    let opts = ConvOpts { workers, ..ConvOpts::quick(&IMAGENET, steps) };
+    let init = rt.manifest.load_init(&opts.model)?;
+    let mut src = HloMlpSource::new(rt, &opts.model, opts.seed)?;
+    let mut opt = build_optimizer(algo, init, &opts);
+    let cfg = TrainerConfig {
+        steps,
+        log_every: (steps / 20).max(1),
+        ..Default::default()
+    };
+    let res = Trainer::run(&mut src, opt.as_mut(), &cfg, &mut NoObserver);
+    Ok(src.eval_accuracy(&res.final_params, 8))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ETHERNET;
+
+    #[test]
+    fn fig3_table_shapes() {
+        let t = fig3_throughput(&BERT_BASE, &ETHERNET, &[16, 128]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.headers.len(), 5);
+        // throughput should increase with GPUs for every algo
+        let a16: f64 = t.rows[0][3].parse().unwrap();
+        let a128: f64 = t.rows[1][3].parse().unwrap();
+        assert!(a128 > a16);
+    }
+
+    #[test]
+    fn fig4_covers_all_tasks_and_algos() {
+        let t = fig4_volume();
+        assert_eq!(t.rows.len(), 4 * 4);
+    }
+
+    #[test]
+    fn table3_anchors_match() {
+        let t = table3_fixed_cost();
+        assert_eq!(t.rows.len(), 12);
+        // bert_base @16: model fixed ≈ paper fixed (calibration anchor)
+        let row = t.rows.iter().find(|r| r[0] == "bert_base" && r[1] == "16").unwrap();
+        let model: f64 = row[3].parse().unwrap();
+        let paper: f64 = row[4].parse().unwrap();
+        assert!((model - paper).abs() / paper < 0.05, "{model} vs {paper}");
+    }
+
+    #[test]
+    fn fig5_shows_limited_gain_without_local_steps() {
+        // The Fig-5 takeaway: without round skipping the throughput
+        // gain over 1-bit Adam is much smaller than full 0/1 Adam's.
+        let t = fig5_ablation(&ETHERNET, &[128]);
+        for row in &t.rows {
+            let zo: f64 = row[2].parse().unwrap();
+            let nl: f64 = row[3].parse().unwrap();
+            let ob: f64 = row[4].parse().unwrap();
+            assert!(zo > nl, "full 0/1 should beat no-local ({zo} vs {nl})");
+            assert!(nl >= ob * 0.95, "no-local should still not lose to 1-bit Adam");
+        }
+    }
+}

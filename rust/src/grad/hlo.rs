@@ -1,0 +1,210 @@
+//! PJRT-backed gradient sources — the production path.
+//!
+//! Each worker's gradient is computed by executing the AOT-lowered
+//! train-step HLO (L2 graph, with L1 Pallas kernels already inlined at
+//! lowering time) on the PJRT CPU client. Python is not involved.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::GradientSource;
+use crate::data::{BlobImages, MarkovCorpus};
+use crate::runtime::{Executable, HostTensor, Runtime};
+
+/// Transformer-LM gradient source (BERT/GPT-2 proxy).
+pub struct HloLmSource {
+    exe: Rc<Executable>,
+    eval_exe: Rc<Executable>,
+    corpus: MarkovCorpus,
+    d: usize,
+    batch: usize,
+    seq: usize,
+    /// scratch token buffer (reused; the hot path allocates only inside
+    /// the literal conversion, which is unavoidable with the xla crate).
+    tokens: Vec<i32>,
+    /// fixed held-out batches for eval_loss
+    eval_batches: usize,
+}
+
+impl HloLmSource {
+    pub fn new(rt: &Runtime, model: &str, seed: u64) -> Result<Self> {
+        let entry = rt.manifest.model(model)?;
+        let batch = entry.cfg("batch")?;
+        let seq = entry.cfg("seq_len")?;
+        let vocab = entry.cfg("vocab")?;
+        Ok(HloLmSource {
+            exe: rt.load(model, "train_step")?,
+            eval_exe: rt.load(model, "eval_loss")?,
+            corpus: MarkovCorpus::new(vocab, 8, seed),
+            d: entry.param_count,
+            batch,
+            seq,
+            tokens: vec![0i32; batch * seq],
+            eval_batches: 4,
+        })
+    }
+
+    pub fn corpus(&self) -> &MarkovCorpus {
+        &self.corpus
+    }
+
+    pub fn batch_tokens(&self) -> usize {
+        self.batch * (self.seq - 1)
+    }
+}
+
+impl GradientSource for HloLmSource {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn grad(&mut self, params: &[f32], worker: usize, t: u64, out: &mut [f32]) -> f32 {
+        self.corpus
+            .fill_batch(&mut self.tokens, self.batch, self.seq, worker as u64, t, 0);
+        let outs = self
+            .exe
+            .run(&[
+                HostTensor::f32(params.to_vec(), &[self.d]),
+                HostTensor::i32(self.tokens.clone(), &[self.batch, self.seq]),
+            ])
+            .expect("train_step execution failed");
+        let loss = outs[0].scalar_f32().expect("loss output");
+        out.copy_from_slice(outs[1].as_f32().expect("grads output"));
+        loss
+    }
+
+    fn eval_loss(&mut self, params: &[f32]) -> Option<f32> {
+        let mut total = 0.0f64;
+        for i in 0..self.eval_batches {
+            let toks = self.corpus.eval_batch(self.batch, self.seq, i as u64);
+            let outs = self
+                .eval_exe
+                .run(&[
+                    HostTensor::f32(params.to_vec(), &[self.d]),
+                    HostTensor::i32(toks, &[self.batch, self.seq]),
+                ])
+                .ok()?;
+            total += outs[0].scalar_f32().ok()? as f64;
+        }
+        Some((total / self.eval_batches as f64) as f32)
+    }
+
+    fn name(&self) -> &'static str {
+        "hlo-lm"
+    }
+}
+
+/// MLP image-classifier gradient source (ResNet/ImageNet proxy).
+pub struct HloMlpSource {
+    exe: Rc<Executable>,
+    eval_exe: Rc<Executable>,
+    logits_exe: Rc<Executable>,
+    data: BlobImages,
+    d: usize,
+    batch: usize,
+    input_dim: usize,
+    images: Vec<f32>,
+    labels: Vec<i32>,
+}
+
+impl HloMlpSource {
+    pub fn new(rt: &Runtime, model: &str, seed: u64) -> Result<Self> {
+        let entry = rt.manifest.model(model)?;
+        let batch = entry.cfg("batch")?;
+        let input_dim = entry.cfg("input_dim")?;
+        let classes = entry.cfg("classes")?;
+        // Calibrated class separability: with 100 classes the proxy
+        // plateaus in the 70–90% top-1 band (like ResNet18/ImageNet's
+        // 69.8%) instead of saturating at 100%.
+        let mut data = BlobImages::new(input_dim, classes, seed);
+        data.signal = 0.14;
+        Ok(HloMlpSource {
+            exe: rt.load(model, "train_step")?,
+            eval_exe: rt.load(model, "eval_loss")?,
+            logits_exe: rt.load(model, "logits")?,
+            data,
+            d: entry.param_count,
+            batch,
+            input_dim,
+            images: vec![0.0f32; batch * input_dim],
+            labels: vec![0i32; batch],
+        })
+    }
+
+    /// Top-1 accuracy on `n_batches` held-out batches (Table 2 metric).
+    pub fn eval_accuracy(&mut self, params: &[f32], n_batches: usize) -> f32 {
+        let classes = self.data.classes();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for i in 0..n_batches {
+            let (im, lb) = self.data.eval_batch(self.batch, i as u64);
+            let outs = self
+                .logits_exe
+                .run(&[
+                    HostTensor::f32(params.to_vec(), &[self.d]),
+                    HostTensor::f32(im, &[self.batch, self.input_dim]),
+                ])
+                .expect("logits execution failed");
+            let logits = outs[0].as_f32().expect("logits");
+            for b in 0..self.batch {
+                let row = &logits[b * classes..(b + 1) * classes];
+                let arg = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if arg as i32 == lb[b] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        correct as f32 / total as f32
+    }
+}
+
+impl GradientSource for HloMlpSource {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn grad(&mut self, params: &[f32], worker: usize, t: u64, out: &mut [f32]) -> f32 {
+        self.data
+            .fill_batch(&mut self.images, &mut self.labels, worker as u64, t, 0);
+        let outs = self
+            .exe
+            .run(&[
+                HostTensor::f32(params.to_vec(), &[self.d]),
+                HostTensor::f32(self.images.clone(), &[self.batch, self.input_dim]),
+                HostTensor::i32(self.labels.clone(), &[self.batch]),
+            ])
+            .expect("train_step execution failed");
+        let loss = outs[0].scalar_f32().expect("loss output");
+        out.copy_from_slice(outs[1].as_f32().expect("grads output"));
+        loss
+    }
+
+    fn eval_loss(&mut self, params: &[f32]) -> Option<f32> {
+        let mut total = 0.0f64;
+        let n = 4;
+        for i in 0..n {
+            let (im, lb) = self.data.eval_batch(self.batch, i as u64);
+            let outs = self
+                .eval_exe
+                .run(&[
+                    HostTensor::f32(params.to_vec(), &[self.d]),
+                    HostTensor::f32(im, &[self.batch, self.input_dim]),
+                    HostTensor::i32(lb, &[self.batch]),
+                ])
+                .ok()?;
+            total += outs[0].scalar_f32().ok()? as f64;
+        }
+        Some((total / n as f64) as f32)
+    }
+
+    fn name(&self) -> &'static str {
+        "hlo-mlp"
+    }
+}

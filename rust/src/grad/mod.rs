@@ -1,0 +1,30 @@
+//! Gradient sources: where each worker's stochastic gradient comes from.
+//!
+//! * [`hlo::HloLmSource`] / [`hlo::HloMlpSource`] — the real models:
+//!   AOT-lowered JAX train steps executed via PJRT (the production path).
+//! * [`synthetic`] — analytical objectives (noisy quadratic, Rosenbrock,
+//!   logistic regression) for fast unit tests and the Section-5 theory
+//!   checks (they satisfy Assumptions 1–3 by construction).
+
+pub mod hlo;
+pub mod synthetic;
+
+/// A distributed stochastic-gradient oracle.
+///
+/// `grad` computes worker `w`'s gradient at `params` for step `t` into
+/// `out` and returns the loss. Different (w, t) pairs must see
+/// independent data shards; the same (w, t, params) must be
+/// deterministic (reproducible runs).
+pub trait GradientSource {
+    fn dim(&self) -> usize;
+    fn grad(&mut self, params: &[f32], worker: usize, t: u64, out: &mut [f32]) -> f32;
+
+    /// Optional held-out evaluation loss at `params`.
+    fn eval_loss(&mut self, _params: &[f32]) -> Option<f32> {
+        None
+    }
+
+    fn name(&self) -> &'static str {
+        "source"
+    }
+}

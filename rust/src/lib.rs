@@ -1,0 +1,37 @@
+//! # 0/1 Adam — ICLR 2023 reproduction
+//!
+//! Three-layer Rust + JAX + Pallas implementation of *Maximizing
+//! Communication Efficiency for Large-scale Training via 0/1 Adam*
+//! (Lu, Li, Zhang, De Sa, He).
+//!
+//! Architecture (see DESIGN.md):
+//! * [`comm`] — 1-bit codecs, error-feedback AllReduce (paper Alg. 2/3),
+//!   the analytic network-timing model, and the volume ledger.
+//! * [`optim`] — the distributed optimizers: 0/1 Adam (Alg. 1), 1-bit
+//!   Adam / frozen-variance family (Alg. 4), original Adam (Eq. 3), SGD
+//!   baselines; T_v/T_u policies; LR schedules.
+//! * [`runtime`] — PJRT loader/executor for AOT HLO artifacts (L2 JAX
+//!   graphs with L1 Pallas kernels inlined). Python never runs here.
+//! * [`grad`] — gradient sources (PJRT-backed models + analytical
+//!   objectives).
+//! * [`coordinator`] — the training loop, simulated cluster clock,
+//!   metrics, Fig-1 profiler.
+//! * [`data`] / [`eval`] — synthetic workloads and downstream evals.
+//! * [`config`] / [`exp`] — paper workload presets and one driver per
+//!   table/figure.
+//! * [`benchkit`] / [`testkit`] — self-contained bench + property-test
+//!   harnesses (offline environment; see DESIGN.md §1).
+
+pub mod benchkit;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod grad;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod testkit;
+pub mod util;

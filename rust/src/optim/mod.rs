@@ -1,0 +1,126 @@
+//! Distributed optimizers: the paper's 0/1 Adam (Algorithm 1), the
+//! 1-bit Adam / frozen-variance family (Algorithm 4), original Adam
+//! (Equation 3) and SGD baselines, plus the T_v/T_u policies and LR
+//! schedules they consume.
+//!
+//! All optimizers use the conventional *post-update* indexing
+//! `x_{t+1} = x_t − γ_t · m_{t+1}/sqrt(v_{t+1} + ε)` (the model moves
+//! along the momentum/variance *after* they absorb g_t). The paper's
+//! Equation-3/Algorithm-1 subscripts literally write the pre-update
+//! states, but that reading stalls Algorithm 1 under per-step sync —
+//! see `kernels/ref.py` — and DeepSpeed's implementation is
+//! post-update; the Pallas kernels match.
+
+pub mod adam;
+pub mod lr;
+pub mod naive_onebit;
+pub mod onebit_adam;
+pub mod policy;
+pub mod sgd;
+pub mod zeroone_adam;
+
+pub use adam::Adam;
+pub use lr::{BertLr, ConstLr, CosineLr, LrSchedule, MilestoneLr};
+pub use naive_onebit::NaiveOneBitAdam;
+pub use onebit_adam::FrozenVarAdam;
+pub use policy::{SyncPolicy, SyncSchedule, VarPolicy, VarSchedule};
+pub use sgd::{MomentumSgd, SignSgd};
+pub use zeroone_adam::ZeroOneAdam;
+
+use crate::comm::WireStats;
+
+/// Adam-family hyperparameters (paper: β1=0.9, β2=0.999, ε=1e-8).
+#[derive(Debug, Clone, Copy)]
+pub struct Hyper {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// What one optimizer step did (fed to the ledger and the sim clock).
+#[derive(Debug, Clone, Default)]
+pub struct StepInfo {
+    pub lr: f64,
+    /// Worker states were synchronized this step (always true for
+    /// shared-state optimizers).
+    pub synced: bool,
+    /// Variance was updated this step (t ∈ T_v).
+    pub var_updated: bool,
+    /// Communication rounds performed this step (empty = local step).
+    pub rounds: Vec<WireStats>,
+}
+
+/// A distributed optimizer over n worker replicas of a d-dim model.
+///
+/// The coordinator drives it as: read `params(i)` for each worker →
+/// compute grads → `step(t, &grads)`.
+pub trait DistOptimizer {
+    fn name(&self) -> &'static str;
+    fn dim(&self) -> usize;
+    fn n_workers(&self) -> usize;
+
+    /// The model replica worker `i` evaluates its gradient at.
+    fn params(&self, worker: usize) -> &[f32];
+
+    /// Apply one global step given each worker's local gradient.
+    fn step(&mut self, t: u64, grads: &[Vec<f32>]) -> StepInfo;
+
+    /// Average model across workers (for evaluation / checkpoints).
+    fn mean_params(&self, out: &mut [f32]) {
+        let n = self.n_workers();
+        out.copy_from_slice(self.params(0));
+        for i in 1..n {
+            crate::tensor::axpy(out, 1.0, self.params(i));
+        }
+        crate::tensor::scale(out, 1.0 / n as f32);
+    }
+
+    /// Momentum state (worker 0 / shared), for Fig-1 profiling.
+    fn momentum(&self) -> Option<&[f32]> {
+        None
+    }
+
+    /// Variance state (shared), for Fig-1 profiling.
+    fn variance(&self) -> Option<&[f32]> {
+        None
+    }
+
+    /// Max pairwise worker divergence ‖xᵢ − x̄‖₂ (consensus metric).
+    fn consensus_error(&self) -> f64 {
+        let n = self.n_workers();
+        if n <= 1 {
+            return 0.0;
+        }
+        let mut mean = vec![0.0f32; self.dim()];
+        self.mean_params(&mut mean);
+        (0..n)
+            .map(|i| crate::tensor::dist2(self.params(i), &mean))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hyper_defaults_match_paper() {
+        let h = Hyper::default();
+        assert_eq!(h.beta1, 0.9);
+        assert_eq!(h.beta2, 0.999);
+        assert_eq!(h.eps, 1e-8);
+    }
+
+    #[test]
+    fn step_info_default_is_local() {
+        let s = StepInfo::default();
+        assert!(s.rounds.is_empty());
+        assert!(!s.synced);
+    }
+}

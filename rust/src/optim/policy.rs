@@ -1,0 +1,283 @@
+//! T_v (variance-freezing) and T_u (synchronization) policies —
+//! Section 6, "Policy for T_v and T_u in 0/1 Adam".
+//!
+//! * T_v: the j-th variance update happens at step k_j with
+//!   k_{j+1} − k_j = 2^{⌊j/κ⌋} (κ = 16 in the paper). In addition, the
+//!   paper stops updating the variance entirely once the sync interval
+//!   exceeds 1 ("we additionally stop updating variance when
+//!   t_{j+1} − t_j > 1").
+//! * T_u: sync every step during LR warmup, then the interval doubles
+//!   every `double_every` steps (the LR-halving horizon), clipped at
+//!   H = 16 (Assumption 5).
+
+/// Variance-update policy: decides whether step t ∈ T_v.
+#[derive(Debug, Clone)]
+pub enum VarPolicy {
+    /// Update every step (original Adam).
+    Always,
+    /// Never update after init (degenerate; for tests).
+    Never,
+    /// One-time freezing after t0 steps (1-bit Adam's full-precision
+    /// stage: T_v = {0, .., t0-1}).
+    OneShot { t0: u64 },
+    /// The paper's adaptive policy: k_{j+1} − k_j = 2^{⌊j/κ⌋}.
+    ExpInterval { kappa: u32 },
+}
+
+/// Stateful evaluator for a [`VarPolicy`].
+#[derive(Debug, Clone)]
+pub struct VarSchedule {
+    policy: VarPolicy,
+    /// Next step at which an update fires (for ExpInterval).
+    next_update: u64,
+    /// Number of updates performed so far (j).
+    j: u64,
+    /// Latched when the sync interval first exceeds 1 — no more updates.
+    stopped: bool,
+}
+
+impl VarSchedule {
+    pub fn new(policy: VarPolicy) -> Self {
+        VarSchedule { policy, next_update: 0, j: 0, stopped: false }
+    }
+
+    pub fn paper() -> Self {
+        VarSchedule::new(VarPolicy::ExpInterval { kappa: 16 })
+    }
+
+    /// Latch the "sync interval exceeded 1" stop condition.
+    pub fn stop(&mut self) {
+        self.stopped = true;
+    }
+
+    pub fn is_stopped(&self) -> bool {
+        self.stopped
+    }
+
+    /// Total updates so far (m = |T_v| consumed).
+    pub fn updates(&self) -> u64 {
+        self.j
+    }
+
+    /// Must be called once per step t (monotonically increasing);
+    /// returns true iff t ∈ T_v.
+    pub fn is_update_step(&mut self, t: u64) -> bool {
+        if self.stopped {
+            return false;
+        }
+        match self.policy {
+            VarPolicy::Always => {
+                self.j += 1;
+                true
+            }
+            VarPolicy::Never => false,
+            VarPolicy::OneShot { t0 } => {
+                if t < t0 {
+                    self.j += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+            VarPolicy::ExpInterval { kappa } => {
+                if t == self.next_update {
+                    let gap = 1u64 << ((self.j / kappa as u64).min(62)) as u32;
+                    self.next_update = t + gap;
+                    self.j += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+}
+
+/// Synchronization (T_u) policy.
+#[derive(Debug, Clone)]
+pub enum SyncPolicy {
+    /// Sync every step (the Fig-5 ablation; also Algorithm 4).
+    Always,
+    /// The paper's LR-tracking policy: interval 1 during `warmup`,
+    /// then doubling every `double_every` steps, clipped at `clip` (=H).
+    IntervalDoubling { warmup: u64, double_every: u64, clip: u64 },
+    /// Fixed interval (for theory sweeps over H).
+    Fixed { interval: u64 },
+}
+
+/// Stateful evaluator for a [`SyncPolicy`].
+#[derive(Debug, Clone)]
+pub struct SyncSchedule {
+    policy: SyncPolicy,
+    /// Next step at which a sync fires.
+    next_sync: u64,
+    /// Number of syncs performed.
+    count: u64,
+    /// Largest interval used so far (observed H).
+    pub max_interval: u64,
+}
+
+impl SyncSchedule {
+    pub fn new(policy: SyncPolicy) -> Self {
+        SyncSchedule { policy, next_sync: 0, count: 0, max_interval: 0 }
+    }
+
+    /// Paper BERT policy: every step for 12.5K, then ×2 every 32 678
+    /// steps, clip 16.
+    pub fn paper_bert() -> Self {
+        SyncSchedule::new(SyncPolicy::IntervalDoubling {
+            warmup: 12_500,
+            double_every: 32_678,
+            clip: 16,
+        })
+    }
+
+    /// Paper ImageNet policy: every step for 10 epochs (50 050 steps),
+    /// then ×2 every 50 050 steps, clip 16.
+    pub fn paper_imagenet() -> Self {
+        SyncSchedule::new(SyncPolicy::IntervalDoubling {
+            warmup: 50_050,
+            double_every: 50_050,
+            clip: 16,
+        })
+    }
+
+    /// Scale the BERT-shaped policy to a `total`-step proxy run.
+    pub fn scaled_bert(total: u64) -> Self {
+        let warmup = (total / 20).max(1);
+        SyncSchedule::new(SyncPolicy::IntervalDoubling {
+            warmup,
+            double_every: ((total - warmup) / 4).max(1),
+            clip: 16,
+        })
+    }
+
+    /// Current interval at step t (1 = sync every step).
+    pub fn interval_at(&self, t: u64) -> u64 {
+        match self.policy {
+            SyncPolicy::Always => 1,
+            SyncPolicy::Fixed { interval } => interval.max(1),
+            SyncPolicy::IntervalDoubling { warmup, double_every, clip } => {
+                if t < warmup {
+                    1
+                } else {
+                    let doublings = 1 + (t - warmup) / double_every;
+                    (1u64 << doublings.min(62)).min(clip)
+                }
+            }
+        }
+    }
+
+    pub fn syncs(&self) -> u64 {
+        self.count
+    }
+
+    /// Must be called once per step t (monotonic); true iff t ∈ T_u.
+    pub fn is_sync_step(&mut self, t: u64) -> bool {
+        if t >= self.next_sync {
+            let gap = self.interval_at(t);
+            self.max_interval = self.max_interval.max(gap);
+            self.next_sync = t + gap;
+            self.count += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect_updates(mut s: VarSchedule, horizon: u64) -> Vec<u64> {
+        (0..horizon).filter(|&t| s.is_update_step(t)).collect()
+    }
+
+    #[test]
+    fn exp_interval_matches_closed_form() {
+        // κ=2: gaps are 1,1, 2,2, 4,4, 8,8 ...
+        let ts = collect_updates(VarSchedule::new(VarPolicy::ExpInterval { kappa: 2 }), 40);
+        assert_eq!(&ts[..8], &[0, 1, 2, 4, 6, 10, 14, 22]);
+    }
+
+    #[test]
+    fn paper_kappa16_first_updates_are_dense() {
+        let ts = collect_updates(VarSchedule::paper(), 20);
+        // first 16 gaps are 1 → updates at 0..=16 then gap 2
+        assert_eq!(ts[..17], (0..17).collect::<Vec<_>>()[..]);
+        assert_eq!(ts[17], 18);
+    }
+
+    #[test]
+    fn oneshot_is_prefix() {
+        let ts = collect_updates(VarSchedule::new(VarPolicy::OneShot { t0: 5 }), 20);
+        assert_eq!(ts, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn stop_latches() {
+        let mut s = VarSchedule::paper();
+        assert!(s.is_update_step(0));
+        s.stop();
+        assert!(!s.is_update_step(1));
+        assert!(!s.is_update_step(2));
+        assert!(s.is_stopped());
+        assert_eq!(s.updates(), 1);
+    }
+
+    #[test]
+    fn sync_always_fires_every_step() {
+        let mut s = SyncSchedule::new(SyncPolicy::Always);
+        for t in 0..10 {
+            assert!(s.is_sync_step(t));
+        }
+        assert_eq!(s.syncs(), 10);
+        assert_eq!(s.max_interval, 1);
+    }
+
+    #[test]
+    fn fixed_interval_pattern() {
+        let mut s = SyncSchedule::new(SyncPolicy::Fixed { interval: 4 });
+        let ts: Vec<u64> = (0..20).filter(|&t| s.is_sync_step(t)).collect();
+        assert_eq!(ts, vec![0, 4, 8, 12, 16]);
+    }
+
+    #[test]
+    fn doubling_respects_warmup_and_clip() {
+        let mut s = SyncSchedule::new(SyncPolicy::IntervalDoubling {
+            warmup: 10,
+            double_every: 10,
+            clip: 4,
+        });
+        let ts: Vec<u64> = (0..60).filter(|&t| s.is_sync_step(t)).collect();
+        // every step through t=9
+        assert_eq!(&ts[..10], &(0..10).collect::<Vec<_>>()[..]);
+        // interval 2 in [10,20), 4 in [20,30), then clipped at 4
+        assert!(ts.contains(&10) && ts.contains(&12) && !ts.contains(&11));
+        assert!(ts.contains(&20) && ts.contains(&24) && !ts.contains(&22));
+        assert!(s.max_interval <= 4);
+    }
+
+    #[test]
+    fn paper_bert_policy_h_is_16() {
+        let mut s = SyncSchedule::paper_bert();
+        for t in 0..200_000u64 {
+            s.is_sync_step(t);
+        }
+        assert_eq!(s.max_interval, 16); // H = 16 (Assumption 5)
+        // warmup region synced every step
+        let mut s2 = SyncSchedule::paper_bert();
+        assert!((0..12_500).all(|t| s2.is_sync_step(t)));
+    }
+
+    #[test]
+    fn interval_at_is_pure() {
+        let s = SyncSchedule::paper_bert();
+        assert_eq!(s.interval_at(0), 1);
+        assert_eq!(s.interval_at(12_499), 1);
+        assert_eq!(s.interval_at(12_500), 2);
+        assert_eq!(s.interval_at(12_500 + 32_678), 4);
+        assert_eq!(s.interval_at(12_500 + 5 * 32_678), 16); // clipped
+    }
+}

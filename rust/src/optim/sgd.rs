@@ -1,0 +1,171 @@
+//! SGD-family baselines.
+//!
+//! * [`MomentumSgd`] — distributed momentum SGD with full-precision
+//!   AllReduce (Equation 2 + heavy-ball).
+//! * [`SignSgd`] — EF-1-bit compressed SGD. This is also the paper's
+//!   Section-3 cautionary tale: naive 1-bit compression of *Adam*
+//!   collapses the per-coordinate learning rate to a shared magnitude,
+//!   making it "no different than momentum SGD" — the ablation benches
+//!   compare these trajectories against 0/1 Adam to demonstrate the
+//!   point.
+
+use super::{DistOptimizer, LrSchedule, StepInfo};
+use crate::comm::allreduce::{allreduce_mean, EfAllReduce};
+
+pub struct MomentumSgd {
+    x: Vec<f32>,
+    m: Vec<f32>,
+    gbar: Vec<f32>,
+    n: usize,
+    beta: f32,
+    lr: Box<dyn LrSchedule>,
+}
+
+impl MomentumSgd {
+    pub fn new(init: Vec<f32>, n_workers: usize, beta: f32, lr: Box<dyn LrSchedule>) -> Self {
+        let d = init.len();
+        MomentumSgd {
+            x: init,
+            m: vec![0.0; d],
+            gbar: vec![0.0; d],
+            n: n_workers,
+            beta,
+            lr,
+        }
+    }
+}
+
+impl DistOptimizer for MomentumSgd {
+    fn name(&self) -> &'static str {
+        "momentum-sgd"
+    }
+
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn params(&self, _worker: usize) -> &[f32] {
+        &self.x
+    }
+
+    fn mean_params(&self, out: &mut [f32]) {
+        out.copy_from_slice(&self.x);
+    }
+
+    fn step(&mut self, t: u64, grads: &[Vec<f32>]) -> StepInfo {
+        let gamma = self.lr.lr(t) as f32;
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let wire = allreduce_mean(&refs, &mut self.gbar);
+        for i in 0..self.x.len() {
+            self.m[i] = self.beta * self.m[i] + self.gbar[i];
+            self.x[i] -= gamma * self.m[i];
+        }
+        StepInfo { lr: gamma as f64, synced: true, var_updated: false, rounds: vec![wire] }
+    }
+
+    fn momentum(&self) -> Option<&[f32]> {
+        Some(&self.m)
+    }
+}
+
+/// Error-feedback signSGD: x ← x − γ · EF-1bit-AllReduce(g).
+pub struct SignSgd {
+    x: Vec<f32>,
+    gbar: Vec<f32>,
+    n: usize,
+    lr: Box<dyn LrSchedule>,
+    ef: EfAllReduce,
+}
+
+impl SignSgd {
+    pub fn new(init: Vec<f32>, n_workers: usize, lr: Box<dyn LrSchedule>) -> Self {
+        let d = init.len();
+        SignSgd {
+            x: init,
+            gbar: vec![0.0; d],
+            n: n_workers,
+            lr,
+            ef: EfAllReduce::new(n_workers, d),
+        }
+    }
+}
+
+impl DistOptimizer for SignSgd {
+    fn name(&self) -> &'static str {
+        "signsgd-ef"
+    }
+
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn params(&self, _worker: usize) -> &[f32] {
+        &self.x
+    }
+
+    fn mean_params(&self, out: &mut [f32]) {
+        out.copy_from_slice(&self.x);
+    }
+
+    fn step(&mut self, t: u64, grads: &[Vec<f32>]) -> StepInfo {
+        let gamma = self.lr.lr(t) as f32;
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let wire = self.ef.reduce(&refs, &mut self.gbar);
+        crate::tensor::axpy(&mut self.x, -gamma, &self.gbar);
+        StepInfo { lr: gamma as f64, synced: true, var_updated: false, rounds: vec![wire] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::ConstLr;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn momentum_sgd_descends_quadratic() {
+        let d = 32;
+        let mut opt = MomentumSgd::new(vec![1.0; d], 2, 0.9, Box::new(ConstLr(0.02)));
+        for t in 0..200 {
+            let g: Vec<Vec<f32>> = (0..2).map(|i| opt.params(i).to_vec()).collect();
+            opt.step(t, &g);
+        }
+        assert!(crate::tensor::norm2(opt.params(0)) < 0.1);
+    }
+
+    #[test]
+    fn signsgd_descends_noisy_quadratic() {
+        let d = 64;
+        let mut opt = SignSgd::new(vec![1.0; d], 4, Box::new(ConstLr(0.02)));
+        let mut rng = Rng::new(2);
+        for t in 0..500 {
+            let grads: Vec<Vec<f32>> = (0..4)
+                .map(|i| {
+                    opt.params(i)
+                        .iter()
+                        .map(|&x| x + 0.1 * rng.normal() as f32)
+                        .collect()
+                })
+                .collect();
+            let info = opt.step(t, &grads);
+            assert!(info.rounds[0].compressed);
+        }
+        assert!(crate::tensor::norm2(opt.params(0)) < 2.0);
+    }
+
+    #[test]
+    fn momentum_is_heavy_ball() {
+        let mut opt = MomentumSgd::new(vec![0.0], 1, 0.5, Box::new(ConstLr(1.0)));
+        opt.step(0, &[vec![1.0]]); // m=1, x=-1
+        opt.step(1, &[vec![0.0]]); // m=0.5, x=-1.5
+        assert!((opt.params(0)[0] + 1.5).abs() < 1e-6);
+    }
+}

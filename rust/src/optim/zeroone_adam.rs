@@ -1,0 +1,397 @@
+//! **0/1 Adam** — paper Algorithm 1, the system's core contribution.
+//!
+//! Per-worker state: model xᵢ, momentum mᵢ, buffer uᵢ (the "actual sent
+//! tensor" uₜ = Σ_{k=t'}^{t} γₖ mₖ). Shared state: frozen variance v
+//! (all workers agree by construction: it only absorbs full-precision
+//! AllReduce outputs), its hoisted reciprocal sqrt, and the sync anchor
+//! x_{t'}.
+//!
+//! Step t (Algorithm 1 lines 2–20):
+//!   3.  m ← β₁m + (1−β₁)g
+//!   4.  x ← x − γₜ·m·rsv            (the just-updated m; the paper's
+//!   5.  u ← u + γₜ·m                 pre-update subscript would stall
+//!                                    under T_u = every-step — see the
+//!                                    kernel ref.py docstring)
+//!   6–12. if t ∈ T_u: ū = 1bit-AllReduce(u);  m ← ū/Σγ;
+//!         x ← x_{t'} − ū·rsv;  u ← 0;  t' ← t
+//!   14–20. if t ∈ T_v: ḡ = AllReduce(g) (fp16);  v ← β₂v + (1−β₂)ḡ²
+//!
+//! Two paper-mandated policy couplings are honored:
+//!   * variance updates stop permanently once the sync interval
+//!     exceeds 1 (Section 6, policy paragraph);
+//!   * the γ-sum in the momentum reconstruction matches exactly the γ's
+//!     accumulated into u since the last sync (the paper's Σ_{h=t'}^{t}
+//!     γ_h with the off-by-one resolved toward self-consistency — for
+//!     the constant-γ analysis of Theorem 1 the two readings coincide).
+
+use super::policy::{SyncSchedule, VarSchedule};
+use super::{DistOptimizer, Hyper, LrSchedule, StepInfo};
+use crate::comm::allreduce::{allreduce_mean, EfAllReduce};
+
+pub struct ZeroOneAdam {
+    // per-worker replicas
+    xs: Vec<Vec<f32>>,
+    ms: Vec<Vec<f32>>,
+    us: Vec<Vec<f32>>,
+    // shared state
+    v: Vec<f32>,
+    rsv: Vec<f32>,
+    x_anchor: Vec<f32>,
+    /// Σ γ_h accumulated into the u buffers since the last sync.
+    gamma_accum: f64,
+    n: usize,
+    hyper: Hyper,
+    lr: Box<dyn LrSchedule>,
+    pub var_sched: VarSchedule,
+    pub sync_sched: SyncSchedule,
+    ef: EfAllReduce,
+    // scratch
+    ubar: Vec<f32>,
+    gbar: Vec<f32>,
+}
+
+impl ZeroOneAdam {
+    pub fn new(
+        init: Vec<f32>,
+        n_workers: usize,
+        hyper: Hyper,
+        lr: Box<dyn LrSchedule>,
+        var_sched: VarSchedule,
+        sync_sched: SyncSchedule,
+    ) -> Self {
+        let d = init.len();
+        let mut rsv = vec![0.0; d];
+        crate::tensor::rsqrt_into(&mut rsv, &vec![0.0; d], hyper.eps);
+        ZeroOneAdam {
+            xs: vec![init.clone(); n_workers],
+            ms: vec![vec![0.0; d]; n_workers],
+            us: vec![vec![0.0; d]; n_workers],
+            v: vec![0.0; d],
+            rsv,
+            x_anchor: init,
+            gamma_accum: 0.0,
+            n: n_workers,
+            hyper,
+            lr,
+            var_sched,
+            sync_sched,
+            ef: EfAllReduce::new(n_workers, d),
+            ubar: vec![0.0; d],
+            gbar: vec![0.0; d],
+        }
+    }
+
+    /// Paper-default policies scaled to a `total`-step run.
+    pub fn paper_scaled(
+        init: Vec<f32>,
+        n_workers: usize,
+        hyper: Hyper,
+        lr: Box<dyn LrSchedule>,
+        total: u64,
+    ) -> Self {
+        Self::new(
+            init,
+            n_workers,
+            hyper,
+            lr,
+            VarSchedule::paper(),
+            SyncSchedule::scaled_bert(total),
+        )
+    }
+
+    pub fn syncs(&self) -> u64 {
+        self.sync_sched.syncs()
+    }
+
+    /// Observed H (max sync interval so far).
+    pub fn max_interval(&self) -> u64 {
+        self.sync_sched.max_interval
+    }
+}
+
+impl DistOptimizer for ZeroOneAdam {
+    fn name(&self) -> &'static str {
+        "01adam"
+    }
+
+    fn dim(&self) -> usize {
+        self.x_anchor.len()
+    }
+
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn params(&self, worker: usize) -> &[f32] {
+        &self.xs[worker]
+    }
+
+    fn step(&mut self, t: u64, grads: &[Vec<f32>]) -> StepInfo {
+        assert_eq!(grads.len(), self.n);
+        let gamma = self.lr.lr(t) as f32;
+        let Hyper { beta1, beta2, eps } = self.hyper;
+        let mut rounds = Vec::with_capacity(2);
+
+        // Lines 14–20: adaptive variance update (full-precision round).
+        // Performed *first* so the local step divides by a variance that
+        // has absorbed g_t (post-update convention — with v_0 = 0 the
+        // paper's literal pre-update read would divide by sqrt(eps) on
+        // the very first step).
+        let var_updated = self.var_sched.is_update_step(t);
+        if var_updated {
+            let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+            let wire = allreduce_mean(&refs, &mut self.gbar);
+            rounds.push(wire);
+            crate::tensor::var_update(&mut self.v, &self.gbar, beta2);
+            crate::tensor::rsqrt_into(&mut self.rsv, &self.v, eps);
+        }
+
+        // Lines 3–5: fused local step per worker (the L1 kernel's math:
+        // one streamed pass, x and u move along the updated momentum).
+        for w in 0..self.n {
+            let (x, m, u, g, rsv) = (
+                &mut self.xs[w],
+                &mut self.ms[w],
+                &mut self.us[w],
+                &grads[w],
+                &self.rsv,
+            );
+            // iterator zip: no bounds checks in the 5-stream loop
+            for ((((xi, mi), ui), &gi), &ri) in x
+                .iter_mut()
+                .zip(m.iter_mut())
+                .zip(u.iter_mut())
+                .zip(g.iter())
+                .zip(rsv.iter())
+            {
+                let m_new = beta1 * *mi + (1.0 - beta1) * gi;
+                let step = gamma * m_new;
+                *mi = m_new;
+                *xi -= step * ri;
+                *ui += step;
+            }
+        }
+        self.gamma_accum += gamma as f64;
+
+        // Lines 6–12: 1-bit sync.
+        let synced = self.sync_sched.is_sync_step(t);
+        if synced {
+            let refs: Vec<&[f32]> = self.us.iter().map(|u| u.as_slice()).collect();
+            let wire = self.ef.reduce(&refs, &mut self.ubar);
+            rounds.push(wire);
+
+            let inv_gsum = if self.gamma_accum > 0.0 {
+                (1.0 / self.gamma_accum) as f32
+            } else {
+                0.0
+            };
+            // x_{t+1} = x_{t'} − ū·rsv ;  m_{t+1} = ū / Σγ  (lines 8–9)
+            for ((ub, xa), &ri) in self
+                .ubar
+                .iter_mut()
+                .zip(self.x_anchor.iter_mut())
+                .zip(self.rsv.iter())
+            {
+                *xa -= *ub * ri;
+                *ub *= inv_gsum; // reuse as the new momentum
+            }
+            for w in 0..self.n {
+                self.xs[w].copy_from_slice(&self.x_anchor);
+                self.ms[w].copy_from_slice(&self.ubar);
+                self.us[w].iter_mut().for_each(|v| *v = 0.0);
+            }
+            self.gamma_accum = 0.0;
+        }
+
+        // Paper policy: once local steps begin (sync interval > 1), the
+        // variance freezes for good. Latched *after* this step's T_v
+        // check so the step that first widens the interval still gets
+        // its variance refresh.
+        if synced && self.sync_sched.interval_at(t) > 1 && !self.var_sched.is_stopped() {
+            self.var_sched.stop();
+        }
+
+        StepInfo { lr: gamma as f64, synced, var_updated, rounds }
+    }
+
+    fn momentum(&self) -> Option<&[f32]> {
+        Some(&self.ms[0])
+    }
+
+    fn variance(&self) -> Option<&[f32]> {
+        Some(&self.v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::policy::{SyncPolicy, VarPolicy};
+    use crate::optim::{Adam, ConstLr};
+    use crate::tensor::Rng;
+
+    fn mk(
+        d: usize,
+        n: usize,
+        lr: f64,
+        var: VarPolicy,
+        sync: SyncPolicy,
+    ) -> ZeroOneAdam {
+        ZeroOneAdam::new(
+            vec![1.0; d],
+            n,
+            Hyper::default(),
+            Box::new(ConstLr(lr)),
+            VarSchedule::new(var),
+            SyncSchedule::new(sync),
+        )
+    }
+
+    fn noisy_quad_grads(opt: &ZeroOneAdam, rng: &mut Rng, sigma: f32) -> Vec<Vec<f32>> {
+        (0..opt.n_workers())
+            .map(|w| {
+                opt.params(w)
+                    .iter()
+                    .map(|&x| x + sigma * rng.normal() as f32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn consensus_after_every_sync() {
+        let mut opt = mk(32, 4, 0.01, VarPolicy::ExpInterval { kappa: 4 },
+                         SyncPolicy::Fixed { interval: 3 });
+        let mut rng = Rng::new(1);
+        for t in 0..30 {
+            let grads = noisy_quad_grads(&opt, &mut rng, 0.3);
+            let info = opt.step(t, &grads);
+            if info.synced {
+                assert!(opt.consensus_error() < 1e-6, "t={t}");
+            } else if t % 3 == 2 {
+                // by the 2nd local step after a sync the workers'
+                // momenta (which absorbed different noise) have moved
+                // the replicas apart
+                assert!(opt.consensus_error() > 0.0, "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_adam_shape_when_always_sync_always_var() {
+        // With T_u = T_v = every step and identical worker gradients,
+        // 0/1 Adam's trajectory tracks Adam's (the sync path replaces m
+        // with ū/γ = C²[γm]/γ — on identical inputs the compression is
+        // sign-exact, so directions match; magnitudes stay close).
+        let d = 16;
+        let mut zo = mk(d, 2, 0.01, VarPolicy::Always, SyncPolicy::Always);
+        let mut adam = Adam::new(vec![1.0; d], 2, Hyper::default(), Box::new(ConstLr(0.01)));
+        for t in 0..100 {
+            let gz: Vec<Vec<f32>> = (0..2).map(|w| zo.params(w).to_vec()).collect();
+            zo.step(t, &gz);
+            let ga: Vec<Vec<f32>> = (0..2).map(|w| adam.params(w).to_vec()).collect();
+            adam.step(t, &ga);
+        }
+        // both must make comparable progress on the quadratic
+        let nz = crate::tensor::norm2(zo.params(0));
+        let na = crate::tensor::norm2(adam.params(0));
+        assert!(nz < 3.0 && na < 3.0, "zo={nz} adam={na}");
+    }
+
+    #[test]
+    fn buffer_resets_after_sync() {
+        let mut opt = mk(8, 2, 0.05, VarPolicy::Always, SyncPolicy::Fixed { interval: 4 });
+        let mut rng = Rng::new(3);
+        for t in 0..9 {
+            let grads = noisy_quad_grads(&opt, &mut rng, 0.1);
+            let info = opt.step(t, &grads);
+            if info.synced {
+                assert!(opt.us.iter().all(|u| u.iter().all(|&v| v == 0.0)));
+            }
+        }
+    }
+
+    #[test]
+    fn variance_stops_when_interval_exceeds_one() {
+        let mut opt = mk(8, 2, 0.01, VarPolicy::Always,
+                         SyncPolicy::IntervalDoubling { warmup: 5, double_every: 100, clip: 8 });
+        let mut rng = Rng::new(4);
+        let mut var_updates_after_warmup = 0;
+        for t in 0..30 {
+            let grads = noisy_quad_grads(&opt, &mut rng, 0.1);
+            let info = opt.step(t, &grads);
+            if t > 5 && info.var_updated {
+                var_updates_after_warmup += 1;
+            }
+        }
+        assert!(opt.var_sched.is_stopped());
+        assert_eq!(var_updates_after_warmup, 0);
+    }
+
+    #[test]
+    fn skipped_steps_have_no_rounds() {
+        let mut opt = mk(8, 2, 0.01, VarPolicy::Never, SyncPolicy::Fixed { interval: 4 });
+        let mut rng = Rng::new(5);
+        let mut skipped = 0;
+        for t in 0..16 {
+            let grads = noisy_quad_grads(&opt, &mut rng, 0.1);
+            let info = opt.step(t, &grads);
+            if info.rounds.is_empty() {
+                skipped += 1;
+                assert!(!info.synced);
+            }
+        }
+        assert_eq!(skipped, 12); // 4 syncs in 16 steps
+    }
+
+    #[test]
+    fn descends_with_local_steps_and_compression() {
+        // End-to-end optimizer sanity: noisy quadratic, H=4.
+        let d = 64;
+        let mut opt = mk(d, 4, 0.02, VarPolicy::ExpInterval { kappa: 8 },
+                         SyncPolicy::IntervalDoubling { warmup: 32, double_every: 200, clip: 4 });
+        let mut rng = Rng::new(6);
+        for t in 0..600 {
+            let grads = noisy_quad_grads(&opt, &mut rng, 0.1);
+            opt.step(t, &grads);
+        }
+        let mut mean = vec![0.0f32; d];
+        opt.mean_params(&mut mean);
+        let n0 = (d as f64).sqrt(); // ‖x₀‖
+        let nf = crate::tensor::norm2(&mean);
+        assert!(nf < 0.5 * n0, "‖x‖ {nf} vs init {n0}");
+    }
+
+    #[test]
+    fn momentum_reconstruction_scale() {
+        // After a sync with constant γ over k local steps, the rebuilt
+        // momentum should be on the order of the true mean momentum.
+        let d = 16;
+        let mut opt = mk(d, 2, 0.01, VarPolicy::Always, SyncPolicy::Fixed { interval: 4 });
+        let grads: Vec<Vec<f32>> = vec![vec![1.0; d]; 2];
+        let mut last_m_before = vec![0.0f32; d];
+        for t in 0..8 {
+            if t == 7 {
+                last_m_before.copy_from_slice(&opt.ms[0]);
+            }
+            opt.step(t, &grads);
+        }
+        // t=7 was not a sync step; t=8 is (interval 4 → syncs at 0,4,8)
+        let info = opt.step(8, &grads);
+        assert!(info.synced);
+        let m = opt.momentum().unwrap();
+        let ratio = crate::tensor::norm2(m) / crate::tensor::norm2(&last_m_before);
+        assert!((0.2..5.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn gamma_accum_tracks_buffer() {
+        let mut opt = mk(4, 1, 0.1, VarPolicy::Never, SyncPolicy::Fixed { interval: 100 });
+        let grads = vec![vec![1.0f32; 4]];
+        for t in 0..5 {
+            opt.step(t, &grads);
+        }
+        // the t=0 sync reset the accumulator; steps 1..4 contributed
+        assert!((opt.gamma_accum - 0.4).abs() < 1e-6); // f32 lr cast
+    }
+}

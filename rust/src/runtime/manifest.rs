@@ -1,0 +1,326 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor signature of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Golden output record: first elements + L2 norm on deterministic inputs.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub head: Vec<f64>,
+    pub norm: f64,
+}
+
+/// One lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub golden: Vec<Golden>,
+}
+
+/// One named parameter tensor in the flat layout.
+#[derive(Debug, Clone)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// One model (LM or MLP) with its artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub kind: String,
+    pub param_count: usize,
+    pub layout: Vec<LayoutEntry>,
+    pub init_file: String,
+    pub init_norm: f64,
+    pub config: BTreeMap<String, f64>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl ModelEntry {
+    /// Model hyperparameter (vocab, seq_len, batch, ...).
+    pub fn cfg(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .map(|v| *v as usize)
+            .ok_or_else(|| anyhow!("model {} has no config key '{key}'", self.name))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("model {} has no artifact '{name}'", self.name))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub tile: usize,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Self::from_json(dir, &json)
+    }
+
+    pub fn from_json(dir: PathBuf, json: &Json) -> Result<Manifest> {
+        let hyper = json.req("hyper").map_err(|e| anyhow!("{e}"))?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in json
+            .req("models")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models is not an object"))?
+        {
+            models.insert(name.clone(), parse_model(name, entry)?);
+        }
+        Ok(Manifest {
+            dir,
+            tile: json
+                .get("tile")
+                .and_then(Json::as_usize)
+                .unwrap_or(65536),
+            beta1: hyper.get("beta1").and_then(Json::as_f64).unwrap_or(0.9),
+            beta2: hyper.get("beta2").and_then(Json::as_f64).unwrap_or(0.999),
+            eps: hyper.get("eps").and_then(Json::as_f64).unwrap_or(1e-8),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no model '{name}' (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Load a model's flat init parameters (little-endian f32 binary).
+    pub fn load_init(&self, model: &str) -> Result<Vec<f32>> {
+        let entry = self.model(model)?;
+        let path = self.path_of(&entry.init_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != entry.param_count * 4 {
+            return Err(anyhow!(
+                "{path:?}: expected {} f32s, file has {} bytes",
+                entry.param_count,
+                bytes.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(entry.param_count);
+        for chunk in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(out)
+    }
+}
+
+fn parse_sig(j: &Json) -> Result<Vec<TensorSig>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("signature is not an array"))?;
+    arr.iter()
+        .map(|e| {
+            Ok(TensorSig {
+                dtype: e
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("sig missing dtype"))?
+                    .to_string(),
+                shape: e
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("sig missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+            })
+        })
+        .collect()
+}
+
+fn parse_model(name: &str, j: &Json) -> Result<ModelEntry> {
+    let mut artifacts = BTreeMap::new();
+    for (aname, a) in j
+        .req("artifacts")
+        .map_err(|e| anyhow!("{name}: {e}"))?
+        .as_obj()
+        .ok_or_else(|| anyhow!("{name}: artifacts not an object"))?
+    {
+        let golden = match a.get("golden").and_then(Json::as_arr) {
+            Some(gs) => gs
+                .iter()
+                .map(|g| Golden {
+                    head: g
+                        .get("head")
+                        .and_then(Json::as_arr)
+                        .map(|h| h.iter().filter_map(Json::as_f64).collect())
+                        .unwrap_or_default(),
+                    norm: g.get("norm").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+        artifacts.insert(
+            aname.clone(),
+            ArtifactEntry {
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}/{aname}: missing file"))?
+                    .to_string(),
+                inputs: parse_sig(a.req("inputs").map_err(|e| anyhow!("{e}"))?)?,
+                outputs: a
+                    .get("outputs")
+                    .map(parse_sig)
+                    .transpose()?
+                    .unwrap_or_default(),
+                golden,
+            },
+        );
+    }
+    let layout = j
+        .get("layout")
+        .and_then(Json::as_arr)
+        .map(|entries| {
+            entries
+                .iter()
+                .map(|e| LayoutEntry {
+                    name: e.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                    shape: e
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default(),
+                    offset: e.get("offset").and_then(Json::as_usize).unwrap_or(0),
+                    size: e.get("size").and_then(Json::as_usize).unwrap_or(0),
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    let config = j
+        .get("config")
+        .and_then(Json::as_obj)
+        .map(|kv| {
+            kv.iter()
+                .filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+                .collect()
+        })
+        .unwrap_or_default();
+    Ok(ModelEntry {
+        name: name.to_string(),
+        kind: j
+            .get("kind")
+            .and_then(Json::as_str)
+            .unwrap_or("lm")
+            .to_string(),
+        param_count: j
+            .get("param_count")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("{name}: missing param_count"))?,
+        layout,
+        init_file: j
+            .get("init_file")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        init_norm: j.get("init_norm").and_then(Json::as_f64).unwrap_or(f64::NAN),
+        config,
+        artifacts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let Some(dir) = artifacts_dir() else { return };
+        let man = Manifest::load(&dir).unwrap();
+        assert!(man.tile > 0);
+        assert!((man.beta1 - 0.9).abs() < 1e-9);
+        for (name, model) in &man.models {
+            assert!(model.param_count > 0, "{name}");
+            assert!(model.artifacts.contains_key("train_step"), "{name}");
+            // layout offsets contiguous
+            let mut off = 0;
+            for e in &model.layout {
+                assert_eq!(e.offset, off, "{name}/{}", e.name);
+                off += e.size;
+            }
+            assert_eq!(off, model.param_count, "{name}");
+        }
+    }
+
+    #[test]
+    fn init_params_match_norm() {
+        let Some(dir) = artifacts_dir() else { return };
+        let man = Manifest::load(&dir).unwrap();
+        let (name, model) = man.models.iter().next().unwrap();
+        let init = man.load_init(name).unwrap();
+        assert_eq!(init.len(), model.param_count);
+        let norm = crate::tensor::norm2(&init);
+        assert!((norm - model.init_norm).abs() / model.init_norm < 1e-5);
+    }
+
+    #[test]
+    fn from_json_minimal() {
+        let j = Json::parse(
+            r#"{"hyper": {"beta1": 0.9, "beta2": 0.999, "eps": 1e-8},
+                "tile": 128,
+                "models": {"m": {"kind": "lm", "param_count": 10,
+                                  "artifacts": {"train_step": {
+                                      "file": "f.hlo.txt",
+                                      "inputs": [{"dtype": "float32", "shape": [10]}]}}}}}"#,
+        )
+        .unwrap();
+        let man = Manifest::from_json(PathBuf::from("/tmp"), &j).unwrap();
+        assert_eq!(man.tile, 128);
+        let m = man.model("m").unwrap();
+        assert_eq!(m.param_count, 10);
+        assert_eq!(m.artifact("train_step").unwrap().inputs[0].elems(), 10);
+        assert!(m.artifact("nope").is_err());
+        assert!(man.model("nope").is_err());
+    }
+}

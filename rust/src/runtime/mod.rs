@@ -1,0 +1,247 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) and executes them on
+//! the request path. Python never runs here — the Rust binary is
+//! self-contained once `make artifacts` has produced the HLO files.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactEntry, Golden, Manifest, ModelEntry, TensorSig};
+
+/// Typed host-side tensor handed to / returned from executables.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        HostTensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        HostTensor::I32(data, shape.to_vec())
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        v.first().copied().ok_or_else(|| anyhow!("empty tensor"))
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32(data, shape) => {
+                let l = xla::Literal::vec1(data.as_slice());
+                reshape(l, shape)?
+            }
+            HostTensor::I32(data, shape) => {
+                let l = xla::Literal::vec1(data.as_slice());
+                reshape(l, shape)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+fn reshape(l: xla::Literal, shape: &[usize]) -> Result<xla::Literal> {
+    if shape.len() == 1 {
+        return Ok(l);
+    }
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+    l.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// A compiled executable plus its manifest signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: ArtifactEntry,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns every tuple element as a
+    /// host tensor (f32 outputs only — all our artifacts return f32).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.entry.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.entry.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{}: execute: {e:?}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: to_literal: {e:?}", self.name))?;
+        // aot.py lowers with return_tuple=True: the output is one tuple.
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("{}: to_tuple: {e:?}", self.name))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, part) in parts.into_iter().enumerate() {
+            let data = part
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("{}: output {i} to_vec: {e:?}", self.name))?;
+            let shape = self
+                .entry
+                .outputs
+                .get(i)
+                .map(|s| s.shape.clone())
+                .unwrap_or_else(|| vec![data.len()]);
+            out.push(HostTensor::F32(data, shape));
+        }
+        Ok(out)
+    }
+}
+
+/// The PJRT runtime: one CPU client + a compile cache over artifacts.
+///
+/// Compiling an HLO module is expensive (seconds for the train step);
+/// each artifact is compiled at most once per process and shared via
+/// `Rc` so coordinator workers reuse the same executable.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) a compiled artifact for `model`.
+    pub fn load(&self, model: &str, artifact: &str) -> Result<Rc<Executable>> {
+        let key = format!("{model}/{artifact}");
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.model(model)?.artifact(artifact)?.clone();
+        let path = self.manifest.path_of(&entry.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {key}: {e:?}"))
+            .with_context(|| format!("artifact {path:?}"))?;
+        let exe = Rc::new(Executable {
+            exe,
+            entry,
+            name: key.clone(),
+        });
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of distinct artifacts compiled so far (for tests/metrics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deterministic golden inputs — EXACT mirrors of python/compile/aot.py.
+// ---------------------------------------------------------------------
+
+/// tokens[b, s] = (1 + 31 b + 7 s) % vocab, row-major i32[batch, seq].
+pub fn golden_tokens(batch: usize, seq: usize, vocab: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(batch * seq);
+    for b in 0..batch {
+        for s in 0..seq {
+            out.push(((1 + 31 * b + 7 * s) % vocab) as i32);
+        }
+    }
+    out
+}
+
+/// images[b, i] = sin(0.1 b + 0.01 i) computed in f64 then cast.
+pub fn golden_images(batch: usize, dim: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(batch * dim);
+    for b in 0..batch {
+        for i in 0..dim {
+            out.push((0.1 * b as f64 + 0.01 * i as f64).sin() as f32);
+        }
+    }
+    out
+}
+
+/// labels[b] = b % classes.
+pub fn golden_labels(batch: usize, classes: usize) -> Vec<i32> {
+    (0..batch).map(|b| (b % classes) as i32).collect()
+}
+
+/// v[i] = scale * sin(phase + 0.001 i), f64 math then f32 cast.
+pub fn golden_vec(d: usize, phase: f64, scale: f64) -> Vec<f32> {
+    (0..d)
+        .map(|i| (scale * (phase + 0.001 * i as f64).sin()) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_formulas_match_python() {
+        // Mirrors test_golden_inputs_are_deterministic in python/tests.
+        let t = golden_tokens(4, 32, 256);
+        assert_eq!(t[0], 1);
+        assert_eq!(t[2 * 32 + 3], ((1 + 62 + 21) % 256) as i32);
+        let v = golden_vec(10, 0.3, 0.1);
+        assert!((v[0] as f64 - 0.1 * 0.3f64.sin()).abs() < 1e-9);
+        assert!((v[7] as f64 - 0.1 * 0.307f64.sin()).abs() < 1e-9);
+        let l = golden_labels(7, 3);
+        assert_eq!(l, vec![0, 1, 2, 0, 1, 2, 0]);
+        let im = golden_images(2, 3);
+        assert!((im[4] as f64 - (0.1 + 0.01f64).sin()).abs() < 1e-7);
+    }
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::f32(vec![1.0, 2.0], &[2]);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(t.scalar_f32().unwrap(), 1.0);
+        let i = HostTensor::i32(vec![1], &[1]);
+        assert!(i.as_f32().is_err());
+    }
+}

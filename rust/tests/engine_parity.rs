@@ -1,0 +1,178 @@
+//! Cross-layer parity: the L1 Pallas kernels (executed via PJRT) must
+//! agree with the L3 native step engine on random inputs — the native
+//! loops in `optim/` are trusted because these tests pin them to the
+//! lowered kernels, which are themselves pinned to `ref.py` by pytest.
+
+use zo_adam::runtime::{HostTensor, Runtime};
+use zo_adam::tensor::Rng;
+
+fn artifacts() -> Option<Runtime> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json")
+        .exists()
+        .then(|| Runtime::new(&dir).unwrap())
+}
+
+fn rand_vec(rng: &mut Rng, d: usize, sigma: f32) -> Vec<f32> {
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, sigma);
+    v
+}
+
+#[test]
+fn zo_local_step_kernel_matches_native() {
+    let Some(rt) = artifacts() else { return };
+    let model = rt.manifest.models.keys().next().unwrap().clone();
+    let d = rt.manifest.model(&model).unwrap().param_count;
+    let beta1 = rt.manifest.beta1 as f32;
+    let exe = rt.load(&model, "zo_local_step").unwrap();
+
+    let mut rng = Rng::new(11);
+    for trial in 0..3 {
+        let g = rand_vec(&mut rng, d, 0.5);
+        let m = rand_vec(&mut rng, d, 0.2);
+        let x = rand_vec(&mut rng, d, 1.0);
+        let u = rand_vec(&mut rng, d, 0.1);
+        let rsv: Vec<f32> = rand_vec(&mut rng, d, 1.0)
+            .iter()
+            .map(|v| 1.0 / (v.abs() + 1e-2).sqrt())
+            .collect();
+        let gamma = 1e-3f32 * (trial + 1) as f32;
+
+        let outs = exe
+            .run(&[
+                HostTensor::f32(vec![gamma], &[1]),
+                HostTensor::f32(g.clone(), &[d]),
+                HostTensor::f32(m.clone(), &[d]),
+                HostTensor::f32(x.clone(), &[d]),
+                HostTensor::f32(u.clone(), &[d]),
+                HostTensor::f32(rsv.clone(), &[d]),
+            ])
+            .unwrap();
+        let (km, kx, ku) = (
+            outs[0].as_f32().unwrap(),
+            outs[1].as_f32().unwrap(),
+            outs[2].as_f32().unwrap(),
+        );
+        for i in (0..d).step_by(97) {
+            let m_new = beta1 * m[i] + (1.0 - beta1) * g[i];
+            let step = gamma * m_new;
+            assert!((km[i] - m_new).abs() <= 1e-5, "m[{i}]");
+            assert!((kx[i] - (x[i] - step * rsv[i])).abs() <= 1e-4, "x[{i}]");
+            assert!((ku[i] - (u[i] + step)).abs() <= 1e-5, "u[{i}]");
+        }
+    }
+}
+
+#[test]
+fn ef_quantize_kernel_matches_rust_codec() {
+    // The device-side quantizer and the Rust wire codec must agree on
+    // every sign and on the shared scale.
+    let Some(rt) = artifacts() else { return };
+    let model = rt.manifest.models.keys().next().unwrap().clone();
+    let d = rt.manifest.model(&model).unwrap().param_count;
+    let exe = rt.load(&model, "ef_quantize").unwrap();
+
+    let mut rng = Rng::new(13);
+    let z = rand_vec(&mut rng, d, 1.0);
+    let e = rand_vec(&mut rng, d, 0.3);
+    let outs = exe
+        .run(&[HostTensor::f32(z.clone(), &[d]), HostTensor::f32(e.clone(), &[d])])
+        .unwrap();
+    let q = outs[0].as_f32().unwrap();
+    let scale_kernel = outs[2].as_f32().unwrap()[0];
+
+    // Rust codec on s = z + e.
+    let s: Vec<f32> = z.iter().zip(&e).map(|(a, b)| a + b).collect();
+    let packed = zo_adam::comm::compress(&s);
+    assert!(
+        (packed.scale - scale_kernel).abs() <= 2e-5 * scale_kernel.abs().max(1.0),
+        "scale: rust {} vs kernel {}",
+        packed.scale,
+        scale_kernel
+    );
+    let mut dense = vec![0.0f32; d];
+    zo_adam::comm::decompress_into(&packed, &mut dense);
+    let mut sign_mismatches = 0usize;
+    for i in 0..d {
+        if (dense[i] >= 0.0) != (q[i] >= 0.0) {
+            // only legitimate at s[i] == 0 boundary / fp noise
+            if s[i].abs() > 1e-6 {
+                sign_mismatches += 1;
+            }
+        }
+    }
+    assert_eq!(sign_mismatches, 0);
+}
+
+#[test]
+fn adam_step_kernel_matches_native_adam_update() {
+    let Some(rt) = artifacts() else { return };
+    let model = rt.manifest.models.keys().next().unwrap().clone();
+    let d = rt.manifest.model(&model).unwrap().param_count;
+    let (b1, b2, eps) = (
+        rt.manifest.beta1 as f32,
+        rt.manifest.beta2 as f32,
+        rt.manifest.eps as f32,
+    );
+    let exe = rt.load(&model, "adam_step").unwrap();
+
+    let mut rng = Rng::new(17);
+    let g = rand_vec(&mut rng, d, 0.5);
+    let m = rand_vec(&mut rng, d, 0.2);
+    let v: Vec<f32> = rand_vec(&mut rng, d, 0.3).iter().map(|a| a * a).collect();
+    let x = rand_vec(&mut rng, d, 1.0);
+    let gamma = 3e-4f32;
+    let outs = exe
+        .run(&[
+            HostTensor::f32(vec![gamma], &[1]),
+            HostTensor::f32(g.clone(), &[d]),
+            HostTensor::f32(m.clone(), &[d]),
+            HostTensor::f32(v.clone(), &[d]),
+            HostTensor::f32(x.clone(), &[d]),
+        ])
+        .unwrap();
+    let (km, kv, kx) = (
+        outs[0].as_f32().unwrap(),
+        outs[1].as_f32().unwrap(),
+        outs[2].as_f32().unwrap(),
+    );
+    for i in (0..d).step_by(101) {
+        let m_new = b1 * m[i] + (1.0 - b1) * g[i];
+        let v_new = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+        let x_new = x[i] - gamma * m_new / (v_new + eps).sqrt();
+        assert!((km[i] - m_new).abs() <= 1e-5);
+        assert!((kv[i] - v_new).abs() <= 1e-5);
+        assert!((kx[i] - x_new).abs() <= 1e-4, "x[{i}]: {} vs {}", kx[i], x_new);
+    }
+}
+
+#[test]
+fn zo_sync_step_kernel_matches_native() {
+    let Some(rt) = artifacts() else { return };
+    let model = rt.manifest.models.keys().next().unwrap().clone();
+    let d = rt.manifest.model(&model).unwrap().param_count;
+    let exe = rt.load(&model, "zo_sync_step").unwrap();
+
+    let mut rng = Rng::new(19);
+    let xa = rand_vec(&mut rng, d, 1.0);
+    let ub = rand_vec(&mut rng, d, 0.05);
+    let rsv: Vec<f32> = rand_vec(&mut rng, d, 1.0)
+        .iter()
+        .map(|v| 1.0 / (v.abs() + 1e-2).sqrt())
+        .collect();
+    let gsum = 4e-3f32;
+    let outs = exe
+        .run(&[
+            HostTensor::f32(vec![gsum], &[1]),
+            HostTensor::f32(xa.clone(), &[d]),
+            HostTensor::f32(ub.clone(), &[d]),
+            HostTensor::f32(rsv.clone(), &[d]),
+        ])
+        .unwrap();
+    let (km, kx) = (outs[0].as_f32().unwrap(), outs[1].as_f32().unwrap());
+    for i in (0..d).step_by(89) {
+        assert!((km[i] - ub[i] / gsum).abs() <= 1e-3 * (ub[i] / gsum).abs().max(1.0));
+        assert!((kx[i] - (xa[i] - ub[i] * rsv[i])).abs() <= 1e-4);
+    }
+}

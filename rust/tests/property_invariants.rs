@@ -1,0 +1,213 @@
+//! Property-based coordinator/optimizer invariants (mini-proptest).
+//!
+//! These are the randomized invariants DESIGN.md §6 calls out:
+//! compression contraction, EF consensus, 0/1 Adam worker consensus at
+//! sync steps, volume-ledger-vs-closed-form, clock monotonicity.
+
+use zo_adam::comm::allreduce::{allreduce_mean, EfAllReduce};
+use zo_adam::comm::{compress, decompress_into, wire_bytes, VolumeLedger};
+use zo_adam::coordinator::{NoObserver, Trainer, TrainerConfig};
+use zo_adam::grad::synthetic::NoisyQuadratic;
+use zo_adam::grad::GradientSource;
+use zo_adam::optim::policy::{SyncPolicy, SyncSchedule, VarPolicy, VarSchedule};
+use zo_adam::optim::{ConstLr, DistOptimizer, Hyper, ZeroOneAdam};
+use zo_adam::testkit::{property, Gen};
+
+#[test]
+fn prop_compression_is_contraction_and_l1_preserving() {
+    property(150, |g: &mut Gen| {
+        let v = g.vec_normal(1..2000, 2.0);
+        let packed = compress(&v);
+        let mut dense = vec![0.0f32; v.len()];
+        decompress_into(&packed, &mut dense);
+        // ||C[x] - x|| <= ||x|| (empirical Assumption 6, ω ≤ 1)
+        let err: f64 = dense
+            .iter()
+            .zip(&v)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let norm = zo_adam::tensor::norm2(&v);
+        assert!(err <= norm * (1.0 + 1e-6), "err {err} > norm {norm}");
+        // exact L1 preservation
+        let (l1a, l1b) = (zo_adam::tensor::norm1(&dense), zo_adam::tensor::norm1(&v));
+        assert!((l1a - l1b).abs() <= 1e-4 * l1b.max(1.0));
+        // exact wire size
+        assert_eq!(packed.wire_bytes(), wire_bytes(v.len()));
+    });
+}
+
+#[test]
+fn prop_ef_allreduce_broadcast_is_shared_and_one_valued() {
+    property(60, |g: &mut Gen| {
+        let n = g.usize_in(1..6);
+        let d = g.usize_in(1..500);
+        let mut ef = EfAllReduce::new(n, d);
+        let mut out = vec![0.0f32; d];
+        for _round in 0..g.usize_in(1..4) {
+            let bufs: Vec<Vec<f32>> = (0..n).map(|_| {
+                let mut v = vec![0.0f32; d];
+                for x in v.iter_mut() {
+                    *x = g.f32_in(-3.0, 3.0);
+                }
+                v
+            }).collect();
+            let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            let stats = ef.reduce(&refs, &mut out);
+            // single magnitude (the 1-bit property)
+            let mag = out[0].abs();
+            assert!(out.iter().all(|v| (v.abs() - mag).abs() <= 1e-6 * mag.max(1.0)));
+            assert!(stats.compressed);
+            assert_eq!(stats.up_bytes, wire_bytes(d) as u64);
+        }
+    });
+}
+
+#[test]
+fn prop_fp_allreduce_is_permutation_invariant_mean() {
+    property(60, |g: &mut Gen| {
+        let n = g.usize_in(2..6);
+        let d = g.usize_in(1..300);
+        let bufs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(d..d + 1, 1.0)).collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut out1 = vec![0.0f32; d];
+        allreduce_mean(&refs, &mut out1);
+        let mut rev: Vec<&[f32]> = refs.clone();
+        rev.reverse();
+        let mut out2 = vec![0.0f32; d];
+        allreduce_mean(&rev, &mut out2);
+        for i in 0..d {
+            assert!((out1[i] - out2[i]).abs() <= 1e-5);
+        }
+    });
+}
+
+#[test]
+fn prop_zeroone_consensus_and_anchor_invariants() {
+    property(25, |g: &mut Gen| {
+        let d = g.usize_in(4..64);
+        let n = g.usize_in(2..5);
+        let interval = g.u64_in(1..6);
+        let steps = g.u64_in(10..40);
+        let mut opt = ZeroOneAdam::new(
+            vec![0.5f32; d],
+            n,
+            Hyper::default(),
+            Box::new(ConstLr(g.f64_in(1e-4, 5e-2))),
+            VarSchedule::new(VarPolicy::ExpInterval { kappa: 4 }),
+            SyncSchedule::new(SyncPolicy::Fixed { interval }),
+        );
+        let mut src = NoisyQuadratic::new(d, 3.0, 0.2, g.case_seed);
+        let mut grads = vec![vec![0.0f32; d]; n];
+        for t in 0..steps {
+            for w in 0..n {
+                let p = opt.params(w).to_vec();
+                src.grad(&p, w, t, &mut grads[w]);
+            }
+            let info = opt.step(t, &grads);
+            if info.synced {
+                // bit-exact consensus after every sync: every replica
+                // equals worker 0 (consensus_error() itself goes through
+                // an f32 mean, which can round by 1 ulp for n=3).
+                for w in 1..n {
+                    assert_eq!(opt.params(w), opt.params(0), "t={t}");
+                }
+            }
+            // all states finite
+            for w in 0..n {
+                assert!(opt.params(w).iter().all(|v| v.is_finite()), "t={t}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ledger_matches_closed_form() {
+    property(40, |g: &mut Gen| {
+        let d = g.usize_in(1..100_000);
+        let steps = g.u64_in(1..200);
+        let every = g.u64_in(1..8);
+        let mut ledger = VolumeLedger::new(d);
+        let fp = zo_adam::exp::analytic::fp_round(d);
+        let ob = zo_adam::exp::analytic::onebit_round(d);
+        let mut fp_count = 0u64;
+        let mut ob_count = 0u64;
+        for t in 0..steps {
+            if t % every == 0 {
+                ledger.record_step(&[ob]);
+                ob_count += 1;
+            } else if t % 3 == 1 {
+                ledger.record_step(&[fp]);
+                fp_count += 1;
+            } else {
+                ledger.record_step(&[]);
+            }
+        }
+        let expect_bytes =
+            fp_count * 4 * d as u64 + ob_count * 2 * wire_bytes(d) as u64;
+        assert_eq!(ledger.bytes_total, expect_bytes);
+        assert_eq!(ledger.fp_rounds, fp_count);
+        assert_eq!(ledger.onebit_rounds, ob_count);
+        let bits = (expect_bytes / 2) as f64 * 8.0 / (d as f64 * steps as f64);
+        assert!((ledger.bits_per_param() - bits).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_trainer_clock_monotone_and_complete() {
+    property(15, |g: &mut Gen| {
+        let d = g.usize_in(8..64);
+        let steps = g.u64_in(5..50);
+        let mut src = NoisyQuadratic::new(d, 2.0, 0.1, g.case_seed);
+        let mut opt = ZeroOneAdam::new(
+            vec![1.0f32; d],
+            2,
+            Hyper::default(),
+            Box::new(ConstLr(0.01)),
+            VarSchedule::paper(),
+            SyncSchedule::new(SyncPolicy::Fixed { interval: g.u64_in(1..4) }),
+        );
+        let cfg = TrainerConfig {
+            steps,
+            log_every: 1,
+            fabric: Some(zo_adam::comm::ETHERNET),
+            sim_gpus: *g.choose(&[8usize, 32, 128]),
+            compute_ms: g.f64_in(1.0, 100.0),
+            ..Default::default()
+        };
+        let res = Trainer::run(&mut src, &mut opt, &cfg, &mut NoObserver);
+        assert_eq!(res.log.records.len(), steps as usize);
+        let mut prev = 0.0;
+        for r in &res.log.records {
+            assert!(r.sim_total_s >= prev);
+            assert!(r.sim_ms >= cfg.compute_ms - 1e-9);
+            prev = r.sim_total_s;
+        }
+        assert_eq!(res.ledger.steps, steps);
+    });
+}
+
+#[test]
+fn prop_policies_emit_sorted_unique_steps() {
+    property(60, |g: &mut Gen| {
+        let kappa = g.usize_in(1..20) as u32;
+        let mut vs = VarSchedule::new(VarPolicy::ExpInterval { kappa });
+        let horizon = g.u64_in(10..2000);
+        let mut last: Option<u64> = None;
+        let mut count = 0u64;
+        for t in 0..horizon {
+            if vs.is_update_step(t) {
+                if let Some(l) = last {
+                    assert!(t > l);
+                }
+                last = Some(t);
+                count += 1;
+            }
+        }
+        assert_eq!(vs.updates(), count);
+        assert!(count >= 1);
+        // gaps grow: the number of updates is O(kappa * log2(horizon))
+        let bound = kappa as u64 * (64 - horizon.leading_zeros() as u64 + 2) + 2;
+        assert!(count <= bound, "count {count} > bound {bound} (kappa={kappa}, T={horizon})");
+    });
+}

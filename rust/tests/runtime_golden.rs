@@ -1,0 +1,79 @@
+//! Integration: execute every artifact via PJRT and compare against the
+//! manifest goldens recorded by python at lowering time.
+use zo_adam::runtime::{golden_tokens, golden_vec, HostTensor, Runtime};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn train_step_matches_golden() {
+    let Some(dir) = artifacts() else { eprintln!("skipping: no artifacts"); return };
+    let rt = Runtime::new(&dir).unwrap();
+    let names: Vec<String> = rt.manifest.models.keys().cloned().collect();
+    for name in names {
+        let model = rt.manifest.model(&name).unwrap().clone();
+        if model.kind != "lm" { continue; }
+        let exe = rt.load(&name, "train_step").unwrap();
+        let params = rt.manifest.load_init(&name).unwrap();
+        let batch = model.cfg("batch").unwrap();
+        let seq = model.cfg("seq_len").unwrap();
+        let vocab = model.cfg("vocab").unwrap();
+        let tokens = golden_tokens(batch, seq, vocab);
+        let d = params.len();
+        let outs = exe.run(&[
+            HostTensor::f32(params, &[d]),
+            HostTensor::i32(tokens, &[batch, seq]),
+        ]).unwrap();
+        let golden = &exe.entry.golden;
+        let loss = outs[0].scalar_f32().unwrap() as f64;
+        assert!((loss - golden[0].head[0]).abs() < 1e-4 * golden[0].head[0].abs().max(1.0),
+                "{name}: loss {loss} vs golden {}", golden[0].head[0]);
+        let grads = outs[1].as_f32().unwrap();
+        let norm = zo_adam::tensor::norm2(grads);
+        assert!((norm - golden[1].norm).abs() < 1e-3 * golden[1].norm.max(1.0),
+                "{name}: grad norm {norm} vs {}", golden[1].norm);
+        println!("{name}: loss={loss:.5} grad_norm={norm:.5} OK");
+    }
+}
+
+#[test]
+fn pallas_kernels_match_golden() {
+    let Some(dir) = artifacts() else { eprintln!("skipping: no artifacts"); return };
+    let rt = Runtime::new(&dir).unwrap();
+    let names: Vec<String> = rt.manifest.models.keys().cloned().collect();
+    let name = &names[0];
+    let model = rt.manifest.model(name).unwrap().clone();
+    let d = model.param_count;
+    let g = golden_vec(d, 0.3, 0.1);
+    let m = golden_vec(d, 1.1, 0.05);
+    let x = golden_vec(d, 3.7, 1.0);
+    let u = golden_vec(d, 4.9, 0.02);
+    let v: Vec<f32> = golden_vec(d, 2.3, 0.2).iter().map(|a| a.abs() + 1e-3).collect();
+    let rsv: Vec<f32> = v.iter().map(|vi| 1.0 / (vi + 1e-8f32).sqrt()).collect();
+    let exe = rt.load(name, "zo_local_step").unwrap();
+    let outs = exe.run(&[
+        HostTensor::f32(vec![1e-3], &[1]),
+        HostTensor::f32(g.clone(), &[d]),
+        HostTensor::f32(m.clone(), &[d]),
+        HostTensor::f32(x.clone(), &[d]),
+        HostTensor::f32(u.clone(), &[d]),
+        HostTensor::f32(rsv.clone(), &[d]),
+    ]).unwrap();
+    for (i, out) in outs.iter().enumerate() {
+        let norm = zo_adam::tensor::norm2(out.as_f32().unwrap());
+        let gn = exe.entry.golden[i].norm;
+        assert!((norm - gn).abs() < 1e-3 * gn.max(1.0), "out {i}: {norm} vs {gn}");
+    }
+    println!("zo_local_step kernel OK (d={d})");
+
+    let exe = rt.load(name, "ef_quantize").unwrap();
+    let outs = exe.run(&[HostTensor::f32(g, &[d]), HostTensor::f32(m, &[d])]).unwrap();
+    for (i, out) in outs.iter().enumerate() {
+        let norm = zo_adam::tensor::norm2(out.as_f32().unwrap());
+        let gn = exe.entry.golden[i].norm;
+        assert!((norm - gn).abs() < 1e-3 * gn.max(1.0), "ef out {i}: {norm} vs {gn}");
+    }
+    println!("ef_quantize kernel OK");
+}

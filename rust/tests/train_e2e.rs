@@ -1,0 +1,77 @@
+//! End-to-end integration: real training through the full stack
+//! (PJRT gradients → distributed optimizers → coordinator) must reduce
+//! the LM loss, keep worker consensus, and produce sane evaluations.
+
+use zo_adam::config::BERT_BASE;
+use zo_adam::exp::convergence::{run_convergence, ConvOpts};
+use zo_adam::exp::Algo;
+use zo_adam::runtime::Runtime;
+
+fn artifacts() -> Option<Runtime> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json")
+        .exists()
+        .then(|| Runtime::new(&dir).unwrap())
+}
+
+#[test]
+fn zeroone_adam_trains_the_tiny_lm() {
+    let Some(rt) = artifacts() else { return };
+    let mut opts = ConvOpts::quick(&BERT_BASE, 120);
+    opts.workers = 2;
+    opts.log_every = 10;
+    let runs = run_convergence(&rt, &opts, &[Algo::ZeroOneAdam]).unwrap();
+    let (_, res) = &runs[0];
+    let first = res.log.records.first().unwrap().loss;
+    let last = res.log.tail_loss(3).unwrap();
+    // init loss ≈ ln(256) ≈ 5.55; must visibly descend in 120 steps
+    assert!(first > 5.0, "unexpected init loss {first}");
+    assert!(last < first - 0.5, "no descent: {first} -> {last}");
+    // eval on held-out stream also improved from uniform
+    assert!(res.final_eval.unwrap() < first as f32);
+    // comm pattern: short run is mostly warmup, volume must be well
+    // below Adam's 16 bits/param but nonzero
+    let bpp = res.ledger.bits_per_param();
+    assert!(bpp > 0.1 && bpp < 4.0, "bits/param {bpp}");
+}
+
+#[test]
+fn all_three_algorithms_reach_similar_loss() {
+    let Some(rt) = artifacts() else { return };
+    let mut opts = ConvOpts::quick(&BERT_BASE, 150);
+    opts.workers = 2;
+    let runs = run_convergence(&rt, &opts, &Algo::main_three()).unwrap();
+    let finals: Vec<(Algo, f64)> = runs
+        .iter()
+        .map(|(a, r)| (*a, r.log.tail_loss(5).unwrap()))
+        .collect();
+    let best = finals.iter().map(|(_, l)| *l).fold(f64::MAX, f64::min);
+    let worst = finals.iter().map(|(_, l)| *l).fold(0.0, f64::max);
+    assert!(worst < 5.0, "some algo failed to descend: {finals:?}");
+    // Figure-2 parity: at 150 steps transient dynamics still differ
+    // (1-bit Adam's early frozen variance takes larger steps); longer
+    // runs converge to the same loss (see bench_fig2 / quickstart).
+    assert!(worst - best < 1.2, "parity violated: {finals:?}");
+    // volume ordering: adam > 1bit > 0/1
+    let vol = |a: Algo| {
+        runs.iter()
+            .find(|(x, _)| *x == a)
+            .unwrap()
+            .1
+            .ledger
+            .bits_per_param()
+    };
+    assert!(vol(Algo::Adam) > vol(Algo::OneBitAdam));
+    assert!(vol(Algo::OneBitAdam) > vol(Algo::ZeroOneAdam));
+}
+
+#[test]
+fn mlp_proxy_accuracy_beats_chance_quickly() {
+    let Some(rt) = artifacts() else { return };
+    let acc =
+        zo_adam::exp::tables::imagenet_proxy_accuracy(&rt, Algo::ZeroOneAdam, 600, 2).unwrap();
+    // 100 classes => chance = 1%; with the calibrated separability
+    // (signal 0.14) 600 steps should sit several times above chance
+    // (the full Table-2 run reaches ~64% at 1500 steps × 4 workers).
+    assert!(acc > 0.05, "top-1 {acc}");
+}
