@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Hand-run CI for the offline environment: build, test, and a short
+# perf smoke so step-throughput regressions surface before merge.
+#
+#   ./ci.sh            # full tier-1 + smoke
+#   SKIP_SMOKE=1 ./ci.sh
+set -euo pipefail
+cd "$(dirname "$0")"
+
+step() { printf '\n== %s ==\n' "$*"; }
+
+step "cargo fmt --check"
+if cargo fmt --version >/dev/null 2>&1; then
+    (cd rust && cargo fmt --check)
+else
+    echo "rustfmt not installed; skipping"
+fi
+
+step "cargo build --release"
+cargo build --release
+
+step "cargo test -q"
+cargo test -q
+
+if [ "${SKIP_SMOKE:-0}" != "1" ]; then
+    # ~5s perf smoke: quick measurement windows at the full d = 2^20
+    # (large enough that per-region compute dwarfs thread spawn cost).
+    # Prints the threaded-vs-sequential speedup per optimizer; a speedup
+    # that collapses toward (or below) 1.0 on a multi-core host is a
+    # regression in the execution engine.
+    step "bench_optimizer smoke (ZO_BENCH_QUICK)"
+    ZO_BENCH_QUICK=1 cargo bench --bench bench_optimizer
+fi
+
+step "ci.sh OK"

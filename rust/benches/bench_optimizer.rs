@@ -1,18 +1,38 @@
 //! Microbenchmark: one full optimizer step per algorithm at d = 1M,
-//! n = 4 workers (the L3 hot loop), plus the PJRT-executed Pallas
-//! kernel path for the 0/1 Adam local step (the L1 hot loop).
+//! n = 8 materialized workers (the L3 hot loop), **sequential vs the
+//! threaded engine**, plus the PJRT-executed Pallas kernel path for the
+//! 0/1 Adam local step (the L1 hot loop).
+//!
+//! The engine contract makes the two modes bitwise identical (verified
+//! by `tests/engine_parity_threaded.rs`); this bench reports the
+//! wall-clock side of the story — the per-step throughput speedup of
+//! `ExecMode::Threaded(8)` over `ExecMode::Sequential`.
+//!
+//! Env knobs: `ZO_BENCH_QUICK=1` (short measurement windows),
+//! `ZO_BENCH_D` (override d, e.g. 262144 for a CI smoke),
+//! `ZO_BENCH_THREADS` (override pool width, default 8).
 
 use zo_adam::benchkit::Bench;
+use zo_adam::coordinator::{Engine, ExecMode};
 use zo_adam::exp::convergence::{build_optimizer, ConvOpts};
 use zo_adam::exp::Algo;
+use zo_adam::optim::DistOptimizer;
 use zo_adam::runtime::{golden_vec, HostTensor, Runtime};
 use zo_adam::tensor::Rng;
 
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
 fn main() {
     println!("== bench_optimizer ==");
-    let d = 1 << 20;
-    let n = 4;
-    let opts = ConvOpts::quick(&zo_adam::config::BERT_BASE, 100_000);
+    let d = env_usize("ZO_BENCH_D", 1 << 20);
+    let n = 8;
+    let threads = env_usize("ZO_BENCH_THREADS", 8);
+    let opts = ConvOpts {
+        workers: n,
+        ..ConvOpts::quick(&zo_adam::config::BERT_BASE, 100_000)
+    };
     let mut rng = Rng::new(3);
     let grads: Vec<Vec<f32>> = (0..n)
         .map(|_| {
@@ -22,14 +42,25 @@ fn main() {
         })
         .collect();
 
+    println!("d = {d}, workers = {n}, pool = {threads} threads\n");
     for algo in [Algo::Adam, Algo::OneBitAdam, Algo::ZeroOneAdam, Algo::ZeroOneNoLocal] {
-        let mut opt = build_optimizer(algo, vec![0.0f32; d], &opts);
-        let mut t = 0u64;
-        let mut b = Bench::new().with_elements(d as u64);
-        b.run(&format!("step/{}/d1M/n4", algo.name()), || {
-            opt.step(t, &grads);
-            t += 1;
-        });
+        let mut results = Vec::new();
+        for mode in [ExecMode::Sequential, ExecMode::Threaded(threads)] {
+            let engine = Engine::new(mode);
+            let mut opt = build_optimizer(algo, vec![0.0f32; d], &opts);
+            let mut t = 0u64;
+            let mut b = Bench::new().with_elements(d as u64);
+            let r = b.run(&format!("step/{}/{}/d{d}/n{n}", algo.name(), mode.name()), || {
+                opt.step_engine(t, &grads, &engine);
+                t += 1;
+            });
+            results.push(r.mean_ns);
+        }
+        println!(
+            "  -> {}: threaded({threads}) speedup over sequential: {:.2}x\n",
+            algo.name(),
+            results[0] / results[1]
+        );
     }
 
     // L1 path: the lowered Pallas zo_local_step via PJRT (artifact d).

@@ -5,8 +5,16 @@
 //! replicas in one address space — while the byte counts they would put
 //! on a real fabric are reported via [`WireStats`] and priced by
 //! `comm::network`.
+//!
+//! Both reductions are engine-aware (DESIGN.md §3): the `_eng` variants
+//! parallelize only the scheduling-independent legs — the per-worker
+//! compress/error-feedback phase and per-coordinate chunks of the mean
+//! — while every cross-worker accumulation stays on the coordinator
+//! thread in fixed worker order. `ExecMode::Threaded` is therefore
+//! bitwise identical to `ExecMode::Sequential`.
 
 use super::compress::{self, OneBit};
+use crate::coordinator::engine::Engine;
 
 /// Bytes a single round moved per direction, per worker.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -30,21 +38,45 @@ impl WireStats {
 /// Algorithm 3: out = (1/n) Σ bufs[i]; every element fp16 on the wire
 /// (the paper trains with fp16 communication enabled for all methods).
 pub fn allreduce_mean(bufs: &[&[f32]], out: &mut [f32]) -> WireStats {
+    allreduce_mean_eng(bufs, out, &Engine::sequential())
+}
+
+/// Engine-aware Algorithm 3: coordinate chunks run in parallel; inside
+/// each chunk workers accumulate in index order, so every coordinate
+/// sees the exact additions of the sequential path.
+pub fn allreduce_mean_eng(bufs: &[&[f32]], out: &mut [f32], eng: &Engine) -> WireStats {
     let n = bufs.len();
     assert!(n > 0, "allreduce over zero workers");
     let d = out.len();
-    out.copy_from_slice(bufs[0]);
-    for buf in &bufs[1..] {
+    for buf in bufs {
         assert_eq!(buf.len(), d);
-        crate::tensor::axpy(out, 1.0, buf);
     }
-    crate::tensor::scale(out, 1.0 / n as f32);
+    let inv = 1.0 / n as f32;
+    let chunk = eng.chunk_len(d);
+    let items: Vec<&mut [f32]> = out.chunks_mut(chunk).collect();
+    eng.run(items, |ci, out_chunk| {
+        let off = ci * chunk;
+        let len = out_chunk.len();
+        out_chunk.copy_from_slice(&bufs[0][off..off + len]);
+        for buf in &bufs[1..] {
+            crate::tensor::axpy(out_chunk, 1.0, &buf[off..off + len]);
+        }
+        crate::tensor::scale(out_chunk, inv);
+    });
     WireStats {
         up_bytes: (d * 2) as u64,   // fp16 per element
         down_bytes: (d * 2) as u64,
         rounds: 1,
         compressed: false,
     }
+}
+
+/// One worker's persistent EF state plus its packed-wire scratch.
+struct Lane {
+    /// Compression error δᵢ carried across every round (Appendix A).
+    err: Vec<f32>,
+    /// This worker's packed upload ẑᵢ (scratch, refilled per round).
+    packed: OneBit,
 }
 
 /// Error-feedback 1-bit AllReduce (Algorithm 2).
@@ -54,13 +86,13 @@ pub fn allreduce_mean(bufs: &[&[f32]], out: &mut [f32]) -> WireStats {
 /// across every call for the rest of training (Appendix A).
 ///
 /// All scratch is pre-allocated at construction: the hot path performs
-/// zero heap allocation.
+/// zero heap allocation (beyond the engine's per-region bookkeeping).
 pub struct EfAllReduce {
     n: usize,
     d: usize,
-    pub worker_err: Vec<Vec<f32>>,
+    lanes: Vec<Lane>,
     pub server_err: Vec<f32>,
-    // scratch
+    // server scratch
     sum: Vec<f32>,
     packed: OneBit,
 }
@@ -70,7 +102,9 @@ impl EfAllReduce {
         EfAllReduce {
             n,
             d,
-            worker_err: vec![vec![0.0; d]; n],
+            lanes: (0..n)
+                .map(|_| Lane { err: vec![0.0; d], packed: OneBit::zeros(d) })
+                .collect(),
             server_err: vec![0.0; d],
             sum: vec![0.0; d],
             packed: OneBit::zeros(d),
@@ -81,35 +115,46 @@ impl EfAllReduce {
         self.d
     }
 
+    /// Worker `w`'s persistent compression error δ_w.
+    pub fn worker_err(&self, w: usize) -> &[f32] {
+        &self.lanes[w].err
+    }
+
+    /// One EF-1bit round on the coordinator thread (reference path).
+    pub fn reduce(&mut self, bufs: &[&[f32]], out: &mut [f32]) -> WireStats {
+        self.reduce_eng(bufs, out, &Engine::sequential())
+    }
+
     /// One EF-1bit round: `out` receives the twice-compressed mean that
     /// every worker observes (they all see identical bytes).
-    pub fn reduce(&mut self, bufs: &[&[f32]], out: &mut [f32]) -> WireStats {
+    ///
+    /// Phase 1 (per worker, engine-parallel): ẑᵢ = C[zᵢ + δᵢ] and
+    /// δᵢ ← zᵢ + δᵢ − ẑᵢ — each lane touches only its own state.
+    /// Phase 2 (coordinator thread, fixed worker order): the server mean
+    /// Σ ẑᵢ/n, its error feedback, and the broadcast compression — the
+    /// ordered reduction that pins threaded results to sequential ones.
+    pub fn reduce_eng(&mut self, bufs: &[&[f32]], out: &mut [f32], eng: &Engine) -> WireStats {
         assert_eq!(bufs.len(), self.n, "worker count changed");
         assert_eq!(out.len(), self.d);
-        let inv_n = 1.0 / self.n as f32;
+        let d = self.d;
 
-        // Workers: ẑᵢ = C[zᵢ + δᵢ]; δᵢ ← zᵢ + δᵢ − ẑᵢ. The server
-        // accumulates the mean of the ẑᵢ on the fly.
-        //
-        // Fused two-pass worker leg (no shifted-scratch materialization;
-        // see EXPERIMENTS.md §Perf):
+        // Phase 1: fused two-pass worker leg (no shifted-scratch
+        // materialization; see EXPERIMENTS.md §Perf):
         //   pass 1: ‖z+δ‖₁ + sign bits, computing s = z + δ inline;
-        //   pass 2: δ ← s − (±scale) and sum += (±scale)/n, one sweep.
-        self.sum.iter_mut().for_each(|v| *v = 0.0);
-        for (buf, err) in bufs.iter().zip(self.worker_err.iter_mut()) {
-            // pass 1: ‖z+δ‖₁ and sign words, s computed inline.
-            self.packed.len = self.d;
+        //   pass 2: δ ← s − (±scale), one sweep.
+        let lanes: Vec<&mut Lane> = self.lanes.iter_mut().collect();
+        eng.run(lanes, |w, lane| {
+            let buf = bufs[w];
+            debug_assert_eq!(buf.len(), d);
+            let Lane { err, packed } = lane;
+            packed.len = d;
             let mut l1 = 0.0f64;
-            for ((word_slot, bchunk), echunk) in self
-                .packed
-                .signs
-                .iter_mut()
-                .zip(buf.chunks(64))
-                .zip(err.chunks(64))
+            for ((word_slot, bchunk), echunk) in
+                packed.signs.iter_mut().zip(buf.chunks(64)).zip(err.chunks(64))
             {
                 let mut word = 0u64;
                 let mut csum = 0.0f32;
-                for (b, (&z, &e)) in bchunk.iter().zip(echunk).enumerate() {
+                for (b, (&z, &e)) in bchunk.iter().zip(echunk.iter()).enumerate() {
                     let s = z + e;
                     csum += s.abs();
                     word |= ((s >= 0.0) as u64) << b;
@@ -117,32 +162,26 @@ impl EfAllReduce {
                 l1 += csum as f64;
                 *word_slot = word;
             }
-            self.packed.scale = (l1 / self.d as f64) as f32;
-            // pass 2: δ update + server-mean accumulation, one sweep.
-            let s_bits = self.packed.scale.to_bits();
-            let acc_bits = (self.packed.scale * inv_n).to_bits();
-            for (((&word, bchunk), echunk), schunk) in self
-                .packed
-                .signs
-                .iter()
-                .zip(buf.chunks(64))
-                .zip(err.chunks_mut(64))
-                .zip(self.sum.chunks_mut(64))
+            packed.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
+            let s_bits = packed.scale.to_bits();
+            for ((&word, bchunk), echunk) in
+                packed.signs.iter().zip(buf.chunks(64)).zip(err.chunks_mut(64))
             {
-                for (b, ((&z, e), acc)) in bchunk
-                    .iter()
-                    .zip(echunk.iter_mut())
-                    .zip(schunk.iter_mut())
-                    .enumerate()
-                {
+                for (b, (&z, e)) in bchunk.iter().zip(echunk.iter_mut()).enumerate() {
                     let neg = (!(word >> b) & 1) as u32;
                     *e = (z + *e) - f32::from_bits(s_bits | (neg << 31));
-                    *acc += f32::from_bits(acc_bits | (neg << 31));
                 }
             }
-        }
+        });
 
-        // Server: z̄ = C[(1/n) Σ ẑᵢ + δ̄]; δ̄ ← ... − z̄; broadcast z̄.
+        // Phase 2: z̄ = C[(1/n) Σ ẑᵢ + δ̄]; δ̄ ← ... − z̄; broadcast z̄.
+        // Workers accumulate in index order — same additions, same order
+        // as the fully sequential implementation.
+        self.sum.iter_mut().for_each(|v| *v = 0.0);
+        let inv_n = 1.0 / self.n as f32;
+        for lane in &self.lanes {
+            compress::accumulate_into(&lane.packed, inv_n, &mut self.sum);
+        }
         for (s, e) in self.sum.iter_mut().zip(&self.server_err) {
             *s += e;
         }
@@ -161,8 +200,8 @@ impl EfAllReduce {
     /// Reset all error state (used when an optimizer stage boundary
     /// explicitly restarts compression, e.g. 1-bit Adam at T₀).
     pub fn reset(&mut self) {
-        for e in &mut self.worker_err {
-            e.iter_mut().for_each(|v| *v = 0.0);
+        for lane in &mut self.lanes {
+            lane.err.iter_mut().for_each(|v| *v = 0.0);
         }
         self.server_err.iter_mut().for_each(|v| *v = 0.0);
     }
@@ -171,9 +210,9 @@ impl EfAllReduce {
     /// (Lemma 1 bounds this by a constant multiple of the buffer norm).
     pub fn error_norm(&self) -> f64 {
         let w: f64 = self
-            .worker_err
+            .lanes
             .iter()
-            .map(|e| crate::tensor::norm2(e).powi(2))
+            .map(|lane| crate::tensor::norm2(&lane.err).powi(2))
             .sum();
         (w + crate::tensor::norm2(&self.server_err).powi(2)).sqrt()
     }
@@ -182,6 +221,7 @@ impl EfAllReduce {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::ExecMode;
     use crate::tensor::Rng;
 
     fn rand_bufs(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -210,6 +250,19 @@ mod tests {
     }
 
     #[test]
+    fn fp_allreduce_threaded_is_bitwise_sequential() {
+        let bufs = rand_bufs(5, 10_000, 21);
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let mut seq = vec![0.0f32; 10_000];
+        let mut thr = vec![0.0f32; 10_000];
+        allreduce_mean_eng(&refs, &mut seq, &Engine::sequential());
+        allreduce_mean_eng(&refs, &mut thr, &Engine::new(ExecMode::Threaded(4)));
+        for j in 0..seq.len() {
+            assert_eq!(seq[j].to_bits(), thr[j].to_bits(), "j={j}");
+        }
+    }
+
+    #[test]
     fn ef_output_is_one_bit_valued() {
         // The broadcast value has exactly one magnitude: |out[j]| = scale.
         let bufs = rand_bufs(3, 257, 2);
@@ -221,6 +274,37 @@ mod tests {
         assert!(out.iter().all(|v| (v.abs() - mag).abs() < 1e-7));
         assert!(stats.compressed);
         assert_eq!(stats.up_bytes, compress::wire_bytes(257) as u64);
+    }
+
+    #[test]
+    fn ef_threaded_is_bitwise_sequential_across_rounds() {
+        // Persistent error state must evolve identically in both modes.
+        let n = 4;
+        let d = 1000; // not a multiple of 64
+        let mut seq = EfAllReduce::new(n, d);
+        let mut thr = EfAllReduce::new(n, d);
+        let eng = Engine::new(ExecMode::Threaded(3));
+        let mut out_s = vec![0.0f32; d];
+        let mut out_t = vec![0.0f32; d];
+        for round in 0..20 {
+            let bufs = rand_bufs(n, d, 700 + round);
+            let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            seq.reduce(&refs, &mut out_s);
+            thr.reduce_eng(&refs, &mut out_t, &eng);
+            for j in 0..d {
+                assert_eq!(out_s[j].to_bits(), out_t[j].to_bits(), "round {round} j={j}");
+            }
+            for w in 0..n {
+                for j in 0..d {
+                    assert_eq!(
+                        seq.worker_err(w)[j].to_bits(),
+                        thr.worker_err(w)[j].to_bits(),
+                        "round {round} w={w} j={j}"
+                    );
+                }
+            }
+            assert_eq!(seq.server_err, thr.server_err);
+        }
     }
 
     #[test]
@@ -245,10 +329,8 @@ mod tests {
         }
         // residual = mean worker error + server error (δ_T, since δ_0=0)
         for j in 0..d {
-            let resid: f64 = ef
-                .worker_err
-                .iter()
-                .map(|e| e[j] as f64)
+            let resid: f64 = (0..n)
+                .map(|w| ef.worker_err(w)[j] as f64)
                 .sum::<f64>()
                 / n as f64
                 + ef.server_err[j] as f64;

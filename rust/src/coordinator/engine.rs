@@ -1,0 +1,228 @@
+//! Deterministic parallel execution engine.
+//!
+//! The simulator's workers are replicas in one address space, so "data
+//! parallelism" here is thread parallelism over (a) per-worker state
+//! and (b) contiguous coordinate ranges of per-coordinate loops. The
+//! engine's contract (DESIGN.md §3) is that **both execution modes
+//! produce bitwise identical results**:
+//!
+//! * every work item (a worker replica, or a coordinate chunk) is
+//!   visited exactly once, by exactly one thread, running the same code
+//!   a sequential loop would run;
+//! * items only touch their own mutable state plus shared *read-only*
+//!   captures, so no result depends on thread scheduling;
+//! * cross-item reductions (the AllReduce server leg, loss averaging)
+//!   are **never** parallelized — they run on the coordinator thread in
+//!   fixed worker order, which is what pins threaded results to the
+//!   sequential path bit for bit;
+//! * accumulations that cross chunk boundaries in f64 (codec scales,
+//!   norms) stay inside a single item.
+//!
+//! Threads are scoped (`std::thread::scope`) so items may borrow the
+//! optimizer's state without `'static` gymnastics; the scope joins all
+//! workers before returning, making each parallel region a barrier.
+
+/// How the trainer and optimizers schedule per-worker work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Everything on the coordinator thread (the reference path).
+    Sequential,
+    /// A pool of n worker threads; results are bitwise identical to
+    /// [`ExecMode::Sequential`] by the engine contract above.
+    Threaded(usize),
+}
+
+impl Default for ExecMode {
+    fn default() -> Self {
+        ExecMode::Sequential
+    }
+}
+
+impl ExecMode {
+    /// Threads this mode runs on (Sequential ⇒ 1).
+    pub fn threads(self) -> usize {
+        match self {
+            ExecMode::Sequential => 1,
+            ExecMode::Threaded(n) => n.max(1),
+        }
+    }
+
+    /// `n <= 1` collapses to Sequential (Threaded(1) has no pool win).
+    pub fn with_threads(n: usize) -> ExecMode {
+        if n <= 1 {
+            ExecMode::Sequential
+        } else {
+            ExecMode::Threaded(n)
+        }
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            ExecMode::Sequential => "seq".to_string(),
+            ExecMode::Threaded(n) => format!("threaded{n}"),
+        }
+    }
+}
+
+/// The execution engine: a fixed-width scoped-thread pool.
+#[derive(Debug, Clone, Copy)]
+pub struct Engine {
+    threads: usize,
+}
+
+impl Engine {
+    pub fn new(mode: ExecMode) -> Self {
+        Engine { threads: mode.threads() }
+    }
+
+    /// The single-thread engine used by every legacy `step()` call.
+    pub const fn sequential() -> Self {
+        Engine { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.threads > 1
+    }
+
+    /// Run `f(index, item)` once for every item.
+    ///
+    /// Items are split into contiguous index blocks, one per pool
+    /// thread. `f` consumes each item by value — pass `&mut` views to
+    /// mutate caller state — and may capture shared state immutably
+    /// (`F: Sync`). Because each item is processed exactly once by a
+    /// single thread running the same body as the sequential loop, the
+    /// observable effects are bitwise identical in both modes.
+    pub fn run<T, F>(&self, items: Vec<T>, f: F)
+    where
+        T: Send,
+        F: Fn(usize, T) + Sync,
+    {
+        let n = items.len();
+        if self.threads <= 1 || n <= 1 {
+            for (i, item) in items.into_iter().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let k = self.threads.min(n);
+        let per = n.div_ceil(k);
+        let mut blocks: Vec<Vec<(usize, T)>> = Vec::with_capacity(k);
+        for _ in 0..k {
+            blocks.push(Vec::with_capacity(per));
+        }
+        for (i, item) in items.into_iter().enumerate() {
+            blocks[(i / per).min(k - 1)].push((i, item));
+        }
+        // The calling thread works the first block itself: k-1 spawns
+        // per region, and the coordinator is never idle while the pool
+        // runs. Scheduling cannot change results (items are disjoint).
+        let first = blocks.remove(0);
+        let f = &f;
+        std::thread::scope(|scope| {
+            for block in blocks {
+                scope.spawn(move || {
+                    for (i, item) in block {
+                        f(i, item);
+                    }
+                });
+            }
+            for (i, item) in first {
+                f(i, item);
+            }
+        });
+    }
+
+    /// Chunk length for coordinate-parallel loops over `len` elements:
+    /// one contiguous chunk per thread, floored so tiny vectors stay in
+    /// a single chunk. Only valid for loops whose per-coordinate results
+    /// are independent (chunk boundaries then cannot change any value).
+    pub fn chunk_len(&self, len: usize) -> usize {
+        if self.threads <= 1 {
+            return len.max(1);
+        }
+        len.div_ceil(self.threads).max(4096)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_thread_counts() {
+        assert_eq!(ExecMode::Sequential.threads(), 1);
+        assert_eq!(ExecMode::Threaded(8).threads(), 8);
+        assert_eq!(ExecMode::Threaded(0).threads(), 1);
+        assert_eq!(ExecMode::with_threads(1), ExecMode::Sequential);
+        assert_eq!(ExecMode::with_threads(4), ExecMode::Threaded(4));
+        assert_eq!(ExecMode::default(), ExecMode::Sequential);
+    }
+
+    #[test]
+    fn run_visits_every_item_once_with_its_index() {
+        for mode in [ExecMode::Sequential, ExecMode::Threaded(3), ExecMode::Threaded(16)] {
+            let eng = Engine::new(mode);
+            let mut hits = vec![0u32; 37];
+            {
+                let items: Vec<(usize, &mut u32)> = hits.iter_mut().enumerate().collect();
+                eng.run(items, |i, (orig, slot)| {
+                    assert_eq!(i, orig);
+                    *slot += 1 + i as u32;
+                });
+            }
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(*h, 1 + i as u32, "mode {mode:?} item {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_sequential_bitwise_on_fp_work() {
+        // The contract the optimizers rely on: per-item float math is
+        // scheduling-independent.
+        let d = 1000;
+        let mk = || {
+            (0..d)
+                .map(|i| ((i as f32) * 0.37).sin() * 3.0)
+                .collect::<Vec<f32>>()
+        };
+        let work = |_: usize, x: &mut f32| {
+            *x = x.mul_add(1.000_1, -0.25) / (x.abs() + 0.5);
+        };
+        let mut a = mk();
+        let mut b = mk();
+        Engine::sequential().run(a.iter_mut().collect(), |i, x| work(i, x));
+        Engine::new(ExecMode::Threaded(7)).run(b.iter_mut().collect(), |i, x| work(i, x));
+        for i in 0..d {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn chunk_len_covers_range() {
+        let eng = Engine::new(ExecMode::Threaded(4));
+        let c = eng.chunk_len(1 << 20);
+        assert!(c >= 4096);
+        assert!(c * 4 >= 1 << 20);
+        assert_eq!(Engine::sequential().chunk_len(100), 100);
+        assert_eq!(Engine::sequential().chunk_len(0), 1);
+        // tiny vectors collapse to one chunk
+        assert_eq!(eng.chunk_len(10), 4096);
+    }
+
+    #[test]
+    fn empty_and_single_item_runs() {
+        let eng = Engine::new(ExecMode::Threaded(4));
+        eng.run(Vec::<u8>::new(), |_, _| panic!("no items"));
+        let mut one = [0u8];
+        eng.run(one.iter_mut().collect(), |i, b| {
+            assert_eq!(i, 0);
+            *b = 9;
+        });
+        assert_eq!(one[0], 9);
+    }
+}

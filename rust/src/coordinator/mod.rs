@@ -1,9 +1,12 @@
-//! The L3 coordinator: training-loop orchestration, metrics, profiling.
+//! The L3 coordinator: training-loop orchestration, the deterministic
+//! parallel execution engine, metrics, profiling.
 
+pub mod engine;
 pub mod metrics;
 pub mod profiling;
 pub mod trainer;
 
+pub use engine::{Engine, ExecMode};
 pub use metrics::{MetricLog, StepRecord};
 pub use profiling::MomentProfiler;
 pub use trainer::{NoObserver, RunResult, StepObserver, Trainer, TrainerConfig};

@@ -10,6 +10,7 @@ use crate::comm::volume::VolumeLedger;
 use crate::grad::GradientSource;
 use crate::optim::{DistOptimizer, StepInfo};
 
+use super::engine::{Engine, ExecMode};
 use super::metrics::{MetricLog, StepRecord};
 
 /// Trainer configuration (independent of model/optimizer choice).
@@ -27,6 +28,10 @@ pub struct TrainerConfig {
     pub sim_gpus: usize,
     /// Simulated per-step compute time in ms (0 = exclude compute).
     pub compute_ms: f64,
+    /// Execution engine for materialized workers. `Threaded(n)` runs
+    /// the gradient and per-worker optimizer phases on n pool threads
+    /// with bitwise-identical results (see `coordinator::engine`).
+    pub exec: ExecMode,
     /// Print progress lines.
     pub verbose: bool,
 }
@@ -40,6 +45,7 @@ impl Default for TrainerConfig {
             fabric: None,
             sim_gpus: 0,
             compute_ms: 0.0,
+            exec: ExecMode::Sequential,
             verbose: false,
         }
     }
@@ -103,23 +109,44 @@ impl Trainer {
         let sim_gpus = if cfg.sim_gpus > 0 { cfg.sim_gpus } else { n };
 
         let mut grads: Vec<Vec<f32>> = vec![vec![0.0; d]; n];
+        let mut losses: Vec<f32> = vec![0.0; n];
         let mut ledger = VolumeLedger::new(d);
         let mut log = MetricLog::new(opt.name());
         let mut observer_rows = Vec::new();
         let mut sim_total_ms = 0.0f64;
+        let engine = Engine::new(cfg.exec);
         let wall = crate::util::Stopwatch::start();
 
         for t in 0..cfg.steps {
-            // Phase 1: each worker computes its local gradient.
-            let mut loss_sum = 0.0f64;
-            for w in 0..n {
-                let params = opt.params(w);
-                loss_sum += source.grad(params, w, t, &mut grads[w]) as f64;
+            // Phase 1: each worker computes its local gradient. With a
+            // threaded engine and a thread-shareable source, workers fan
+            // out across the pool; losses are still averaged on the
+            // coordinator thread in worker order, so both paths produce
+            // the same f64 sum bit for bit.
+            let mut grads_done = false;
+            if engine.is_parallel() {
+                if let Some(par) = source.parallel() {
+                    let opt_ro: &dyn DistOptimizer = &*opt;
+                    let params: Vec<&[f32]> = (0..n).map(|w| opt_ro.params(w)).collect();
+                    let items: Vec<(&mut Vec<f32>, &mut f32)> =
+                        grads.iter_mut().zip(losses.iter_mut()).collect();
+                    engine.run(items, |w, (g, l)| {
+                        *l = par.grad_at(params[w], w, t, g);
+                    });
+                    grads_done = true;
+                }
             }
-            let loss = loss_sum / n as f64;
+            if !grads_done {
+                for w in 0..n {
+                    let params = opt.params(w);
+                    losses[w] = source.grad(params, w, t, &mut grads[w]);
+                }
+            }
+            let loss = losses.iter().map(|&l| l as f64).sum::<f64>() / n as f64;
 
-            // Phase 2: the distributed optimizer step (comm included).
-            let info = opt.step(t, &grads);
+            // Phase 2: the distributed optimizer step (comm included),
+            // with the per-worker local phase on the engine.
+            let info = opt.step_engine(t, &grads, &engine);
             ledger.record_step(&info.rounds);
 
             // Phase 3: simulated cluster clock.
@@ -206,9 +233,42 @@ mod tests {
             fabric: Some(ETHERNET),
             sim_gpus: 16,
             compute_ms: 10.0,
+            exec: ExecMode::Sequential,
             verbose: false,
         };
         Trainer::run(&mut src, &mut opt, &cfg, &mut NoObserver)
+    }
+
+    #[test]
+    fn threaded_run_is_bitwise_identical() {
+        // The tentpole contract, end to end through Trainer::run.
+        let run = |exec: ExecMode| {
+            let mut src = NoisyQuadratic::new(48, 4.0, 0.1, 9);
+            let mut opt =
+                Adam::new(vec![1.0; 48], 4, Hyper::default(), Box::new(ConstLr(0.02)));
+            let cfg = TrainerConfig {
+                steps: 60,
+                log_every: 7,
+                eval_every: 20,
+                fabric: Some(ETHERNET),
+                sim_gpus: 16,
+                compute_ms: 5.0,
+                exec,
+                verbose: false,
+            };
+            Trainer::run(&mut src, &mut opt, &cfg, &mut NoObserver)
+        };
+        let a = run(ExecMode::Sequential);
+        let b = run(ExecMode::Threaded(4));
+        assert_eq!(a.final_params.len(), b.final_params.len());
+        for (x, y) in a.final_params.iter().zip(&b.final_params) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.sim_total_s.to_bits(), b.sim_total_s.to_bits());
+        assert_eq!(a.ledger.bytes_total, b.ledger.bytes_total);
+        for (ra, rb) in a.log.records.iter().zip(&b.log.records) {
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "t={}", ra.t);
+        }
     }
 
     #[test]

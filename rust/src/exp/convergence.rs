@@ -4,7 +4,7 @@
 use anyhow::Result;
 
 use crate::config::Task;
-use crate::coordinator::{MomentProfiler, NoObserver, RunResult, Trainer, TrainerConfig};
+use crate::coordinator::{ExecMode, MomentProfiler, NoObserver, RunResult, Trainer, TrainerConfig};
 use crate::grad::hlo::{HloLmSource, HloMlpSource};
 use crate::grad::GradientSource;
 use crate::optim::policy::{SyncSchedule, VarSchedule};
@@ -30,6 +30,9 @@ pub struct ConvOpts {
     pub sim_gpus: usize,
     pub log_every: u64,
     pub eval_every: u64,
+    /// Execution engine for the materialized workers (the simulated
+    /// clock is unaffected; only real wall-clock changes).
+    pub exec: ExecMode,
     pub verbose: bool,
 }
 
@@ -44,6 +47,7 @@ impl ConvOpts {
             sim_gpus: 128,
             log_every: (steps / 100).max(1),
             eval_every: (steps / 10).max(1),
+            exec: ExecMode::Sequential,
             verbose: false,
         }
     }
@@ -107,6 +111,7 @@ fn trainer_config(opts: &ConvOpts) -> TrainerConfig {
         fabric: Some(crate::comm::ETHERNET),
         sim_gpus: opts.sim_gpus,
         compute_ms: opts.task.compute_model().step_ms(opts.sim_gpus),
+        exec: opts.exec,
         verbose: opts.verbose,
     }
 }

@@ -27,4 +27,23 @@ pub trait GradientSource {
     fn name(&self) -> &'static str {
         "source"
     }
+
+    /// Thread-shareable view for the engine's parallel gradient phase.
+    ///
+    /// Sources whose `grad` is a pure function of `(params, worker, t)`
+    /// — every worker draws from its own deterministic RNG stream
+    /// (`Rng::for_stream`) and touches no shared scratch — return
+    /// `Some(self)` so `ExecMode::Threaded` can fan gradient computation
+    /// out across workers. The default `None` keeps the sequential path
+    /// (e.g. the PJRT-backed sources, whose executables are not `Sync`).
+    /// Both paths produce bitwise identical gradients by construction.
+    fn parallel(&self) -> Option<&dyn ParallelGradients> {
+        None
+    }
+}
+
+/// Shared-state gradient oracle, callable concurrently from the
+/// engine's pool threads (one call per worker, disjoint `out` buffers).
+pub trait ParallelGradients: Sync {
+    fn grad_at(&self, params: &[f32], worker: usize, t: u64, out: &mut [f32]) -> f32;
 }

@@ -6,7 +6,7 @@
 //!   * unbiased noise with variance σ² — Assumption 2
 //!   * bounded stochastic gradients (clipped tails) — Assumption 3
 
-use super::GradientSource;
+use super::{GradientSource, ParallelGradients};
 use crate::tensor::Rng;
 
 /// Noisy strongly-convex quadratic: f(x) = ½ Σ aᵢ xᵢ², ∇f = a⊙x, with
@@ -31,12 +31,8 @@ impl NoisyQuadratic {
     }
 }
 
-impl GradientSource for NoisyQuadratic {
-    fn dim(&self) -> usize {
-        self.a.len()
-    }
-
-    fn grad(&mut self, params: &[f32], worker: usize, t: u64, out: &mut [f32]) -> f32 {
+impl ParallelGradients for NoisyQuadratic {
+    fn grad_at(&self, params: &[f32], worker: usize, t: u64, out: &mut [f32]) -> f32 {
         let mut rng = Rng::for_stream(self.seed, worker as u64, t);
         let mut loss = 0.0f64;
         for i in 0..params.len() {
@@ -47,6 +43,20 @@ impl GradientSource for NoisyQuadratic {
             out[i] = self.a[i] * x + z;
         }
         loss as f32
+    }
+}
+
+impl GradientSource for NoisyQuadratic {
+    fn dim(&self) -> usize {
+        self.a.len()
+    }
+
+    fn grad(&mut self, params: &[f32], worker: usize, t: u64, out: &mut [f32]) -> f32 {
+        self.grad_at(params, worker, t, out)
+    }
+
+    fn parallel(&self) -> Option<&dyn ParallelGradients> {
+        Some(self)
     }
 
     fn eval_loss(&mut self, params: &[f32]) -> Option<f32> {
@@ -78,12 +88,8 @@ impl DoubleWell {
     }
 }
 
-impl GradientSource for DoubleWell {
-    fn dim(&self) -> usize {
-        self.d
-    }
-
-    fn grad(&mut self, params: &[f32], worker: usize, t: u64, out: &mut [f32]) -> f32 {
+impl ParallelGradients for DoubleWell {
+    fn grad_at(&self, params: &[f32], worker: usize, t: u64, out: &mut [f32]) -> f32 {
         let mut rng = Rng::for_stream(self.seed ^ 0xdead, worker as u64, t);
         let mut loss = 0.0f64;
         for i in 0..params.len() {
@@ -93,6 +99,20 @@ impl GradientSource for DoubleWell {
             out[i] = x * (x * x - 1.0) + z;
         }
         loss as f32
+    }
+}
+
+impl GradientSource for DoubleWell {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn grad(&mut self, params: &[f32], worker: usize, t: u64, out: &mut [f32]) -> f32 {
+        self.grad_at(params, worker, t, out)
+    }
+
+    fn parallel(&self) -> Option<&dyn ParallelGradients> {
+        Some(self)
     }
 
     fn eval_loss(&mut self, params: &[f32]) -> Option<f32> {
@@ -158,17 +178,27 @@ impl Logistic {
     }
 }
 
+impl ParallelGradients for Logistic {
+    fn grad_at(&self, params: &[f32], worker: usize, t: u64, out: &mut [f32]) -> f32 {
+        let mut rng = Rng::for_stream(self.seed ^ 0xbeef, worker as u64, t);
+        let idxs: Vec<usize> = (0..self.batch)
+            .map(|_| rng.below(self.feats.len() as u64) as usize)
+            .collect();
+        self.loss_grad_on(params, &idxs, out)
+    }
+}
+
 impl GradientSource for Logistic {
     fn dim(&self) -> usize {
         self.d
     }
 
     fn grad(&mut self, params: &[f32], worker: usize, t: u64, out: &mut [f32]) -> f32 {
-        let mut rng = Rng::for_stream(self.seed ^ 0xbeef, worker as u64, t);
-        let idxs: Vec<usize> = (0..self.batch)
-            .map(|_| rng.below(self.feats.len() as u64) as usize)
-            .collect();
-        self.loss_grad_on(params, &idxs, out)
+        self.grad_at(params, worker, t, out)
+    }
+
+    fn parallel(&self) -> Option<&dyn ParallelGradients> {
+        Some(self)
     }
 
     fn eval_loss(&mut self, params: &[f32]) -> Option<f32> {

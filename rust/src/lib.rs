@@ -4,23 +4,31 @@
 //! Communication Efficiency for Large-scale Training via 0/1 Adam*
 //! (Lu, Li, Zhang, De Sa, He).
 //!
-//! Architecture (see DESIGN.md):
+//! Architecture (see DESIGN.md at the repository root):
 //! * [`comm`] — 1-bit codecs, error-feedback AllReduce (paper Alg. 2/3),
 //!   the analytic network-timing model, and the volume ledger.
 //! * [`optim`] — the distributed optimizers: 0/1 Adam (Alg. 1), 1-bit
 //!   Adam / frozen-variance family (Alg. 4), original Adam (Eq. 3), SGD
-//!   baselines; T_v/T_u policies; LR schedules.
+//!   baselines; T_v/T_u policies; LR schedules. Every step is
+//!   phase-split into a per-worker local phase and a fixed-order global
+//!   reduce/apply phase (DESIGN.md §3).
 //! * [`runtime`] — PJRT loader/executor for AOT HLO artifacts (L2 JAX
 //!   graphs with L1 Pallas kernels inlined). Python never runs here.
+//!   Offline builds link the vendored `xla` stub (DESIGN.md §1) and
+//!   skip artifact-dependent paths at runtime.
 //! * [`grad`] — gradient sources (PJRT-backed models + analytical
-//!   objectives).
-//! * [`coordinator`] — the training loop, simulated cluster clock,
-//!   metrics, Fig-1 profiler.
+//!   objectives); pure per-(worker, t) sources expose a thread-shareable
+//!   [`grad::ParallelGradients`] view.
+//! * [`coordinator`] — the deterministic parallel execution engine
+//!   ([`coordinator::engine`]: `ExecMode::{Sequential, Threaded(n)}`,
+//!   bitwise-identical by the DESIGN.md §3 contract), the training
+//!   loop, simulated cluster clock, metrics, Fig-1 profiler.
 //! * [`data`] / [`eval`] — synthetic workloads and downstream evals.
 //! * [`config`] / [`exp`] — paper workload presets and one driver per
-//!   table/figure.
+//!   table/figure (DESIGN.md §4).
 //! * [`benchkit`] / [`testkit`] — self-contained bench + property-test
-//!   harnesses (offline environment; see DESIGN.md §1).
+//!   harnesses for the offline environment (DESIGN.md §1, §5); property
+//!   failures replay exactly via `TESTKIT_SEED`.
 
 pub mod benchkit;
 pub mod comm;

@@ -155,6 +155,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
                 .opt("workers", "4", "simulated data-parallel workers")
                 .opt("task", "bert_base", "paper task for schedules/timing")
                 .opt("seed", "0", "data seed")
+                .opt("threads", "1", "engine pool threads (1 = sequential; results are bitwise identical)")
                 .flag("quiet", "suppress progress"),
         ),
         rest,
@@ -166,6 +167,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     opts.model = p.get("model").to_string();
     opts.workers = p.get_usize("workers");
     opts.seed = p.get_u64("seed");
+    opts.exec = zo_adam::coordinator::ExecMode::with_threads(p.get_usize("threads"));
     opts.verbose = !p.get_flag("quiet");
 
     let runs = run_convergence(&rt, &opts, &[algo])?;

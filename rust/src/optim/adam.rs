@@ -2,7 +2,8 @@
 //! AllReduce of the gradient every step, shared optimizer state.
 
 use super::{DistOptimizer, Hyper, LrSchedule, StepInfo};
-use crate::comm::allreduce::allreduce_mean;
+use crate::comm::allreduce::allreduce_mean_eng;
+use crate::coordinator::engine::Engine;
 
 pub struct Adam {
     x: Vec<f32>,
@@ -50,29 +51,38 @@ impl DistOptimizer for Adam {
         out.copy_from_slice(&self.x); // all replicas are the shared x
     }
 
-    fn step(&mut self, t: u64, grads: &[Vec<f32>]) -> StepInfo {
+    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
         assert_eq!(grads.len(), self.n);
         let gamma = self.lr.lr(t) as f32;
         let Hyper { beta1, beta2, eps } = self.hyper;
 
+        // Global reduce: fixed worker order inside each coordinate chunk.
         let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-        let wire = allreduce_mean(&refs, &mut self.gbar);
+        let wire = allreduce_mean_eng(&refs, &mut self.gbar, eng);
 
-        // Single fused pass (Equation 3, conventional post-update order):
-        //   m ← β1 m + (1−β1)ḡ;  v ← β2 v + (1−β2)ḡ²;  x ← x − γ m/√(v+ε).
-        for (((xi, mi), vi), &g) in self
+        // Apply phase, fused (Equation 3, conventional post-update
+        // order): m ← β1 m + (1−β1)ḡ;  v ← β2 v + (1−β2)ḡ²;
+        // x ← x − γ m/√(v+ε). Per-coordinate independent, so chunks may
+        // run on pool threads without changing a single bit.
+        let chunk = eng.chunk_len(self.x.len());
+        let items: Vec<_> = self
             .x
-            .iter_mut()
-            .zip(self.m.iter_mut())
-            .zip(self.v.iter_mut())
-            .zip(self.gbar.iter())
-        {
-            let m = beta1 * *mi + (1.0 - beta1) * g;
-            let v = beta2 * *vi + (1.0 - beta2) * g * g;
-            *mi = m;
-            *vi = v;
-            *xi -= gamma * m / (v + eps).sqrt();
-        }
+            .chunks_mut(chunk)
+            .zip(self.m.chunks_mut(chunk))
+            .zip(self.v.chunks_mut(chunk))
+            .zip(self.gbar.chunks(chunk))
+            .collect();
+        eng.run(items, |_, (((xc, mc), vc), gc)| {
+            for (((xi, mi), vi), &g) in
+                xc.iter_mut().zip(mc.iter_mut()).zip(vc.iter_mut()).zip(gc.iter())
+            {
+                let m = beta1 * *mi + (1.0 - beta1) * g;
+                let v = beta2 * *vi + (1.0 - beta2) * g * g;
+                *mi = m;
+                *vi = v;
+                *xi -= gamma * m / (v + eps).sqrt();
+            }
+        });
 
         StepInfo {
             lr: gamma as f64,

@@ -28,6 +28,7 @@ pub use sgd::{MomentumSgd, SignSgd};
 pub use zeroone_adam::ZeroOneAdam;
 
 use crate::comm::WireStats;
+use crate::coordinator::engine::Engine;
 
 /// Adam-family hyperparameters (paper: β1=0.9, β2=0.999, ε=1e-8).
 #[derive(Debug, Clone, Copy)]
@@ -59,7 +60,15 @@ pub struct StepInfo {
 /// A distributed optimizer over n worker replicas of a d-dim model.
 ///
 /// The coordinator drives it as: read `params(i)` for each worker →
-/// compute grads → `step(t, &grads)`.
+/// compute grads → `step_engine(t, &grads, &engine)`.
+///
+/// Every step is phase-split (DESIGN.md §3): a **local phase** that
+/// touches only one worker's replica state (momentum/buffer/model
+/// updates, the EF compress leg) and a **global reduce/apply phase**
+/// that combines workers in fixed index order. The engine may fan the
+/// local phase out across threads; the reduce phase always runs on the
+/// coordinator thread, so `ExecMode::Threaded` is bitwise identical to
+/// `ExecMode::Sequential` for every optimizer.
 pub trait DistOptimizer {
     fn name(&self) -> &'static str;
     fn dim(&self) -> usize;
@@ -68,8 +77,16 @@ pub trait DistOptimizer {
     /// The model replica worker `i` evaluates its gradient at.
     fn params(&self, worker: usize) -> &[f32];
 
-    /// Apply one global step given each worker's local gradient.
-    fn step(&mut self, t: u64, grads: &[Vec<f32>]) -> StepInfo;
+    /// Apply one global step given each worker's local gradient
+    /// (reference sequential path; same contract as `step_engine`).
+    fn step(&mut self, t: u64, grads: &[Vec<f32>]) -> StepInfo {
+        self.step_engine(t, grads, &Engine::sequential())
+    }
+
+    /// Apply one global step, scheduling the per-worker local phase on
+    /// `eng`. Must produce bitwise identical state and [`StepInfo`] for
+    /// every engine width.
+    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo;
 
     /// Average model across workers (for evaluation / checkpoints).
     fn mean_params(&self, out: &mut [f32]) {

@@ -11,6 +11,7 @@
 
 use super::{DistOptimizer, Hyper, LrSchedule, StepInfo};
 use crate::comm::allreduce::EfAllReduce;
+use crate::coordinator::engine::Engine;
 
 pub struct NaiveOneBitAdam {
     x: Vec<f32>,
@@ -78,25 +79,31 @@ impl DistOptimizer for NaiveOneBitAdam {
         out.copy_from_slice(&self.x);
     }
 
-    fn step(&mut self, t: u64, grads: &[Vec<f32>]) -> StepInfo {
+    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
         let gamma = self.lr.lr(t) as f32;
         let Hyper { beta1, beta2, eps } = self.hyper;
         let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
         // The mistake under study: both moments fed the ±scale signal.
-        let wire = self.ef.reduce(&refs, &mut self.gbar);
-        for (((xi, mi), vi), &g) in self
+        let wire = self.ef.reduce_eng(&refs, &mut self.gbar, eng);
+        let chunk = eng.chunk_len(self.x.len());
+        let items: Vec<_> = self
             .x
-            .iter_mut()
-            .zip(self.m.iter_mut())
-            .zip(self.v.iter_mut())
-            .zip(self.gbar.iter())
-        {
-            let m = beta1 * *mi + (1.0 - beta1) * g;
-            let v = beta2 * *vi + (1.0 - beta2) * g * g; // g² = scale² ∀i!
-            *mi = m;
-            *vi = v;
-            *xi -= gamma * m / (v + eps).sqrt();
-        }
+            .chunks_mut(chunk)
+            .zip(self.m.chunks_mut(chunk))
+            .zip(self.v.chunks_mut(chunk))
+            .zip(self.gbar.chunks(chunk))
+            .collect();
+        eng.run(items, |_, (((xc, mc), vc), gc)| {
+            for (((xi, mi), vi), &g) in
+                xc.iter_mut().zip(mc.iter_mut()).zip(vc.iter_mut()).zip(gc.iter())
+            {
+                let m = beta1 * *mi + (1.0 - beta1) * g;
+                let v = beta2 * *vi + (1.0 - beta2) * g * g; // g² = scale² ∀i!
+                *mi = m;
+                *vi = v;
+                *xi -= gamma * m / (v + eps).sqrt();
+            }
+        });
         StepInfo { lr: gamma as f64, synced: true, var_updated: true, rounds: vec![wire] }
     }
 

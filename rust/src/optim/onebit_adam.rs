@@ -13,7 +13,8 @@
 
 use super::policy::{VarPolicy, VarSchedule};
 use super::{DistOptimizer, Hyper, LrSchedule, StepInfo};
-use crate::comm::allreduce::{allreduce_mean, EfAllReduce};
+use crate::comm::allreduce::{allreduce_mean_eng, EfAllReduce};
+use crate::coordinator::engine::Engine;
 
 pub struct FrozenVarAdam {
     x: Vec<f32>,
@@ -99,7 +100,7 @@ impl DistOptimizer for FrozenVarAdam {
         out.copy_from_slice(&self.x);
     }
 
-    fn step(&mut self, t: u64, grads: &[Vec<f32>]) -> StepInfo {
+    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
         assert_eq!(grads.len(), self.n);
         let gamma = self.lr.lr(t) as f32;
         let Hyper { beta1, beta2, eps } = self.hyper;
@@ -108,10 +109,11 @@ impl DistOptimizer for FrozenVarAdam {
         let var_update = self.var_sched.is_update_step(t);
         let wire = if var_update {
             // Full-precision round: exact mean, v will absorb ḡ².
-            allreduce_mean(&refs, &mut self.gbar)
+            allreduce_mean_eng(&refs, &mut self.gbar, eng)
         } else {
-            // Compression stage: EF-1-bit round (Algorithm 2).
-            self.ef.reduce(&refs, &mut self.gbar)
+            // Compression stage: EF-1-bit round (Algorithm 2) — the
+            // per-worker compress leg runs on the pool.
+            self.ef.reduce_eng(&refs, &mut self.gbar, eng)
         };
 
         // m ← β1 m + (1−β1)ḡ, then x ← x − γ m/√(v+ε) with the
@@ -123,17 +125,23 @@ impl DistOptimizer for FrozenVarAdam {
             }
             crate::tensor::rsqrt_into(&mut self.rsv, &self.v, eps);
         }
-        for (((xi, mi), &g), &ri) in self
+        let chunk = eng.chunk_len(self.x.len());
+        let items: Vec<_> = self
             .x
-            .iter_mut()
-            .zip(self.m.iter_mut())
-            .zip(self.gbar.iter())
-            .zip(self.rsv.iter())
-        {
-            let m = beta1 * *mi + (1.0 - beta1) * g;
-            *mi = m;
-            *xi -= gamma * m * ri;
-        }
+            .chunks_mut(chunk)
+            .zip(self.m.chunks_mut(chunk))
+            .zip(self.gbar.chunks(chunk))
+            .zip(self.rsv.chunks(chunk))
+            .collect();
+        eng.run(items, |_, (((xc, mc), gc), rc)| {
+            for (((xi, mi), &g), &ri) in
+                xc.iter_mut().zip(mc.iter_mut()).zip(gc.iter()).zip(rc.iter())
+            {
+                let m = beta1 * *mi + (1.0 - beta1) * g;
+                *mi = m;
+                *xi -= gamma * m * ri;
+            }
+        });
 
         StepInfo {
             lr: gamma as f64,

@@ -10,7 +10,8 @@
 //!   point.
 
 use super::{DistOptimizer, LrSchedule, StepInfo};
-use crate::comm::allreduce::{allreduce_mean, EfAllReduce};
+use crate::comm::allreduce::{allreduce_mean_eng, EfAllReduce};
+use crate::coordinator::engine::Engine;
 
 pub struct MomentumSgd {
     x: Vec<f32>,
@@ -56,14 +57,26 @@ impl DistOptimizer for MomentumSgd {
         out.copy_from_slice(&self.x);
     }
 
-    fn step(&mut self, t: u64, grads: &[Vec<f32>]) -> StepInfo {
+    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
         let gamma = self.lr.lr(t) as f32;
+        let beta = self.beta;
+        // Reduce (fixed worker order per coordinate), then the fused
+        // heavy-ball apply in per-coordinate chunks.
         let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-        let wire = allreduce_mean(&refs, &mut self.gbar);
-        for i in 0..self.x.len() {
-            self.m[i] = self.beta * self.m[i] + self.gbar[i];
-            self.x[i] -= gamma * self.m[i];
-        }
+        let wire = allreduce_mean_eng(&refs, &mut self.gbar, eng);
+        let chunk = eng.chunk_len(self.x.len());
+        let items: Vec<_> = self
+            .x
+            .chunks_mut(chunk)
+            .zip(self.m.chunks_mut(chunk))
+            .zip(self.gbar.chunks(chunk))
+            .collect();
+        eng.run(items, |_, ((xc, mc), gc)| {
+            for ((xi, mi), &g) in xc.iter_mut().zip(mc.iter_mut()).zip(gc.iter()) {
+                *mi = beta * *mi + g;
+                *xi -= gamma * *mi;
+            }
+        });
         StepInfo { lr: gamma as f64, synced: true, var_updated: false, rounds: vec![wire] }
     }
 
@@ -115,11 +128,17 @@ impl DistOptimizer for SignSgd {
         out.copy_from_slice(&self.x);
     }
 
-    fn step(&mut self, t: u64, grads: &[Vec<f32>]) -> StepInfo {
+    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
         let gamma = self.lr.lr(t) as f32;
+        // Local phase: per-worker EF compress (engine-parallel inside
+        // reduce_eng); global phase: ordered server mean + apply.
         let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-        let wire = self.ef.reduce(&refs, &mut self.gbar);
-        crate::tensor::axpy(&mut self.x, -gamma, &self.gbar);
+        let wire = self.ef.reduce_eng(&refs, &mut self.gbar, eng);
+        let chunk = eng.chunk_len(self.x.len());
+        let items: Vec<_> = self.x.chunks_mut(chunk).zip(self.gbar.chunks(chunk)).collect();
+        eng.run(items, |_, (xc, gc)| {
+            crate::tensor::axpy(xc, -gamma, gc);
+        });
         StepInfo { lr: gamma as f64, synced: true, var_updated: false, rounds: vec![wire] }
     }
 }

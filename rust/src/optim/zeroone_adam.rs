@@ -26,13 +26,20 @@
 
 use super::policy::{SyncSchedule, VarSchedule};
 use super::{DistOptimizer, Hyper, LrSchedule, StepInfo};
-use crate::comm::allreduce::{allreduce_mean, EfAllReduce};
+use crate::comm::allreduce::{allreduce_mean_eng, EfAllReduce};
+use crate::coordinator::engine::Engine;
+
+/// One worker's replica state — the unit the engine's local phase
+/// schedules: every lines-3–5 update touches exactly one `Replica`.
+struct Replica {
+    x: Vec<f32>,
+    m: Vec<f32>,
+    u: Vec<f32>,
+}
 
 pub struct ZeroOneAdam {
-    // per-worker replicas
-    xs: Vec<Vec<f32>>,
-    ms: Vec<Vec<f32>>,
-    us: Vec<Vec<f32>>,
+    // per-worker replicas (engine-schedulable local state)
+    reps: Vec<Replica>,
     // shared state
     v: Vec<f32>,
     rsv: Vec<f32>,
@@ -63,9 +70,13 @@ impl ZeroOneAdam {
         let mut rsv = vec![0.0; d];
         crate::tensor::rsqrt_into(&mut rsv, &vec![0.0; d], hyper.eps);
         ZeroOneAdam {
-            xs: vec![init.clone(); n_workers],
-            ms: vec![vec![0.0; d]; n_workers],
-            us: vec![vec![0.0; d]; n_workers],
+            reps: (0..n_workers)
+                .map(|_| Replica {
+                    x: init.clone(),
+                    m: vec![0.0; d],
+                    u: vec![0.0; d],
+                })
+                .collect(),
             v: vec![0.0; d],
             rsv,
             x_anchor: init,
@@ -123,10 +134,10 @@ impl DistOptimizer for ZeroOneAdam {
     }
 
     fn params(&self, worker: usize) -> &[f32] {
-        &self.xs[worker]
+        &self.reps[worker].x
     }
 
-    fn step(&mut self, t: u64, grads: &[Vec<f32>]) -> StepInfo {
+    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
         assert_eq!(grads.len(), self.n);
         let gamma = self.lr.lr(t) as f32;
         let Hyper { beta1, beta2, eps } = self.hyper;
@@ -140,7 +151,7 @@ impl DistOptimizer for ZeroOneAdam {
         let var_updated = self.var_sched.is_update_step(t);
         if var_updated {
             let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-            let wire = allreduce_mean(&refs, &mut self.gbar);
+            let wire = allreduce_mean_eng(&refs, &mut self.gbar, eng);
             rounds.push(wire);
             crate::tensor::var_update(&mut self.v, &self.gbar, beta2);
             crate::tensor::rsqrt_into(&mut self.rsv, &self.v, eps);
@@ -148,36 +159,40 @@ impl DistOptimizer for ZeroOneAdam {
 
         // Lines 3–5: fused local step per worker (the L1 kernel's math:
         // one streamed pass, x and u move along the updated momentum).
-        for w in 0..self.n {
-            let (x, m, u, g, rsv) = (
-                &mut self.xs[w],
-                &mut self.ms[w],
-                &mut self.us[w],
-                &grads[w],
-                &self.rsv,
-            );
-            // iterator zip: no bounds checks in the 5-stream loop
-            for ((((xi, mi), ui), &gi), &ri) in x
-                .iter_mut()
-                .zip(m.iter_mut())
-                .zip(u.iter_mut())
-                .zip(g.iter())
-                .zip(rsv.iter())
-            {
-                let m_new = beta1 * *mi + (1.0 - beta1) * gi;
-                let step = gamma * m_new;
-                *mi = m_new;
-                *xi -= step * ri;
-                *ui += step;
-            }
+        // Each replica is an independent engine item: the shared rsv is
+        // read-only, so the pool schedule cannot change any bit.
+        {
+            let rsv = &self.rsv;
+            let items: Vec<&mut Replica> = self.reps.iter_mut().collect();
+            eng.run(items, |w, rep| {
+                let g = &grads[w];
+                // iterator zip: no bounds checks in the 5-stream loop
+                for ((((xi, mi), ui), &gi), &ri) in rep
+                    .x
+                    .iter_mut()
+                    .zip(rep.m.iter_mut())
+                    .zip(rep.u.iter_mut())
+                    .zip(g.iter())
+                    .zip(rsv.iter())
+                {
+                    let m_new = beta1 * *mi + (1.0 - beta1) * gi;
+                    let step = gamma * m_new;
+                    *mi = m_new;
+                    *xi -= step * ri;
+                    *ui += step;
+                }
+            });
         }
         self.gamma_accum += gamma as f64;
 
-        // Lines 6–12: 1-bit sync.
+        // Lines 6–12: 1-bit sync. The compress leg is per-worker
+        // (engine-parallel inside reduce_eng); the server reduction and
+        // the anchor update run on the coordinator thread in fixed
+        // order.
         let synced = self.sync_sched.is_sync_step(t);
         if synced {
-            let refs: Vec<&[f32]> = self.us.iter().map(|u| u.as_slice()).collect();
-            let wire = self.ef.reduce(&refs, &mut self.ubar);
+            let refs: Vec<&[f32]> = self.reps.iter().map(|r| r.u.as_slice()).collect();
+            let wire = self.ef.reduce_eng(&refs, &mut self.ubar, eng);
             rounds.push(wire);
 
             let inv_gsum = if self.gamma_accum > 0.0 {
@@ -195,10 +210,17 @@ impl DistOptimizer for ZeroOneAdam {
                 *xa -= *ub * ri;
                 *ub *= inv_gsum; // reuse as the new momentum
             }
-            for w in 0..self.n {
-                self.xs[w].copy_from_slice(&self.x_anchor);
-                self.ms[w].copy_from_slice(&self.ubar);
-                self.us[w].iter_mut().for_each(|v| *v = 0.0);
+            // Broadcast back into every replica (pure copies — safe to
+            // fan out).
+            {
+                let x_anchor = &self.x_anchor;
+                let ubar = &self.ubar;
+                let items: Vec<&mut Replica> = self.reps.iter_mut().collect();
+                eng.run(items, |_, rep| {
+                    rep.x.copy_from_slice(x_anchor);
+                    rep.m.copy_from_slice(ubar);
+                    rep.u.iter_mut().for_each(|v| *v = 0.0);
+                });
             }
             self.gamma_accum = 0.0;
         }
@@ -215,7 +237,7 @@ impl DistOptimizer for ZeroOneAdam {
     }
 
     fn momentum(&self) -> Option<&[f32]> {
-        Some(&self.ms[0])
+        Some(&self.reps[0].m)
     }
 
     fn variance(&self) -> Option<&[f32]> {
@@ -306,7 +328,7 @@ mod tests {
             let grads = noisy_quad_grads(&opt, &mut rng, 0.1);
             let info = opt.step(t, &grads);
             if info.synced {
-                assert!(opt.us.iter().all(|u| u.iter().all(|&v| v == 0.0)));
+                assert!(opt.reps.iter().all(|r| r.u.iter().all(|&v| v == 0.0)));
             }
         }
     }
@@ -372,7 +394,7 @@ mod tests {
         let mut last_m_before = vec![0.0f32; d];
         for t in 0..8 {
             if t == 7 {
-                last_m_before.copy_from_slice(&opt.ms[0]);
+                last_m_before.copy_from_slice(&opt.reps[0].m);
             }
             opt.step(t, &grads);
         }

@@ -1,0 +1,188 @@
+//! Tentpole acceptance: `ExecMode::Threaded(n)` must be **bitwise
+//! identical** to `ExecMode::Sequential` through the whole stack —
+//! gradients, every optimizer's local/reduce phases, the volume ledger
+//! and the simulated cluster clock — for every optimizer family, for
+//! random dims (including non-multiples of 64), worker counts, thread
+//! counts and sync policies.
+//!
+//! Determinism contract under test: DESIGN.md §3.
+
+use zo_adam::comm::ETHERNET;
+use zo_adam::coordinator::{ExecMode, NoObserver, RunResult, Trainer, TrainerConfig};
+use zo_adam::grad::synthetic::NoisyQuadratic;
+use zo_adam::optim::policy::{SyncPolicy, SyncSchedule, VarPolicy, VarSchedule};
+use zo_adam::optim::{
+    Adam, ConstLr, DistOptimizer, FrozenVarAdam, Hyper, MomentumSgd, NaiveOneBitAdam, SignSgd,
+    ZeroOneAdam,
+};
+use zo_adam::testkit::{property, Gen};
+
+/// Everything we pin bit-for-bit between the two modes.
+fn assert_bitwise_equal(a: &RunResult, b: &RunResult, ctx: &str) {
+    assert_eq!(a.final_params.len(), b.final_params.len(), "{ctx}: dim");
+    for (j, (x, y)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: final_params[{j}]");
+    }
+    // volume ledger
+    assert_eq!(a.ledger.steps, b.ledger.steps, "{ctx}: ledger.steps");
+    assert_eq!(a.ledger.fp_rounds, b.ledger.fp_rounds, "{ctx}: fp_rounds");
+    assert_eq!(a.ledger.onebit_rounds, b.ledger.onebit_rounds, "{ctx}: onebit_rounds");
+    assert_eq!(a.ledger.skipped_steps, b.ledger.skipped_steps, "{ctx}: skipped");
+    assert_eq!(a.ledger.bytes_total, b.ledger.bytes_total, "{ctx}: bytes");
+    // simulated clock
+    assert_eq!(a.sim_total_s.to_bits(), b.sim_total_s.to_bits(), "{ctx}: sim clock");
+    // per-record trace: losses, lr, wire bytes, step clock
+    assert_eq!(a.log.records.len(), b.log.records.len(), "{ctx}: record count");
+    for (ra, rb) in a.log.records.iter().zip(&b.log.records) {
+        assert_eq!(ra.t, rb.t, "{ctx}: record t");
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "{ctx}: loss@t={}", ra.t);
+        assert_eq!(ra.lr.to_bits(), rb.lr.to_bits(), "{ctx}: lr@t={}", ra.t);
+        assert_eq!(ra.wire_bytes, rb.wire_bytes, "{ctx}: wire@t={}", ra.t);
+        assert_eq!(ra.sim_ms.to_bits(), rb.sim_ms.to_bits(), "{ctx}: sim_ms@t={}", ra.t);
+        assert_eq!(ra.synced, rb.synced, "{ctx}: synced@t={}", ra.t);
+        assert_eq!(ra.var_updated, rb.var_updated, "{ctx}: var@t={}", ra.t);
+        match (ra.eval_loss, rb.eval_loss) {
+            (None, None) => {}
+            (Some(ea), Some(eb)) => {
+                assert_eq!(ea.to_bits(), eb.to_bits(), "{ctx}: eval@t={}", ra.t)
+            }
+            _ => panic!("{ctx}: eval presence differs at t={}", ra.t),
+        }
+    }
+}
+
+/// The five optimizer families under test.
+const FAMILIES: [&str; 6] =
+    ["adam", "momentum-sgd", "signsgd-ef", "naive-1bit-adam", "1bit-adam", "01adam"];
+
+fn build(family: &str, d: usize, n: usize, lr: f64, g: &mut Gen, steps: u64) -> Box<dyn DistOptimizer> {
+    let init = vec![0.8f32; d];
+    let h = Hyper::default();
+    match family {
+        "adam" => Box::new(Adam::new(init, n, h, Box::new(ConstLr(lr)))),
+        "momentum-sgd" => Box::new(MomentumSgd::new(init, n, 0.9, Box::new(ConstLr(lr)))),
+        "signsgd-ef" => Box::new(SignSgd::new(init, n, Box::new(ConstLr(lr)))),
+        "naive-1bit-adam" => Box::new(NaiveOneBitAdam::new(init, n, h, Box::new(ConstLr(lr)))),
+        "1bit-adam" => {
+            let t0 = g.u64_in(0..steps.max(2));
+            Box::new(FrozenVarAdam::onebit_adam(init, n, h, Box::new(ConstLr(lr)), t0))
+        }
+        "01adam" => {
+            let var = match g.usize_in(0..3) {
+                0 => VarPolicy::Always,
+                1 => VarPolicy::ExpInterval { kappa: g.usize_in(1..6) as u32 },
+                _ => VarPolicy::OneShot { t0: g.u64_in(1..steps.max(2)) },
+            };
+            let sync = match g.usize_in(0..3) {
+                0 => SyncPolicy::Always,
+                1 => SyncPolicy::Fixed { interval: g.u64_in(1..6) },
+                _ => SyncPolicy::IntervalDoubling {
+                    warmup: g.u64_in(1..steps.max(2)),
+                    double_every: g.u64_in(1..steps.max(2)),
+                    clip: 1 << g.usize_in(0..5),
+                },
+            };
+            Box::new(ZeroOneAdam::new(
+                init,
+                n,
+                h,
+                Box::new(ConstLr(lr)),
+                VarSchedule::new(var),
+                SyncSchedule::new(sync),
+            ))
+        }
+        other => panic!("unknown family {other}"),
+    }
+}
+
+fn run(
+    family: &str,
+    d: usize,
+    n: usize,
+    lr: f64,
+    steps: u64,
+    src_seed: u64,
+    exec: ExecMode,
+    g: &mut Gen,
+) -> RunResult {
+    let mut src = NoisyQuadratic::new(d, 4.0, 0.15, src_seed);
+    let mut opt = build(family, d, n, lr, g, steps);
+    let cfg = TrainerConfig {
+        steps,
+        log_every: 1,
+        eval_every: (steps / 3).max(1),
+        fabric: Some(ETHERNET),
+        sim_gpus: 32,
+        compute_ms: 2.5,
+        exec,
+        verbose: false,
+    };
+    Trainer::run(&mut src, opt.as_mut(), &cfg, &mut NoObserver)
+}
+
+#[test]
+fn prop_threaded_is_bitwise_sequential_for_every_optimizer() {
+    property(10, |g: &mut Gen| {
+        // dims straddle the 64-wide codec words on purpose
+        let d = g.usize_in(1..200);
+        let n = g.usize_in(1..6);
+        let steps = g.u64_in(3..20);
+        let threads = g.usize_in(2..9);
+        let lr = g.f64_in(1e-3, 5e-2);
+        let src_seed = g.case_seed ^ 0x5151;
+        for family in FAMILIES {
+            // The optimizer builder draws policy parameters from the
+            // generator; replay the same draws for both modes.
+            let mut ga = Gen::new(g.case_seed ^ 0xabcd);
+            let mut gb = Gen::new(g.case_seed ^ 0xabcd);
+            let a = run(family, d, n, lr, steps, src_seed, ExecMode::Sequential, &mut ga);
+            let b = run(family, d, n, lr, steps, src_seed, ExecMode::Threaded(threads), &mut gb);
+            let ctx = format!(
+                "{family} d={d} n={n} steps={steps} threads={threads} seed={:#x}",
+                g.case_seed
+            );
+            assert_bitwise_equal(&a, &b, &ctx);
+        }
+    });
+}
+
+#[test]
+fn threaded8_matches_sequential_on_a_longer_zeroone_run() {
+    // The acceptance configuration called out in the issue: 8 threads,
+    // 8 materialized workers, the paper 0/1 Adam policy shapes.
+    let d = 1337; // non-multiple of 64, > one chunk at tiny floors
+    let n = 8;
+    let run = |exec: ExecMode| {
+        let mut src = NoisyQuadratic::new(d, 5.0, 0.1, 77);
+        let mut opt = ZeroOneAdam::new(
+            vec![1.0; d],
+            n,
+            Hyper::default(),
+            Box::new(ConstLr(0.01)),
+            VarSchedule::paper(),
+            SyncSchedule::new(SyncPolicy::IntervalDoubling {
+                warmup: 20,
+                double_every: 30,
+                clip: 8,
+            }),
+        );
+        let cfg = TrainerConfig {
+            steps: 120,
+            log_every: 1,
+            eval_every: 40,
+            fabric: Some(ETHERNET),
+            sim_gpus: 128,
+            compute_ms: 1.0,
+            exec,
+            verbose: false,
+        };
+        Trainer::run(&mut src, &mut opt, &cfg, &mut NoObserver)
+    };
+    let a = run(ExecMode::Sequential);
+    let b = run(ExecMode::Threaded(8));
+    assert_bitwise_equal(&a, &b, "01adam long run");
+    // and the run actually trained
+    let first = a.log.records.first().unwrap().loss;
+    let last = a.log.tail_loss(5).unwrap();
+    assert!(last < first, "no descent: {first} -> {last}");
+}

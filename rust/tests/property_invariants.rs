@@ -38,6 +38,105 @@ fn prop_compression_is_contraction_and_l1_preserving() {
 }
 
 #[test]
+fn prop_codec_handles_lengths_off_the_word_boundary() {
+    // The sign bitmap packs 64 coordinates per u64; every length class
+    // around the word boundary must roundtrip exactly.
+    property(120, |g: &mut Gen| {
+        // d ≡ r (mod 64) with r drawn over the full residue range,
+        // including r = 1 and r = 63
+        let words = g.usize_in(0..4);
+        let r = g.usize_in(1..64);
+        let d = words * 64 + r;
+        let v = g.vec_normal(d..d + 1, 1.5);
+        let packed = compress(&v);
+        assert_eq!(packed.len, d);
+        assert_eq!(packed.signs.len(), d.div_ceil(64));
+        assert_eq!(packed.wire_bytes(), wire_bytes(d));
+        let mut dense = vec![0.0f32; d];
+        decompress_into(&packed, &mut dense);
+        // exact sign/scale semantics per coordinate (the reference here
+        // replicates the codec's accumulation order: f32 within each
+        // 64-chunk, f64 across chunks — so the comparison is bitwise)
+        let mut l1 = 0.0f64;
+        for chunk in v.chunks(64) {
+            let mut csum = 0.0f32;
+            for &x in chunk {
+                csum += x.abs();
+            }
+            l1 += csum as f64;
+        }
+        let scale = (l1 / d as f64) as f32;
+        assert_eq!(packed.scale.to_bits(), scale.to_bits());
+        for j in 0..d {
+            assert_eq!(dense[j] >= 0.0, v[j] >= 0.0, "sign at {j}");
+            assert_eq!(dense[j].abs().to_bits(), packed.scale.to_bits(), "mag at {j}");
+        }
+    });
+}
+
+#[test]
+fn codec_all_zero_and_single_element_vectors() {
+    // all-zero: scale 0, every output is positive zero (sign(0) = +1)
+    for d in [1usize, 5, 63, 64, 65, 200] {
+        let v = vec![0.0f32; d];
+        let packed = compress(&v);
+        assert_eq!(packed.scale, 0.0);
+        let mut dense = vec![1.0f32; d];
+        decompress_into(&packed, &mut dense);
+        for (j, o) in dense.iter().enumerate() {
+            assert_eq!(o.to_bits(), 0.0f32.to_bits(), "d={d} j={j} not +0.0");
+        }
+    }
+    // single element: scale = |x|, sign preserved exactly
+    for x in [3.5f32, -3.5, 0.25, -1e-30] {
+        let packed = compress(&[x]);
+        assert_eq!(packed.scale, x.abs());
+        let mut out = [0.0f32];
+        decompress_into(&packed, &mut out);
+        assert_eq!(out[0], x);
+    }
+}
+
+#[test]
+fn codec_signed_zero_maps_to_positive() {
+    // The codec's contract (matching the Pallas kernel and ref.py):
+    // sign(±0) = +1, so both zeros compress to the positive branch.
+    let v = [0.0f32, -0.0, -1.0, 2.0];
+    let packed = compress(&v);
+    let mut out = vec![0.0f32; 4];
+    decompress_into(&packed, &mut out);
+    assert!(out[0] > 0.0 && out[1] > 0.0, "±0 must take the + branch");
+    assert!(out[2] < 0.0 && out[3] > 0.0);
+    // an all-±0 vector decompresses to all +0.0 bit patterns
+    let z = [-0.0f32, 0.0, -0.0];
+    let pz = compress(&z);
+    assert_eq!(pz.scale, 0.0);
+    let mut oz = vec![9.0f32; 3];
+    decompress_into(&pz, &mut oz);
+    for o in &oz {
+        assert_eq!(o.to_bits(), 0, "expected +0.0 bits");
+    }
+}
+
+#[test]
+fn prop_codec_error_feedback_roundtrip_on_odd_lengths() {
+    // compress_with_error_into + decompress_into telescope exactly for
+    // lengths straddling the word boundary.
+    property(60, |g: &mut Gen| {
+        let d = g.usize_in(1..300);
+        let v = g.vec_normal(d..d + 1, 2.0);
+        let mut packed = zo_adam::comm::OneBit::zeros(d);
+        let mut err = vec![0.0f32; d];
+        zo_adam::comm::compress::compress_with_error_into(&v, &mut packed, &mut err);
+        let mut q = vec![0.0f32; d];
+        decompress_into(&packed, &mut q);
+        for j in 0..d {
+            assert!((q[j] + err[j] - v[j]).abs() <= 1e-5, "j={j}");
+        }
+    });
+}
+
+#[test]
 fn prop_ef_allreduce_broadcast_is_shared_and_one_valued() {
     property(60, |g: &mut Gen| {
         let n = g.usize_in(1..6);

@@ -1,0 +1,32 @@
+//! TESTKIT_SEED env-var replay, tested in its own process: this binary
+//! contains exactly one test, so mutating the process-global
+//! environment cannot race with other `property` callers (the lib's
+//! unit tests run multithreaded and must never see a transient replay
+//! var — see testkit::tests).
+
+use zo_adam::testkit::{case_seed, property, DEFAULT_BASE_SEED};
+
+#[test]
+fn property_reads_testkit_seed_env_for_exact_replay() {
+    let seed = case_seed(DEFAULT_BASE_SEED, 23);
+
+    // Without the var: the full schedule runs, starting at case 0.
+    let first = std::sync::Mutex::new(Vec::new());
+    property(3, |g| first.lock().unwrap().push(g.case_seed));
+    assert_eq!(first.lock().unwrap().len(), 3);
+    assert_eq!(first.lock().unwrap()[0], case_seed(DEFAULT_BASE_SEED, 0));
+
+    // With the var: exactly one case, exactly that seed (decimal form).
+    std::env::set_var("TESTKIT_SEED", seed.to_string());
+    let seen = std::sync::Mutex::new(Vec::new());
+    property(50, |g| seen.lock().unwrap().push(g.case_seed));
+    assert_eq!(*seen.lock().unwrap(), vec![seed]);
+
+    // Hex form, as printed by the failure report.
+    std::env::set_var("TESTKIT_SEED", format!("{seed:#x}"));
+    let seen_hex = std::sync::Mutex::new(Vec::new());
+    property(50, |g| seen_hex.lock().unwrap().push(g.case_seed));
+    assert_eq!(*seen_hex.lock().unwrap(), vec![seed]);
+
+    std::env::remove_var("TESTKIT_SEED");
+}

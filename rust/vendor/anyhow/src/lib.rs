@@ -1,0 +1,183 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the surface the workspace uses:
+//!
+//! * [`Error`] — a context-chained, boxed-free error value;
+//! * [`Result<T>`] — `Result<T, Error>` with the same default-type-param
+//!   shape as upstream;
+//! * [`anyhow!`] / [`ensure!`] / [`bail!`] — format-style constructors;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on any
+//!   `Result<_, E: Into<Error>>`.
+//!
+//! Semantics mirror upstream where the workspace depends on them:
+//! `{}` prints the outermost message, `{:#}` prints the full chain
+//! joined by `: `, and `{:?}` prints a `Caused by:` stack.
+
+use std::fmt;
+
+/// A context-chained error value. The newest context is first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain on one line, like upstream anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like upstream: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        Error::msg(err)
+    }
+}
+
+/// `anyhow::Result<T>` — second parameter defaulted like upstream.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and lazily with `with_context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+/// Return early with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        assert!(format!("{e:?}").contains("Caused by:"));
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("missing"));
+    }
+
+    #[test]
+    fn context_on_results() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "x")).unwrap_err();
+        assert_eq!(format!("{e}"), "reading x");
+        let r2: Result<()> = Err(anyhow!("base {}", 3));
+        let e2 = r2.context("top").unwrap_err();
+        assert_eq!(format!("{e2:#}"), "top: base 3");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn check(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            Ok(7)
+        }
+        assert_eq!(check(true).unwrap(), 7);
+        assert!(check(false).is_err());
+        fn always() -> Result<u32> {
+            bail!("nope {}", 1);
+        }
+        assert!(always().is_err());
+    }
+}
