@@ -23,13 +23,18 @@ step "cargo test -q"
 cargo test -q
 
 if [ "${SKIP_SMOKE:-0}" != "1" ]; then
-    # ~5s perf smoke: quick measurement windows at the full d = 2^20
-    # (large enough that per-region compute dwarfs thread spawn cost).
-    # Prints the threaded-vs-sequential speedup per optimizer; a speedup
-    # that collapses toward (or below) 1.0 on a multi-core host is a
-    # regression in the execution engine.
-    step "bench_optimizer smoke (ZO_BENCH_QUICK)"
-    ZO_BENCH_QUICK=1 cargo bench --bench bench_optimizer
+    # Perf-regression gate: quick-window hot-path suite (codec /
+    # allreduce / optimizer-step / materialized 0/1 Adam run) that
+    # compares the optimizer-step medians against the committed
+    # BENCH_PR2.json and FAILS on a >30% regression. A baseline
+    # committed with "bootstrap": true (no toolchain on the authoring
+    # container) skips the gate once and is replaced by real numbers;
+    # an existing measured baseline is never overwritten (no silent
+    # re-baselining — regenerate deliberately with `zo-adam bench
+    # --refresh`).
+    step "zo-adam bench (perf gate vs BENCH_PR2.json)"
+    ZO_BENCH_QUICK=1 cargo run --release --bin zo-adam -- bench --quick \
+        --json BENCH_PR2.json --baseline BENCH_PR2.json --tolerance 0.30
 fi
 
 step "ci.sh OK"

@@ -1,13 +1,19 @@
 //! Microbenchmark: full-precision vs error-feedback 1-bit AllReduce
-//! (paper Algorithms 3 and 2) across worker counts.
+//! (paper Algorithms 3 and 2) across worker counts, sequential vs the
+//! chunk-parallel engine path (server leg included since PR 2).
 
 use zo_adam::benchkit::Bench;
-use zo_adam::comm::allreduce::{allreduce_mean, EfAllReduce};
+use zo_adam::comm::allreduce::{allreduce_mean_eng, EfAllReduce};
+use zo_adam::coordinator::{Engine, ExecMode};
 use zo_adam::tensor::Rng;
 
 fn main() {
     println!("== bench_allreduce ==");
     let d = 1 << 20;
+    let threads = std::env::var("ZO_BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8usize);
     for &n in &[4usize, 16] {
         let mut rng = Rng::new(2);
         let bufs: Vec<Vec<f32>> = (0..n)
@@ -17,16 +23,20 @@ fn main() {
                 v
             })
             .collect();
-        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
         let mut out = vec![0.0f32; d];
-        let mut ef = EfAllReduce::new(n, d);
 
-        let mut b = Bench::new().with_elements((n * d) as u64);
-        b.run(&format!("fp_allreduce/n{n}/1M"), || {
-            allreduce_mean(&refs, &mut out);
-        });
-        b.run(&format!("ef_1bit_allreduce/n{n}/1M"), || {
-            ef.reduce(&refs, &mut out);
-        });
+        for mode in [ExecMode::Sequential, ExecMode::with_threads(threads)] {
+            let eng = Engine::new(mode);
+            let mut ef = EfAllReduce::new(n, d);
+            let mut b = Bench::new()
+                .with_elements((n * d) as u64)
+                .with_bytes((4 * d * (n + 1)) as u64);
+            b.run(&format!("fp_allreduce/n{n}/1M/{}", mode.name()), || {
+                allreduce_mean_eng(&bufs, &mut out, &eng);
+            });
+            b.run(&format!("ef_1bit_allreduce/n{n}/1M/{}", mode.name()), || {
+                ef.reduce_eng(&bufs, &mut out, &eng);
+            });
+        }
     }
 }

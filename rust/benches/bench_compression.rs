@@ -19,12 +19,18 @@ fn main() {
         let mut dense = vec![0.0f32; d];
         let label = format!("{}M", d >> 20);
 
-        let mut b = Bench::new().with_elements(d as u64);
+        // Throughput in GB/s over the f32 source stream (4 bytes per
+        // coordinate per sweep) — the number that matters on a
+        // memory-bound codec.
+        let mut b = Bench::new().with_elements(d as u64).with_bytes((4 * d) as u64);
         b.run(&format!("compress_into/{label}"), || {
             compress::compress_into(&src, &mut packed);
         });
         b.run(&format!("compress_with_error/{label}"), || {
             compress::compress_with_error_into(&src, &mut packed, &mut err);
+        });
+        b.run(&format!("compress_ef_fused/{label}"), || {
+            compress::compress_ef_into(&src, &mut err, &mut packed);
         });
         b.run(&format!("decompress_into/{label}"), || {
             compress::decompress_into(&packed, &mut dense);

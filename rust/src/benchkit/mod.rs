@@ -2,9 +2,12 @@
 //! criterion). Used by every `cargo bench` target (`harness = false`).
 //!
 //! Features: warmup, timed iterations with adaptive batching, mean /
-//! p50 / p95 / min, optional throughput (elements/s), and a compact
-//! criterion-like report. Also provides [`Table`] for printing the
-//! paper-figure reproduction tables.
+//! p50 / p95 / min, optional throughput (elements/s and GB/s), and a
+//! compact criterion-like report. Also provides [`Table`] for printing
+//! the paper-figure reproduction tables and [`perf`] for the
+//! machine-readable perf-regression reports (`zo-adam bench`).
+
+pub mod perf;
 
 use std::time::Instant;
 
@@ -18,11 +21,18 @@ pub struct BenchResult {
     pub p95_ns: f64,
     pub min_ns: f64,
     pub throughput: Option<f64>,
+    /// Bytes streamed per iteration → GB/s reporting.
+    pub bytes: Option<u64>,
 }
 
 impl BenchResult {
     pub fn mean_ms(&self) -> f64 {
         self.mean_ns / 1e6
+    }
+
+    /// Memory throughput in GB/s (bytes per iteration over mean time).
+    pub fn gb_per_s(&self) -> Option<f64> {
+        self.bytes.map(|b| b as f64 / (self.mean_ns / 1e9) / 1e9)
     }
 }
 
@@ -45,6 +55,8 @@ pub struct Bench {
     pub warmup_secs: f64,
     /// Elements processed per iteration → throughput reporting.
     pub elements: Option<u64>,
+    /// Bytes streamed per iteration → GB/s reporting.
+    pub bytes: Option<u64>,
     results: Vec<BenchResult>,
 }
 
@@ -62,12 +74,18 @@ impl Bench {
             measure_secs: if quick { 0.2 } else { 1.5 },
             warmup_secs: if quick { 0.05 } else { 0.3 },
             elements: None,
+            bytes: None,
             results: Vec::new(),
         }
     }
 
     pub fn with_elements(mut self, n: u64) -> Self {
         self.elements = Some(n);
+        self
+    }
+
+    pub fn with_bytes(mut self, n: u64) -> Self {
+        self.bytes = Some(n);
         self
     }
 
@@ -109,6 +127,7 @@ impl Bench {
             p95_ns: pct(0.95),
             min_ns: samples[0],
             throughput: self.elements.map(|e| e as f64 / (mean / 1e9)),
+            bytes: self.bytes,
         };
         self.report(&result);
         self.results.push(result.clone());
@@ -116,16 +135,21 @@ impl Bench {
     }
 
     fn report(&self, r: &BenchResult) {
-        let tp = r
-            .throughput
-            .map(|t| {
-                if t > 1e9 {
-                    format!("  [{:.2} Gelem/s]", t / 1e9)
-                } else {
-                    format!("  [{:.1} Melem/s]", t / 1e6)
-                }
-            })
-            .unwrap_or_default();
+        // Prefer the memory-bandwidth view when bytes are declared (the
+        // codec/allreduce benches); fall back to element throughput.
+        let tp = if let Some(gbps) = r.gb_per_s() {
+            format!("  [{gbps:.2} GB/s]")
+        } else {
+            r.throughput
+                .map(|t| {
+                    if t > 1e9 {
+                        format!("  [{:.2} Gelem/s]", t / 1e9)
+                    } else {
+                        format!("  [{:.1} Melem/s]", t / 1e6)
+                    }
+                })
+                .unwrap_or_default()
+        };
         println!(
             "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}  min {:>10}{tp}",
             r.name,
@@ -226,6 +250,17 @@ mod tests {
         assert!(r.min_ns <= r.mean_ns * 1.5);
         assert!(r.throughput.unwrap() > 0.0);
         assert!(acc > 0 || acc == 0); // keep acc alive
+    }
+
+    #[test]
+    fn bytes_give_gbps() {
+        std::env::set_var("ZO_BENCH_QUICK", "1");
+        let mut b = Bench::new().with_bytes(1 << 20);
+        let r = b.run("spin", || {
+            std::hint::black_box(42u64);
+        });
+        assert!(r.gb_per_s().unwrap() > 0.0);
+        assert_eq!(r.bytes, Some(1 << 20));
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Machine-readable perf reports + the regression gate behind
+//! `zo-adam bench` and the `ci.sh` bench step.
+//!
+//! A [`PerfReport`] collects [`super::BenchResult`]s plus free-form
+//! named metrics (steps/s, wire bytes, speedups), serializes to JSON
+//! (`BENCH_PR2.json`), and can be compared against a previously
+//! committed baseline: entries whose mean time regressed more than a
+//! tolerance fail the gate. A baseline written with `"bootstrap": true`
+//! (the state committed from a toolchain-less container) records no
+//! numbers and disables the gate until the first real run replaces it.
+
+use super::BenchResult;
+use crate::util::json::Json;
+
+/// One benchmark entry of a report.
+#[derive(Debug, Clone)]
+pub struct PerfEntry {
+    pub name: String,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub min_ns: f64,
+    /// Elements per second, when the bench declared elements.
+    pub elem_per_s: Option<f64>,
+    /// Memory throughput in GB/s, when the bench declared bytes.
+    pub gb_per_s: Option<f64>,
+}
+
+/// A full perf report: environment metadata, bench entries, and
+/// free-form scalar metrics.
+#[derive(Debug, Clone, Default)]
+pub struct PerfReport {
+    pub meta: Vec<(String, Json)>,
+    pub entries: Vec<PerfEntry>,
+    pub metrics: Vec<(String, f64)>,
+    /// True for a committed placeholder with no measured numbers.
+    pub bootstrap: bool,
+}
+
+impl PerfReport {
+    pub fn new() -> Self {
+        PerfReport::default()
+    }
+
+    pub fn meta_str(&mut self, key: &str, value: &str) {
+        self.meta.push((key.to_string(), Json::Str(value.to_string())));
+    }
+
+    pub fn meta_num(&mut self, key: &str, value: f64) {
+        self.meta.push((key.to_string(), Json::Num(value)));
+    }
+
+    /// Record a bench result as a report entry.
+    pub fn push(&mut self, r: &BenchResult) {
+        self.entries.push(PerfEntry {
+            name: r.name.clone(),
+            mean_ns: r.mean_ns,
+            p50_ns: r.p50_ns,
+            min_ns: r.min_ns,
+            elem_per_s: r.throughput,
+            gb_per_s: r.gb_per_s(),
+        });
+    }
+
+    /// Record a free-form scalar metric (steps/s, speedup, bytes…).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&PerfEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::Obj(Vec::new());
+        root.push("bootstrap", Json::Bool(self.bootstrap));
+        root.push("meta", Json::Obj(self.meta.clone()));
+        let entries = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut o = Json::Obj(Vec::new());
+                o.push("name", Json::Str(e.name.clone()));
+                o.push("mean_ns", Json::Num(e.mean_ns));
+                o.push("p50_ns", Json::Num(e.p50_ns));
+                o.push("min_ns", Json::Num(e.min_ns));
+                if let Some(t) = e.elem_per_s {
+                    o.push("elem_per_s", Json::Num(t));
+                }
+                if let Some(g) = e.gb_per_s {
+                    o.push("gb_per_s", Json::Num(g));
+                }
+                o
+            })
+            .collect();
+        root.push("entries", Json::Arr(entries));
+        root.push(
+            "metrics",
+            Json::Obj(self.metrics.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
+        );
+        root
+    }
+
+    pub fn from_json(v: &Json) -> Result<PerfReport, String> {
+        let mut report = PerfReport::new();
+        report.bootstrap = v.get("bootstrap").and_then(|b| b.as_bool()).unwrap_or(false);
+        if let Some(meta) = v.get("meta").and_then(|m| m.as_obj()) {
+            report.meta = meta.to_vec();
+        }
+        for e in v.get("entries").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+            let name = e
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or("entry missing 'name'")?
+                .to_string();
+            let num = |key: &str| e.get(key).and_then(|n| n.as_f64());
+            report.entries.push(PerfEntry {
+                mean_ns: num("mean_ns").ok_or_else(|| format!("entry '{name}': no mean_ns"))?,
+                p50_ns: num("p50_ns").unwrap_or(0.0),
+                min_ns: num("min_ns").unwrap_or(0.0),
+                elem_per_s: num("elem_per_s"),
+                gb_per_s: num("gb_per_s"),
+                name,
+            });
+        }
+        if let Some(metrics) = v.get("metrics").and_then(|m| m.as_obj()) {
+            for (k, mv) in metrics {
+                if let Some(x) = mv.as_f64() {
+                    report.metrics.push((k.clone(), x));
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_pretty() + "\n")
+    }
+
+    pub fn load(path: &str) -> Result<PerfReport, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let v = Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?;
+        PerfReport::from_json(&v)
+    }
+
+    /// The regression gate: compare this (fresh) report against a
+    /// baseline. Every baseline entry whose name starts with `prefix`
+    /// and also exists here must satisfy
+    /// `fresh.p50_ns <= baseline.p50_ns * (1 + tolerance)` — the gate
+    /// runs on medians, which are far more stable than means on shared
+    /// CI hosts. Returns the human-readable violations; empty = gate
+    /// passed.
+    pub fn regressions_vs(
+        &self,
+        baseline: &PerfReport,
+        prefix: &str,
+        tolerance: f64,
+    ) -> Vec<String> {
+        let mut out = Vec::new();
+        if baseline.bootstrap {
+            return out;
+        }
+        for base in baseline.entries.iter().filter(|e| e.name.starts_with(prefix)) {
+            let Some(fresh) = self.entry(&base.name) else { continue };
+            let limit = base.p50_ns * (1.0 + tolerance);
+            if fresh.p50_ns > limit {
+                out.push(format!(
+                    "{}: p50 {:.0} ns vs baseline {:.0} ns (+{:.1}% > +{:.0}% allowed)",
+                    base.name,
+                    fresh.p50_ns,
+                    base.p50_ns,
+                    (fresh.p50_ns / base.p50_ns - 1.0) * 100.0,
+                    tolerance * 100.0,
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &str, p50: f64) -> PerfEntry {
+        PerfEntry {
+            name: name.to_string(),
+            mean_ns: p50,
+            p50_ns: p50,
+            min_ns: p50 * 0.9,
+            elem_per_s: Some(1e9),
+            gb_per_s: None,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_entries_and_metrics() {
+        let mut r = PerfReport::new();
+        r.meta_str("host", "ci");
+        r.meta_num("d", 1048576.0);
+        r.entries.push(entry("step/01adam/seq", 1000.0));
+        r.metric("run/steps_per_s", 42.5);
+        let j = r.to_json();
+        let back = PerfReport::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert!(!back.bootstrap);
+        assert_eq!(back.entries.len(), 1);
+        let e = back.entry("step/01adam/seq").unwrap();
+        assert_eq!(e.p50_ns, 1000.0);
+        assert_eq!(e.elem_per_s, Some(1e9));
+        assert_eq!(back.metrics, vec![("run/steps_per_s".to_string(), 42.5)]);
+    }
+
+    #[test]
+    fn gate_flags_only_regressions_over_tolerance() {
+        let mut base = PerfReport::new();
+        base.entries.push(entry("step/a", 1000.0));
+        base.entries.push(entry("step/b", 1000.0));
+        base.entries.push(entry("codec/c", 1000.0));
+        let mut fresh = PerfReport::new();
+        fresh.entries.push(entry("step/a", 1200.0)); // +20% — inside 30%
+        fresh.entries.push(entry("step/b", 1500.0)); // +50% — violation
+        fresh.entries.push(entry("codec/c", 9000.0)); // wrong prefix
+        let viol = fresh.regressions_vs(&base, "step/", 0.30);
+        assert_eq!(viol.len(), 1);
+        assert!(viol[0].starts_with("step/b"));
+    }
+
+    #[test]
+    fn bootstrap_baseline_disables_gate() {
+        let mut base = PerfReport::new();
+        base.bootstrap = true;
+        base.entries.push(entry("step/a", 1.0));
+        let mut fresh = PerfReport::new();
+        fresh.entries.push(entry("step/a", 1e9));
+        assert!(fresh.regressions_vs(&base, "step/", 0.3).is_empty());
+    }
+
+    #[test]
+    fn missing_and_extra_entries_are_ignored() {
+        let mut base = PerfReport::new();
+        base.entries.push(entry("step/gone", 1.0));
+        let mut fresh = PerfReport::new();
+        fresh.entries.push(entry("step/new", 1e9));
+        assert!(fresh.regressions_vs(&base, "step/", 0.3).is_empty());
+    }
+}

@@ -6,15 +6,52 @@
 //! on a real fabric are reported via [`WireStats`] and priced by
 //! `comm::network`.
 //!
-//! Both reductions are engine-aware (DESIGN.md §3): the `_eng` variants
-//! parallelize only the scheduling-independent legs — the per-worker
-//! compress/error-feedback phase and per-coordinate chunks of the mean
-//! — while every cross-worker accumulation stays on the coordinator
-//! thread in fixed worker order. `ExecMode::Threaded` is therefore
-//! bitwise identical to `ExecMode::Sequential`.
+//! Both reductions are engine-aware (DESIGN.md §3 and §Hot-path): the
+//! `_eng` variants parallelize the per-worker compress/error-feedback
+//! phase *and* the server leg — the latter as fixed-size coordinate
+//! chunks in which workers accumulate in index order and whose f64
+//! ‖·‖₁ partials are combined in chunk order on the coordinator thread.
+//! The chunk structure is identical under every pool width, so
+//! `ExecMode::Threaded` stays bitwise identical to
+//! `ExecMode::Sequential`.
 
 use super::compress::{self, OneBit};
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{Blocks, Engine};
+
+/// Fixed coordinate-chunk size for the EF server leg (a multiple of 64
+/// so packed sign words never straddle a chunk). Mode-independent by
+/// design: sequential and threaded runs visit the *same* chunks in the
+/// same per-chunk order, which is what keeps the chunked f64 ‖·‖₁
+/// reduction bitwise reproducible (DESIGN.md §Hot-path).
+pub const SERVER_CHUNK: usize = 4096;
+
+/// Read-only access to the n per-worker upload buffers of one round.
+///
+/// Exists so hot paths can hand the reductions their natural storage
+/// (`&[Vec<f32>]` gradients, an optimizer's replica buffers) without
+/// materializing a `Vec<&[f32]>` per step.
+pub trait WorkerBufs: Sync {
+    fn count(&self) -> usize;
+    fn buf(&self, w: usize) -> &[f32];
+}
+
+impl<V: AsRef<[f32]> + Sync> WorkerBufs for [V] {
+    fn count(&self) -> usize {
+        self.len()
+    }
+    fn buf(&self, w: usize) -> &[f32] {
+        self[w].as_ref()
+    }
+}
+
+impl<V: AsRef<[f32]> + Sync> WorkerBufs for Vec<V> {
+    fn count(&self) -> usize {
+        self.len()
+    }
+    fn buf(&self, w: usize) -> &[f32] {
+        self[w].as_ref()
+    }
+}
 
 /// Bytes a single round moved per direction, per worker.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -37,31 +74,33 @@ impl WireStats {
 
 /// Algorithm 3: out = (1/n) Σ bufs[i]; every element fp16 on the wire
 /// (the paper trains with fp16 communication enabled for all methods).
-pub fn allreduce_mean(bufs: &[&[f32]], out: &mut [f32]) -> WireStats {
+pub fn allreduce_mean<B: WorkerBufs + ?Sized>(bufs: &B, out: &mut [f32]) -> WireStats {
     allreduce_mean_eng(bufs, out, &Engine::sequential())
 }
 
 /// Engine-aware Algorithm 3: coordinate chunks run in parallel; inside
 /// each chunk workers accumulate in index order, so every coordinate
-/// sees the exact additions of the sequential path.
-pub fn allreduce_mean_eng(bufs: &[&[f32]], out: &mut [f32], eng: &Engine) -> WireStats {
-    let n = bufs.len();
+/// sees the exact additions of the sequential path. Allocation-free.
+pub fn allreduce_mean_eng<B: WorkerBufs + ?Sized>(
+    bufs: &B,
+    out: &mut [f32],
+    eng: &Engine,
+) -> WireStats {
+    let n = bufs.count();
     assert!(n > 0, "allreduce over zero workers");
     let d = out.len();
-    for buf in bufs {
-        assert_eq!(buf.len(), d);
+    for i in 0..n {
+        assert_eq!(bufs.buf(i).len(), d);
     }
     let inv = 1.0 / n as f32;
     let chunk = eng.chunk_len(d);
-    let items: Vec<&mut [f32]> = out.chunks_mut(chunk).collect();
-    eng.run(items, |ci, out_chunk| {
-        let off = ci * chunk;
-        let len = out_chunk.len();
-        out_chunk.copy_from_slice(&bufs[0][off..off + len]);
-        for buf in &bufs[1..] {
-            crate::tensor::axpy(out_chunk, 1.0, &buf[off..off + len]);
+    eng.run_split(d, chunk, &mut *out, |_ci, off, oc: &mut [f32]| {
+        let len = oc.len();
+        oc.copy_from_slice(&bufs.buf(0)[off..off + len]);
+        for i in 1..n {
+            crate::tensor::axpy(oc, 1.0, &bufs.buf(i)[off..off + len]);
         }
-        crate::tensor::scale(out_chunk, inv);
+        crate::tensor::scale(oc, inv);
     });
     WireStats {
         up_bytes: (d * 2) as u64,   // fp16 per element
@@ -86,7 +125,8 @@ struct Lane {
 /// across every call for the rest of training (Appendix A).
 ///
 /// All scratch is pre-allocated at construction: the hot path performs
-/// zero heap allocation (beyond the engine's per-region bookkeeping).
+/// zero heap allocation (beyond thread-spawn bookkeeping in
+/// `ExecMode::Threaded` — see DESIGN.md §Hot-path).
 pub struct EfAllReduce {
     n: usize,
     d: usize,
@@ -95,6 +135,9 @@ pub struct EfAllReduce {
     // server scratch
     sum: Vec<f32>,
     packed: OneBit,
+    /// Per-chunk f64 ‖·‖₁ partials of the server reduction, combined in
+    /// chunk order (the fixed-chunk determinism contract).
+    chunk_l1: Vec<f64>,
 }
 
 impl EfAllReduce {
@@ -108,6 +151,7 @@ impl EfAllReduce {
             server_err: vec![0.0; d],
             sum: vec![0.0; d],
             packed: OneBit::zeros(d),
+            chunk_l1: vec![0.0; d.div_ceil(SERVER_CHUNK)],
         }
     }
 
@@ -121,7 +165,7 @@ impl EfAllReduce {
     }
 
     /// One EF-1bit round on the coordinator thread (reference path).
-    pub fn reduce(&mut self, bufs: &[&[f32]], out: &mut [f32]) -> WireStats {
+    pub fn reduce<B: WorkerBufs + ?Sized>(&mut self, bufs: &B, out: &mut [f32]) -> WireStats {
         self.reduce_eng(bufs, out, &Engine::sequential())
     }
 
@@ -129,66 +173,96 @@ impl EfAllReduce {
     /// every worker observes (they all see identical bytes).
     ///
     /// Phase 1 (per worker, engine-parallel): ẑᵢ = C[zᵢ + δᵢ] and
-    /// δᵢ ← zᵢ + δᵢ − ẑᵢ — each lane touches only its own state.
-    /// Phase 2 (coordinator thread, fixed worker order): the server mean
-    /// Σ ẑᵢ/n, its error feedback, and the broadcast compression — the
-    /// ordered reduction that pins threaded results to sequential ones.
-    pub fn reduce_eng(&mut self, bufs: &[&[f32]], out: &mut [f32], eng: &Engine) -> WireStats {
-        assert_eq!(bufs.len(), self.n, "worker count changed");
+    /// δᵢ ← zᵢ + δᵢ − ẑᵢ — each lane touches only its own state
+    /// (the fused kernel `compress::compress_ef_into`).
+    ///
+    /// Phase 2 (chunk-parallel over coordinates, DESIGN.md §Hot-path):
+    /// z̄ = C[(1/n) Σ ẑᵢ + δ̄]; δ̄ ← … − z̄; broadcast z̄. Every
+    /// [`SERVER_CHUNK`]-sized coordinate chunk accumulates workers in
+    /// fixed index order and emits an f64 ‖·‖₁ partial; the partials are
+    /// combined in chunk order on the coordinator thread. Because the
+    /// chunk structure is mode-independent, threaded results stay
+    /// bitwise identical to sequential ones while the formerly serial
+    /// server reduction, compression and decompress fan-out all run on
+    /// the pool. The whole round performs no heap allocation.
+    pub fn reduce_eng<B: WorkerBufs + ?Sized>(
+        &mut self,
+        bufs: &B,
+        out: &mut [f32],
+        eng: &Engine,
+    ) -> WireStats {
+        assert_eq!(bufs.count(), self.n, "worker count changed");
         assert_eq!(out.len(), self.d);
         let d = self.d;
+        let n = self.n;
 
-        // Phase 1: fused two-pass worker leg (no shifted-scratch
-        // materialization; see EXPERIMENTS.md §Perf):
-        //   pass 1: ‖z+δ‖₁ + sign bits, computing s = z + δ inline;
-        //   pass 2: δ ← s − (±scale), one sweep.
-        let lanes: Vec<&mut Lane> = self.lanes.iter_mut().collect();
-        eng.run(lanes, |w, lane| {
-            let buf = bufs[w];
+        // Phase 1: fused per-worker compress + error update.
+        eng.run_mut(&mut self.lanes[..], |w, lane| {
+            let buf = bufs.buf(w);
             debug_assert_eq!(buf.len(), d);
-            let Lane { err, packed } = lane;
-            packed.len = d;
-            let mut l1 = 0.0f64;
-            for ((word_slot, bchunk), echunk) in
-                packed.signs.iter_mut().zip(buf.chunks(64)).zip(err.chunks(64))
-            {
-                let mut word = 0u64;
-                let mut csum = 0.0f32;
-                for (b, (&z, &e)) in bchunk.iter().zip(echunk.iter()).enumerate() {
-                    let s = z + e;
-                    csum += s.abs();
-                    word |= ((s >= 0.0) as u64) << b;
-                }
-                l1 += csum as f64;
-                *word_slot = word;
-            }
-            packed.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
-            let s_bits = packed.scale.to_bits();
-            for ((&word, bchunk), echunk) in
-                packed.signs.iter().zip(buf.chunks(64)).zip(err.chunks_mut(64))
-            {
-                for (b, (&z, e)) in bchunk.iter().zip(echunk.iter_mut()).enumerate() {
-                    let neg = (!(word >> b) & 1) as u32;
-                    *e = (z + *e) - f32::from_bits(s_bits | (neg << 31));
-                }
-            }
+            compress::compress_ef_into(buf, &mut lane.err, &mut lane.packed);
         });
 
-        // Phase 2: z̄ = C[(1/n) Σ ẑᵢ + δ̄]; δ̄ ← ... − z̄; broadcast z̄.
-        // Workers accumulate in index order — same additions, same order
-        // as the fully sequential implementation.
-        self.sum.iter_mut().for_each(|v| *v = 0.0);
-        let inv_n = 1.0 / self.n as f32;
-        for lane in &self.lanes {
-            compress::accumulate_into(&lane.packed, inv_n, &mut self.sum);
+        // Phase 2a: per chunk — ordered worker accumulation, + δ̄,
+        // sign-pack, f64 ‖·‖₁ partial. One streamed pass per chunk.
+        let EfAllReduce { lanes, server_err, sum, packed, chunk_l1, .. } = self;
+        let lanes: &[Lane] = lanes;
+        packed.len = d;
+        let inv_n = 1.0 / n as f32;
+        {
+            let err_ro: &[f32] = server_err;
+            eng.run_split(
+                d,
+                SERVER_CHUNK,
+                (
+                    &mut sum[..],
+                    Blocks::new(&mut packed.signs[..], 64),
+                    Blocks::new(&mut chunk_l1[..], SERVER_CHUNK),
+                ),
+                |_ci, off, (s, signs, part)| {
+                    s.iter_mut().for_each(|v| *v = 0.0);
+                    let w0 = off / 64;
+                    let words = signs.data;
+                    for lane in lanes {
+                        compress::accumulate_words(
+                            &lane.packed.signs[w0..w0 + words.len()],
+                            lane.packed.scale,
+                            inv_n,
+                            s,
+                        );
+                    }
+                    part.data[0] =
+                        compress::fold_err_signs_l1(s, &err_ro[off..off + s.len()], words);
+                },
+            );
         }
-        for (s, e) in self.sum.iter_mut().zip(&self.server_err) {
-            *s += e;
-        }
-        compress::compress_with_error_into(&self.sum, &mut self.packed, &mut self.server_err);
-        compress::decompress_into(&self.packed, out);
 
-        let wire = compress::wire_bytes(self.d) as u64;
+        // Combine the ‖·‖₁ partials in chunk order (fixed association,
+        // independent of the pool width).
+        let l1: f64 = chunk_l1.iter().sum();
+        packed.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
+
+        // Phase 2b: per chunk — δ̄ ← s − z̄ and the dense broadcast, one
+        // fused stream.
+        let scale_bits = packed.scale.to_bits();
+        let s_ro: &[f32] = sum;
+        let signs_ro: &[u64] = &packed.signs;
+        eng.run_split(
+            d,
+            SERVER_CHUNK,
+            (&mut server_err[..], &mut *out),
+            |_ci, off, (e, o)| {
+                compress::ef_finish_words(
+                    &s_ro[off..off + o.len()],
+                    &signs_ro[off / 64..],
+                    scale_bits,
+                    e,
+                    o,
+                );
+            },
+        );
+
+        let wire = compress::wire_bytes(d) as u64;
         WireStats {
             up_bytes: wire,
             down_bytes: wire,
@@ -304,6 +378,33 @@ mod tests {
                 }
             }
             assert_eq!(seq.server_err, thr.server_err);
+        }
+    }
+
+    #[test]
+    fn ef_threaded_is_bitwise_sequential_across_server_chunks() {
+        // d spans several SERVER_CHUNKs (off the chunk and word
+        // boundaries), so the chunked f64 ‖·‖₁ combine and the ranged
+        // kernels are all exercised across block splits.
+        let n = 3;
+        let d = 3 * SERVER_CHUNK + 777;
+        let mut seq = EfAllReduce::new(n, d);
+        let mut thr = EfAllReduce::new(n, d);
+        let eng = Engine::new(ExecMode::Threaded(5));
+        let mut out_s = vec![0.0f32; d];
+        let mut out_t = vec![0.0f32; d];
+        for round in 0..5 {
+            let bufs = rand_bufs(n, d, 9100 + round);
+            let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            seq.reduce(&refs, &mut out_s);
+            thr.reduce_eng(&refs, &mut out_t, &eng);
+            for j in 0..d {
+                assert_eq!(out_s[j].to_bits(), out_t[j].to_bits(), "round {round} j={j}");
+            }
+            assert_eq!(seq.server_err, thr.server_err, "round {round}");
+            for w in 0..n {
+                assert_eq!(seq.worker_err(w), thr.worker_err(w), "round {round} w={w}");
+            }
         }
     }
 

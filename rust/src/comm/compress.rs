@@ -36,7 +36,8 @@ pub fn wire_bytes(d: usize) -> usize {
 pub fn compress_into(src: &[f32], dst: &mut OneBit) {
     let d = src.len();
     dst.len = d;
-    dst.signs.clear();
+    // resize only (no clear): every word is overwritten below, and
+    // skipping the memset keeps one redundant stream off the hot path.
     dst.signs.resize(d.div_ceil(64), 0);
     // ‖·‖₁ accumulates in f32 within each 64-element chunk (exact
     // enough) and in f64 across chunks (no drift at d ~ 10^8).
@@ -84,11 +85,26 @@ pub fn decompress_into(src: &OneBit, out: &mut [f32]) {
 /// Word-hoisted + branchless like [`decompress_into`].
 pub fn accumulate_into(src: &OneBit, weight: f32, out: &mut [f32]) {
     assert_eq!(out.len(), src.len);
-    let s = src.scale * weight;
+    accumulate_words(&src.signs, src.scale, weight, out);
+}
+
+/// Range form of [`accumulate_into`]: `out[i] += ±(scale·weight)` with
+/// signs drawn from `signs[0..ceil(out.len()/64)]`. `out` may be any
+/// word-aligned sub-range of the logical tensor (the chunk-parallel
+/// server leg slices both the sign words and the dense target).
+///
+/// Bitwise identical to the naive `decompress` + scalar multiply-add:
+/// IEEE-754 products have sign = XOR of operand signs and a magnitude
+/// independent of them, so hoisting `|scale·weight|` and XOR-ing the
+/// sign bit per coordinate reproduces `out[i] + weight·(±scale)` bit
+/// for bit (including ±0 scales and negative weights) — pinned by
+/// `tests/kernel_parity.rs`.
+pub fn accumulate_words(signs: &[u64], scale: f32, weight: f32, out: &mut [f32]) {
+    let s = scale * weight;
     let s_bits = s.abs().to_bits();
     let base_sign = ((s.to_bits() >> 31) & 1) as u32;
-    for (w, chunk) in out.chunks_mut(64).enumerate() {
-        let word = src.signs[w];
+    for (word, chunk) in signs.iter().zip(out.chunks_mut(64)) {
+        let word = *word;
         for (b, o) in chunk.iter_mut().enumerate() {
             let neg = ((!(word >> b) & 1) as u32) ^ base_sign;
             *o += f32::from_bits(s_bits | (neg << 31));
@@ -109,6 +125,96 @@ pub fn compress_with_error_into(src: &[f32], dst: &mut OneBit, err: &mut [f32]) 
         for (b, (e, v)) in echunk.iter_mut().zip(vchunk).enumerate() {
             let neg = (!(word >> b) & 1) as u32;
             *e = v - f32::from_bits(s_bits | (neg << 31));
+        }
+    }
+}
+
+/// Fused worker-lane kernel: ẑ = C[z + δ] packed into `dst` and
+/// δ ← (z + δ) − ẑ, in two word-blocked streams.
+///
+/// Pass 1 computes s = z + δ inline, stashes it into `err`, packs the
+/// sign bits and accumulates ‖s‖₁ (f32 within each 64-block, f64 across
+/// blocks); pass 2 finishes δ ← s − (±scale) touching only `err`. The
+/// stash is exact (an f32 store), so the result is bitwise identical to
+/// the unfused `compress_into` + re-read error update while streaming
+/// one fewer array through the cache on the second pass.
+pub fn compress_ef_into(z: &[f32], err: &mut [f32], dst: &mut OneBit) {
+    let d = z.len();
+    assert_eq!(err.len(), d);
+    dst.len = d;
+    // resize only (no clear): the pack loop writes every word slot.
+    dst.signs.resize(d.div_ceil(64), 0);
+    let mut l1 = 0.0f64;
+    for ((word_slot, zc), ec) in dst.signs.iter_mut().zip(z.chunks(64)).zip(err.chunks_mut(64)) {
+        let mut word = 0u64;
+        let mut csum = 0.0f32;
+        for (b, (&zi, e)) in zc.iter().zip(ec.iter_mut()).enumerate() {
+            let s = zi + *e;
+            *e = s; // stash; finished in pass 2 once the scale is known
+            csum += s.abs();
+            word |= ((s >= 0.0) as u64) << b;
+        }
+        l1 += csum as f64;
+        *word_slot = word;
+    }
+    dst.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
+    let s_bits = dst.scale.to_bits();
+    for (word, ec) in dst.signs.iter().zip(err.chunks_mut(64)) {
+        let word = *word;
+        for (b, e) in ec.iter_mut().enumerate() {
+            let neg = (!(word >> b) & 1) as u32;
+            *e -= f32::from_bits(s_bits | (neg << 31));
+        }
+    }
+}
+
+/// Fused server pass 1 (per coordinate chunk): s[i] += err[i], pack the
+/// sign bits of the result into `signs_out`, and return the f64 ‖s‖₁
+/// partial for this range (f32 within each 64-block, f64 across blocks
+/// — the same association `compress_into` uses, so a single-chunk call
+/// over a whole tensor reproduces its scale exactly). `signs_out` must
+/// hold exactly `ceil(s.len()/64)` words and `s` must start on a
+/// 64-coordinate boundary of the logical tensor.
+pub fn fold_err_signs_l1(s: &mut [f32], err: &[f32], signs_out: &mut [u64]) -> f64 {
+    debug_assert_eq!(s.len(), err.len());
+    debug_assert_eq!(signs_out.len(), s.len().div_ceil(64));
+    let mut l1 = 0.0f64;
+    for ((word_slot, sc), ec) in signs_out.iter_mut().zip(s.chunks_mut(64)).zip(err.chunks(64)) {
+        let mut word = 0u64;
+        let mut csum = 0.0f32;
+        for (b, (si, &e)) in sc.iter_mut().zip(ec).enumerate() {
+            let v = *si + e;
+            *si = v;
+            csum += v.abs();
+            word |= ((v >= 0.0) as u64) << b;
+        }
+        l1 += csum as f64;
+        *word_slot = word;
+    }
+    l1
+}
+
+/// Fused server pass 2 (per coordinate chunk): with the broadcast value
+/// c[i] = ±scale read from the packed signs, write the new server error
+/// err[i] = s[i] − c[i] and the dense broadcast out[i] = c[i] in one
+/// stream. `scale_bits` is `scale.to_bits()` (scale ≥ 0 by
+/// construction); `signs` may extend past the range (extra words are
+/// ignored).
+pub fn ef_finish_words(s: &[f32], signs: &[u64], scale_bits: u32, err: &mut [f32], out: &mut [f32]) {
+    debug_assert_eq!(s.len(), err.len());
+    debug_assert_eq!(s.len(), out.len());
+    for (((word, sc), ec), oc) in signs
+        .iter()
+        .zip(s.chunks(64))
+        .zip(err.chunks_mut(64))
+        .zip(out.chunks_mut(64))
+    {
+        let word = *word;
+        for (b, ((&v, e), o)) in sc.iter().zip(ec.iter_mut()).zip(oc.iter_mut()).enumerate() {
+            let neg = (!(word >> b) & 1) as u32;
+            let c = f32::from_bits(scale_bits | (neg << 31));
+            *e = v - c;
+            *o = c;
         }
     }
 }
@@ -277,5 +383,79 @@ mod tests {
         let mut out = vec![0.0f32];
         decompress_into(&c, &mut out);
         assert_eq!(out[0], -2.0);
+    }
+
+    #[test]
+    fn fused_ef_matches_unfused_bitwise() {
+        // compress_ef_into(z, err) must equal compress_into(z + err)
+        // plus the separate error update, bit for bit.
+        let mut rng = Rng::new(11);
+        for &d in &[1usize, 63, 64, 65, 257, 1000] {
+            let mut z = vec![0.0f32; d];
+            let mut err = vec![0.0f32; d];
+            rng.fill_normal(&mut z, 1.0);
+            rng.fill_normal(&mut err, 0.3);
+
+            // reference: materialize s = z + err, two-pass codec
+            let s: Vec<f32> = z.iter().zip(&err).map(|(a, b)| a + b).collect();
+            let mut ref_packed = OneBit::zeros(d);
+            let mut ref_err = vec![0.0f32; d];
+            compress_with_error_into(&s, &mut ref_packed, &mut ref_err);
+
+            let mut packed = OneBit::zeros(d);
+            compress_ef_into(&z, &mut err, &mut packed);
+            assert_eq!(packed.scale.to_bits(), ref_packed.scale.to_bits(), "d={d}");
+            assert_eq!(packed.signs, ref_packed.signs, "d={d}");
+            for j in 0..d {
+                assert_eq!(err[j].to_bits(), ref_err[j].to_bits(), "d={d} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn fold_matches_compress_scale_on_whole_tensor() {
+        // A single-range fold reproduces compress_into's signs and the
+        // exact f64 L1 chain (same 64-block association).
+        let mut rng = Rng::new(12);
+        for &d in &[5usize, 64, 100, 777] {
+            let mut base = vec![0.0f32; d];
+            let mut err = vec![0.0f32; d];
+            rng.fill_normal(&mut base, 1.0);
+            rng.fill_normal(&mut err, 1.0);
+            let summed: Vec<f32> = base.iter().zip(&err).map(|(a, b)| a + b).collect();
+            let ref_packed = compress(&summed);
+
+            let mut s = base.clone();
+            let mut words = vec![0u64; d.div_ceil(64)];
+            let l1 = fold_err_signs_l1(&mut s, &err, &mut words);
+            assert_eq!(words, ref_packed.signs, "d={d}");
+            let scale = (l1 / d as f64) as f32;
+            assert_eq!(scale.to_bits(), ref_packed.scale.to_bits(), "d={d}");
+            for j in 0..d {
+                assert_eq!(s[j].to_bits(), summed[j].to_bits(), "d={d} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn ef_finish_matches_decompress_plus_error() {
+        let mut rng = Rng::new(13);
+        for &d in &[3usize, 64, 129, 500] {
+            let mut s = vec![0.0f32; d];
+            rng.fill_normal(&mut s, 1.5);
+            let packed = compress(&s);
+
+            let mut ref_out = vec![0.0f32; d];
+            decompress_into(&packed, &mut ref_out);
+            let ref_err: Vec<f32> = s.iter().zip(&ref_out).map(|(a, b)| a - b).collect();
+
+            let mut err = vec![0.0f32; d];
+            let mut out = vec![0.0f32; d];
+            ef_finish_words(&s, &packed.signs, packed.scale.to_bits(), &mut err, &mut out);
+            for j in 0..d {
+                assert_eq!(out[j].to_bits(), ref_out[j].to_bits(), "d={d} j={j}");
+                assert_eq!(err[j].to_bits(), ref_err[j].to_bits(), "d={d} j={j}");
+            }
+        }
     }
 }

@@ -7,7 +7,7 @@ pub mod compress;
 pub mod network;
 pub mod volume;
 
-pub use allreduce::{allreduce_mean, EfAllReduce, WireStats};
+pub use allreduce::{allreduce_mean, EfAllReduce, WireStats, WorkerBufs, SERVER_CHUNK};
 pub use compress::{compress, decompress_into, wire_bytes, OneBit};
 pub use network::{ComputeModel, Fabric, ETHERNET, INFINIBAND};
 pub use volume::VolumeLedger;

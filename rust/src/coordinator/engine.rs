@@ -88,54 +88,6 @@ impl Engine {
         self.threads > 1
     }
 
-    /// Run `f(index, item)` once for every item.
-    ///
-    /// Items are split into contiguous index blocks, one per pool
-    /// thread. `f` consumes each item by value — pass `&mut` views to
-    /// mutate caller state — and may capture shared state immutably
-    /// (`F: Sync`). Because each item is processed exactly once by a
-    /// single thread running the same body as the sequential loop, the
-    /// observable effects are bitwise identical in both modes.
-    pub fn run<T, F>(&self, items: Vec<T>, f: F)
-    where
-        T: Send,
-        F: Fn(usize, T) + Sync,
-    {
-        let n = items.len();
-        if self.threads <= 1 || n <= 1 {
-            for (i, item) in items.into_iter().enumerate() {
-                f(i, item);
-            }
-            return;
-        }
-        let k = self.threads.min(n);
-        let per = n.div_ceil(k);
-        let mut blocks: Vec<Vec<(usize, T)>> = Vec::with_capacity(k);
-        for _ in 0..k {
-            blocks.push(Vec::with_capacity(per));
-        }
-        for (i, item) in items.into_iter().enumerate() {
-            blocks[(i / per).min(k - 1)].push((i, item));
-        }
-        // The calling thread works the first block itself: k-1 spawns
-        // per region, and the coordinator is never idle while the pool
-        // runs. Scheduling cannot change results (items are disjoint).
-        let first = blocks.remove(0);
-        let f = &f;
-        std::thread::scope(|scope| {
-            for block in blocks {
-                scope.spawn(move || {
-                    for (i, item) in block {
-                        f(i, item);
-                    }
-                });
-            }
-            for (i, item) in first {
-                f(i, item);
-            }
-        });
-    }
-
     /// Chunk length for coordinate-parallel loops over `len` elements:
     /// one contiguous chunk per thread, floored so tiny vectors stay in
     /// a single chunk. Only valid for loops whose per-coordinate results
@@ -145,6 +97,189 @@ impl Engine {
             return len.max(1);
         }
         len.div_ceil(self.threads).max(4096)
+    }
+
+    /// Run `f(index, &mut item)` once per item of a slice, fanning
+    /// contiguous index blocks across the pool. Zero allocation: the
+    /// blocks are carved with `split_at_mut`, never collected into
+    /// per-region `Vec`s. Per-item effects are bitwise identical in
+    /// both modes (same body, disjoint items).
+    pub fn run_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let per = n.div_ceil(self.threads.min(n));
+        self.run_split(n, per, items, |_ci, off, block: &mut [T]| {
+            for (j, item) in block.iter_mut().enumerate() {
+                f(off + j, item);
+            }
+        });
+    }
+
+    /// Chunk-parallel loop over `len` coordinates in fixed `chunk`-sized
+    /// pieces. `parts` is a [`Split`] bundle of parallel arrays (up to a
+    /// 3-tuple of `&mut [T]` / `&[T]` / [`Blocks`]); each call receives
+    /// `(chunk_index, coord_offset, chunk_parts)`.
+    ///
+    /// Contract (DESIGN.md §Hot-path): the chunk structure — piece
+    /// boundaries, visit bodies, and chunk indices — is **identical in
+    /// both execution modes**; only the assignment of chunks to threads
+    /// differs. Per-chunk outputs (e.g. the EF server's f64 ‖·‖₁
+    /// partials, written through a [`Blocks`] part) can therefore be
+    /// combined in chunk-index order by the caller with bitwise-equal
+    /// results under any pool width. Zero allocation: blocks are carved
+    /// by consuming `split_parts`, never collected.
+    pub fn run_split<S, F>(&self, len: usize, chunk: usize, parts: S, f: F)
+    where
+        S: Split,
+        F: Fn(usize, usize, S) + Sync,
+    {
+        let chunk = chunk.max(1);
+        if len == 0 {
+            return;
+        }
+        let n_chunks = len.div_ceil(chunk);
+        if self.threads <= 1 || n_chunks <= 1 {
+            run_split_block(0, 0, len, chunk, parts, &f);
+            return;
+        }
+        let k = self.threads.min(n_chunks);
+        let chunks_per_block = n_chunks.div_ceil(k);
+        let coords_per_block = chunks_per_block * chunk;
+        let f = &f;
+        std::thread::scope(|scope| {
+            let mut rest = parts;
+            let mut off = 0usize;
+            let mut ci = 0usize;
+            let mut first: Option<(usize, usize, S)> = None;
+            while off < len {
+                let take = coords_per_block.min(len - off);
+                let (head, tail) = rest.split_parts(take);
+                if first.is_none() {
+                    // The calling thread works the first block itself
+                    // after all spawns: k-1 spawns per region, and the
+                    // coordinator is never idle while the pool runs.
+                    first = Some((ci, off, head));
+                } else {
+                    let (b_ci, b_off) = (ci, off);
+                    scope.spawn(move || run_split_block(b_ci, b_off, take, chunk, head, f));
+                }
+                rest = tail;
+                off += take;
+                ci += chunks_per_block;
+            }
+            let (ci0, off0, head0) = first.expect("len > 0 yields at least one block");
+            run_split_block(ci0, off0, len.min(off0 + coords_per_block) - off0, chunk, head0, f);
+        });
+    }
+}
+
+/// Visit one thread's contiguous block of chunks in index order.
+fn run_split_block<S, F>(mut ci: usize, mut off: usize, len: usize, chunk: usize, parts: S, f: &F)
+where
+    S: Split,
+    F: Fn(usize, usize, S) + Sync,
+{
+    let mut rest = parts;
+    let mut remaining = len;
+    loop {
+        let take = chunk.min(remaining);
+        if take == remaining {
+            f(ci, off, rest);
+            return;
+        }
+        let (head, tail) = rest.split_parts(take);
+        f(ci, off, head);
+        rest = tail;
+        remaining -= take;
+        off += take;
+        ci += 1;
+    }
+}
+
+/// A bundle of parallel arrays that [`Engine::run_split`] can carve
+/// into disjoint coordinate ranges without allocating.
+///
+/// `split_parts(at)` splits at a *coordinate* boundary; components with
+/// coarser granularity ([`Blocks`]) translate `at` into their own unit.
+/// The engine only ever splits at chunk/block boundaries (multiples of
+/// the caller's `chunk`), plus a final ragged tail that is never split
+/// further — so a `Blocks` whose `per` divides `chunk` always splits
+/// exactly.
+pub trait Split: Sized + Send {
+    /// Split at `at` coordinates into (first, rest).
+    fn split_parts(self, at: usize) -> (Self, Self);
+}
+
+impl<'a, T: Send> Split for &'a mut [T] {
+    fn split_parts(self, at: usize) -> (Self, Self) {
+        self.split_at_mut(at)
+    }
+}
+
+impl<'a, T: Sync> Split for &'a [T] {
+    fn split_parts(self, at: usize) -> (Self, Self) {
+        self.split_at(at)
+    }
+}
+
+impl<A: Split, B: Split> Split for (A, B) {
+    fn split_parts(self, at: usize) -> (Self, Self) {
+        let (a0, a1) = self.0.split_parts(at);
+        let (b0, b1) = self.1.split_parts(at);
+        ((a0, b0), (a1, b1))
+    }
+}
+
+impl<A: Split, B: Split, C: Split> Split for (A, B, C) {
+    fn split_parts(self, at: usize) -> (Self, Self) {
+        let (a0, a1) = self.0.split_parts(at);
+        let (b0, b1) = self.1.split_parts(at);
+        let (c0, c1) = self.2.split_parts(at);
+        ((a0, b0, c0), (a1, b1, c1))
+    }
+}
+
+/// A [`Split`] view over an array with one element per `per`
+/// coordinates — e.g. packed sign words (`per = 64`) or per-chunk f64
+/// reduction partials (`per = chunk`). Splits at `ceil(at / per)`
+/// elements, exact whenever `at` is `per`-aligned (which the engine
+/// guarantees for every non-final split).
+pub struct Blocks<'a, T> {
+    pub data: &'a mut [T],
+    pub per: usize,
+}
+
+impl<'a, T> Blocks<'a, T> {
+    pub fn new(data: &'a mut [T], per: usize) -> Self {
+        assert!(per > 0);
+        Blocks { data, per }
+    }
+}
+
+impl<'a, T: Send> Split for Blocks<'a, T> {
+    fn split_parts(self, at: usize) -> (Self, Self) {
+        // A split must land on a `per` boundary — or be the final
+        // ragged tail, which takes every remaining element (empty
+        // tail). Anything else would hand the same element to two
+        // chunks' neighbours with silently shifted coordinates.
+        debug_assert!(
+            at % self.per == 0 || at.div_ceil(self.per) >= self.data.len(),
+            "Blocks split at {} is not aligned to per={} (chunk must be a multiple of per)",
+            at,
+            self.per
+        );
+        let take = at.div_ceil(self.per).min(self.data.len());
+        let (head, tail) = self.data.split_at_mut(take);
+        (
+            Blocks { data: head, per: self.per },
+            Blocks { data: tail, per: self.per },
+        )
     }
 }
 
@@ -163,24 +298,6 @@ mod tests {
     }
 
     #[test]
-    fn run_visits_every_item_once_with_its_index() {
-        for mode in [ExecMode::Sequential, ExecMode::Threaded(3), ExecMode::Threaded(16)] {
-            let eng = Engine::new(mode);
-            let mut hits = vec![0u32; 37];
-            {
-                let items: Vec<(usize, &mut u32)> = hits.iter_mut().enumerate().collect();
-                eng.run(items, |i, (orig, slot)| {
-                    assert_eq!(i, orig);
-                    *slot += 1 + i as u32;
-                });
-            }
-            for (i, h) in hits.iter().enumerate() {
-                assert_eq!(*h, 1 + i as u32, "mode {mode:?} item {i}");
-            }
-        }
-    }
-
-    #[test]
     fn threaded_matches_sequential_bitwise_on_fp_work() {
         // The contract the optimizers rely on: per-item float math is
         // scheduling-independent.
@@ -190,13 +307,13 @@ mod tests {
                 .map(|i| ((i as f32) * 0.37).sin() * 3.0)
                 .collect::<Vec<f32>>()
         };
-        let work = |_: usize, x: &mut f32| {
+        let work = |x: &mut f32| {
             *x = x.mul_add(1.000_1, -0.25) / (x.abs() + 0.5);
         };
         let mut a = mk();
         let mut b = mk();
-        Engine::sequential().run(a.iter_mut().collect(), |i, x| work(i, x));
-        Engine::new(ExecMode::Threaded(7)).run(b.iter_mut().collect(), |i, x| work(i, x));
+        Engine::sequential().run_mut(&mut a[..], |_, x| work(x));
+        Engine::new(ExecMode::Threaded(7)).run_mut(&mut b[..], |_, x| work(x));
         for i in 0..d {
             assert_eq!(a[i].to_bits(), b[i].to_bits(), "i={i}");
         }
@@ -217,12 +334,95 @@ mod tests {
     #[test]
     fn empty_and_single_item_runs() {
         let eng = Engine::new(ExecMode::Threaded(4));
-        eng.run(Vec::<u8>::new(), |_, _| panic!("no items"));
         let mut one = [0u8];
-        eng.run(one.iter_mut().collect(), |i, b| {
+        eng.run_mut(&mut one[..], |i, b| {
             assert_eq!(i, 0);
             *b = 9;
         });
         assert_eq!(one[0], 9);
+    }
+
+    #[test]
+    fn run_mut_visits_every_item_once_with_its_index() {
+        for mode in [ExecMode::Sequential, ExecMode::Threaded(3), ExecMode::Threaded(16)] {
+            let eng = Engine::new(mode);
+            let mut hits = vec![0u32; 37];
+            eng.run_mut(&mut hits[..], |i, slot| {
+                *slot += 1 + i as u32;
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(*h, 1 + i as u32, "mode {mode:?} item {i}");
+            }
+            let mut empty: [u32; 0] = [];
+            eng.run_mut(&mut empty[..], |_, _| panic!("no items"));
+        }
+    }
+
+    #[test]
+    fn run_split_covers_range_with_stable_chunk_structure() {
+        // Chunk boundaries and indices must not depend on the pool
+        // width: the fixed-chunk reduction contract.
+        let len = 10_000;
+        let chunk = 256;
+        for mode in [ExecMode::Sequential, ExecMode::Threaded(3), ExecMode::Threaded(16)] {
+            let eng = Engine::new(mode);
+            let mut data = vec![0u32; len];
+            let mut partials = vec![0.0f64; len.div_ceil(chunk)];
+            eng.run_split(
+                len,
+                chunk,
+                (&mut data[..], Blocks::new(&mut partials[..], chunk)),
+                |ci, off, (dc, blk)| {
+                    assert_eq!(off, ci * chunk, "offset/index out of step");
+                    assert_eq!(blk.data.len(), 1, "exactly one partial slot per chunk");
+                    blk.data[0] += (ci + 1) as f64;
+                    for (j, v) in dc.iter_mut().enumerate() {
+                        *v = (off + j) as u32 + 1;
+                    }
+                },
+            );
+            for (i, v) in data.iter().enumerate() {
+                assert_eq!(*v, i as u32 + 1, "mode {mode:?} coord {i}");
+            }
+            for (ci, p) in partials.iter().enumerate() {
+                assert_eq!(*p, (ci + 1) as f64, "mode {mode:?} chunk {ci}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_split_three_way_parts_and_shared_reads() {
+        let d = 1337; // ragged tail
+        let src: Vec<f32> = (0..d).map(|i| i as f32 * 0.5).collect();
+        let run = |mode: ExecMode| {
+            let eng = Engine::new(mode);
+            let mut a = vec![0.0f32; d];
+            let mut b = vec![0.0f32; d];
+            let mut words = vec![0u64; d.div_ceil(64)];
+            let src = &src;
+            eng.run_split(
+                d,
+                128, // multiple of 64 so words never straddle chunks
+                (&mut a[..], &mut b[..], Blocks::new(&mut words[..], 64)),
+                |_ci, off, (ac, bc, wc)| {
+                    for (j, (ai, bi)) in ac.iter_mut().zip(bc.iter_mut()).enumerate() {
+                        *ai = src[off + j] + 1.0;
+                        *bi = src[off + j] * 2.0;
+                    }
+                    for w in wc.data.iter_mut() {
+                        *w = off as u64;
+                    }
+                },
+            );
+            (a, b, words)
+        };
+        let (a1, b1, w1) = run(ExecMode::Sequential);
+        let (a2, b2, w2) = run(ExecMode::Threaded(5));
+        assert_eq!(w1, w2);
+        for i in 0..d {
+            assert_eq!(a1[i].to_bits(), a2[i].to_bits(), "i={i}");
+            assert_eq!(b1[i].to_bits(), b2[i].to_bits(), "i={i}");
+            assert_eq!(a1[i], src[i] + 1.0);
+        }
     }
 }

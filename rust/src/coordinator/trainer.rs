@@ -110,6 +110,7 @@ impl Trainer {
 
         let mut grads: Vec<Vec<f32>> = vec![vec![0.0; d]; n];
         let mut losses: Vec<f32> = vec![0.0; n];
+        let mut mean_scratch = vec![0.0f32; d];
         let mut ledger = VolumeLedger::new(d);
         let mut log = MetricLog::new(opt.name());
         let mut observer_rows = Vec::new();
@@ -122,17 +123,25 @@ impl Trainer {
             // threaded engine and a thread-shareable source, workers fan
             // out across the pool; losses are still averaged on the
             // coordinator thread in worker order, so both paths produce
-            // the same f64 sum bit for bit.
+            // the same f64 sum bit for bit. No per-step scratch is
+            // built: the worker blocks are carved straight off the
+            // persistent grads/losses buffers.
             let mut grads_done = false;
             if engine.is_parallel() {
                 if let Some(par) = source.parallel() {
                     let opt_ro: &dyn DistOptimizer = &*opt;
-                    let params: Vec<&[f32]> = (0..n).map(|w| opt_ro.params(w)).collect();
-                    let items: Vec<(&mut Vec<f32>, &mut f32)> =
-                        grads.iter_mut().zip(losses.iter_mut()).collect();
-                    engine.run(items, |w, (g, l)| {
-                        *l = par.grad_at(params[w], w, t, g);
-                    });
+                    let per = n.div_ceil(engine.threads()).max(1);
+                    engine.run_split(
+                        n,
+                        per,
+                        (&mut grads[..], &mut losses[..]),
+                        |_ci, off, (gs, ls)| {
+                            for (j, (g, l)) in gs.iter_mut().zip(ls.iter_mut()).enumerate() {
+                                let w = off + j;
+                                *l = par.grad_at(opt_ro.params(w), w, t, g);
+                            }
+                        },
+                    );
                     grads_done = true;
                 }
             }
@@ -152,7 +161,7 @@ impl Trainer {
             // Phase 3: simulated cluster clock.
             let mut step_ms = cfg.compute_ms;
             if let Some(fabric) = &cfg.fabric {
-                for r in &info.rounds {
+                for r in info.rounds.iter() {
                     step_ms += fabric.round_ms(r, d, sim_gpus);
                 }
             }
@@ -168,9 +177,8 @@ impl Trainer {
                 let eval_loss = if cfg.eval_every > 0
                     && (t % cfg.eval_every == 0 || is_last)
                 {
-                    let mut mean = vec![0.0f32; d];
-                    opt.mean_params(&mut mean);
-                    source.eval_loss(&mean).map(|e| e as f64)
+                    opt.mean_params(&mut mean_scratch);
+                    source.eval_loss(&mean_scratch).map(|e| e as f64)
                 } else {
                     None
                 };

@@ -15,10 +15,12 @@
 
 use anyhow::Result;
 
-use zo_adam::benchkit::Table;
+use zo_adam::benchkit::perf::PerfReport;
+use zo_adam::benchkit::{Bench, Table};
 use zo_adam::comm::{ETHERNET, INFINIBAND};
 use zo_adam::config::{Task, ALL_TASKS, BERT_BASE, BERT_LARGE, GPT2, IMAGENET};
-use zo_adam::exp::convergence::{run_convergence, run_profiling, ConvOpts};
+use zo_adam::coordinator::{Engine, ExecMode, NoObserver, Trainer, TrainerConfig};
+use zo_adam::exp::convergence::{build_optimizer, run_convergence, run_profiling, ConvOpts};
 use zo_adam::exp::{analytic, tables, theory, Algo};
 use zo_adam::runtime::Runtime;
 use zo_adam::util::cli::Args;
@@ -42,6 +44,7 @@ fn main() {
         "table2" => cmd_table2(rest),
         "table3" => cmd_table3(rest),
         "theory" => cmd_theory(rest),
+        "bench" => cmd_bench(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -73,6 +76,7 @@ fn usage() -> String {
      \x20 table2            final accuracy / perplexity / cloze table\n\
      \x20 table3            computation vs fixed-cost decomposition\n\
      \x20 theory            Theorem-1 empirical checks\n\
+     \x20 bench             hot-path microbenches + BENCH json + perf-regression gate\n\
      \n\
      Run `zo-adam <command> --help` for options."
         .to_string()
@@ -380,5 +384,320 @@ fn cmd_theory(rest: &[String]) -> Result<()> {
     save(&theory::speedup_table(d, steps), out, "theory_speedup");
     save(&theory::h_sweep_table(d, steps), out, "theory_h_sweep");
     save(&theory::t_sweep_table(d), out, "theory_t_sweep");
+    Ok(())
+}
+
+/// Hot-path perf suite: codec / allreduce / optimizer-step microbenches
+/// plus a short materialized 0/1 Adam run. Writes a machine-readable
+/// report (BENCH_PR2.json) and gates `step/` entries against a baseline
+/// report (ci.sh runs `bench --quick --baseline BENCH_PR2.json`).
+fn cmd_bench(rest: &[String]) -> Result<()> {
+    use zo_adam::comm::allreduce::{allreduce_mean_eng, EfAllReduce};
+    use zo_adam::comm::compress::{self, OneBit};
+    use zo_adam::grad::synthetic::NoisyQuadratic;
+    use zo_adam::tensor::Rng;
+
+    let p = parse(
+        common(
+            Args::new("zo-adam bench", "hot-path perf suite + regression gate")
+                .opt("d", "1048576", "hot-path dimension (2^20 default)")
+                .opt("workers", "8", "materialized workers")
+                .opt("threads", "8", "engine pool width for threaded variants")
+                .opt("run-steps", "240", "steps of the materialized 0/1 Adam run")
+                .opt("json", "BENCH_PR2.json", "report output path ('' = skip writing)")
+                .opt("baseline", "", "baseline report to gate against ('' = no gate)")
+                .opt("tolerance", "0.30", "allowed fractional p50 regression on step/ entries")
+                .flag("refresh", "overwrite an existing measured baseline at --json")
+                .flag("quick", "short measurement windows (sets ZO_BENCH_QUICK)"),
+        ),
+        rest,
+    );
+    if p.get_flag("quick") {
+        std::env::set_var("ZO_BENCH_QUICK", "1");
+    }
+    let d = p.get_usize("d");
+    let n = p.get_usize("workers");
+    let threads = p.get_usize("threads");
+    let tolerance = p.get_f64("tolerance");
+    let run_steps = p.get_u64("run-steps");
+
+    // Load the baseline up front: the report may overwrite its path.
+    let baseline_path = p.get("baseline").to_string();
+    let baseline = if baseline_path.is_empty() {
+        None
+    } else {
+        match PerfReport::load(&baseline_path) {
+            Ok(b) => Some(b),
+            Err(e) => {
+                println!("no usable baseline ({e}); gate skipped");
+                None
+            }
+        }
+    };
+
+    let mut report = PerfReport::new();
+    report.meta_num("d", d as f64);
+    report.meta_num("workers", n as f64);
+    report.meta_num("threads", threads as f64);
+    report.meta_num("quick", p.get_flag("quick") as u8 as f64);
+
+    // Labels come from ExecMode::name() ("seq" / "threaded{n}") so the
+    // gate's entry names line up with the other bench binaries and a
+    // --threads change is visible as unmatched baseline entries below.
+    // --threads 1 collapses to a single sequential pass (no duplicate
+    // "seq" entries, no seq-vs-seq speedup).
+    let mut modes = vec![(ExecMode::Sequential, ExecMode::Sequential.name())];
+    let thr_mode = ExecMode::with_threads(threads);
+    if thr_mode != ExecMode::Sequential {
+        modes.push((thr_mode, thr_mode.name()));
+    }
+
+    // -- codec kernels ------------------------------------------------
+    println!("== zo-adam bench ==\n\n-- codec kernels (d = {d}) --");
+    {
+        let mut rng = Rng::new(1);
+        let mut src = vec![0.0f32; d];
+        rng.fill_normal(&mut src, 1.0);
+        let mut packed = OneBit::zeros(d);
+        let mut err = vec![0.0f32; d];
+        let mut dense = vec![0.0f32; d];
+        let mut b = Bench::new().with_elements(d as u64).with_bytes((4 * d) as u64);
+        report.push(&b.run("codec/compress_into", || {
+            compress::compress_into(&src, &mut packed);
+        }));
+        report.push(&b.run("codec/compress_ef_fused", || {
+            compress::compress_ef_into(&src, &mut err, &mut packed);
+        }));
+        report.push(&b.run("codec/decompress_into", || {
+            compress::decompress_into(&packed, &mut dense);
+        }));
+        report.push(&b.run("codec/accumulate_into", || {
+            compress::accumulate_into(&packed, 0.25, &mut dense);
+        }));
+    }
+
+    // -- allreduce ----------------------------------------------------
+    println!("\n-- allreduce (d = {d}, n = {n}) --");
+    {
+        let mut rng = Rng::new(2);
+        let bufs: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let mut out = vec![0.0f32; d];
+        for (mode, label) in &modes {
+            let eng = Engine::new(*mode);
+            let mut b = Bench::new()
+                .with_elements(d as u64)
+                .with_bytes((4 * d * (n + 1)) as u64);
+            report.push(&b.run(&format!("allreduce/fp/{label}"), || {
+                allreduce_mean_eng(&bufs, &mut out, &eng);
+            }));
+            let mut ef = EfAllReduce::new(n, d);
+            report.push(&b.run(&format!("allreduce/ef1bit/{label}"), || {
+                ef.reduce_eng(&bufs, &mut out, &eng);
+            }));
+        }
+        if let Some((_, thr_label)) = modes.get(1) {
+            let pair = report
+                .entry("allreduce/ef1bit/seq")
+                .map(|e| e.p50_ns)
+                .zip(report.entry(&format!("allreduce/ef1bit/{thr_label}")).map(|e| e.p50_ns));
+            if let Some((s, t)) = pair {
+                report.metric("allreduce/ef1bit/speedup", s / t);
+                println!("  -> EF-1bit threaded speedup: {:.2}x", s / t);
+            }
+        }
+    }
+
+    // -- optimizer step -----------------------------------------------
+    // Gated entries need a *stationary* per-step workload: policies are
+    // pinned (constant LR, fixed stages) so every measured iteration
+    // runs the same code path regardless of how many iterations the
+    // host's measurement window fits — schedule drift would otherwise
+    // read as a phantom regression (or hide a real one: a scaled 1-bit
+    // Adam T₀ would keep the quick window entirely full-precision).
+    println!("\n-- optimizer step (d = {d}, n = {n} workers) --");
+    {
+        use zo_adam::optim::policy::{SyncPolicy, SyncSchedule, VarPolicy, VarSchedule};
+        use zo_adam::optim::{
+            Adam, ConstLr, DistOptimizer, FrozenVarAdam, Hyper, ZeroOneAdam,
+        };
+        let mut rng = Rng::new(3);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal(&mut v, 0.1);
+                v
+            })
+            .collect();
+        let h = Hyper::default();
+        let lr = 1e-3;
+        // Case 0: fp allreduce + fused Adam apply, every step.
+        // Case 1: EF-1bit round every step (T₀ = 0: always compressed).
+        // Case 2: fp round + EF sync every step (densest 0/1 Adam step).
+        // Case 3: periodic local steps + sync every 4th step.
+        let names = ["adam", "1bit-adam", "01adam-dense", "01adam-local4"];
+        for (case, name) in names.iter().enumerate() {
+            let mut p50s = Vec::new();
+            for (mode, label) in &modes {
+                let eng = Engine::new(*mode);
+                let mut opt: Box<dyn DistOptimizer> = match case {
+                    0 => Box::new(Adam::new(vec![0.0f32; d], n, h, Box::new(ConstLr(lr)))),
+                    1 => Box::new(FrozenVarAdam::onebit_adam(
+                        vec![0.0f32; d],
+                        n,
+                        h,
+                        Box::new(ConstLr(lr)),
+                        0,
+                    )),
+                    2 => Box::new(ZeroOneAdam::new(
+                        vec![0.0f32; d],
+                        n,
+                        h,
+                        Box::new(ConstLr(lr)),
+                        VarSchedule::new(VarPolicy::Always),
+                        SyncSchedule::new(SyncPolicy::Always),
+                    )),
+                    _ => Box::new(ZeroOneAdam::new(
+                        vec![0.0f32; d],
+                        n,
+                        h,
+                        Box::new(ConstLr(lr)),
+                        VarSchedule::new(VarPolicy::Never),
+                        SyncSchedule::new(SyncPolicy::Fixed { interval: 4 }),
+                    )),
+                };
+                let mut t = 0u64;
+                let mut b = Bench::new().with_elements(d as u64);
+                let r = b.run(&format!("step/{name}/{label}"), || {
+                    opt.step_engine(t, &grads, &eng);
+                    t += 1;
+                });
+                p50s.push(r.p50_ns);
+                report.push(&r);
+            }
+            if p50s.len() > 1 {
+                let sp = p50s[0] / p50s[1];
+                report.metric(&format!("step/{name}/speedup"), sp);
+                println!("  -> {name}: threaded({threads}) speedup {sp:.2}x");
+            }
+        }
+    }
+
+    // -- materialized 0/1 Adam run ------------------------------------
+    let run_d = d.min(1 << 18);
+    println!("\n-- materialized 0/1 Adam run (d = {run_d}, {run_steps} steps) --");
+    {
+        let mut stats = Vec::new();
+        for (mode, label) in &modes {
+            let mut src = NoisyQuadratic::new(run_d, 4.0, 0.1, 7);
+            let run_opts =
+                ConvOpts { workers: n, exec: *mode, ..ConvOpts::quick(&BERT_BASE, run_steps) };
+            let mut opt = build_optimizer(Algo::ZeroOneAdam, vec![0.5f32; run_d], &run_opts);
+            let cfg = TrainerConfig {
+                steps: run_steps,
+                log_every: run_steps.max(1),
+                eval_every: 0,
+                fabric: Some(ETHERNET),
+                sim_gpus: 128,
+                compute_ms: 0.0,
+                exec: *mode,
+                verbose: false,
+            };
+            let res = Trainer::run(&mut src, opt.as_mut(), &cfg, &mut NoObserver);
+            let sps = run_steps as f64 / res.wall_s.max(1e-9);
+            report.metric(&format!("run/01adam/{label}/steps_per_s"), sps);
+            println!(
+                "  01adam {label}: {sps:.1} steps/s, {} wire bytes/worker",
+                res.ledger.bytes_total
+            );
+            stats.push((sps, res.ledger.bytes_total));
+        }
+        report.metric("run/01adam/wire_bytes_per_worker", stats[0].1 as f64);
+        if stats.len() > 1 {
+            report.metric("run/01adam/threaded_speedup", stats[1].0 / stats[0].0);
+        }
+    }
+
+    // Gate first: a regressing run must fail loudly *without* replacing
+    // the baseline it regressed against.
+    if let Some(base) = &baseline {
+        let gated: Vec<&str> = base
+            .entries
+            .iter()
+            .filter(|e| e.name.starts_with("step/"))
+            .map(|e| e.name.as_str())
+            .collect();
+        // Nanosecond thresholds only mean something under the same
+        // bench configuration: a baseline measured at another d /
+        // worker count / pool width must not produce a verdict.
+        let meta_of = |r: &PerfReport, key: &str| -> Option<f64> {
+            r.meta.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_f64())
+        };
+        let config_mismatch: Vec<String> = ["d", "workers", "threads", "quick"]
+            .iter()
+            .filter_map(|key| {
+                let (b, f) = (meta_of(base, key), meta_of(&report, key));
+                (b != f).then(|| format!("{key}: baseline {b:?} vs fresh {f:?}"))
+            })
+            .collect();
+        if base.bootstrap || gated.is_empty() {
+            println!(
+                "\nperf gate vs {baseline_path}: SKIPPED (bootstrap baseline — no measured \
+                 step/ entries to compare yet)"
+            );
+        } else if !config_mismatch.is_empty() {
+            println!(
+                "\nperf gate vs {baseline_path}: SKIPPED (bench config mismatch: {}; \
+                 regenerate the baseline with --refresh)",
+                config_mismatch.join(", ")
+            );
+        } else {
+            let violations = report.regressions_vs(base, "step/", tolerance);
+            if !violations.is_empty() {
+                for v in &violations {
+                    eprintln!("PERF REGRESSION: {v}");
+                }
+                anyhow::bail!(
+                    "{} optimizer-step perf regression(s) vs {baseline_path}",
+                    violations.len()
+                );
+            }
+            let compared = gated.iter().filter(|name| report.entry(name).is_some()).count();
+            println!(
+                "\nperf gate vs {baseline_path}: OK ({compared}/{} step/ entries within {:.0}%)",
+                gated.len(),
+                tolerance * 100.0
+            );
+            if compared < gated.len() {
+                println!(
+                    "warning: {} baseline step/ entries had no fresh counterpart \
+                     (bench config changed? regenerate with --refresh)",
+                    gated.len() - compared
+                );
+            }
+        }
+    }
+    // Write the report — but never silently re-baseline: an existing
+    // *measured* report at the target path is kept (so sub-tolerance
+    // regressions cannot compound run over run, and a baseline from
+    // another host isn't churned) unless --refresh asks for it.
+    // Bootstrap stubs are always replaced by real numbers.
+    let json_path = p.get("json");
+    if !json_path.is_empty() {
+        let existing_measured = PerfReport::load(json_path)
+            .map(|r| !r.bootstrap && !r.entries.is_empty())
+            .unwrap_or(false);
+        if existing_measured && !p.get_flag("refresh") {
+            println!("kept existing measured baseline {json_path} (use --refresh to overwrite)");
+        } else {
+            report.write(json_path)?;
+            println!("wrote {json_path}");
+        }
+    }
     Ok(())
 }

@@ -1,7 +1,7 @@
 //! Original distributed Adam (paper Equation 3): full-precision
 //! AllReduce of the gradient every step, shared optimizer state.
 
-use super::{DistOptimizer, Hyper, LrSchedule, StepInfo};
+use super::{DistOptimizer, Hyper, LrSchedule, Rounds, StepInfo, StepScratch};
 use crate::comm::allreduce::allreduce_mean_eng;
 use crate::coordinator::engine::Engine;
 
@@ -9,7 +9,7 @@ pub struct Adam {
     x: Vec<f32>,
     m: Vec<f32>,
     v: Vec<f32>,
-    gbar: Vec<f32>,
+    scratch: StepScratch,
     n: usize,
     hyper: Hyper,
     lr: Box<dyn LrSchedule>,
@@ -22,7 +22,7 @@ impl Adam {
             x: init,
             m: vec![0.0; d],
             v: vec![0.0; d],
-            gbar: vec![0.0; d],
+            scratch: StepScratch::reduce(d),
             n: n_workers,
             hyper,
             lr,
@@ -57,38 +57,37 @@ impl DistOptimizer for Adam {
         let Hyper { beta1, beta2, eps } = self.hyper;
 
         // Global reduce: fixed worker order inside each coordinate chunk.
-        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-        let wire = allreduce_mean_eng(&refs, &mut self.gbar, eng);
+        let wire = allreduce_mean_eng(grads, &mut self.scratch.gbar, eng);
 
         // Apply phase, fused (Equation 3, conventional post-update
         // order): m ← β1 m + (1−β1)ḡ;  v ← β2 v + (1−β2)ḡ²;
         // x ← x − γ m/√(v+ε). Per-coordinate independent, so chunks may
         // run on pool threads without changing a single bit.
         let chunk = eng.chunk_len(self.x.len());
-        let items: Vec<_> = self
-            .x
-            .chunks_mut(chunk)
-            .zip(self.m.chunks_mut(chunk))
-            .zip(self.v.chunks_mut(chunk))
-            .zip(self.gbar.chunks(chunk))
-            .collect();
-        eng.run(items, |_, (((xc, mc), vc), gc)| {
-            for (((xi, mi), vi), &g) in
-                xc.iter_mut().zip(mc.iter_mut()).zip(vc.iter_mut()).zip(gc.iter())
-            {
-                let m = beta1 * *mi + (1.0 - beta1) * g;
-                let v = beta2 * *vi + (1.0 - beta2) * g * g;
-                *mi = m;
-                *vi = v;
-                *xi -= gamma * m / (v + eps).sqrt();
-            }
-        });
+        let gbar = &self.scratch.gbar;
+        eng.run_split(
+            self.x.len(),
+            chunk,
+            (&mut self.x[..], &mut self.m[..], &mut self.v[..]),
+            |_ci, off, (xc, mc, vc)| {
+                let gc = &gbar[off..off + xc.len()];
+                for (((xi, mi), vi), &g) in
+                    xc.iter_mut().zip(mc.iter_mut()).zip(vc.iter_mut()).zip(gc.iter())
+                {
+                    let m = beta1 * *mi + (1.0 - beta1) * g;
+                    let v = beta2 * *vi + (1.0 - beta2) * g * g;
+                    *mi = m;
+                    *vi = v;
+                    *xi -= gamma * m / (v + eps).sqrt();
+                }
+            },
+        );
 
         StepInfo {
             lr: gamma as f64,
             synced: true,
             var_updated: true,
-            rounds: vec![wire],
+            rounds: Rounds::one(wire),
         }
     }
 

@@ -7,7 +7,10 @@
 //!     over the remaining steps.
 
 /// A learning-rate schedule: step index -> gamma_t.
-pub trait LrSchedule: Send {
+///
+/// `Sync` rides along with `Send` so optimizers holding a boxed
+/// schedule stay `Sync` (the [`super::DistOptimizer`] supertrait).
+pub trait LrSchedule: Send + Sync {
     fn lr(&self, t: u64) -> f64;
     fn name(&self) -> &'static str {
         "lr"

@@ -44,6 +44,78 @@ impl Default for Hyper {
     }
 }
 
+/// Most communication rounds any optimizer performs in one step (0/1
+/// Adam's T_v ∩ T_u steps do one full-precision and one 1-bit round).
+pub const MAX_ROUNDS_PER_STEP: usize = 2;
+
+/// Fixed-capacity list of a step's communication rounds.
+///
+/// Inline storage ([`MAX_ROUNDS_PER_STEP`]) so building a [`StepInfo`]
+/// every step costs no heap traffic — part of the zero-allocation
+/// hot-path invariant (DESIGN.md §Hot-path). Derefs to `[WireStats]`,
+/// so consumers index/iterate it like the `Vec` it replaced.
+#[derive(Debug, Clone, Copy)]
+pub struct Rounds {
+    buf: [WireStats; MAX_ROUNDS_PER_STEP],
+    len: usize,
+}
+
+impl Rounds {
+    pub fn none() -> Rounds {
+        Rounds { buf: [WireStats::default(); MAX_ROUNDS_PER_STEP], len: 0 }
+    }
+
+    pub fn one(w: WireStats) -> Rounds {
+        let mut r = Rounds::none();
+        r.push(w);
+        r
+    }
+
+    pub fn push(&mut self, w: WireStats) {
+        assert!(self.len < MAX_ROUNDS_PER_STEP, "step exceeded MAX_ROUNDS_PER_STEP");
+        self.buf[self.len] = w;
+        self.len += 1;
+    }
+}
+
+impl Default for Rounds {
+    fn default() -> Self {
+        Rounds::none()
+    }
+}
+
+impl std::ops::Deref for Rounds {
+    type Target = [WireStats];
+    fn deref(&self) -> &[WireStats] {
+        &self.buf[..self.len]
+    }
+}
+
+/// Persistent per-optimizer scratch for the step hot path.
+///
+/// Owns every reduction target the optimizers previously kept as
+/// ad-hoc fields, allocated once at construction; `step_engine` then
+/// performs zero heap allocation in steady state (enforced by
+/// `tests/zero_alloc.rs`).
+pub struct StepScratch {
+    /// Target of the gradient reduction (ḡ, or the EF broadcast).
+    pub gbar: Vec<f32>,
+    /// Target of 0/1 Adam's buffer sync (ū); empty when unused.
+    pub ubar: Vec<f32>,
+}
+
+impl StepScratch {
+    /// Scratch for optimizers with a single reduction per step.
+    pub fn reduce(d: usize) -> Self {
+        StepScratch { gbar: vec![0.0; d], ubar: Vec::new() }
+    }
+
+    /// Scratch for 0/1 Adam's two reduction targets.
+    pub fn reduce_and_sync(d: usize) -> Self {
+        StepScratch { gbar: vec![0.0; d], ubar: vec![0.0; d] }
+    }
+}
+
 /// What one optimizer step did (fed to the ledger and the sim clock).
 #[derive(Debug, Clone, Default)]
 pub struct StepInfo {
@@ -54,7 +126,7 @@ pub struct StepInfo {
     /// Variance was updated this step (t ∈ T_v).
     pub var_updated: bool,
     /// Communication rounds performed this step (empty = local step).
-    pub rounds: Vec<WireStats>,
+    pub rounds: Rounds,
 }
 
 /// A distributed optimizer over n worker replicas of a d-dim model.
@@ -65,11 +137,14 @@ pub struct StepInfo {
 /// Every step is phase-split (DESIGN.md §3): a **local phase** that
 /// touches only one worker's replica state (momentum/buffer/model
 /// updates, the EF compress leg) and a **global reduce/apply phase**
-/// that combines workers in fixed index order. The engine may fan the
-/// local phase out across threads; the reduce phase always runs on the
-/// coordinator thread, so `ExecMode::Threaded` is bitwise identical to
-/// `ExecMode::Sequential` for every optimizer.
-pub trait DistOptimizer {
+/// whose cross-worker accumulations run in fixed index order inside
+/// mode-independent coordinate chunks, so `ExecMode::Threaded` is
+/// bitwise identical to `ExecMode::Sequential` for every optimizer.
+///
+/// `Sync` is a supertrait so the trainer's parallel gradient phase can
+/// read `params(w)` from pool threads; optimizer state is only ever
+/// mutated through `step_engine`'s exclusive borrow.
+pub trait DistOptimizer: Sync {
     fn name(&self) -> &'static str;
     fn dim(&self) -> usize;
     fn n_workers(&self) -> usize;

@@ -9,7 +9,7 @@
 //! the frozen-variance linearization. The `section3` experiment and the
 //! unit tests below demonstrate this collapse quantitatively.
 
-use super::{DistOptimizer, Hyper, LrSchedule, StepInfo};
+use super::{DistOptimizer, Hyper, LrSchedule, Rounds, StepInfo, StepScratch};
 use crate::comm::allreduce::EfAllReduce;
 use crate::coordinator::engine::Engine;
 
@@ -17,7 +17,7 @@ pub struct NaiveOneBitAdam {
     x: Vec<f32>,
     m: Vec<f32>,
     v: Vec<f32>,
-    gbar: Vec<f32>,
+    scratch: StepScratch,
     n: usize,
     hyper: Hyper,
     lr: Box<dyn LrSchedule>,
@@ -31,7 +31,7 @@ impl NaiveOneBitAdam {
             x: init,
             m: vec![0.0; d],
             v: vec![0.0; d],
-            gbar: vec![0.0; d],
+            scratch: StepScratch::reduce(d),
             n: n_workers,
             hyper,
             lr,
@@ -82,29 +82,28 @@ impl DistOptimizer for NaiveOneBitAdam {
     fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
         let gamma = self.lr.lr(t) as f32;
         let Hyper { beta1, beta2, eps } = self.hyper;
-        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
         // The mistake under study: both moments fed the ±scale signal.
-        let wire = self.ef.reduce_eng(&refs, &mut self.gbar, eng);
+        let wire = self.ef.reduce_eng(grads, &mut self.scratch.gbar, eng);
         let chunk = eng.chunk_len(self.x.len());
-        let items: Vec<_> = self
-            .x
-            .chunks_mut(chunk)
-            .zip(self.m.chunks_mut(chunk))
-            .zip(self.v.chunks_mut(chunk))
-            .zip(self.gbar.chunks(chunk))
-            .collect();
-        eng.run(items, |_, (((xc, mc), vc), gc)| {
-            for (((xi, mi), vi), &g) in
-                xc.iter_mut().zip(mc.iter_mut()).zip(vc.iter_mut()).zip(gc.iter())
-            {
-                let m = beta1 * *mi + (1.0 - beta1) * g;
-                let v = beta2 * *vi + (1.0 - beta2) * g * g; // g² = scale² ∀i!
-                *mi = m;
-                *vi = v;
-                *xi -= gamma * m / (v + eps).sqrt();
-            }
-        });
-        StepInfo { lr: gamma as f64, synced: true, var_updated: true, rounds: vec![wire] }
+        let gbar = &self.scratch.gbar;
+        eng.run_split(
+            self.x.len(),
+            chunk,
+            (&mut self.x[..], &mut self.m[..], &mut self.v[..]),
+            |_ci, off, (xc, mc, vc)| {
+                let gc = &gbar[off..off + xc.len()];
+                for (((xi, mi), vi), &g) in
+                    xc.iter_mut().zip(mc.iter_mut()).zip(vc.iter_mut()).zip(gc.iter())
+                {
+                    let m = beta1 * *mi + (1.0 - beta1) * g;
+                    let v = beta2 * *vi + (1.0 - beta2) * g * g; // g² = scale² ∀i!
+                    *mi = m;
+                    *vi = v;
+                    *xi -= gamma * m / (v + eps).sqrt();
+                }
+            },
+        );
+        StepInfo { lr: gamma as f64, synced: true, var_updated: true, rounds: Rounds::one(wire) }
     }
 
     fn momentum(&self) -> Option<&[f32]> {

@@ -12,7 +12,7 @@
 //! DeepSpeed implementation's post-AllReduce state.
 
 use super::policy::{VarPolicy, VarSchedule};
-use super::{DistOptimizer, Hyper, LrSchedule, StepInfo};
+use super::{DistOptimizer, Hyper, LrSchedule, Rounds, StepInfo, StepScratch};
 use crate::comm::allreduce::{allreduce_mean_eng, EfAllReduce};
 use crate::coordinator::engine::Engine;
 
@@ -23,7 +23,7 @@ pub struct FrozenVarAdam {
     /// 1/sqrt(v+eps), refreshed only when v changes (hot-path hoist —
     /// same trick as the Pallas kernel's rsqrt_v operand).
     rsv: Vec<f32>,
-    gbar: Vec<f32>,
+    scratch: StepScratch,
     n: usize,
     hyper: Hyper,
     lr: Box<dyn LrSchedule>,
@@ -46,14 +46,14 @@ impl FrozenVarAdam {
             VarPolicy::ExpInterval { .. } => "01adam-nolocal",
             _ => "frozenvar-adam",
         };
-        let mut rsv = vec![0.0; d];
-        crate::tensor::rsqrt_into(&mut rsv, &vec![0.0; d], hyper.eps);
+        // v = 0 at init, so rsv is the constant 1/√ε — no zero vector
+        // needs materializing just to read it.
         FrozenVarAdam {
             x: init,
             m: vec![0.0; d],
             v: vec![0.0; d],
-            rsv,
-            gbar: vec![0.0; d],
+            rsv: vec![1.0 / hyper.eps.sqrt(); d],
+            scratch: StepScratch::reduce(d),
             n: n_workers,
             hyper,
             lr,
@@ -104,50 +104,67 @@ impl DistOptimizer for FrozenVarAdam {
         assert_eq!(grads.len(), self.n);
         let gamma = self.lr.lr(t) as f32;
         let Hyper { beta1, beta2, eps } = self.hyper;
-        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
 
         let var_update = self.var_sched.is_update_step(t);
         let wire = if var_update {
             // Full-precision round: exact mean, v will absorb ḡ².
-            allreduce_mean_eng(&refs, &mut self.gbar, eng)
+            allreduce_mean_eng(grads, &mut self.scratch.gbar, eng)
         } else {
             // Compression stage: EF-1-bit round (Algorithm 2) — the
-            // per-worker compress leg runs on the pool.
-            self.ef.reduce_eng(&refs, &mut self.gbar, eng)
+            // per-worker compress leg and the server chunks run on the
+            // pool.
+            self.ef.reduce_eng(grads, &mut self.scratch.gbar, eng)
         };
 
+        let d = self.x.len();
+        let chunk = eng.chunk_len(d);
         // m ← β1 m + (1−β1)ḡ, then x ← x − γ m/√(v+ε) with the
         // frozen-or-refreshed v (post-update order throughout).
         if var_update {
-            for i in 0..self.v.len() {
-                let g = self.gbar[i];
-                self.v[i] = beta2 * self.v[i] + (1.0 - beta2) * g * g;
-            }
-            crate::tensor::rsqrt_into(&mut self.rsv, &self.v, eps);
+            // Fused v + rsv refresh, chunk-parallel (per-coordinate
+            // independent, so pool scheduling cannot change a bit).
+            let gbar = &self.scratch.gbar;
+            eng.run_split(
+                d,
+                chunk,
+                (&mut self.v[..], &mut self.rsv[..]),
+                |_ci, off, (vc, rc)| {
+                    let gc = &gbar[off..off + vc.len()];
+                    let c = 1.0 - beta2;
+                    for ((vi, ri), &g) in vc.iter_mut().zip(rc.iter_mut()).zip(gc.iter()) {
+                        let v = beta2 * *vi + c * g * g;
+                        *vi = v;
+                        *ri = 1.0 / (v + eps).sqrt();
+                    }
+                },
+            );
         }
-        let chunk = eng.chunk_len(self.x.len());
-        let items: Vec<_> = self
-            .x
-            .chunks_mut(chunk)
-            .zip(self.m.chunks_mut(chunk))
-            .zip(self.gbar.chunks(chunk))
-            .zip(self.rsv.chunks(chunk))
-            .collect();
-        eng.run(items, |_, (((xc, mc), gc), rc)| {
-            for (((xi, mi), &g), &ri) in
-                xc.iter_mut().zip(mc.iter_mut()).zip(gc.iter()).zip(rc.iter())
-            {
-                let m = beta1 * *mi + (1.0 - beta1) * g;
-                *mi = m;
-                *xi -= gamma * m * ri;
-            }
-        });
+        {
+            let gbar = &self.scratch.gbar;
+            let rsv = &self.rsv;
+            eng.run_split(
+                d,
+                chunk,
+                (&mut self.x[..], &mut self.m[..]),
+                |_ci, off, (xc, mc)| {
+                    let gc = &gbar[off..off + xc.len()];
+                    let rc = &rsv[off..off + xc.len()];
+                    for (((xi, mi), &g), &ri) in
+                        xc.iter_mut().zip(mc.iter_mut()).zip(gc.iter()).zip(rc.iter())
+                    {
+                        let m = beta1 * *mi + (1.0 - beta1) * g;
+                        *mi = m;
+                        *xi -= gamma * m * ri;
+                    }
+                },
+            );
+        }
 
         StepInfo {
             lr: gamma as f64,
             synced: true,
             var_updated: var_update,
-            rounds: vec![wire],
+            rounds: Rounds::one(wire),
         }
     }
 

@@ -9,14 +9,14 @@
 //!   compare these trajectories against 0/1 Adam to demonstrate the
 //!   point.
 
-use super::{DistOptimizer, LrSchedule, StepInfo};
+use super::{DistOptimizer, LrSchedule, Rounds, StepInfo, StepScratch};
 use crate::comm::allreduce::{allreduce_mean_eng, EfAllReduce};
 use crate::coordinator::engine::Engine;
 
 pub struct MomentumSgd {
     x: Vec<f32>,
     m: Vec<f32>,
-    gbar: Vec<f32>,
+    scratch: StepScratch,
     n: usize,
     beta: f32,
     lr: Box<dyn LrSchedule>,
@@ -28,7 +28,7 @@ impl MomentumSgd {
         MomentumSgd {
             x: init,
             m: vec![0.0; d],
-            gbar: vec![0.0; d],
+            scratch: StepScratch::reduce(d),
             n: n_workers,
             beta,
             lr,
@@ -62,22 +62,22 @@ impl DistOptimizer for MomentumSgd {
         let beta = self.beta;
         // Reduce (fixed worker order per coordinate), then the fused
         // heavy-ball apply in per-coordinate chunks.
-        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-        let wire = allreduce_mean_eng(&refs, &mut self.gbar, eng);
+        let wire = allreduce_mean_eng(grads, &mut self.scratch.gbar, eng);
         let chunk = eng.chunk_len(self.x.len());
-        let items: Vec<_> = self
-            .x
-            .chunks_mut(chunk)
-            .zip(self.m.chunks_mut(chunk))
-            .zip(self.gbar.chunks(chunk))
-            .collect();
-        eng.run(items, |_, ((xc, mc), gc)| {
-            for ((xi, mi), &g) in xc.iter_mut().zip(mc.iter_mut()).zip(gc.iter()) {
-                *mi = beta * *mi + g;
-                *xi -= gamma * *mi;
-            }
-        });
-        StepInfo { lr: gamma as f64, synced: true, var_updated: false, rounds: vec![wire] }
+        let gbar = &self.scratch.gbar;
+        eng.run_split(
+            self.x.len(),
+            chunk,
+            (&mut self.x[..], &mut self.m[..]),
+            |_ci, off, (xc, mc)| {
+                let gc = &gbar[off..off + xc.len()];
+                for ((xi, mi), &g) in xc.iter_mut().zip(mc.iter_mut()).zip(gc.iter()) {
+                    *mi = beta * *mi + g;
+                    *xi -= gamma * *mi;
+                }
+            },
+        );
+        StepInfo { lr: gamma as f64, synced: true, var_updated: false, rounds: Rounds::one(wire) }
     }
 
     fn momentum(&self) -> Option<&[f32]> {
@@ -88,7 +88,7 @@ impl DistOptimizer for MomentumSgd {
 /// Error-feedback signSGD: x ← x − γ · EF-1bit-AllReduce(g).
 pub struct SignSgd {
     x: Vec<f32>,
-    gbar: Vec<f32>,
+    scratch: StepScratch,
     n: usize,
     lr: Box<dyn LrSchedule>,
     ef: EfAllReduce,
@@ -99,7 +99,7 @@ impl SignSgd {
         let d = init.len();
         SignSgd {
             x: init,
-            gbar: vec![0.0; d],
+            scratch: StepScratch::reduce(d),
             n: n_workers,
             lr,
             ef: EfAllReduce::new(n_workers, d),
@@ -131,15 +131,15 @@ impl DistOptimizer for SignSgd {
     fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
         let gamma = self.lr.lr(t) as f32;
         // Local phase: per-worker EF compress (engine-parallel inside
-        // reduce_eng); global phase: ordered server mean + apply.
-        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-        let wire = self.ef.reduce_eng(&refs, &mut self.gbar, eng);
+        // reduce_eng); global phase: chunk-parallel ordered server mean,
+        // then the chunk-parallel apply.
+        let wire = self.ef.reduce_eng(grads, &mut self.scratch.gbar, eng);
         let chunk = eng.chunk_len(self.x.len());
-        let items: Vec<_> = self.x.chunks_mut(chunk).zip(self.gbar.chunks(chunk)).collect();
-        eng.run(items, |_, (xc, gc)| {
-            crate::tensor::axpy(xc, -gamma, gc);
+        let gbar = &self.scratch.gbar;
+        eng.run_split(self.x.len(), chunk, &mut self.x[..], |_ci, off, xc: &mut [f32]| {
+            crate::tensor::axpy(xc, -gamma, &gbar[off..off + xc.len()]);
         });
-        StepInfo { lr: gamma as f64, synced: true, var_updated: false, rounds: vec![wire] }
+        StepInfo { lr: gamma as f64, synced: true, var_updated: false, rounds: Rounds::one(wire) }
     }
 }
 

@@ -25,8 +25,8 @@
 //!     the constant-γ analysis of Theorem 1 the two readings coincide).
 
 use super::policy::{SyncSchedule, VarSchedule};
-use super::{DistOptimizer, Hyper, LrSchedule, StepInfo};
-use crate::comm::allreduce::{allreduce_mean_eng, EfAllReduce};
+use super::{DistOptimizer, Hyper, LrSchedule, Rounds, StepInfo, StepScratch};
+use crate::comm::allreduce::{allreduce_mean_eng, EfAllReduce, WorkerBufs};
 use crate::coordinator::engine::Engine;
 
 /// One worker's replica state — the unit the engine's local phase
@@ -35,6 +35,19 @@ struct Replica {
     x: Vec<f32>,
     m: Vec<f32>,
     u: Vec<f32>,
+}
+
+/// The replicas' u buffers as an AllReduce input — hands `reduce_eng`
+/// its natural storage without building a `Vec<&[f32]>` per sync.
+struct UBufs<'a>(&'a [Replica]);
+
+impl<'a> WorkerBufs for UBufs<'a> {
+    fn count(&self) -> usize {
+        self.0.len()
+    }
+    fn buf(&self, w: usize) -> &[f32] {
+        &self.0[w].u
+    }
 }
 
 pub struct ZeroOneAdam {
@@ -52,9 +65,7 @@ pub struct ZeroOneAdam {
     pub var_sched: VarSchedule,
     pub sync_sched: SyncSchedule,
     ef: EfAllReduce,
-    // scratch
-    ubar: Vec<f32>,
-    gbar: Vec<f32>,
+    scratch: StepScratch,
 }
 
 impl ZeroOneAdam {
@@ -67,8 +78,6 @@ impl ZeroOneAdam {
         sync_sched: SyncSchedule,
     ) -> Self {
         let d = init.len();
-        let mut rsv = vec![0.0; d];
-        crate::tensor::rsqrt_into(&mut rsv, &vec![0.0; d], hyper.eps);
         ZeroOneAdam {
             reps: (0..n_workers)
                 .map(|_| Replica {
@@ -78,7 +87,9 @@ impl ZeroOneAdam {
                 })
                 .collect(),
             v: vec![0.0; d],
-            rsv,
+            // v = 0 at init, so rsv is the constant 1/√ε — no zero
+            // vector needs materializing just to read it.
+            rsv: vec![1.0 / hyper.eps.sqrt(); d],
             x_anchor: init,
             gamma_accum: 0.0,
             n: n_workers,
@@ -87,8 +98,7 @@ impl ZeroOneAdam {
             var_sched,
             sync_sched,
             ef: EfAllReduce::new(n_workers, d),
-            ubar: vec![0.0; d],
-            gbar: vec![0.0; d],
+            scratch: StepScratch::reduce_and_sync(d),
         }
     }
 
@@ -141,7 +151,8 @@ impl DistOptimizer for ZeroOneAdam {
         assert_eq!(grads.len(), self.n);
         let gamma = self.lr.lr(t) as f32;
         let Hyper { beta1, beta2, eps } = self.hyper;
-        let mut rounds = Vec::with_capacity(2);
+        let d = self.x_anchor.len();
+        let mut rounds = Rounds::none();
 
         // Lines 14–20: adaptive variance update (full-precision round).
         // Performed *first* so the local step divides by a variance that
@@ -150,11 +161,25 @@ impl DistOptimizer for ZeroOneAdam {
         // the very first step).
         let var_updated = self.var_sched.is_update_step(t);
         if var_updated {
-            let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-            let wire = allreduce_mean_eng(&refs, &mut self.gbar, eng);
-            rounds.push(wire);
-            crate::tensor::var_update(&mut self.v, &self.gbar, beta2);
-            crate::tensor::rsqrt_into(&mut self.rsv, &self.v, eps);
+            rounds.push(allreduce_mean_eng(grads, &mut self.scratch.gbar, eng));
+            // Fused v + rsv refresh, chunk-parallel (per-coordinate
+            // independent, so pool scheduling cannot change a bit).
+            let chunk = eng.chunk_len(d);
+            let gbar = &self.scratch.gbar;
+            eng.run_split(
+                d,
+                chunk,
+                (&mut self.v[..], &mut self.rsv[..]),
+                |_ci, off, (vc, rc)| {
+                    let gc = &gbar[off..off + vc.len()];
+                    let c = 1.0 - beta2;
+                    for ((vi, ri), &g) in vc.iter_mut().zip(rc.iter_mut()).zip(gc.iter()) {
+                        let v = beta2 * *vi + c * g * g;
+                        *vi = v;
+                        *ri = 1.0 / (v + eps).sqrt();
+                    }
+                },
+            );
         }
 
         // Lines 3–5: fused local step per worker (the L1 kernel's math:
@@ -163,8 +188,7 @@ impl DistOptimizer for ZeroOneAdam {
         // read-only, so the pool schedule cannot change any bit.
         {
             let rsv = &self.rsv;
-            let items: Vec<&mut Replica> = self.reps.iter_mut().collect();
-            eng.run(items, |w, rep| {
+            eng.run_mut(&mut self.reps[..], |w, rep| {
                 let g = &grads[w];
                 // iterator zip: no bounds checks in the 5-stream loop
                 for ((((xi, mi), ui), &gi), &ri) in rep
@@ -185,15 +209,16 @@ impl DistOptimizer for ZeroOneAdam {
         }
         self.gamma_accum += gamma as f64;
 
-        // Lines 6–12: 1-bit sync. The compress leg is per-worker
-        // (engine-parallel inside reduce_eng); the server reduction and
-        // the anchor update run on the coordinator thread in fixed
-        // order.
+        // Lines 6–12: 1-bit sync. The compress leg is per-worker and
+        // the server reduction chunk-parallel (both inside reduce_eng,
+        // ordered per coordinate); the anchor update and the broadcast
+        // fan out below.
         let synced = self.sync_sched.is_sync_step(t);
         if synced {
-            let refs: Vec<&[f32]> = self.reps.iter().map(|r| r.u.as_slice()).collect();
-            let wire = self.ef.reduce_eng(&refs, &mut self.ubar, eng);
-            rounds.push(wire);
+            {
+                let ZeroOneAdam { reps, ef, scratch, .. } = self;
+                rounds.push(ef.reduce_eng(&UBufs(&reps[..]), &mut scratch.ubar, eng));
+            }
 
             let inv_gsum = if self.gamma_accum > 0.0 {
                 (1.0 / self.gamma_accum) as f32
@@ -201,22 +226,29 @@ impl DistOptimizer for ZeroOneAdam {
                 0.0
             };
             // x_{t+1} = x_{t'} − ū·rsv ;  m_{t+1} = ū / Σγ  (lines 8–9)
-            for ((ub, xa), &ri) in self
-                .ubar
-                .iter_mut()
-                .zip(self.x_anchor.iter_mut())
-                .zip(self.rsv.iter())
+            // — chunk-parallel, per-coordinate independent.
             {
-                *xa -= *ub * ri;
-                *ub *= inv_gsum; // reuse as the new momentum
+                let chunk = eng.chunk_len(d);
+                let rsv = &self.rsv;
+                eng.run_split(
+                    d,
+                    chunk,
+                    (&mut self.scratch.ubar[..], &mut self.x_anchor[..]),
+                    |_ci, off, (ub, xa)| {
+                        let rc = &rsv[off..off + ub.len()];
+                        for ((u, x), &ri) in ub.iter_mut().zip(xa.iter_mut()).zip(rc.iter()) {
+                            *x -= *u * ri;
+                            *u *= inv_gsum; // reuse as the new momentum
+                        }
+                    },
+                );
             }
             // Broadcast back into every replica (pure copies — safe to
             // fan out).
             {
                 let x_anchor = &self.x_anchor;
-                let ubar = &self.ubar;
-                let items: Vec<&mut Replica> = self.reps.iter_mut().collect();
-                eng.run(items, |_, rep| {
+                let ubar = &self.scratch.ubar;
+                eng.run_mut(&mut self.reps[..], |_, rep| {
                     rep.x.copy_from_slice(x_anchor);
                     rep.m.copy_from_slice(ubar);
                     rep.u.iter_mut().for_each(|v| *v = 0.0);

@@ -147,6 +147,27 @@ fn prop_threaded_is_bitwise_sequential_for_every_optimizer() {
 }
 
 #[test]
+fn chunked_server_reduction_is_bitwise_sequential_for_every_family() {
+    // ISSUE 2: the EF server leg is chunk-parallel over fixed
+    // SERVER_CHUNK-coordinate pieces. Dims here cross several chunks
+    // (and sit off the 64-bit codec words), so the ranged accumulate /
+    // sign-pack / finish kernels and the chunk-ordered f64 ‖·‖₁ combine
+    // are all exercised through every optimizer family, end to end
+    // through Trainer::run — params, ledger, trace and clock pinned
+    // bit for bit.
+    let chunk = zo_adam::comm::SERVER_CHUNK;
+    for &d in &[chunk + 1, 2 * chunk + 777, 3 * chunk] {
+        for family in FAMILIES {
+            let mut ga = Gen::new(0x7e57 ^ d as u64);
+            let mut gb = Gen::new(0x7e57 ^ d as u64);
+            let a = run(family, d, 3, 0.01, 8, 41, ExecMode::Sequential, &mut ga);
+            let b = run(family, d, 3, 0.01, 8, 41, ExecMode::Threaded(4), &mut gb);
+            assert_bitwise_equal(&a, &b, &format!("{family} d={d} (multi-chunk)"));
+        }
+    }
+}
+
+#[test]
 fn threaded8_matches_sequential_on_a_longer_zeroone_run() {
     // The acceptance configuration called out in the issue: 8 threads,
     // 8 materialized workers, the paper 0/1 Adam policy shapes.

@@ -1,0 +1,126 @@
+//! Bitwise parity of the fused hot-path codec kernels against naive
+//! references (ISSUE 2 satellite): `accumulate_into`/`accumulate_words`
+//! vs dense decompress + scalar multiply-add, and the fused server
+//! kernels (`fold_err_signs_l1` + `ef_finish_words`) vs the two-pass
+//! `compress_with_error_into` + `decompress_into` path — across
+//! off-word lengths, ±0 scales, negative weights and random sign
+//! patterns.
+
+use zo_adam::comm::compress::{self, OneBit};
+use zo_adam::testkit::{property, Gen};
+
+/// A OneBit with arbitrary (not compression-produced) sign words and
+/// scale — exercises patterns the codec itself would never emit.
+fn arbitrary_onebit(g: &mut Gen, d: usize) -> OneBit {
+    let mut c = OneBit::zeros(d);
+    for w in c.signs.iter_mut() {
+        *w = (g.u64_in(0..u64::MAX) << 1) | g.u64_in(0..2);
+    }
+    c.scale = match g.usize_in(0..6) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => f32::MIN_POSITIVE, // subnormal boundary
+        _ => g.f32_in(1e-6, 3.0),
+    };
+    c
+}
+
+#[test]
+fn prop_accumulate_matches_decompress_scalar_add_bitwise() {
+    property(40, |g: &mut Gen| {
+        let d = g.usize_in(1..300); // straddles the 64-bit words
+        let c = arbitrary_onebit(g, d);
+        let weight = match g.usize_in(0..5) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => -g.f32_in(0.1, 2.0), // negative weights too
+            _ => g.f32_in(1e-3, 2.0),
+        };
+        // Strictly nonzero base: a −0.0 scale (never produced by the
+        // codec, but allowed by the wire format) collapses both signs of
+        // the broadcast to −0.0, and `x + (−0.0)` vs `x + (+0.0)` differ
+        // bitwise only at x = −0.0 exactly.
+        let base = g.vec_f32(d..d + 1, 0.25, 1.75);
+
+        // naive reference: dense decompress, then out += weight * dec
+        let mut dec = vec![0.0f32; d];
+        compress::decompress_into(&c, &mut dec);
+        let mut want = base.clone();
+        for (o, &v) in want.iter_mut().zip(&dec) {
+            *o += weight * v;
+        }
+
+        let mut got = base.clone();
+        compress::accumulate_into(&c, weight, &mut got);
+        for j in 0..d {
+            assert_eq!(
+                got[j].to_bits(),
+                want[j].to_bits(),
+                "d={d} j={j} scale={} weight={weight}",
+                c.scale
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fused_server_kernels_match_two_pass_reference() {
+    property(30, |g: &mut Gen| {
+        let d = g.usize_in(1..520);
+        let acc = g.vec_normal(d..d + 1, 1.0); // the worker-accumulated sum
+        let err = g.vec_normal(d..d + 1, 0.5); // the server error δ̄
+
+        // Reference: s = acc + err materialized, then the two-pass
+        // compress_with_error_into + decompress_into server leg.
+        let s_ref: Vec<f32> = acc.iter().zip(&err).map(|(a, b)| a + b).collect();
+        let mut ref_packed = OneBit::zeros(d);
+        let mut ref_err = err.clone();
+        compress::compress_with_error_into(&s_ref, &mut ref_packed, &mut ref_err);
+        let mut ref_out = vec![0.0f32; d];
+        compress::decompress_into(&ref_packed, &mut ref_out);
+
+        // Fused path, as reduce_eng drives it over one whole-tensor
+        // chunk: fold (accumulate err + sign-pack + L1), combine, finish.
+        let mut s = acc.clone();
+        let mut words = vec![0u64; d.div_ceil(64)];
+        let l1 = compress::fold_err_signs_l1(&mut s, &err, &mut words);
+        let scale = (l1 / d as f64) as f32;
+        assert_eq!(scale.to_bits(), ref_packed.scale.to_bits(), "scale d={d}");
+        assert_eq!(words, ref_packed.signs, "signs d={d}");
+        let mut new_err = vec![0.0f32; d];
+        let mut out = vec![0.0f32; d];
+        compress::ef_finish_words(&s, &words, scale.to_bits(), &mut new_err, &mut out);
+        for j in 0..d {
+            assert_eq!(out[j].to_bits(), ref_out[j].to_bits(), "out d={d} j={j}");
+            assert_eq!(new_err[j].to_bits(), ref_err[j].to_bits(), "err d={d} j={j}");
+        }
+    });
+}
+
+#[test]
+fn prop_accumulate_words_agrees_on_word_aligned_subranges() {
+    // The ranged kernel over [64k, d) must equal the whole-tensor
+    // kernel restricted to that range — the property the chunk-parallel
+    // server leg depends on.
+    property(30, |g: &mut Gen| {
+        let d = g.usize_in(65..700);
+        let c = arbitrary_onebit(g, d);
+        let weight = g.f32_in(0.01, 1.5);
+        let base = g.vec_normal(d..d + 1, 1.0);
+
+        let mut whole = base.clone();
+        compress::accumulate_into(&c, weight, &mut whole);
+
+        let cut_words = g.usize_in(1..d / 64 + 1); // ≥ 1 word offset
+        let cut = cut_words * 64;
+        let mut tail = base[cut..].to_vec();
+        compress::accumulate_words(&c.signs[cut_words..], c.scale, weight, &mut tail);
+        for (j, t) in tail.iter().enumerate() {
+            assert_eq!(
+                t.to_bits(),
+                whole[cut + j].to_bits(),
+                "d={d} cut={cut} j={j}"
+            );
+        }
+    });
+}

@@ -1,0 +1,119 @@
+//! The zero-allocation hot-path invariant (ISSUE 2 tentpole,
+//! DESIGN.md §Hot-path): after construction, `step_engine` performs no
+//! heap allocation for any optimizer family — local steps, variance
+//! rounds and 1-bit syncs included.
+//!
+//! Measured with a counting global allocator on the sequential engine
+//! (pool threads necessarily allocate spawn bookkeeping, which is the
+//! one documented exemption). This file holds a single test so no
+//! concurrent test can perturb the global counter mid-measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use zo_adam::coordinator::Engine;
+use zo_adam::optim::policy::{SyncPolicy, SyncSchedule, VarPolicy, VarSchedule};
+use zo_adam::optim::{
+    Adam, ConstLr, DistOptimizer, FrozenVarAdam, Hyper, MomentumSgd, NaiveOneBitAdam, SignSgd,
+    ZeroOneAdam,
+};
+use zo_adam::tensor::Rng;
+
+#[test]
+fn steady_state_steps_allocate_nothing() {
+    // d crosses two SERVER_CHUNKs and sits off the 64-bit words, so the
+    // chunked EF server leg runs its multi-chunk path.
+    let d = 4096 + 4096 + 137;
+    let n = 3;
+    let h = Hyper::default();
+    let lr = 0.01;
+    let mut rng = Rng::new(42);
+    let grads: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 0.5);
+            v
+        })
+        .collect();
+    let eng = Engine::sequential();
+    let init = vec![0.8f32; d];
+
+    let mut opts: Vec<(&'static str, Box<dyn DistOptimizer>)> = vec![
+        ("adam", Box::new(Adam::new(init.clone(), n, h, Box::new(ConstLr(lr))))),
+        ("momentum-sgd", Box::new(MomentumSgd::new(init.clone(), n, 0.9, Box::new(ConstLr(lr))))),
+        ("signsgd-ef", Box::new(SignSgd::new(init.clone(), n, Box::new(ConstLr(lr))))),
+        (
+            "naive-1bit-adam",
+            Box::new(NaiveOneBitAdam::new(init.clone(), n, h, Box::new(ConstLr(lr)))),
+        ),
+        (
+            "1bit-adam",
+            Box::new(FrozenVarAdam::onebit_adam(init.clone(), n, h, Box::new(ConstLr(lr)), 4)),
+        ),
+        (
+            // Local steps + 1-bit syncs in the measured window.
+            "01adam-local",
+            Box::new(ZeroOneAdam::new(
+                init.clone(),
+                n,
+                h,
+                Box::new(ConstLr(lr)),
+                VarSchedule::new(VarPolicy::Never),
+                SyncSchedule::new(SyncPolicy::Fixed { interval: 3 }),
+            )),
+        ),
+        (
+            // Full-precision variance rounds + 1-bit syncs every step.
+            "01adam-dense",
+            Box::new(ZeroOneAdam::new(
+                init,
+                n,
+                h,
+                Box::new(ConstLr(lr)),
+                VarSchedule::new(VarPolicy::Always),
+                SyncSchedule::new(SyncPolicy::Always),
+            )),
+        ),
+    ];
+
+    for (name, opt) in opts.iter_mut() {
+        // Warm-up: first steps may size internal codec buffers.
+        for t in 0..4u64 {
+            opt.step_engine(t, &grads, &eng);
+        }
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for t in 4..24u64 {
+            opt.step_engine(t, &grads, &eng);
+        }
+        let after = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "{name}: {} allocation(s) in 20 steady-state steps",
+            after - before
+        );
+    }
+}
