@@ -32,9 +32,17 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
     # an existing measured baseline is never overwritten (no silent
     # re-baselining — regenerate deliberately with `zo-adam bench
     # --refresh`).
-    step "zo-adam bench (perf gate vs BENCH_PR2.json)"
+    # Bench trend history (ROADMAP): alongside the long-lived gated
+    # baseline, every PR commits one BENCH_PR<n>.json snapshot of this
+    # run's numbers (always overwritten for the *current* PR index —
+    # bump PR_INDEX when a new PR starts). `zo-adam bench` prints the
+    # cross-snapshot p50/steps-per-s trend at the end of every run, so
+    # drift that stays under the 30% gate is still visible across PRs.
+    PR_INDEX="${PR_INDEX:-3}"
+    step "zo-adam bench (perf gate vs BENCH_PR2.json, history BENCH_PR${PR_INDEX}.json)"
     ZO_BENCH_QUICK=1 cargo run --release --bin zo-adam -- bench --quick \
-        --json BENCH_PR2.json --baseline BENCH_PR2.json --tolerance 0.30
+        --json BENCH_PR2.json --baseline BENCH_PR2.json --tolerance 0.30 \
+        --history "BENCH_PR${PR_INDEX}.json"
 fi
 
 step "ci.sh OK"

@@ -152,23 +152,36 @@ impl PerfReport {
     /// and also exists here must satisfy
     /// `fresh.p50_ns <= baseline.p50_ns * (1 + tolerance)` — the gate
     /// runs on medians, which are far more stable than means on shared
-    /// CI hosts. Returns the human-readable violations; empty = gate
-    /// passed.
+    /// CI hosts.
+    ///
+    /// Baseline entries with **no fresh counterpart** are surfaced in
+    /// [`GateOutcome::missing`] (ISSUE 3): a renamed or dropped `step/`
+    /// bench used to silently disarm its own gate — only `main.rs`
+    /// happened to print a warning — so the library method itself now
+    /// reports them to every caller.
     pub fn regressions_vs(
         &self,
         baseline: &PerfReport,
         prefix: &str,
         tolerance: f64,
-    ) -> Vec<String> {
-        let mut out = Vec::new();
+    ) -> GateOutcome {
+        let mut out = GateOutcome::default();
         if baseline.bootstrap {
             return out;
         }
         for base in baseline.entries.iter().filter(|e| e.name.starts_with(prefix)) {
-            let Some(fresh) = self.entry(&base.name) else { continue };
+            let Some(fresh) = self.entry(&base.name) else {
+                out.missing.push(format!(
+                    "{}: baseline entry has no fresh counterpart — a renamed/dropped bench \
+                     disarms its own gate (regenerate the baseline with --refresh)",
+                    base.name
+                ));
+                continue;
+            };
+            out.compared += 1;
             let limit = base.p50_ns * (1.0 + tolerance);
             if fresh.p50_ns > limit {
-                out.push(format!(
+                out.violations.push(format!(
                     "{}: p50 {:.0} ns vs baseline {:.0} ns (+{:.1}% > +{:.0}% allowed)",
                     base.name,
                     fresh.p50_ns,
@@ -180,6 +193,59 @@ impl PerfReport {
         }
         out
     }
+}
+
+/// Outcome of [`PerfReport::regressions_vs`]: hard failures plus the
+/// warnings no caller may silently drop.
+#[derive(Debug, Clone, Default)]
+pub struct GateOutcome {
+    /// Entries whose fresh p50 regressed beyond tolerance — the gate
+    /// fails iff this is non-empty.
+    pub violations: Vec<String>,
+    /// Baseline entries (matching the prefix) that have no fresh
+    /// counterpart: the gate could not check them at all.
+    pub missing: Vec<String>,
+    /// Baseline entries actually compared.
+    pub compared: usize,
+}
+
+impl GateOutcome {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Parse a per-PR bench-history filename (`BENCH_PR{n}.json`) into its
+/// PR index.
+pub fn history_index(file_name: &str) -> Option<u32> {
+    let digits = file_name.strip_prefix("BENCH_PR")?.strip_suffix(".json")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Load every measured `BENCH_PR{n}.json` in `dir` ("" = cwd), sorted
+/// by PR index — the bench trend history behind `zo-adam bench
+/// --history/--trend` (ROADMAP: drift below the gate tolerance is
+/// invisible to the gate but visible across PR snapshots). Bootstrap
+/// stubs and unparsable files are skipped.
+pub fn load_history(dir: &str) -> Vec<(u32, PerfReport)> {
+    let dir = if dir.is_empty() { "." } else { dir };
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else { return out };
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(n) = history_index(name) else { continue };
+        if let Ok(r) = PerfReport::load(&e.path().to_string_lossy()) {
+            if !r.bootstrap {
+                out.push((n, r));
+            }
+        }
+    }
+    out.sort_by_key(|(n, _)| *n);
+    out
 }
 
 #[cfg(test)]
@@ -224,9 +290,12 @@ mod tests {
         fresh.entries.push(entry("step/a", 1200.0)); // +20% — inside 30%
         fresh.entries.push(entry("step/b", 1500.0)); // +50% — violation
         fresh.entries.push(entry("codec/c", 9000.0)); // wrong prefix
-        let viol = fresh.regressions_vs(&base, "step/", 0.30);
-        assert_eq!(viol.len(), 1);
-        assert!(viol[0].starts_with("step/b"));
+        let gate = fresh.regressions_vs(&base, "step/", 0.30);
+        assert!(!gate.passed());
+        assert_eq!(gate.violations.len(), 1);
+        assert!(gate.violations[0].starts_with("step/b"));
+        assert_eq!(gate.compared, 2);
+        assert!(gate.missing.is_empty());
     }
 
     #[test]
@@ -236,15 +305,73 @@ mod tests {
         base.entries.push(entry("step/a", 1.0));
         let mut fresh = PerfReport::new();
         fresh.entries.push(entry("step/a", 1e9));
-        assert!(fresh.regressions_vs(&base, "step/", 0.3).is_empty());
+        let gate = fresh.regressions_vs(&base, "step/", 0.3);
+        assert!(gate.passed());
+        assert!(gate.missing.is_empty());
+        assert_eq!(gate.compared, 0);
     }
 
     #[test]
-    fn missing_and_extra_entries_are_ignored() {
+    fn gate_surfaces_missing_baseline_entries() {
+        // ISSUE 3 regression: a baseline entry whose bench was renamed
+        // or dropped used to `continue` silently — the gate reported OK
+        // with nothing checked. The library now returns the gap; only
+        // extra fresh-only entries stay invisible (they'll be gated
+        // once a baseline containing them is committed).
         let mut base = PerfReport::new();
         base.entries.push(entry("step/gone", 1.0));
+        base.entries.push(entry("step/kept", 1000.0));
         let mut fresh = PerfReport::new();
-        fresh.entries.push(entry("step/new", 1e9));
-        assert!(fresh.regressions_vs(&base, "step/", 0.3).is_empty());
+        fresh.entries.push(entry("step/kept", 1000.0));
+        fresh.entries.push(entry("step/new", 1e9)); // fresh-only: fine
+        let gate = fresh.regressions_vs(&base, "step/", 0.3);
+        assert!(gate.passed(), "missing entries warn, they don't fail the gate");
+        assert_eq!(gate.compared, 1);
+        assert_eq!(gate.missing.len(), 1);
+        assert!(gate.missing[0].starts_with("step/gone"));
+
+        // every baseline entry missing ⇒ nothing compared, loudly
+        let empty = PerfReport::new().regressions_vs(&base, "step/", 0.3);
+        assert!(empty.passed());
+        assert_eq!(empty.compared, 0);
+        assert_eq!(empty.missing.len(), 2);
+    }
+
+    #[test]
+    fn history_filenames_parse_strictly() {
+        assert_eq!(history_index("BENCH_PR2.json"), Some(2));
+        assert_eq!(history_index("BENCH_PR31.json"), Some(31));
+        assert_eq!(history_index("BENCH_PR.json"), None);
+        assert_eq!(history_index("BENCH_PRx.json"), None);
+        assert_eq!(history_index("BENCH_PR2.json.bak"), None);
+        assert_eq!(history_index("bench_pr2.json"), None);
+        assert_eq!(history_index("BENCH_PR2"), None);
+    }
+
+    #[test]
+    fn history_loads_measured_snapshots_in_pr_order() {
+        let dir = std::env::temp_dir().join(format!("zo_hist_test_{}", std::process::id()));
+        let dir_s = dir.to_string_lossy().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let mut r3 = PerfReport::new();
+        r3.entries.push(entry("step/a", 3000.0));
+        r3.write(&format!("{dir_s}/BENCH_PR3.json")).unwrap();
+        let mut r2 = PerfReport::new();
+        r2.entries.push(entry("step/a", 2000.0));
+        r2.write(&format!("{dir_s}/BENCH_PR2.json")).unwrap();
+        let mut stub = PerfReport::new();
+        stub.bootstrap = true;
+        stub.write(&format!("{dir_s}/BENCH_PR9.json")).unwrap();
+        std::fs::write(format!("{dir_s}/BENCH_PRjunk.json"), "{}").unwrap();
+
+        let hist = load_history(&dir_s);
+        assert_eq!(hist.len(), 2, "stub + junk skipped");
+        assert_eq!(hist[0].0, 2);
+        assert_eq!(hist[1].0, 3);
+        assert_eq!(hist[1].1.entry("step/a").unwrap().p50_ns, 3000.0);
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

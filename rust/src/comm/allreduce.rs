@@ -18,12 +18,13 @@
 use super::compress::{self, OneBit};
 use crate::coordinator::engine::{Blocks, Engine};
 
-/// Fixed coordinate-chunk size for the EF server leg (a multiple of 64
-/// so packed sign words never straddle a chunk). Mode-independent by
+/// Fixed coordinate-chunk size for the EF server leg *and* the chunked
+/// worker lanes — the codec's [`compress::CODEC_CHUNK`] (a multiple of
+/// 64 so packed sign words never straddle a chunk). Mode-independent by
 /// design: sequential and threaded runs visit the *same* chunks in the
 /// same per-chunk order, which is what keeps the chunked f64 ‖·‖₁
-/// reduction bitwise reproducible (DESIGN.md §Hot-path).
-pub const SERVER_CHUNK: usize = 4096;
+/// reductions bitwise reproducible (DESIGN.md §Hot-path).
+pub const SERVER_CHUNK: usize = compress::CODEC_CHUNK;
 
 /// Read-only access to the n per-worker upload buffers of one round.
 ///
@@ -116,6 +117,11 @@ struct Lane {
     err: Vec<f32>,
     /// This worker's packed upload ẑᵢ (scratch, refilled per round).
     packed: OneBit,
+    /// Per-chunk f64 ‖·‖₁ partials of this lane's compress leg,
+    /// combined in chunk order (the fixed-chunk codec association) —
+    /// only written by the lane-chunked schedule, sized once at
+    /// construction so the hot path never allocates.
+    chunk_l1: Vec<f64>,
 }
 
 /// Error-feedback 1-bit AllReduce (Algorithm 2).
@@ -125,8 +131,9 @@ struct Lane {
 /// across every call for the rest of training (Appendix A).
 ///
 /// All scratch is pre-allocated at construction: the hot path performs
-/// zero heap allocation (beyond thread-spawn bookkeeping in
-/// `ExecMode::Threaded` — see DESIGN.md §Hot-path).
+/// zero heap allocation in **both** execution modes — the engine's
+/// persistent pool removed the old per-region thread-spawn exemption
+/// (DESIGN.md §Hot-path, `tests/zero_alloc.rs`).
 pub struct EfAllReduce {
     n: usize,
     d: usize,
@@ -146,7 +153,11 @@ impl EfAllReduce {
             n,
             d,
             lanes: (0..n)
-                .map(|_| Lane { err: vec![0.0; d], packed: OneBit::zeros(d) })
+                .map(|_| Lane {
+                    err: vec![0.0; d],
+                    packed: OneBit::zeros(d),
+                    chunk_l1: vec![0.0; d.div_ceil(SERVER_CHUNK)],
+                })
                 .collect(),
             server_err: vec![0.0; d],
             sum: vec![0.0; d],
@@ -172,9 +183,14 @@ impl EfAllReduce {
     /// One EF-1bit round: `out` receives the twice-compressed mean that
     /// every worker observes (they all see identical bytes).
     ///
-    /// Phase 1 (per worker, engine-parallel): ẑᵢ = C[zᵢ + δᵢ] and
-    /// δᵢ ← zᵢ + δᵢ − ẑᵢ — each lane touches only its own state
-    /// (the fused kernel `compress::compress_ef_into`).
+    /// Phase 1 (engine-parallel): ẑᵢ = C[zᵢ + δᵢ] and
+    /// δᵢ ← zᵢ + δᵢ − ẑᵢ — each lane touches only its own state.
+    /// Scheduled over whole lanes (the fused `compress_ef_into`) when
+    /// there are enough lanes to fill the pool, or coordinate-chunked
+    /// *inside* each lane (the range kernels + per-lane `chunk_l1`
+    /// partials) when cores outnumber the materialized workers; the
+    /// codec's fixed-chunk scale association makes both schedules — and
+    /// the sequential path — bitwise identical.
     ///
     /// Phase 2 (chunk-parallel over coordinates, DESIGN.md §Hot-path):
     /// z̄ = C[(1/n) Σ ẑᵢ + δ̄]; δ̄ ← … − z̄; broadcast z̄. Every
@@ -196,12 +212,59 @@ impl EfAllReduce {
         let d = self.d;
         let n = self.n;
 
-        // Phase 1: fused per-worker compress + error update.
-        eng.run_mut(&mut self.lanes[..], |w, lane| {
-            let buf = bufs.buf(w);
-            debug_assert_eq!(buf.len(), d);
-            compress::compress_ef_into(buf, &mut lane.err, &mut lane.packed);
-        });
+        // Phase 1: fused per-worker compress + error update. Two
+        // schedules, one bit pattern: the codec's fixed-chunk scale
+        // association (compress::CODEC_CHUNK) makes the result
+        // independent of how the (lane × chunk) work grid is walked, so
+        // the engine may parallelize over whole lanes — enough lanes to
+        // fill the pool — or coordinate-chunk *inside* each lane when
+        // materialized workers are scarcer than cores (ROADMAP's lane
+        // chunking), without breaking seq/threaded parity
+        // (`ef_lane_chunked_path_is_bitwise_identical`). The chunked
+        // schedule walks lanes serially (two regions per lane), so it
+        // only wins when lanes leave at least half the pool idle —
+        // at n just under the pool width the whole-lane schedule's
+        // single region beats 2n publish–barrier cycles.
+        if !eng.is_parallel() || n * 2 > eng.threads() {
+            eng.run_mut(&mut self.lanes[..], |w, lane| {
+                let buf = bufs.buf(w);
+                debug_assert_eq!(buf.len(), d);
+                compress::compress_ef_into(buf, &mut lane.err, &mut lane.packed);
+            });
+        } else {
+            for (w, lane) in self.lanes.iter_mut().enumerate() {
+                let buf = bufs.buf(w);
+                debug_assert_eq!(buf.len(), d);
+                lane.packed.len = d;
+                // sized at construction; a steady-state no-op
+                lane.packed.signs.resize(d.div_ceil(64), 0);
+                // pass 1, chunk-parallel: s = z + δ stash, sign pack,
+                // per-chunk f64 ‖·‖₁ partial
+                eng.run_split(
+                    d,
+                    SERVER_CHUNK,
+                    (
+                        &mut lane.err[..],
+                        Blocks::new(&mut lane.packed.signs[..], 64),
+                        Blocks::new(&mut lane.chunk_l1[..], SERVER_CHUNK),
+                    ),
+                    |_ci, off, (ec, signs, part)| {
+                        part.data[0] =
+                            compress::ef_fold_signs_l1(&buf[off..off + ec.len()], ec, signs.data);
+                    },
+                );
+                // chunk-order combine — the exact association
+                // compress_ef_into uses sequentially
+                let l1: f64 = lane.chunk_l1.iter().sum();
+                lane.packed.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
+                // pass 2, chunk-parallel: δ ← s − (±scale)
+                let scale_bits = lane.packed.scale.to_bits();
+                let signs_ro: &[u64] = &lane.packed.signs;
+                eng.run_split(d, SERVER_CHUNK, &mut lane.err[..], |_ci, off, ec: &mut [f32]| {
+                    compress::ef_err_finish_words(ec, &signs_ro[off / 64..], scale_bits);
+                });
+            }
+        }
 
         // Phase 2a: per chunk — ordered worker accumulation, + δ̄,
         // sign-pack, f64 ‖·‖₁ partial. One streamed pass per chunk.
@@ -404,6 +467,42 @@ mod tests {
             assert_eq!(seq.server_err, thr.server_err, "round {round}");
             for w in 0..n {
                 assert_eq!(seq.worker_err(w), thr.worker_err(w), "round {round} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn ef_lane_chunked_path_is_bitwise_identical() {
+        // ISSUE 3 lane chunking: with fewer materialized workers than
+        // pool threads the compress leg runs coordinate-chunked inside
+        // each lane; with n ≥ threads it runs over whole lanes; and the
+        // sequential path takes the fused whole-lane kernel. All three
+        // schedules must agree bit for bit on a multi-chunk tensor —
+        // error state evolution across rounds included.
+        for &n in &[1usize, 2] {
+            let d = 2 * SERVER_CHUNK + 777;
+            let mut seq = EfAllReduce::new(n, d);
+            let mut chunked = EfAllReduce::new(n, d); // 2n ≤ 6 threads → lane-chunked
+            let mut by_lane = EfAllReduce::new(n, d); // 2n > threads → whole lanes
+            let eng_wide = Engine::new(ExecMode::Threaded(6));
+            let eng_narrow = Engine::new(ExecMode::with_threads(n.min(2)));
+            let mut out_s = vec![0.0f32; d];
+            let mut out_c = vec![0.0f32; d];
+            let mut out_l = vec![0.0f32; d];
+            for round in 0..6 {
+                let bufs = rand_bufs(n, d, 3300 + round);
+                let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+                seq.reduce(&refs, &mut out_s);
+                chunked.reduce_eng(&refs, &mut out_c, &eng_wide);
+                by_lane.reduce_eng(&refs, &mut out_l, &eng_narrow);
+                for j in 0..d {
+                    assert_eq!(out_s[j].to_bits(), out_c[j].to_bits(), "n={n} r={round} j={j}");
+                    assert_eq!(out_s[j].to_bits(), out_l[j].to_bits(), "n={n} r={round} j={j}");
+                }
+                for w in 0..n {
+                    assert_eq!(seq.worker_err(w), chunked.worker_err(w), "n={n} r={round} w={w}");
+                }
+                assert_eq!(seq.server_err, chunked.server_err, "n={n} r={round}");
             }
         }
     }

@@ -5,8 +5,24 @@
 //! the signs are packed 64-per-u64 (bit set ⇔ non-negative, matching
 //! `sign(0) = +1` in the Python reference and Pallas kernel).
 //!
+//! **Scale association (ISSUE 3).** Every ‖·‖₁ scale in this module is
+//! accumulated the same fixed-chunk way: f32 within each 64-element
+//! block, f64 across blocks *within a [`CODEC_CHUNK`]-coordinate
+//! chunk*, and the per-chunk f64 partials combined in chunk-index
+//! order. The association depends only on the tensor length — never on
+//! the execution mode or schedule — so any range-parallel evaluation
+//! (the engine's lane chunking, the chunked EF server leg) reproduces
+//! the sequential scale bit for bit (`tests/kernel_parity.rs`).
+//!
 //! Also provides the TernGrad-style ternary codec and a top-k sparsifier
 //! used by the related-work ablation benches.
+
+/// Fixed coordinate-chunk size of the codec's ‖·‖₁ accumulation (and,
+/// as `comm::SERVER_CHUNK`, of the EF server leg): a multiple of 64 so
+/// packed sign words never straddle a chunk, small enough that a chunk
+/// of f32s sits in L1/L2, large enough that the f64 partial store is
+/// noise. Mode-independent **by design** — see the module docs.
+pub const CODEC_CHUNK: usize = 4096;
 
 /// Packed 1-bit tensor: sign bitmap + shared magnitude.
 #[derive(Debug, Clone, PartialEq)]
@@ -39,10 +55,27 @@ pub fn compress_into(src: &[f32], dst: &mut OneBit) {
     // resize only (no clear): every word is overwritten below, and
     // skipping the memset keeps one redundant stream off the hot path.
     dst.signs.resize(d.div_ceil(64), 0);
-    // ‖·‖₁ accumulates in f32 within each 64-element chunk (exact
-    // enough) and in f64 across chunks (no drift at d ~ 10^8).
+    // Fixed-chunk ‖·‖₁ (module docs): f32 within each 64-element block
+    // (exact enough), f64 across blocks within a CODEC_CHUNK, partials
+    // combined in chunk order (no drift at d ~ 10^8, and the same
+    // association every range-parallel caller uses).
     let mut l1 = 0.0f64;
-    for (w, chunk) in src.chunks(64).enumerate() {
+    for (sc, wc) in src.chunks(CODEC_CHUNK).zip(dst.signs.chunks_mut(CODEC_CHUNK / 64)) {
+        l1 += pack_signs_l1(sc, wc);
+    }
+    dst.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
+}
+
+/// Sign-pack one coordinate range and return its f64 ‖·‖₁ partial (f32
+/// within each 64-element block, f64 across blocks). The range form of
+/// [`compress_into`]'s first pass: chunked callers hand ranges of at
+/// most [`CODEC_CHUNK`] coordinates and combine the partials in chunk
+/// order. `signs_out` must hold exactly `ceil(src.len()/64)` words and
+/// `src` must start on a 64-coordinate boundary of the logical tensor.
+pub fn pack_signs_l1(src: &[f32], signs_out: &mut [u64]) -> f64 {
+    debug_assert_eq!(signs_out.len(), src.len().div_ceil(64));
+    let mut l1 = 0.0f64;
+    for (word_slot, chunk) in signs_out.iter_mut().zip(src.chunks(64)) {
         let mut word = 0u64;
         let mut csum = 0.0f32;
         for (b, &v) in chunk.iter().enumerate() {
@@ -51,9 +84,9 @@ pub fn compress_into(src: &[f32], dst: &mut OneBit) {
             word |= ((v >= 0.0) as u64) << b;
         }
         l1 += csum as f64;
-        dst.signs[w] = word;
+        *word_slot = word;
     }
-    dst.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
+    l1
 }
 
 pub fn compress(src: &[f32]) -> OneBit {
@@ -132,12 +165,16 @@ pub fn compress_with_error_into(src: &[f32], dst: &mut OneBit, err: &mut [f32]) 
 /// Fused worker-lane kernel: ẑ = C[z + δ] packed into `dst` and
 /// δ ← (z + δ) − ẑ, in two word-blocked streams.
 ///
-/// Pass 1 computes s = z + δ inline, stashes it into `err`, packs the
-/// sign bits and accumulates ‖s‖₁ (f32 within each 64-block, f64 across
-/// blocks); pass 2 finishes δ ← s − (±scale) touching only `err`. The
-/// stash is exact (an f32 store), so the result is bitwise identical to
-/// the unfused `compress_into` + re-read error update while streaming
-/// one fewer array through the cache on the second pass.
+/// Pass 1 ([`ef_fold_signs_l1`] per codec chunk) computes s = z + δ
+/// inline, stashes it into `err`, packs the sign bits and accumulates
+/// the fixed-chunk ‖s‖₁ (module docs); pass 2 ([`ef_err_finish_words`])
+/// finishes δ ← s − (±scale) touching only `err`. The stash is exact
+/// (an f32 store), so the result is bitwise identical to the unfused
+/// `compress_into` + re-read error update while streaming one fewer
+/// array through the cache on the second pass — and, because the scale
+/// association is fixed-chunk, bitwise identical to the engine's
+/// chunk-parallel evaluation of the same two passes
+/// (`EfAllReduce::reduce_eng`'s lane-chunked schedule).
 pub fn compress_ef_into(z: &[f32], err: &mut [f32], dst: &mut OneBit) {
     let d = z.len();
     assert_eq!(err.len(), d);
@@ -145,25 +182,53 @@ pub fn compress_ef_into(z: &[f32], err: &mut [f32], dst: &mut OneBit) {
     // resize only (no clear): the pack loop writes every word slot.
     dst.signs.resize(d.div_ceil(64), 0);
     let mut l1 = 0.0f64;
-    for ((word_slot, zc), ec) in dst.signs.iter_mut().zip(z.chunks(64)).zip(err.chunks_mut(64)) {
+    for ((zc, ec), wc) in z
+        .chunks(CODEC_CHUNK)
+        .zip(err.chunks_mut(CODEC_CHUNK))
+        .zip(dst.signs.chunks_mut(CODEC_CHUNK / 64))
+    {
+        l1 += ef_fold_signs_l1(zc, ec, wc);
+    }
+    dst.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
+    ef_err_finish_words(err, &dst.signs, dst.scale.to_bits());
+}
+
+/// Fused worker-lane pass 1, range form (one codec chunk of
+/// [`compress_ef_into`]): s[i] = z[i] + err[i] stashed back into
+/// `err`, sign bits packed into `signs_out`, returns the f64 ‖s‖₁
+/// partial of the range (f32 within each 64-block, f64 across blocks —
+/// the fixed-chunk association of the module docs). `signs_out` must
+/// hold exactly `ceil(z.len()/64)` words and `z` must start on a
+/// 64-coordinate boundary of the logical tensor.
+pub fn ef_fold_signs_l1(z: &[f32], err: &mut [f32], signs_out: &mut [u64]) -> f64 {
+    debug_assert_eq!(z.len(), err.len());
+    debug_assert_eq!(signs_out.len(), z.len().div_ceil(64));
+    let mut l1 = 0.0f64;
+    for ((word_slot, zc), ec) in signs_out.iter_mut().zip(z.chunks(64)).zip(err.chunks_mut(64)) {
         let mut word = 0u64;
         let mut csum = 0.0f32;
         for (b, (&zi, e)) in zc.iter().zip(ec.iter_mut()).enumerate() {
             let s = zi + *e;
-            *e = s; // stash; finished in pass 2 once the scale is known
+            *e = s; // stash; finished by ef_err_finish_words once the scale is known
             csum += s.abs();
             word |= ((s >= 0.0) as u64) << b;
         }
         l1 += csum as f64;
         *word_slot = word;
     }
-    dst.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
-    let s_bits = dst.scale.to_bits();
-    for (word, ec) in dst.signs.iter().zip(err.chunks_mut(64)) {
+    l1
+}
+
+/// Fused worker-lane pass 2, range form: δ ← s − (±scale), with s read
+/// from the stash [`ef_fold_signs_l1`] left in `err`. Per-coordinate
+/// independent, so ranges may be cut at any word boundary; `signs` may
+/// extend past the range (extra words are ignored).
+pub fn ef_err_finish_words(err: &mut [f32], signs: &[u64], scale_bits: u32) {
+    for (word, ec) in signs.iter().zip(err.chunks_mut(64)) {
         let word = *word;
         for (b, e) in ec.iter_mut().enumerate() {
             let neg = (!(word >> b) & 1) as u32;
-            *e -= f32::from_bits(s_bits | (neg << 31));
+            *e -= f32::from_bits(scale_bits | (neg << 31));
         }
     }
 }
@@ -171,10 +236,11 @@ pub fn compress_ef_into(z: &[f32], err: &mut [f32], dst: &mut OneBit) {
 /// Fused server pass 1 (per coordinate chunk): s[i] += err[i], pack the
 /// sign bits of the result into `signs_out`, and return the f64 ‖s‖₁
 /// partial for this range (f32 within each 64-block, f64 across blocks
-/// — the same association `compress_into` uses, so a single-chunk call
-/// over a whole tensor reproduces its scale exactly). `signs_out` must
-/// hold exactly `ceil(s.len()/64)` words and `s` must start on a
-/// 64-coordinate boundary of the logical tensor.
+/// — the fixed-chunk association of the module docs, so chunk-ordered
+/// combination of `CODEC_CHUNK`-range partials reproduces
+/// `compress_into`'s scale exactly). `signs_out` must hold exactly
+/// `ceil(s.len()/64)` words and `s` must start on a 64-coordinate
+/// boundary of the logical tensor.
 pub fn fold_err_signs_l1(s: &mut [f32], err: &[f32], signs_out: &mut [u64]) -> f64 {
     debug_assert_eq!(s.len(), err.len());
     debug_assert_eq!(signs_out.len(), s.len().div_ceil(64));
@@ -253,14 +319,21 @@ pub fn ternary_wire_bytes(d: usize) -> usize {
 
 /// Top-k sparsification: keep the k largest-|.| coordinates.
 /// Wire: k * (4B index + 4B value).
+///
+/// Total-order comparison (ISSUE 3): `total_cmp` ranks NaN above every
+/// finite magnitude, so NaN gradients are kept — and surfaced to the
+/// caller — instead of panicking mid-selection the way
+/// `partial_cmp().unwrap()` did. `k == 0` (and an empty `src`, which
+/// used to panic inside `select_nth`) short-circuits to an empty keep
+/// set.
 pub fn topk_compress(src: &[f32], k: usize) -> Vec<(u32, f32)> {
-    let mut idx: Vec<u32> = (0..src.len() as u32).collect();
     let k = k.min(src.len());
-    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
-        src[b as usize]
-            .abs()
-            .partial_cmp(&src[a as usize].abs())
-            .unwrap()
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..src.len() as u32).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        src[b as usize].abs().total_cmp(&src[a as usize].abs())
     });
     idx.truncate(k);
     idx.iter().map(|&i| (i, src[i as usize])).collect()
@@ -372,6 +445,83 @@ mod tests {
         kept.sort_by_key(|&(i, _)| i);
         assert_eq!(kept, vec![(1, -5.0), (3, 3.0)]);
         assert_eq!(topk_wire_bytes(2), 16);
+    }
+
+    #[test]
+    fn topk_handles_nan_and_degenerate_k() {
+        // NaN used to panic via partial_cmp().unwrap(); total_cmp ranks
+        // |NaN| above every finite magnitude, so it is kept (and thereby
+        // surfaced to the caller) rather than aborting the ablation run.
+        let src = vec![1.0f32, f32::NAN, -3.0, 0.5];
+        let kept = topk_compress(&src, 2);
+        assert_eq!(kept.len(), 2);
+        assert!(kept.iter().any(|&(i, v)| i == 1 && v.is_nan()), "NaN coordinate kept");
+        assert!(kept.iter().any(|&(i, v)| i == 2 && v == -3.0), "largest finite kept");
+
+        // k = 0 used to run a pointless select_nth over the whole slice;
+        // an empty src with k > 0 used to panic inside select_nth.
+        assert!(topk_compress(&src, 0).is_empty());
+        assert!(topk_compress(&[], 3).is_empty());
+        assert!(topk_compress(&[], 0).is_empty());
+
+        // k ≥ len keeps everything
+        let mut all = topk_compress(&[1.0, -2.0], 10);
+        all.sort_by_key(|&(i, _)| i);
+        assert_eq!(all, vec![(0, 1.0), (1, -2.0)]);
+        // all-NaN input is total-ordered too (no panic)
+        assert_eq!(topk_compress(&[f32::NAN, f32::NAN], 1).len(), 1);
+    }
+
+    #[test]
+    fn chunked_scale_association_is_rangewise() {
+        // The ISSUE 3 property every range-parallel codec caller relies
+        // on: computing per-CODEC_CHUNK partials independently and
+        // combining them in chunk order reproduces the whole-tensor
+        // scale (and signs) bit for bit — including on multi-chunk
+        // tensors with ragged word/chunk tails.
+        let mut rng = Rng::new(21);
+        for &d in &[1usize, 63, CODEC_CHUNK - 1, CODEC_CHUNK, 2 * CODEC_CHUNK + 777] {
+            let mut src = vec![0.0f32; d];
+            rng.fill_normal(&mut src, 1.0);
+            let whole = compress(&src);
+
+            let mut words = vec![0u64; d.div_ceil(64)];
+            let mut l1 = 0.0f64;
+            for start in (0..d).step_by(CODEC_CHUNK) {
+                let end = (start + CODEC_CHUNK).min(d);
+                l1 += pack_signs_l1(&src[start..end], &mut words[start / 64..end.div_ceil(64)]);
+            }
+            assert_eq!(((l1 / d as f64) as f32).to_bits(), whole.scale.to_bits(), "d={d}");
+            assert_eq!(words, whole.signs, "d={d}");
+        }
+    }
+
+    #[test]
+    fn fused_ef_matches_unfused_bitwise_across_chunks() {
+        // Multi-chunk companion of fused_ef_matches_unfused_bitwise:
+        // the fixed-chunk scale association makes the fused kernel and
+        // the two-pass compress_into path agree bit for bit *past* the
+        // first CODEC_CHUNK too.
+        let mut rng = Rng::new(14);
+        for &d in &[CODEC_CHUNK + 1, 2 * CODEC_CHUNK + 777, 3 * CODEC_CHUNK] {
+            let mut z = vec![0.0f32; d];
+            let mut err = vec![0.0f32; d];
+            rng.fill_normal(&mut z, 1.0);
+            rng.fill_normal(&mut err, 0.3);
+
+            let s: Vec<f32> = z.iter().zip(&err).map(|(a, b)| a + b).collect();
+            let mut ref_packed = OneBit::zeros(d);
+            let mut ref_err = vec![0.0f32; d];
+            compress_with_error_into(&s, &mut ref_packed, &mut ref_err);
+
+            let mut packed = OneBit::zeros(d);
+            compress_ef_into(&z, &mut err, &mut packed);
+            assert_eq!(packed.scale.to_bits(), ref_packed.scale.to_bits(), "d={d}");
+            assert_eq!(packed.signs, ref_packed.signs, "d={d}");
+            for j in 0..d {
+                assert_eq!(err[j].to_bits(), ref_err[j].to_bits(), "d={d} j={j}");
+            }
+        }
     }
 
     #[test]

@@ -18,9 +18,25 @@
 //! * accumulations that cross chunk boundaries in f64 (codec scales,
 //!   norms) stay inside a single item.
 //!
-//! Threads are scoped (`std::thread::scope`) so items may borrow the
-//! optimizer's state without `'static` gymnastics; the scope joins all
-//! workers before returning, making each parallel region a barrier.
+//! Threads live in a **persistent pool** owned by the engine
+//! ([`super::pool`]): built once at [`Engine::new`] (or on the first
+//! parallel region), parked on a condvar between regions. Each
+//! `run_mut`/`run_split` region is a publish–work–barrier cycle — the
+//! coordinator carves per-thread blocks into stack descriptors, hands
+//! the pool type-erased pointers, works the first block itself, and
+//! blocks until the pool drains. The barrier is what lets blocks
+//! borrow the optimizer's state without `'static` gymnastics, exactly
+//! like the scoped threads the pool replaced — but with zero
+//! steady-state allocation and no per-region spawn cost
+//! (`tests/zero_alloc.rs` counts the threaded mode too).
+
+use super::pool::{self, Pool, Task};
+use std::sync::OnceLock;
+
+/// Widest pool an [`Engine`] will build; `ExecMode::Threaded(n)` is
+/// clamped here at engine construction (block descriptors for a region
+/// live in a fixed-size stack array).
+pub const MAX_POOL_THREADS: usize = pool::MAX_THREADS;
 
 /// How the trainer and optimizers schedule per-worker work.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,20 +80,33 @@ impl ExecMode {
     }
 }
 
-/// The execution engine: a fixed-width scoped-thread pool.
-#[derive(Debug, Clone, Copy)]
+/// The execution engine: a fixed-width **persistent** thread pool.
+///
+/// Owning the pool makes the engine a resource handle, not a `Copy`
+/// token: build one per run (the trainer does) and pass it by
+/// reference. Dropping the engine parks, wakes and joins its workers.
+#[derive(Debug)]
 pub struct Engine {
     threads: usize,
+    /// The persistent pool of `threads − 1` workers (the coordinator
+    /// is the extra lane). Empty and never built for sequential
+    /// engines; built eagerly by [`Engine::new`] for threaded modes so
+    /// construction — not the first hot region — pays the spawn cost.
+    pool: OnceLock<Pool>,
 }
 
 impl Engine {
     pub fn new(mode: ExecMode) -> Self {
-        Engine { threads: mode.threads() }
+        let eng = Engine { threads: mode.threads().min(MAX_POOL_THREADS), pool: OnceLock::new() };
+        if eng.threads > 1 {
+            let _ = eng.pool.set(Pool::new(eng.threads - 1));
+        }
+        eng
     }
 
     /// The single-thread engine used by every legacy `step()` call.
     pub const fn sequential() -> Self {
-        Engine { threads: 1 }
+        Engine { threads: 1, pool: OnceLock::new() }
     }
 
     pub fn threads(&self) -> usize {
@@ -133,7 +162,8 @@ impl Engine {
     /// partials, written through a [`Blocks`] part) can therefore be
     /// combined in chunk-index order by the caller with bitwise-equal
     /// results under any pool width. Zero allocation: blocks are carved
-    /// by consuming `split_parts`, never collected.
+    /// by consuming `split_parts` into stack descriptors, never
+    /// collected; the pool is reused across regions.
     pub fn run_split<S, F>(&self, len: usize, chunk: usize, parts: S, f: F)
     where
         S: Split,
@@ -144,6 +174,16 @@ impl Engine {
             return;
         }
         let n_chunks = len.div_ceil(chunk);
+        if n_chunks > 1 {
+            // The split/gate invariant, validated once per region with
+            // a hard assert (release builds included): every non-final
+            // split lands on a `chunk` boundary, so any part with
+            // coarser-than-coordinate granularity must divide it — a
+            // misaligned [`Blocks`] split does not panic downstream,
+            // it silently shifts sign words/partials (data
+            // corruption). Single-chunk regions never split.
+            parts.check_chunk(chunk);
+        }
         if self.threads <= 1 || n_chunks <= 1 {
             run_split_block(0, 0, len, chunk, parts, &f);
             return;
@@ -151,32 +191,81 @@ impl Engine {
         let k = self.threads.min(n_chunks);
         let chunks_per_block = n_chunks.div_ceil(k);
         let coords_per_block = chunks_per_block * chunk;
-        let f = &f;
-        std::thread::scope(|scope| {
-            let mut rest = parts;
-            let mut off = 0usize;
-            let mut ci = 0usize;
-            let mut first: Option<(usize, usize, S)> = None;
-            while off < len {
-                let take = coords_per_block.min(len - off);
-                let (head, tail) = rest.split_parts(take);
-                if first.is_none() {
-                    // The calling thread works the first block itself
-                    // after all spawns: k-1 spawns per region, and the
-                    // coordinator is never idle while the pool runs.
-                    first = Some((ci, off, head));
-                } else {
-                    let (b_ci, b_off) = (ci, off);
-                    scope.spawn(move || run_split_block(b_ci, b_off, take, chunk, head, f));
-                }
-                rest = tail;
-                off += take;
-                ci += chunks_per_block;
+        let pool = self.pool.get_or_init(|| Pool::new(self.threads - 1));
+        let fr = &f;
+
+        // Carve the per-thread blocks into stack slots. The pool hands
+        // each published slot to exactly one worker; the first block is
+        // kept back for the coordinator itself (k-1 published blocks
+        // per region, and the coordinator is never idle while the pool
+        // runs).
+        let mut blocks: [Option<Block<'_, S, F>>; pool::MAX_THREADS] =
+            std::array::from_fn(|_| None);
+        let mut count = 0usize;
+        let mut rest = parts;
+        let mut off = 0usize;
+        let mut ci = 0usize;
+        let mut first: Option<(usize, usize, usize, S)> = None;
+        while off < len {
+            let take = coords_per_block.min(len - off);
+            let (head, tail) = rest.split_parts(take);
+            if first.is_none() {
+                first = Some((ci, off, take, head));
+            } else {
+                blocks[count] = Some(Block { ci, off, len: take, chunk, parts: head, f: fr });
+                count += 1;
             }
-            let (ci0, off0, head0) = first.expect("len > 0 yields at least one block");
-            run_split_block(ci0, off0, len.min(off0 + coords_per_block) - off0, chunk, head0, f);
-        });
+            rest = tail;
+            off += take;
+            ci += chunks_per_block;
+        }
+
+        let mut tasks = [Task::noop(); pool::MAX_THREADS];
+        for (task, slot) in tasks.iter_mut().zip(blocks.iter_mut()).take(count) {
+            // SAFETY: each task points at a distinct `blocks` slot that
+            // the coordinator does not touch again until `run_region`'s
+            // barrier has completed, and `run_erased::<S, F>` is the
+            // matching monomorphized runner.
+            let data = slot as *mut Option<Block<'_, S, F>> as *mut ();
+            *task = unsafe { Task::new(data, run_erased::<S, F>) };
+        }
+
+        let (ci0, off0, take0, head0) = first.expect("len > 0 yields at least one block");
+        // SAFETY: the Task contract above; the barrier inside
+        // run_region keeps every borrow carved into `blocks` alive
+        // until the last worker finished its block.
+        unsafe {
+            pool.run_region(&tasks[..count], move || {
+                run_split_block(ci0, off0, take0, chunk, head0, fr);
+            });
+        }
     }
+}
+
+/// One carved per-thread block of a region, parked on the coordinator
+/// stack until its worker reconstructs it through the erased pointer.
+struct Block<'f, S, F> {
+    ci: usize,
+    off: usize,
+    len: usize,
+    chunk: usize,
+    parts: S,
+    f: &'f F,
+}
+
+/// Reconstruct and run one published block on a pool worker.
+///
+/// Safety: `p` points at the `Option<Block<S, F>>` slot published for
+/// exactly this task; the engine guarantees it stays valid and
+/// untouched by every other thread until the region barrier.
+unsafe fn run_erased<S, F>(p: *mut ())
+where
+    S: Split,
+    F: Fn(usize, usize, S) + Sync,
+{
+    let slot = &mut *(p as *mut Option<Block<'_, S, F>>);
+    let b = slot.take().expect("engine block ran twice");
+    run_split_block(b.ci, b.off, b.len, b.chunk, b.parts, b.f);
 }
 
 /// Visit one thread's contiguous block of chunks in index order.
@@ -210,10 +299,21 @@ where
 /// The engine only ever splits at chunk/block boundaries (multiples of
 /// the caller's `chunk`), plus a final ragged tail that is never split
 /// further — so a `Blocks` whose `per` divides `chunk` always splits
-/// exactly.
+/// exactly, and [`Split::check_chunk`] rejects any other pairing up
+/// front.
 pub trait Split: Sized + Send {
     /// Split at `at` coordinates into (first, rest).
     fn split_parts(self, at: usize) -> (Self, Self);
+
+    /// Validate this bundle against the region's chunk size — called
+    /// once per multi-chunk `run_split` region, *before* any split.
+    /// Components whose granularity is coarser than a coordinate must
+    /// hard-assert (release builds too) that chunk-aligned splits are
+    /// exact for them: a misaligned split would not panic later, it
+    /// would silently corrupt data.
+    fn check_chunk(&self, chunk: usize) {
+        let _ = chunk;
+    }
 }
 
 impl<'a, T: Send> Split for &'a mut [T] {
@@ -234,6 +334,11 @@ impl<A: Split, B: Split> Split for (A, B) {
         let (b0, b1) = self.1.split_parts(at);
         ((a0, b0), (a1, b1))
     }
+
+    fn check_chunk(&self, chunk: usize) {
+        self.0.check_chunk(chunk);
+        self.1.check_chunk(chunk);
+    }
 }
 
 impl<A: Split, B: Split, C: Split> Split for (A, B, C) {
@@ -243,13 +348,20 @@ impl<A: Split, B: Split, C: Split> Split for (A, B, C) {
         let (c0, c1) = self.2.split_parts(at);
         ((a0, b0, c0), (a1, b1, c1))
     }
+
+    fn check_chunk(&self, chunk: usize) {
+        self.0.check_chunk(chunk);
+        self.1.check_chunk(chunk);
+        self.2.check_chunk(chunk);
+    }
 }
 
 /// A [`Split`] view over an array with one element per `per`
 /// coordinates — e.g. packed sign words (`per = 64`) or per-chunk f64
 /// reduction partials (`per = chunk`). Splits at `ceil(at / per)`
-/// elements, exact whenever `at` is `per`-aligned (which the engine
-/// guarantees for every non-final split).
+/// elements, exact whenever `at` is `per`-aligned — which the engine
+/// guarantees for every non-final split and enforces up front via
+/// [`Split::check_chunk`].
 pub struct Blocks<'a, T> {
     pub data: &'a mut [T],
     pub per: usize,
@@ -264,10 +376,11 @@ impl<'a, T> Blocks<'a, T> {
 
 impl<'a, T: Send> Split for Blocks<'a, T> {
     fn split_parts(self, at: usize) -> (Self, Self) {
-        // A split must land on a `per` boundary — or be the final
-        // ragged tail, which takes every remaining element (empty
-        // tail). Anything else would hand the same element to two
-        // chunks' neighbours with silently shifted coordinates.
+        // Backstop for the `check_chunk` region-entry assert: a split
+        // must land on a `per` boundary — or be the final ragged tail,
+        // which takes every remaining element (empty tail). Anything
+        // else would hand the same element to two chunks' neighbours
+        // with silently shifted coordinates.
         debug_assert!(
             at % self.per == 0 || at.div_ceil(self.per) >= self.data.len(),
             "Blocks split at {} is not aligned to per={} (chunk must be a multiple of per)",
@@ -280,6 +393,18 @@ impl<'a, T: Send> Split for Blocks<'a, T> {
             Blocks { data: head, per: self.per },
             Blocks { data: tail, per: self.per },
         )
+    }
+
+    fn check_chunk(&self, chunk: usize) {
+        // Hard assert in release too (ISSUE 3): in a multi-chunk
+        // region a `chunk` that `per` does not divide silently shifts
+        // sign words / partials — data corruption, not a panic.
+        assert!(
+            chunk % self.per == 0,
+            "Blocks(per={}) in a run_split region with chunk={}: chunk must be a multiple of per",
+            self.per,
+            chunk
+        );
     }
 }
 
@@ -295,6 +420,8 @@ mod tests {
         assert_eq!(ExecMode::with_threads(1), ExecMode::Sequential);
         assert_eq!(ExecMode::with_threads(4), ExecMode::Threaded(4));
         assert_eq!(ExecMode::default(), ExecMode::Sequential);
+        // the engine clamps absurd widths to the pool cap
+        assert_eq!(Engine::new(ExecMode::Threaded(10_000)).threads(), MAX_POOL_THREADS);
     }
 
     #[test]
@@ -423,6 +550,111 @@ mod tests {
             assert_eq!(a1[i].to_bits(), a2[i].to_bits(), "i={i}");
             assert_eq!(b1[i].to_bits(), b2[i].to_bits(), "i={i}");
             assert_eq!(a1[i], src[i] + 1.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk must be a multiple of per")]
+    fn misaligned_blocks_chunk_panics_even_in_release() {
+        // ISSUE 3 regression: this used to be a debug_assert! inside
+        // split_parts — in release builds a chunk that `per` does not
+        // divide silently shifted every word after the first split.
+        let eng = Engine::sequential();
+        let mut words = vec![0u64; 4];
+        // chunk 100 is not a multiple of per=64, and len 200 spans two
+        // chunks, so the region *would* split mid-word.
+        eng.run_split(200, 100, Blocks::new(&mut words[..], 64), |_ci, _off, _b| {});
+    }
+
+    #[test]
+    fn single_chunk_region_skips_the_alignment_check() {
+        // A region that never splits cannot misalign: the hard check
+        // only guards multi-chunk regions (this is what lets callers
+        // run whole-tensor Blocks of any granularity).
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let eng = Engine::sequential();
+        let mut words = vec![0u64; 4];
+        let seen = AtomicUsize::new(0);
+        eng.run_split(100, 100, Blocks::new(&mut words[..], 64), |_ci, _off, b| {
+            seen.store(b.data.len(), Ordering::Relaxed);
+        });
+        assert_eq!(seen.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_the_pool_survives() {
+        let eng = Engine::new(ExecMode::Threaded(4));
+        let mut data = vec![0u32; 10_000];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            eng.run_split(10_000, 256, &mut data[..], |ci, _off, _c: &mut [u32]| {
+                if ci == 17 {
+                    panic!("boom in chunk 17");
+                }
+            });
+        }));
+        assert!(r.is_err(), "region panic must reach the caller");
+        // the same engine keeps working after the panic
+        eng.run_mut(&mut data[..], |i, x| *x = i as u32);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32);
+        }
+    }
+
+    #[test]
+    fn back_to_back_regions_reuse_one_pool() {
+        // Thousands of regions per run is the pool's whole point:
+        // alternate run_mut / run_split shapes on one engine and pin
+        // the result to a sequential replay.
+        let eng = Engine::new(ExecMode::Threaded(5));
+        let seq = Engine::sequential();
+        let d = 3000;
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        for round in 0..200u32 {
+            let bump = round as f32 * 0.125;
+            eng.run_mut(&mut a[..], |i, x| *x += bump + (i % 7) as f32);
+            seq.run_mut(&mut b[..], |i, x| *x += bump + (i % 7) as f32);
+            eng.run_split(d, 128, &mut a[..], |_ci, off, c: &mut [f32]| {
+                for (j, x) in c.iter_mut().enumerate() {
+                    *x *= 1.0 + ((off + j) as f32).recip().min(0.5);
+                }
+            });
+            seq.run_split(d, 128, &mut b[..], |_ci, off, c: &mut [f32]| {
+                for (j, x) in c.iter_mut().enumerate() {
+                    *x *= 1.0 + ((off + j) as f32).recip().min(0.5);
+                }
+            });
+        }
+        for i in 0..d {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn more_threads_than_chunks_leaves_workers_idle() {
+        // k = min(threads, n_chunks): a 16-wide pool over 3 chunks must
+        // still visit every chunk exactly once.
+        let eng = Engine::new(ExecMode::Threaded(16));
+        let len = 3 * 64;
+        let mut data = vec![0u8; len];
+        eng.run_split(len, 64, &mut data[..], |_ci, _off, c: &mut [u8]| {
+            for x in c.iter_mut() {
+                *x += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn engine_drop_and_rebuild_cycles() {
+        for round in 0..4 {
+            let eng = Engine::new(ExecMode::Threaded(3));
+            if round % 2 == 0 {
+                let mut v = vec![0u64; 500];
+                eng.run_mut(&mut v[..], |i, x| *x = i as u64);
+                assert_eq!(v[499], 499);
+            }
+            // odd rounds: drop an engine whose pool never ran a region
         }
     }
 }

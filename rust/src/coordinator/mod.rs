@@ -3,10 +3,11 @@
 
 pub mod engine;
 pub mod metrics;
+mod pool;
 pub mod profiling;
 pub mod trainer;
 
-pub use engine::{Engine, ExecMode};
+pub use engine::{Engine, ExecMode, MAX_POOL_THREADS};
 pub use metrics::{MetricLog, StepRecord};
 pub use profiling::MomentProfiler;
 pub use trainer::{NoObserver, RunResult, StepObserver, Trainer, TrainerConfig};

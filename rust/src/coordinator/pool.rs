@@ -1,0 +1,337 @@
+//! Persistent worker pool behind [`super::engine::Engine`].
+//!
+//! PR 2 left one exemption to the zero-allocation hot-path invariant:
+//! every parallel region spawned fresh scoped threads (µs-scale fixed
+//! cost and a handful of OS allocations each, thousands of times per
+//! training run — the dominant overhead on short regions). This module
+//! replaces the per-region spawn with threads created once and parked
+//! on a condvar; each region becomes a **publish–work–barrier** cycle
+//! that performs no heap allocation in steady state:
+//!
+//! * **publish** — the coordinator carves its region into per-thread
+//!   blocks (stack-allocated descriptors, see `engine::run_split`),
+//!   stores one type-erased [`Task`] pointer per worker slot under the
+//!   pool mutex, bumps the region epoch and notifies the pool;
+//! * **work** — each woken worker takes the task in its slot (if any),
+//!   runs it, and decrements the epoch's pending count;
+//! * **barrier** — the coordinator runs its own share of the region,
+//!   then blocks on the done condvar until pending reaches zero. Only
+//!   after that do the borrows smuggled through the task pointers
+//!   expire, so a region has exactly the lifetime discipline of the
+//!   scoped-thread version it replaces: every parallel region is still
+//!   a barrier.
+//!
+//! Panic contract: a panicking task marks the epoch but the barrier
+//! still completes (no worker may keep running into a freed stack
+//! frame), and the coordinator re-raises *after* the barrier. Tasks
+//! run outside the pool mutex, so a panic poisons nothing and the pool
+//! stays fully usable — `#[should_panic]` tests and the CLI's error
+//! paths can keep driving the same engine afterwards.
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+/// Hard cap on the engine pool width. A region's block descriptors
+/// live in a fixed-size stack array (no per-region heap), so the width
+/// must be bounded; 64 comfortably exceeds any host this simulator
+/// targets. `Engine::new` clamps wider `ExecMode::Threaded(n)` here.
+pub const MAX_THREADS: usize = 64;
+
+/// A type-erased block of region work: `run(data)` reconstructs the
+/// typed block descriptor on the worker and executes it.
+///
+/// Safety contract (upheld by `Engine::run_split`): `data` stays valid
+/// and is touched by no other thread from publish until the region
+/// barrier completes, and `run` is the monomorphized runner matching
+/// `data`'s concrete type. The payload a task smuggles across threads
+/// is `Send` by construction (engine blocks are `S: Split + Send`
+/// parts plus an `&F where F: Sync` visitor).
+#[derive(Clone, Copy)]
+pub(crate) struct Task {
+    data: *mut (),
+    run: unsafe fn(*mut ()),
+}
+
+unsafe impl Send for Task {}
+
+impl Task {
+    /// See the safety contract on [`Task`].
+    pub(crate) unsafe fn new(data: *mut (), run: unsafe fn(*mut ())) -> Task {
+        Task { data, run }
+    }
+
+    /// Placeholder for the fixed-size publish array; never executed.
+    pub(crate) const fn noop() -> Task {
+        unsafe fn nop(_: *mut ()) {}
+        Task { data: std::ptr::null_mut(), run: nop }
+    }
+}
+
+struct State {
+    /// Region counter; a bump publishes the tasks of a new region.
+    epoch: u64,
+    /// One slot per worker; `None` = idle this region.
+    tasks: [Option<Task>; MAX_THREADS],
+    /// Workers still running the current region.
+    pending: usize,
+    /// Some task of the current region panicked.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between regions.
+    work: Condvar,
+    /// The coordinator waits here for `pending == 0` — the barrier.
+    done: Condvar,
+}
+
+/// Lock, shrugging off poison: tasks run *outside* the mutex, so a
+/// poisoned lock only means some thread panicked between state
+/// transitions that are each individually complete — the state is
+/// always consistent and the pool must keep operating (e.g. through
+/// `#[should_panic]` tests).
+fn lock(shared: &Shared) -> MutexGuard<'_, State> {
+    shared.state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The persistent pool: `workers` parked threads plus the calling
+/// thread as the implicit extra lane (an `ExecMode::Threaded(n)`
+/// engine builds a pool of `n − 1`).
+pub(crate) struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("workers", &self.handles.len()).finish()
+    }
+}
+
+impl Pool {
+    /// Spawn the pool. The only heap allocations the pool ever
+    /// performs happen here (thread stacks and bookkeeping are paid
+    /// once, at construction — not per region).
+    pub(crate) fn new(workers: usize) -> Pool {
+        let workers = workers.min(MAX_THREADS);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                tasks: [None; MAX_THREADS],
+                pending: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("zo-engine-{i}"))
+                    .spawn(move || worker_loop(&shared, i))
+                    .expect("spawn engine pool worker")
+            })
+            .collect();
+        Pool { shared, handles }
+    }
+
+    pub(crate) fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run one parallel region: `tasks[i]` is handed to pool worker
+    /// `i` while `own` (the coordinator's share) runs on the calling
+    /// thread. Returns only after every task finished — the barrier.
+    /// Panics in any task (or in `own`) are re-raised here *after* the
+    /// barrier, so no task can outlive the borrows it was given.
+    ///
+    /// Safety: every [`Task`] must uphold the [`Task`] contract for
+    /// the duration of this call.
+    pub(crate) unsafe fn run_region(&self, tasks: &[Task], own: impl FnOnce()) {
+        assert!(
+            tasks.len() <= self.handles.len(),
+            "region published {} blocks onto a pool of {} workers",
+            tasks.len(),
+            self.handles.len()
+        );
+        if tasks.is_empty() {
+            own();
+            return;
+        }
+        {
+            let mut st = lock(&self.shared);
+            assert_eq!(st.pending, 0, "engine parallel regions must not nest");
+            for (slot, t) in st.tasks.iter_mut().zip(tasks) {
+                *slot = Some(*t);
+            }
+            st.pending = tasks.len();
+            st.panicked = false;
+            st.epoch = st.epoch.wrapping_add(1);
+            self.shared.work.notify_all();
+        }
+        // The coordinator is never idle while the pool runs — and if
+        // its own share panics, the barrier must still complete first:
+        // workers hold pointers into this very stack frame.
+        let own_result = panic::catch_unwind(AssertUnwindSafe(own));
+        let worker_panicked = {
+            let mut st = lock(&self.shared);
+            while st.pending != 0 {
+                st = self.shared.done.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            st.panicked
+        };
+        if let Err(p) = own_result {
+            panic::resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("engine pool worker panicked during a parallel region");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared);
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, idx: usize) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = lock(shared);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.tasks[idx].take();
+                }
+                st = shared.work.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        // `None`: this worker is idle for the current region (fewer
+        // blocks than workers) — go straight back to the condvar.
+        let Some(task) = task else { continue };
+        let ok = panic::catch_unwind(AssertUnwindSafe(|| unsafe { (task.run)(task.data) })).is_ok();
+        let mut st = lock(shared);
+        if !ok {
+            st.panicked = true;
+        }
+        st.pending -= 1;
+        if st.pending == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Minimal typed payload for direct pool tests (the engine's real
+    /// payloads are `Block` descriptors in `engine.rs`).
+    struct Probe<'a> {
+        hits: &'a AtomicUsize,
+        boom: bool,
+    }
+
+    unsafe fn run_probe(p: *mut ()) {
+        let probe = &mut *(p as *mut Option<Probe<'_>>);
+        let probe = probe.take().expect("probe ran twice");
+        probe.hits.fetch_add(1, Ordering::SeqCst);
+        if probe.boom {
+            panic!("probe boom");
+        }
+    }
+
+    fn publish<'a>(slots: &mut [Option<Probe<'a>>]) -> Vec<Task> {
+        slots
+            .iter_mut()
+            .map(|s| unsafe { Task::new(s as *mut Option<Probe<'a>> as *mut (), run_probe) })
+            .collect()
+    }
+
+    #[test]
+    fn regions_run_every_task_and_the_own_share() {
+        let pool = Pool::new(3);
+        let hits = AtomicUsize::new(0);
+        for round in 0..50 {
+            hits.store(0, Ordering::SeqCst);
+            let k = round % 4; // 0..=3 published tasks per region
+            let mut slots: Vec<Option<Probe<'_>>> =
+                (0..k).map(|_| Some(Probe { hits: &hits, boom: false })).collect();
+            let tasks = publish(&mut slots);
+            unsafe {
+                pool.run_region(&tasks, || {
+                    hits.fetch_add(100, Ordering::SeqCst);
+                });
+            }
+            assert_eq!(hits.load(Ordering::SeqCst), 100 + k, "round {round}");
+            assert!(slots.iter().all(|s| s.is_none()), "round {round}: task not consumed");
+        }
+    }
+
+    #[test]
+    fn worker_panic_reraises_after_the_barrier_and_pool_survives() {
+        let pool = Pool::new(2);
+        let hits = AtomicUsize::new(0);
+        let mut slots = vec![
+            Some(Probe { hits: &hits, boom: true }),
+            Some(Probe { hits: &hits, boom: false }),
+        ];
+        let tasks = publish(&mut slots);
+        let r = panic::catch_unwind(AssertUnwindSafe(|| unsafe {
+            pool.run_region(&tasks, || {});
+        }));
+        assert!(r.is_err(), "worker panic must propagate");
+        // both tasks ran to the barrier despite the panic
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+
+        // and the pool still works
+        let mut slots = vec![Some(Probe { hits: &hits, boom: false })];
+        let tasks = publish(&mut slots);
+        unsafe { pool.run_region(&tasks, || {}) };
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn empty_pool_and_empty_region_are_fine() {
+        let pool = Pool::new(0);
+        assert_eq!(pool.workers(), 0);
+        let mut ran = false;
+        unsafe { pool.run_region(&[], || ran = true) };
+        assert!(ran);
+        // drop joins nothing
+    }
+
+    #[test]
+    fn drop_rebuild_cycles_are_clean() {
+        for _ in 0..5 {
+            let pool = Pool::new(4);
+            let hits = AtomicUsize::new(0);
+            let mut slots: Vec<Option<Probe<'_>>> =
+                (0..4).map(|_| Some(Probe { hits: &hits, boom: false })).collect();
+            let tasks = publish(&mut slots);
+            unsafe { pool.run_region(&tasks, || {}) };
+            assert_eq!(hits.load(Ordering::SeqCst), 4);
+            drop(pool);
+        }
+        // a pool dropped without ever running a region
+        drop(Pool::new(3));
+    }
+}

@@ -30,7 +30,10 @@ pub struct TrainerConfig {
     pub compute_ms: f64,
     /// Execution engine for materialized workers. `Threaded(n)` runs
     /// the gradient and per-worker optimizer phases on n pool threads
-    /// with bitwise-identical results (see `coordinator::engine`).
+    /// with bitwise-identical results (see `coordinator::engine`). The
+    /// trainer builds one engine per run: its persistent pool is
+    /// spawned once up front and every step's parallel regions reuse
+    /// it (publish–work–barrier, no per-region spawn or allocation).
     pub exec: ExecMode,
     /// Print progress lines.
     pub verbose: bool,
@@ -115,6 +118,8 @@ impl Trainer {
         let mut log = MetricLog::new(opt.name());
         let mut observer_rows = Vec::new();
         let mut sim_total_ms = 0.0f64;
+        // One engine — and one persistent worker pool — for the whole
+        // run; dropped (workers joined) when the run returns.
         let engine = Engine::new(cfg.exec);
         let wall = crate::util::Stopwatch::start();
 

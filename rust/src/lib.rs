@@ -21,10 +21,12 @@
 //!   [`grad::ParallelGradients`] view.
 //! * [`coordinator`] — the deterministic parallel execution engine
 //!   ([`coordinator::engine`]: `ExecMode::{Sequential, Threaded(n)}`,
-//!   bitwise-identical by the DESIGN.md §3 contract; zero-allocation
-//!   `run_mut`/`run_split` primitives and the fixed-chunk reduction
-//!   contract of DESIGN.md §Hot-path), the training loop, simulated
-//!   cluster clock, metrics, Fig-1 profiler.
+//!   bitwise-identical by the DESIGN.md §3 contract; a persistent
+//!   condvar-parked worker pool whose regions are publish–work–barrier
+//!   cycles; zero-allocation `run_mut`/`run_split` primitives — both
+//!   modes — and the fixed-chunk reduction contract of DESIGN.md
+//!   §Hot-path), the training loop, simulated cluster clock, metrics,
+//!   Fig-1 profiler.
 //! * [`data`] / [`eval`] — synthetic workloads and downstream evals.
 //! * [`config`] / [`exp`] — paper workload presets and one driver per
 //!   table/figure (DESIGN.md §4).

@@ -407,11 +407,21 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
                 .opt("json", "BENCH_PR2.json", "report output path ('' = skip writing)")
                 .opt("baseline", "", "baseline report to gate against ('' = no gate)")
                 .opt("tolerance", "0.30", "allowed fractional p50 regression on step/ entries")
+                .opt(
+                    "history",
+                    "",
+                    "also write this run's report to a per-PR trend snapshot (BENCH_PR<n>.json)",
+                )
                 .flag("refresh", "overwrite an existing measured baseline at --json")
-                .flag("quick", "short measurement windows (sets ZO_BENCH_QUICK)"),
+                .flag("quick", "short measurement windows (sets ZO_BENCH_QUICK)")
+                .flag("trend", "print the per-PR bench trend (BENCH_PR*.json) and exit"),
         ),
         rest,
     );
+    if p.get_flag("trend") {
+        print_bench_trend(report_dir(p.get("json")));
+        return Ok(());
+    }
     if p.get_flag("quick") {
         std::env::set_var("ZO_BENCH_QUICK", "1");
     }
@@ -474,6 +484,24 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
         report.push(&b.run("codec/accumulate_into", || {
             compress::accumulate_into(&packed, 0.25, &mut dense);
         }));
+    }
+
+    // -- engine region overhead ---------------------------------------
+    // The ISSUE 3 tentpole: the fixed cost of one publish–work–barrier
+    // cycle on the persistent pool, measured over a region whose work
+    // is trivial (one tiny item per thread). `seq` is the no-pool
+    // floor; before the pool, every `threaded*` region paid a scoped
+    // thread spawn + join instead.
+    println!("\n-- engine region overhead --");
+    {
+        for (mode, label) in &modes {
+            let eng = Engine::new(*mode);
+            let mut items = vec![0u64; eng.threads()];
+            let mut b = Bench::new();
+            report.push(&b.run(&format!("engine/region_overhead/{label}"), || {
+                eng.run_mut(&mut items[..], |i, x| *x = x.wrapping_add(i as u64 + 1));
+            }));
+        }
     }
 
     // -- allreduce ----------------------------------------------------
@@ -657,28 +685,26 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
                 config_mismatch.join(", ")
             );
         } else {
-            let violations = report.regressions_vs(base, "step/", tolerance);
-            if !violations.is_empty() {
-                for v in &violations {
+            let gate = report.regressions_vs(base, "step/", tolerance);
+            if !gate.passed() {
+                for v in &gate.violations {
                     eprintln!("PERF REGRESSION: {v}");
                 }
                 anyhow::bail!(
                     "{} optimizer-step perf regression(s) vs {baseline_path}",
-                    violations.len()
+                    gate.violations.len()
                 );
             }
-            let compared = gated.iter().filter(|name| report.entry(name).is_some()).count();
             println!(
-                "\nperf gate vs {baseline_path}: OK ({compared}/{} step/ entries within {:.0}%)",
+                "\nperf gate vs {baseline_path}: OK ({}/{} step/ entries within {:.0}%)",
+                gate.compared,
                 gated.len(),
                 tolerance * 100.0
             );
-            if compared < gated.len() {
-                println!(
-                    "warning: {} baseline step/ entries had no fresh counterpart \
-                     (bench config changed? regenerate with --refresh)",
-                    gated.len() - compared
-                );
+            // Missing entries now come from the library gate itself
+            // (PerfReport::regressions_vs), so no caller can drop them.
+            for m in &gate.missing {
+                println!("warning: {m}");
             }
         }
     }
@@ -699,5 +725,139 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
             println!("wrote {json_path}");
         }
     }
+    // Per-PR trend snapshot (ROADMAP bench trends): unlike the gated
+    // baseline above, a history snapshot is always (over)written — each
+    // PR commits its own BENCH_PR<n>.json, so drift that stays under
+    // the gate tolerance accumulates visibly across snapshots instead
+    // of silently compounding. Guard rail: the snapshot must not alias
+    // the gated baseline or --json target, or a stale PR_INDEX would
+    // silently re-baseline the gate through the history back door.
+    let hist_path = p.get("history");
+    if !hist_path.is_empty() {
+        let same_file = |a: &str, b: &str| {
+            if a.is_empty() || b.is_empty() {
+                return false;
+            }
+            if a == b {
+                return true;
+            }
+            match (std::fs::canonicalize(a), std::fs::canonicalize(b)) {
+                (Ok(x), Ok(y)) => x == y,
+                _ => false,
+            }
+        };
+        if same_file(hist_path, &baseline_path) || same_file(hist_path, json_path) {
+            println!(
+                "NOT writing history snapshot {hist_path}: it aliases the gated baseline/--json \
+                 target (use --refresh on --json for deliberate re-baselining)"
+            );
+        } else {
+            report.write(hist_path)?;
+            println!("wrote history snapshot {hist_path}");
+        }
+    }
+    let trend_dir = report_dir(if hist_path.is_empty() { p.get("json") } else { hist_path });
+    print_bench_trend(trend_dir);
     Ok(())
+}
+
+/// Directory holding a report path ("" and bare filenames = cwd).
+fn report_dir(path: &str) -> &str {
+    match std::path::Path::new(path).parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_str().unwrap_or("."),
+        _ => ".",
+    }
+}
+
+/// Print p50s of every gated `step/` entry (plus the materialized-run
+/// steps/s metrics) across all committed `BENCH_PR{n}.json` snapshots,
+/// with the cumulative drift from the oldest *comparable* snapshot —
+/// the cross-PR view the single-baseline 30% gate cannot give.
+///
+/// Like the gate, the trend only compares numbers measured under the
+/// same bench configuration: snapshots whose `d`/`workers`/`threads`/
+/// `quick` meta differs from the newest snapshot's are still printed
+/// (column marked `*`) but excluded from the drift column, so a config
+/// change can neither fake a regression nor mask a real one.
+fn print_bench_trend(dir: &str) {
+    let hist = zo_adam::benchkit::perf::load_history(dir);
+    if hist.is_empty() {
+        println!("\nbench trend: no measured BENCH_PR<n>.json snapshots in '{dir}' yet");
+        return;
+    }
+    let meta_of = |r: &PerfReport, key: &str| -> Option<f64> {
+        r.meta.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_f64())
+    };
+    let newest = &hist.last().expect("hist non-empty").1;
+    let comparable: Vec<bool> = hist
+        .iter()
+        .map(|(_, r)| {
+            ["d", "workers", "threads", "quick"]
+                .iter()
+                .all(|key| meta_of(r, key) == meta_of(newest, key))
+        })
+        .collect();
+
+    let mut headers: Vec<String> = vec!["entry".to_string()];
+    for ((n, _), ok) in hist.iter().zip(&comparable) {
+        headers.push(format!("PR{n}{}", if *ok { "" } else { "*" }));
+    }
+    headers.push("drift".to_string());
+    let header_refs: Vec<&str> = headers.iter().map(|h| h.as_str()).collect();
+    let mut t =
+        Table::new("bench trend (step/ p50 µs, run steps/s, across PR snapshots)", &header_refs);
+
+    // One row per series: per-snapshot values plus first-vs-last drift
+    // over the comparable snapshots only.
+    let mut push_series = |t: &mut Table, label: String, series: Vec<Option<f64>>, scale: f64| {
+        let mut row = vec![label];
+        for v in &series {
+            row.push(v.map(|x| format!("{:.1}", x / scale)).unwrap_or_else(|| "-".to_string()));
+        }
+        let present: Vec<f64> = series
+            .iter()
+            .zip(&comparable)
+            .filter(|(_, ok)| **ok)
+            .filter_map(|(v, _)| *v)
+            .collect();
+        row.push(match (present.first(), present.last()) {
+            (Some(a), Some(b)) if present.len() > 1 && *a > 0.0 => {
+                format!("{:+.1}%", (b / a - 1.0) * 100.0)
+            }
+            _ => "-".to_string(),
+        });
+        t.row(row);
+    };
+
+    // Union of names in first-appearance order, entries then metrics.
+    let mut entry_names: Vec<String> = Vec::new();
+    let mut metric_names: Vec<String> = Vec::new();
+    for (_, r) in &hist {
+        for e in r.entries.iter().filter(|e| e.name.starts_with("step/")) {
+            if !entry_names.iter().any(|n| *n == e.name) {
+                entry_names.push(e.name.clone());
+            }
+        }
+        for (k, _) in r.metrics.iter().filter(|(k, _)| k.ends_with("steps_per_s")) {
+            if !metric_names.iter().any(|n| n == k) {
+                metric_names.push(k.clone());
+            }
+        }
+    }
+    for name in &entry_names {
+        let series = hist.iter().map(|(_, r)| r.entry(name).map(|e| e.p50_ns)).collect();
+        push_series(&mut t, name.clone(), series, 1e3);
+    }
+    for name in &metric_names {
+        let series = hist
+            .iter()
+            .map(|(_, r)| r.metrics.iter().find(|(k, _)| k == name).map(|(_, v)| *v))
+            .collect();
+        push_series(&mut t, format!("{name} (1/s)"), series, 1.0);
+    }
+    println!();
+    t.print();
+    if comparable.iter().any(|ok| !ok) {
+        println!("(* snapshot measured under a different bench config; excluded from drift)");
+    }
 }

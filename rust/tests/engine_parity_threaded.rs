@@ -168,6 +168,57 @@ fn chunked_server_reduction_is_bitwise_sequential_for_every_family() {
 }
 
 #[test]
+fn oversubscribed_pool_is_bitwise_sequential() {
+    // ISSUE 3 pool coverage: pool widths far beyond the host's cores
+    // (CI boxes have 2) — scheduling pressure and preemption must not
+    // leak into results. MAX_POOL_THREADS is the clamp width, i.e. the
+    // widest pool an engine will ever build.
+    use zo_adam::coordinator::MAX_POOL_THREADS;
+    let d = 2 * zo_adam::comm::SERVER_CHUNK + 321; // multi-chunk, off-word
+    for threads in [16usize, MAX_POOL_THREADS] {
+        for family in ["adam", "01adam"] {
+            let mut ga = Gen::new(0xbeef ^ threads as u64);
+            let mut gb = Gen::new(0xbeef ^ threads as u64);
+            let a = run(family, d, 3, 0.01, 6, 91, ExecMode::Sequential, &mut ga);
+            let b = run(family, d, 3, 0.01, 6, 91, ExecMode::Threaded(threads), &mut gb);
+            assert_bitwise_equal(&a, &b, &format!("{family} oversubscribed threads={threads}"));
+        }
+    }
+}
+
+#[test]
+fn more_threads_than_chunks_is_bitwise_sequential() {
+    // Tiny dims: every parallel region has fewer chunks (and fewer
+    // worker replicas) than pool lanes, so most of the pool idles each
+    // epoch — results must not care.
+    for &d in &[1usize, 3, 64, 130] {
+        for family in FAMILIES {
+            let mut ga = Gen::new(0x1d1e ^ d as u64);
+            let mut gb = Gen::new(0x1d1e ^ d as u64);
+            let a = run(family, d, 2, 0.02, 6, 17, ExecMode::Sequential, &mut ga);
+            let b = run(family, d, 2, 0.02, 6, 17, ExecMode::Threaded(16), &mut gb);
+            assert_bitwise_equal(&a, &b, &format!("{family} d={d} threads>chunks"));
+        }
+    }
+}
+
+#[test]
+fn pool_reuse_across_runs_and_drop_rebuild_cycles() {
+    // Back-to-back training runs: within one run the trainer reuses a
+    // single engine for thousands of regions (every step is several),
+    // and across runs the engine — pool included — is dropped and
+    // rebuilt. Results stay pinned to fresh sequential replays through
+    // every cycle.
+    for cycle in 0..3u64 {
+        let mut ga = Gen::new(0xd0_0d ^ cycle);
+        let mut gb = Gen::new(0xd0_0d ^ cycle);
+        let a = run("01adam", 777, 3, 0.01, 15, 400 + cycle, ExecMode::Sequential, &mut ga);
+        let b = run("01adam", 777, 3, 0.01, 15, 400 + cycle, ExecMode::Threaded(5), &mut gb);
+        assert_bitwise_equal(&a, &b, &format!("pool rebuild cycle {cycle}"));
+    }
+}
+
+#[test]
 fn threaded8_matches_sequential_on_a_longer_zeroone_run() {
     // The acceptance configuration called out in the issue: 8 threads,
     // 8 materialized workers, the paper 0/1 Adam policy shapes.

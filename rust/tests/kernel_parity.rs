@@ -98,6 +98,51 @@ fn prop_fused_server_kernels_match_two_pass_reference() {
 }
 
 #[test]
+fn prop_chunked_lane_kernels_match_fused_compress_ef_bitwise() {
+    // ISSUE 3 lane chunking: evaluating the EF worker leg as
+    // independent CODEC_CHUNK-range folds (combined in chunk order)
+    // plus ranged finishes must equal the fused whole-tensor
+    // `compress_ef_into` bit for bit — the property that lets the
+    // engine chunk *inside* a lane without breaking seq/threaded
+    // parity. Dims cross several chunks and sit off the 64-bit words.
+    property(12, |g: &mut Gen| {
+        let chunk = compress::CODEC_CHUNK;
+        let d = g.usize_in(1..2 * chunk + 500);
+        let z = g.vec_normal(d..d + 1, 1.0);
+        let err0 = g.vec_normal(d..d + 1, 0.4);
+
+        let mut ref_err = err0.clone();
+        let mut ref_packed = OneBit::zeros(d);
+        compress::compress_ef_into(&z, &mut ref_err, &mut ref_packed);
+
+        // chunked schedule, driven by hand exactly as reduce_eng's
+        // lane-chunked path drives it
+        let mut err = err0.clone();
+        let mut words = vec![0u64; d.div_ceil(64)];
+        let mut l1 = 0.0f64;
+        for start in (0..d).step_by(chunk) {
+            let end = (start + chunk).min(d);
+            l1 += compress::ef_fold_signs_l1(
+                &z[start..end],
+                &mut err[start..end],
+                &mut words[start / 64..end.div_ceil(64)],
+            );
+        }
+        let scale = (l1 / d as f64) as f32;
+        assert_eq!(scale.to_bits(), ref_packed.scale.to_bits(), "scale d={d}");
+        assert_eq!(words, ref_packed.signs, "signs d={d}");
+        for start in (0..d).step_by(chunk) {
+            let end = (start + chunk).min(d);
+            let word0 = start / 64;
+            compress::ef_err_finish_words(&mut err[start..end], &words[word0..], scale.to_bits());
+        }
+        for j in 0..d {
+            assert_eq!(err[j].to_bits(), ref_err[j].to_bits(), "err d={d} j={j}");
+        }
+    });
+}
+
+#[test]
 fn prop_accumulate_words_agrees_on_word_aligned_subranges() {
     // The ranged kernel over [64k, d) must equal the whole-tensor
     // kernel restricted to that range — the property the chunk-parallel

@@ -3,10 +3,16 @@
 //! heap allocation for any optimizer family — local steps, variance
 //! rounds and 1-bit syncs included.
 //!
-//! Measured with a counting global allocator on the sequential engine
-//! (pool threads necessarily allocate spawn bookkeeping, which is the
-//! one documented exemption). This file holds a single test so no
-//! concurrent test can perturb the global counter mid-measurement.
+//! Since ISSUE 3 the invariant holds in **both execution modes**: the
+//! persistent pool replaced per-region scoped-thread spawning, so a
+//! steady-state `ExecMode::Threaded` region is a publish–work–barrier
+//! cycle on parked threads with no allocation anywhere in the process
+//! (the counting allocator below is global, so pool workers are
+//! counted too). The old "pool threads necessarily allocate spawn
+//! bookkeeping" exemption is gone.
+//!
+//! This file holds a single test so no concurrent test can perturb the
+//! global counter mid-measurement.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -34,7 +40,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
-use zo_adam::coordinator::Engine;
+use zo_adam::coordinator::{Engine, ExecMode};
 use zo_adam::optim::policy::{SyncPolicy, SyncSchedule, VarPolicy, VarSchedule};
 use zo_adam::optim::{
     Adam, ConstLr, DistOptimizer, FrozenVarAdam, Hyper, MomentumSgd, NaiveOneBitAdam, SignSgd,
@@ -42,27 +48,14 @@ use zo_adam::optim::{
 };
 use zo_adam::tensor::Rng;
 
-#[test]
-fn steady_state_steps_allocate_nothing() {
-    // d crosses two SERVER_CHUNKs and sits off the 64-bit words, so the
-    // chunked EF server leg runs its multi-chunk path.
-    let d = 4096 + 4096 + 137;
-    let n = 3;
+fn build_suite(d: usize, n: usize) -> Vec<(&'static str, Box<dyn DistOptimizer>)> {
     let h = Hyper::default();
     let lr = 0.01;
-    let mut rng = Rng::new(42);
-    let grads: Vec<Vec<f32>> = (0..n)
-        .map(|_| {
-            let mut v = vec![0.0f32; d];
-            rng.fill_normal(&mut v, 0.5);
-            v
-        })
-        .collect();
-    let eng = Engine::sequential();
     let init = vec![0.8f32; d];
-
-    let mut opts: Vec<(&'static str, Box<dyn DistOptimizer>)> = vec![
-        ("adam", Box::new(Adam::new(init.clone(), n, h, Box::new(ConstLr(lr))))),
+    let adam: Box<dyn DistOptimizer> =
+        Box::new(Adam::new(init.clone(), n, h, Box::new(ConstLr(lr))));
+    vec![
+        ("adam", adam),
         ("momentum-sgd", Box::new(MomentumSgd::new(init.clone(), n, 0.9, Box::new(ConstLr(lr))))),
         ("signsgd-ef", Box::new(SignSgd::new(init.clone(), n, Box::new(ConstLr(lr))))),
         (
@@ -97,23 +90,51 @@ fn steady_state_steps_allocate_nothing() {
                 SyncSchedule::new(SyncPolicy::Always),
             )),
         ),
+    ]
+}
+
+#[test]
+fn steady_state_steps_allocate_nothing() {
+    // d crosses two SERVER_CHUNKs and sits off the 64-bit words, so the
+    // chunked EF server leg runs its multi-chunk path.
+    let d = 4096 + 4096 + 137;
+    let n = 3;
+    let mut rng = Rng::new(42);
+    let grads: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 0.5);
+            v
+        })
+        .collect();
+
+    // Pool spawn allocations happen here — at construction, once.
+    // Threaded(8) ≥ 2·n (n = 3 workers) also drives the lane-chunked
+    // EF compress leg through its per-lane run_split regions.
+    let engines = [
+        ("seq", Engine::sequential()),
+        ("threaded8", Engine::new(ExecMode::Threaded(8))),
     ];
 
-    for (name, opt) in opts.iter_mut() {
-        // Warm-up: first steps may size internal codec buffers.
-        for t in 0..4u64 {
-            opt.step_engine(t, &grads, &eng);
+    for (ename, eng) in &engines {
+        let mut opts = build_suite(d, n);
+        for (name, opt) in opts.iter_mut() {
+            // Warm-up: first steps may size internal codec buffers, and
+            // pool threads may touch lazily-initialized TLS once.
+            for t in 0..4u64 {
+                opt.step_engine(t, &grads, eng);
+            }
+            let before = ALLOCS.load(Ordering::SeqCst);
+            for t in 4..24u64 {
+                opt.step_engine(t, &grads, eng);
+            }
+            let after = ALLOCS.load(Ordering::SeqCst);
+            assert_eq!(
+                after - before,
+                0,
+                "{ename}/{name}: {} allocation(s) in 20 steady-state steps",
+                after - before
+            );
         }
-        let before = ALLOCS.load(Ordering::SeqCst);
-        for t in 4..24u64 {
-            opt.step_engine(t, &grads, &eng);
-        }
-        let after = ALLOCS.load(Ordering::SeqCst);
-        assert_eq!(
-            after - before,
-            0,
-            "{name}: {} allocation(s) in 20 steady-state steps",
-            after - before
-        );
     }
 }
