@@ -23,6 +23,15 @@ step "cargo test -q"
 cargo test -q
 
 if [ "${SKIP_SMOKE:-0}" != "1" ]; then
+    # Multi-process transport smoke (ISSUE 4): 4 real worker processes
+    # over loopback TCP train 0/1 Adam; --check-parity re-runs the same
+    # workload in-process on ExecMode::Threaded(4) and FAILS unless the
+    # final parameters, per-step losses, eval and ledger round counts
+    # are bitwise identical — the transport subsystem's core contract.
+    step "zo-adam launch --ranks 4 --transport tcp (bitwise parity smoke)"
+    cargo run --release --bin zo-adam -- launch --ranks 4 --transport tcp \
+        --family 01adam --d 3000 --steps 40 --check-parity --quiet
+
     # Perf-regression gate: quick-window hot-path suite (codec /
     # allreduce / optimizer-step / materialized 0/1 Adam run) that
     # compares the optimizer-step medians against the committed
@@ -38,7 +47,7 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
     # bump PR_INDEX when a new PR starts). `zo-adam bench` prints the
     # cross-snapshot p50/steps-per-s trend at the end of every run, so
     # drift that stays under the 30% gate is still visible across PRs.
-    PR_INDEX="${PR_INDEX:-3}"
+    PR_INDEX="${PR_INDEX:-4}"
     step "zo-adam bench (perf gate vs BENCH_PR2.json, history BENCH_PR${PR_INDEX}.json)"
     ZO_BENCH_QUICK=1 cargo run --release --bin zo-adam -- bench --quick \
         --json BENCH_PR2.json --baseline BENCH_PR2.json --tolerance 0.30 \

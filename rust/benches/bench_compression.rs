@@ -38,5 +38,20 @@ fn main() {
         b.run(&format!("accumulate_into/{label}"), || {
             compress::accumulate_into(&packed, 0.25, &mut dense);
         });
+
+        // fp16 wire buffers (ISSUE 4): the pack/unpack bandwidth the
+        // clock model has always charged the full-precision AllReduce
+        // for — now a real kernel, measured over the same 4 B/coord
+        // source-stream basis as the 1-bit codec above.
+        let mut halves = vec![0u16; d];
+        b.run(&format!("pack_fp16/{label}"), || {
+            compress::pack_fp16(&src, &mut halves);
+        });
+        b.run(&format!("unpack_fp16/{label}"), || {
+            compress::unpack_fp16(&halves, &mut dense);
+        });
+        b.run(&format!("fp16_roundtrip_add/{label}"), || {
+            compress::add_fp16_rounded(&mut dense, &src);
+        });
     }
 }

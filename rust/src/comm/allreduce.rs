@@ -1,21 +1,42 @@
 //! Full-precision server-style AllReduce (paper Algorithm 3) and the
 //! error-feedback 1-bit AllReduce (paper Algorithm 2, Appendix A).
 //!
-//! Both run *bit-exactly* inside the coordinator process — workers are
-//! replicas in one address space — while the byte counts they would put
-//! on a real fabric are reported via [`WireStats`] and priced by
-//! `comm::network`.
+//! Both reductions exist in two *bitwise-identical* forms:
 //!
-//! Both reductions are engine-aware (DESIGN.md §3 and §Hot-path): the
-//! `_eng` variants parallelize the per-worker compress/error-feedback
-//! phase *and* the server leg — the latter as fixed-size coordinate
-//! chunks in which workers accumulate in index order and whose f64
-//! ‖·‖₁ partials are combined in chunk order on the coordinator thread.
-//! The chunk structure is identical under every pool width, so
-//! `ExecMode::Threaded` stays bitwise identical to
-//! `ExecMode::Sequential`.
+//! * **in-process** (`allreduce_mean_eng`, [`EfAllReduce::reduce_eng`])
+//!   — workers are replicas in one address space; the byte counts they
+//!   would put on a real fabric are reported via [`WireStats`] and
+//!   priced by `comm::network`;
+//! * **transport-backed** (`allreduce_mean_transport`,
+//!   [`EfAllReduce::reduce_transport`]) — each OS process is one rank
+//!   of a [`crate::comm::transport`] group and the payloads move as
+//!   real framed bytes (loopback/LAN TCP or in-proc channels). Rank 0
+//!   runs the *same* fixed worker-order server leg with the *same*
+//!   fixed-chunk ‖·‖₁ association, so an N-process run reproduces the
+//!   single-process `ExecMode::Threaded(N)` trajectory bit for bit
+//!   (DESIGN.md §Transport; `tests/transport_parity.rs`).
+//!
+//! **fp16 wire semantics (ISSUE 4).** The paper trains with fp16
+//! communication for all methods, and the ledger has always charged 2
+//! bytes/element for the fp AllReduce — since ISSUE 4 the reduction
+//! *computes* what that wire carries: worker uploads are fp16-rounded
+//! (`compress::fp16_round`), the server accumulates the rounded values
+//! in f32 in fixed worker order, and the broadcast mean is
+//! fp16-rounded again. Both forms share these kernels, which is what
+//! makes literal packed bytes on a socket bit-compatible with the
+//! in-process path.
+//!
+//! The in-process variants are engine-aware (DESIGN.md §3 and
+//! §Hot-path): the `_eng` variants parallelize the per-worker
+//! compress/error-feedback phase *and* the server leg — the latter as
+//! fixed-size coordinate chunks in which workers accumulate in index
+//! order and whose f64 ‖·‖₁ partials are combined in chunk order on
+//! the coordinator thread. The chunk structure is identical under
+//! every pool width, so `ExecMode::Threaded` stays bitwise identical
+//! to `ExecMode::Sequential`.
 
 use super::compress::{self, OneBit};
+use super::transport::{FrameKind, RankLink, TransportError, HEADER_BYTES};
 use crate::coordinator::engine::{Blocks, Engine};
 
 /// Fixed coordinate-chunk size for the EF server leg *and* the chunked
@@ -55,6 +76,10 @@ impl<V: AsRef<[f32]> + Sync> WorkerBufs for Vec<V> {
 }
 
 /// Bytes a single round moved per direction, per worker.
+///
+/// In-process reductions report the analytic payload (fp16 / packed
+/// bits); transport-backed reductions report the **actual framed
+/// bytes** — versioned header plus payload — that crossed the socket.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct WireStats {
     /// Bytes each worker uploads to the reduction.
@@ -73,15 +98,17 @@ impl WireStats {
     }
 }
 
-/// Algorithm 3: out = (1/n) Σ bufs[i]; every element fp16 on the wire
-/// (the paper trains with fp16 communication enabled for all methods).
+/// Algorithm 3: out = (1/n) Σ fp16(bufs[i]), fp16-rounded — exactly the
+/// arithmetic of an fp16 wire (module docs).
 pub fn allreduce_mean<B: WorkerBufs + ?Sized>(bufs: &B, out: &mut [f32]) -> WireStats {
     allreduce_mean_eng(bufs, out, &Engine::sequential())
 }
 
 /// Engine-aware Algorithm 3: coordinate chunks run in parallel; inside
 /// each chunk workers accumulate in index order, so every coordinate
-/// sees the exact additions of the sequential path. Allocation-free.
+/// sees the exact additions of the sequential path — and of the
+/// transport path, whose packed fp16 bytes decode to the very values
+/// [`compress::add_fp16_rounded`] adds here. Allocation-free.
 pub fn allreduce_mean_eng<B: WorkerBufs + ?Sized>(
     bufs: &B,
     out: &mut [f32],
@@ -97,17 +124,109 @@ pub fn allreduce_mean_eng<B: WorkerBufs + ?Sized>(
     let chunk = eng.chunk_len(d);
     eng.run_split(d, chunk, &mut *out, |_ci, off, oc: &mut [f32]| {
         let len = oc.len();
-        oc.copy_from_slice(&bufs.buf(0)[off..off + len]);
+        compress::copy_fp16_rounded(oc, &bufs.buf(0)[off..off + len]);
         for i in 1..n {
-            crate::tensor::axpy(oc, 1.0, &bufs.buf(i)[off..off + len]);
+            compress::add_fp16_rounded(oc, &bufs.buf(i)[off..off + len]);
         }
-        crate::tensor::scale(oc, inv);
+        compress::finish_mean_fp16(oc, inv);
     });
     WireStats {
-        up_bytes: (d * 2) as u64,   // fp16 per element
-        down_bytes: (d * 2) as u64,
+        up_bytes: compress::fp16_wire_bytes(d) as u64,
+        down_bytes: compress::fp16_wire_bytes(d) as u64,
         rounds: 1,
         compressed: false,
+    }
+}
+
+/// Transport-backed Algorithm 3: this rank contributes `mine`; rank 0
+/// accumulates the unpacked fp16 uploads in rank order (= worker
+/// order), fp16-rounds the mean and broadcasts it. Bitwise identical
+/// to [`allreduce_mean_eng`] over the same logical buffers.
+pub fn allreduce_mean_transport(
+    mine: &[f32],
+    out: &mut [f32],
+    link: &mut RankLink,
+) -> Result<WireStats, TransportError> {
+    let d = mine.len();
+    assert_eq!(out.len(), d);
+    let world = link.world();
+    let seq = link.next_seq();
+    let payload = compress::fp16_wire_bytes(d);
+    if link.rank() != 0 {
+        link.wire.clear();
+        compress::pack_fp16_bytes(mine, &mut link.wire);
+        link.send_wire(0, FrameKind::FpF16, seq, d, 0)?;
+        link.recv_expect(0, FrameKind::FpF16, seq, d, 0)?;
+        link.expect_payload(payload)?;
+        compress::unpack_fp16_bytes(&link.payload, out);
+    } else {
+        // Rank 0 is worker 0: its own upload never touches the wire
+        // but is rounded exactly as if it had.
+        compress::copy_fp16_rounded(out, mine);
+        for r in 1..world {
+            link.recv_expect(r, FrameKind::FpF16, seq, d, 0)?;
+            link.expect_payload(payload)?;
+            compress::add_fp16_bytes(&link.payload, out);
+        }
+        compress::finish_mean_fp16(out, 1.0 / world as f32);
+        link.wire.clear();
+        compress::pack_fp16_bytes(out, &mut link.wire);
+        for r in 1..world {
+            link.send_wire(r, FrameKind::FpF16, seq, d, 0)?;
+        }
+    }
+    let framed = (HEADER_BYTES + payload) as u64;
+    Ok(WireStats { up_bytes: framed, down_bytes: framed, rounds: 1, compressed: false })
+}
+
+/// The reduction backend one optimizer step drives — every cross-worker
+/// combination in `DistOptimizer::step_comm` goes through exactly one
+/// of these two arms, which is what makes the step path generic over
+/// "N replicas in one process" vs "one replica per OS process".
+pub enum ReduceBackend<'a> {
+    /// All workers materialized in this process; reductions run on the
+    /// engine (infallible).
+    Local,
+    /// This process is one rank of a transport group and materializes
+    /// exactly one worker; reductions are framed collectives.
+    Transport(&'a mut RankLink),
+}
+
+impl ReduceBackend<'_> {
+    /// Algorithm 3 over whichever backend this is.
+    pub fn allreduce_mean<B: WorkerBufs + ?Sized>(
+        &mut self,
+        bufs: &B,
+        out: &mut [f32],
+        eng: &Engine,
+    ) -> Result<WireStats, TransportError> {
+        match self {
+            ReduceBackend::Local => Ok(allreduce_mean_eng(bufs, out, eng)),
+            ReduceBackend::Transport(link) => {
+                assert_eq!(bufs.count(), 1, "transport ranks materialize exactly one worker");
+                allreduce_mean_transport(bufs.buf(0), out, link)
+            }
+        }
+    }
+
+    /// Algorithm 2 over whichever backend this is; `ef` owns the
+    /// persistent error-feedback state either way (all n lanes +
+    /// server locally; this rank's lane — plus the server on rank 0 —
+    /// under a transport).
+    pub fn ef_reduce<B: WorkerBufs + ?Sized>(
+        &mut self,
+        ef: &mut EfAllReduce,
+        bufs: &B,
+        out: &mut [f32],
+        eng: &Engine,
+    ) -> Result<WireStats, TransportError> {
+        match self {
+            ReduceBackend::Local => Ok(ef.reduce_eng(bufs, out, eng)),
+            ReduceBackend::Transport(link) => {
+                assert_eq!(bufs.count(), 1, "transport ranks materialize exactly one worker");
+                ef.reduce_transport(bufs, out, link)
+            }
+        }
     }
 }
 
@@ -124,6 +243,85 @@ struct Lane {
     chunk_l1: Vec<f64>,
 }
 
+/// Read-only access to the n packed uploads feeding one EF server
+/// round — in-process they live in the lanes, under a transport in the
+/// root's gather buffers. Private: an implementation detail of keeping
+/// both server legs literally the same code.
+trait PackedSet: Sync {
+    fn get(&self, w: usize) -> &OneBit;
+}
+
+impl PackedSet for [Lane] {
+    fn get(&self, w: usize) -> &OneBit {
+        &self[w].packed
+    }
+}
+
+impl PackedSet for [OneBit] {
+    fn get(&self, w: usize) -> &OneBit {
+        &self[w]
+    }
+}
+
+/// The EF server round over n packed uploads (Algorithm 2's server
+/// side), shared verbatim by [`EfAllReduce::reduce_eng`] (in-process)
+/// and [`EfAllReduce::reduce_transport`] (rank 0). Phase a: per
+/// [`SERVER_CHUNK`] chunk — ordered worker accumulation, + δ̄,
+/// sign-pack, f64 ‖·‖₁ partial. The partials then combine in chunk
+/// order (the fixed association). Phase b: per chunk — δ̄ ← s − z̄ and
+/// the dense ±scale broadcast, one fused stream. Chunk structure is
+/// mode-independent, so every engine width — including the transport
+/// root's sequential engine — produces identical bits.
+#[allow(clippy::too_many_arguments)]
+fn ef_server_leg<P: PackedSet + ?Sized>(
+    inputs: &P,
+    n: usize,
+    d: usize,
+    server_err: &mut [f32],
+    sum: &mut [f32],
+    packed: &mut OneBit,
+    chunk_l1: &mut [f64],
+    out: &mut [f32],
+    eng: &Engine,
+) {
+    packed.len = d;
+    let inv_n = 1.0 / n as f32;
+    {
+        let err_ro: &[f32] = server_err;
+        eng.run_split(
+            d,
+            SERVER_CHUNK,
+            (
+                &mut sum[..],
+                Blocks::new(&mut packed.signs[..], 64),
+                Blocks::new(&mut chunk_l1[..], SERVER_CHUNK),
+            ),
+            |_ci, off, (s, signs, part)| {
+                s.iter_mut().for_each(|v| *v = 0.0);
+                let w0 = off / 64;
+                let words = signs.data;
+                for w in 0..n {
+                    let p = inputs.get(w);
+                    compress::accumulate_words(&p.signs[w0..w0 + words.len()], p.scale, inv_n, s);
+                }
+                part.data[0] = compress::fold_err_signs_l1(s, &err_ro[off..off + s.len()], words);
+            },
+        );
+    }
+
+    // Combine the ‖·‖₁ partials in chunk order (fixed association,
+    // independent of the pool width).
+    let l1: f64 = chunk_l1.iter().sum();
+    packed.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
+
+    let scale_bits = packed.scale.to_bits();
+    let s_ro: &[f32] = sum;
+    let signs_ro: &[u64] = &packed.signs;
+    eng.run_split(d, SERVER_CHUNK, (&mut *server_err, &mut *out), |_ci, off, (e, o)| {
+        compress::ef_finish_words(&s_ro[off..off + o.len()], &signs_ro[off / 64..], scale_bits, e, o);
+    });
+}
+
 /// Error-feedback 1-bit AllReduce (Algorithm 2).
 ///
 /// Persistent state: one compression-error vector per worker (δᵢ) and
@@ -134,12 +332,24 @@ struct Lane {
 /// zero heap allocation in **both** execution modes — the engine's
 /// persistent pool removed the old per-region thread-spawn exemption
 /// (DESIGN.md §Hot-path, `tests/zero_alloc.rs`).
+///
+/// Under a transport, each rank constructs `EfAllReduce::new(1, d)`:
+/// lane 0 carries that rank's δ, and on rank 0 the server fields carry
+/// δ̄ — the same state layout the n-lane in-process form distributes
+/// over one process per worker.
 pub struct EfAllReduce {
     n: usize,
     d: usize,
     lanes: Vec<Lane>,
+    /// Server error δ̄. Empty until the first server-leg round when
+    /// `n == 1` — the single-lane shape every transport rank builds —
+    /// so worker ranks (which never run the server leg) never pay for
+    /// it or the other server scratch: ~12 bytes/coordinate per worker
+    /// process at paper scale. Multi-lane (in-process) reducers size
+    /// it eagerly, keeping every step after construction
+    /// allocation-free (`tests/zero_alloc.rs`).
     pub server_err: Vec<f32>,
-    // server scratch
+    // server scratch (same laziness as server_err)
     sum: Vec<f32>,
     packed: OneBit,
     /// Per-chunk f64 ‖·‖₁ partials of the server reduction, combined in
@@ -149,6 +359,9 @@ pub struct EfAllReduce {
 
 impl EfAllReduce {
     pub fn new(n: usize, d: usize) -> Self {
+        // n > 1 always runs the server leg in-process; n == 1 may be a
+        // transport worker rank that never does (see `server_err`).
+        let server_d = if n > 1 { d } else { 0 };
         EfAllReduce {
             n,
             d,
@@ -159,10 +372,22 @@ impl EfAllReduce {
                     chunk_l1: vec![0.0; d.div_ceil(SERVER_CHUNK)],
                 })
                 .collect(),
-            server_err: vec![0.0; d],
-            sum: vec![0.0; d],
+            server_err: vec![0.0; server_d],
+            sum: vec![0.0; server_d],
             packed: OneBit::zeros(d),
-            chunk_l1: vec![0.0; d.div_ceil(SERVER_CHUNK)],
+            chunk_l1: vec![0.0; server_d.div_ceil(SERVER_CHUNK)],
+        }
+    }
+
+    /// Size the server-side state (δ̄ + scratch) on first use — a
+    /// steady-state no-op. Only server-leg paths call this (the
+    /// in-process reduction and a transport group's rank 0); transport
+    /// worker ranks never do.
+    fn ensure_server(&mut self) {
+        if self.sum.len() != self.d && self.d > 0 {
+            self.server_err = vec![0.0; self.d];
+            self.sum = vec![0.0; self.d];
+            self.chunk_l1 = vec![0.0; self.d.div_ceil(SERVER_CHUNK)];
         }
     }
 
@@ -192,7 +417,7 @@ impl EfAllReduce {
     /// codec's fixed-chunk scale association makes both schedules — and
     /// the sequential path — bitwise identical.
     ///
-    /// Phase 2 (chunk-parallel over coordinates, DESIGN.md §Hot-path):
+    /// Phase 2 ([`ef_server_leg`], chunk-parallel over coordinates):
     /// z̄ = C[(1/n) Σ ẑᵢ + δ̄]; δ̄ ← … − z̄; broadcast z̄. Every
     /// [`SERVER_CHUNK`]-sized coordinate chunk accumulates workers in
     /// fixed index order and emits an f64 ‖·‖₁ partial; the partials are
@@ -266,64 +491,10 @@ impl EfAllReduce {
             }
         }
 
-        // Phase 2a: per chunk — ordered worker accumulation, + δ̄,
-        // sign-pack, f64 ‖·‖₁ partial. One streamed pass per chunk.
+        // Phase 2: the shared server leg over the lanes' packed uploads.
+        self.ensure_server();
         let EfAllReduce { lanes, server_err, sum, packed, chunk_l1, .. } = self;
-        let lanes: &[Lane] = lanes;
-        packed.len = d;
-        let inv_n = 1.0 / n as f32;
-        {
-            let err_ro: &[f32] = server_err;
-            eng.run_split(
-                d,
-                SERVER_CHUNK,
-                (
-                    &mut sum[..],
-                    Blocks::new(&mut packed.signs[..], 64),
-                    Blocks::new(&mut chunk_l1[..], SERVER_CHUNK),
-                ),
-                |_ci, off, (s, signs, part)| {
-                    s.iter_mut().for_each(|v| *v = 0.0);
-                    let w0 = off / 64;
-                    let words = signs.data;
-                    for lane in lanes {
-                        compress::accumulate_words(
-                            &lane.packed.signs[w0..w0 + words.len()],
-                            lane.packed.scale,
-                            inv_n,
-                            s,
-                        );
-                    }
-                    part.data[0] =
-                        compress::fold_err_signs_l1(s, &err_ro[off..off + s.len()], words);
-                },
-            );
-        }
-
-        // Combine the ‖·‖₁ partials in chunk order (fixed association,
-        // independent of the pool width).
-        let l1: f64 = chunk_l1.iter().sum();
-        packed.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
-
-        // Phase 2b: per chunk — δ̄ ← s − z̄ and the dense broadcast, one
-        // fused stream.
-        let scale_bits = packed.scale.to_bits();
-        let s_ro: &[f32] = sum;
-        let signs_ro: &[u64] = &packed.signs;
-        eng.run_split(
-            d,
-            SERVER_CHUNK,
-            (&mut server_err[..], &mut *out),
-            |_ci, off, (e, o)| {
-                compress::ef_finish_words(
-                    &s_ro[off..off + o.len()],
-                    &signs_ro[off / 64..],
-                    scale_bits,
-                    e,
-                    o,
-                );
-            },
-        );
+        ef_server_leg(&lanes[..], n, d, server_err, sum, packed, chunk_l1, out, eng);
 
         let wire = compress::wire_bytes(d) as u64;
         WireStats {
@@ -332,6 +503,77 @@ impl EfAllReduce {
             rounds: 1,
             compressed: true,
         }
+    }
+
+    /// One EF-1bit round over a [`crate::comm::transport`] group: this
+    /// rank compresses its single materialized lane locally with the
+    /// *same* fused kernel the in-process schedules use, uploads the
+    /// packed bits to rank 0, which runs [`ef_server_leg`] over the
+    /// uploads **in rank order** (= worker order) and broadcasts the
+    /// packed result; every rank decompresses identical bytes. The
+    /// persistent δ of worker r lives in rank r's lane 0; δ̄ lives in
+    /// rank 0's server state — together exactly the state the n-lane
+    /// in-process form holds, so an N-process run is bit-for-bit an
+    /// `ExecMode::Threaded(N)` run (the subsystem's core contract,
+    /// `tests/transport_parity.rs`).
+    pub fn reduce_transport<B: WorkerBufs + ?Sized>(
+        &mut self,
+        bufs: &B,
+        out: &mut [f32],
+        link: &mut RankLink,
+    ) -> Result<WireStats, TransportError> {
+        assert_eq!(self.n, 1, "transport ranks materialize exactly one EF lane");
+        assert_eq!(bufs.count(), 1);
+        assert_eq!(out.len(), self.d);
+        let d = self.d;
+        let world = link.world();
+        let seq = link.next_seq();
+        let chunk = compress::CODEC_CHUNK;
+        let payload = onebit_payload_bytes(d);
+
+        let lane = &mut self.lanes[0];
+        compress::compress_ef_into(bufs.buf(0), &mut lane.err, &mut lane.packed);
+
+        if link.rank() != 0 {
+            link.wire.clear();
+            encode_onebit(&lane.packed, &mut link.wire);
+            link.send_wire(0, FrameKind::Ef, seq, d, chunk)?;
+            // the server packed scratch doubles as the broadcast target
+            link.recv_expect(0, FrameKind::Ef, seq, d, chunk)?;
+            decode_onebit(&link.payload, d, &mut self.packed)?;
+            compress::decompress_into(&self.packed, out);
+        } else {
+            link.ensure_gathered(world, d);
+            link.gathered[0].clone_from(&lane.packed);
+            for r in 1..world {
+                link.recv_expect(r, FrameKind::Ef, seq, d, chunk)?;
+                decode_onebit(&link.payload, d, &mut link.gathered[r])?;
+            }
+            // Identical server leg to reduce_eng — fixed rank order,
+            // fixed chunk association, engine width irrelevant by the
+            // mode-independence contract.
+            let eng = Engine::sequential();
+            self.ensure_server();
+            let EfAllReduce { server_err, sum, packed, chunk_l1, .. } = self;
+            ef_server_leg(
+                &link.gathered[..],
+                world,
+                d,
+                server_err,
+                sum,
+                packed,
+                chunk_l1,
+                out,
+                &eng,
+            );
+            link.wire.clear();
+            encode_onebit(packed, &mut link.wire);
+            for r in 1..world {
+                link.send_wire(r, FrameKind::Ef, seq, d, chunk)?;
+            }
+        }
+        let framed = (HEADER_BYTES + payload) as u64;
+        Ok(WireStats { up_bytes: framed, down_bytes: framed, rounds: 1, compressed: true })
     }
 
     /// Reset all error state (used when an optimizer stage boundary
@@ -355,9 +597,40 @@ impl EfAllReduce {
     }
 }
 
+/// Exact wire payload of one packed EF upload/broadcast: the f32 scale
+/// plus whole little-endian u64 sign words. (The analytic
+/// [`compress::wire_bytes`] packs the bits tightly at d/8; the real
+/// frame ships word-aligned signs — 0–7 bytes more.)
+pub fn onebit_payload_bytes(d: usize) -> usize {
+    4 + 8 * d.div_ceil(64)
+}
+
+fn encode_onebit(p: &OneBit, out: &mut Vec<u8>) {
+    out.reserve(4 + 8 * p.signs.len());
+    out.extend_from_slice(&p.scale.to_le_bytes());
+    for w in &p.signs {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+fn decode_onebit(payload: &[u8], d: usize, dst: &mut OneBit) -> Result<(), TransportError> {
+    let want = onebit_payload_bytes(d);
+    if payload.len() != want {
+        return Err(TransportError::PayloadSize { want, got: payload.len() });
+    }
+    dst.len = d;
+    dst.scale = f32::from_le_bytes(payload[..4].try_into().expect("4-byte scale"));
+    dst.signs.resize(d.div_ceil(64), 0);
+    for (w, c) in dst.signs.iter_mut().zip(payload[4..].chunks_exact(8)) {
+        *w = u64::from_le_bytes(c.try_into().expect("8-byte sign word"));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::transport::inproc;
     use crate::coordinator::engine::ExecMode;
     use crate::tensor::Rng;
 
@@ -373,14 +646,25 @@ mod tests {
     }
 
     #[test]
-    fn fp_allreduce_is_exact_mean() {
+    fn fp_allreduce_is_the_fp16_wire_mean() {
+        // The reduction models the fp16 wire exactly: rounded uploads,
+        // ordered f32 accumulation, rounded broadcast — and stays close
+        // to the exact mean (fp16 has ~3 decimal digits).
         let bufs = rand_bufs(4, 100, 1);
         let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
         let mut out = vec![0.0; 100];
         let stats = allreduce_mean(&refs, &mut out);
         for j in 0..100 {
-            let mean: f32 = bufs.iter().map(|b| b[j]).sum::<f32>() / 4.0;
-            assert!((out[j] - mean).abs() < 1e-6);
+            let mut acc = compress::fp16_round(bufs[0][j]);
+            for b in &bufs[1..] {
+                acc += compress::fp16_round(b[j]);
+            }
+            let want = compress::fp16_round(acc * 0.25);
+            assert_eq!(out[j].to_bits(), want.to_bits(), "j={j}");
+            let exact: f32 = bufs.iter().map(|b| b[j]).sum::<f32>() / 4.0;
+            // upload rounding is relative to each |b_i| (up to ~3σ),
+            // not to the mean — hence the absolute headroom
+            assert!((out[j] - exact).abs() < 3e-3 * (1.0 + exact.abs()), "j={j}");
         }
         assert_eq!(stats.up_bytes, 200);
         assert!(!stats.compressed);
@@ -396,6 +680,39 @@ mod tests {
         allreduce_mean_eng(&refs, &mut thr, &Engine::new(ExecMode::Threaded(4)));
         for j in 0..seq.len() {
             assert_eq!(seq[j].to_bits(), thr[j].to_bits(), "j={j}");
+        }
+    }
+
+    #[test]
+    fn transport_reductions_on_one_rank_match_local() {
+        // A world-1 transport group degenerates to the local math: no
+        // frames move, but the code path is the transport one.
+        let d = 2 * SERVER_CHUNK + 77;
+        let bufs = rand_bufs(1, d, 5);
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+
+        let mut link = RankLink::new(Box::new(inproc::group(1).pop().unwrap()));
+
+        let mut want = vec![0.0f32; d];
+        allreduce_mean(&refs, &mut want);
+        let mut got = vec![0.0f32; d];
+        allreduce_mean_transport(&bufs[0], &mut got, &mut link).unwrap();
+        for j in 0..d {
+            assert_eq!(want[j].to_bits(), got[j].to_bits(), "fp j={j}");
+        }
+
+        let mut ef_local = EfAllReduce::new(1, d);
+        let mut ef_tp = EfAllReduce::new(1, d);
+        for round in 0..4 {
+            let bufs = rand_bufs(1, d, 50 + round);
+            let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            ef_local.reduce(&refs, &mut want);
+            ef_tp.reduce_transport(&refs, &mut got, &mut link).unwrap();
+            for j in 0..d {
+                assert_eq!(want[j].to_bits(), got[j].to_bits(), "ef r={round} j={j}");
+            }
+            assert_eq!(ef_local.server_err, ef_tp.server_err, "r={round}");
+            assert_eq!(ef_local.worker_err(0), ef_tp.worker_err(0), "r={round}");
         }
     }
 
@@ -585,6 +902,27 @@ mod tests {
         ef.reduce(&refs, &mut out);
         for j in 0..4 {
             assert_eq!(out[j] >= 0.0, buf[j] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn onebit_wire_roundtrip_is_bit_exact() {
+        let mut rng = Rng::new(33);
+        for &d in &[1usize, 63, 64, 65, 1000] {
+            let mut src = vec![0.0f32; d];
+            rng.fill_normal(&mut src, 1.0);
+            let packed = compress::compress(&src);
+            let mut wire = Vec::new();
+            encode_onebit(&packed, &mut wire);
+            assert_eq!(wire.len(), onebit_payload_bytes(d));
+            let mut back = OneBit::zeros(0);
+            decode_onebit(&wire, d, &mut back).unwrap();
+            assert_eq!(back.scale.to_bits(), packed.scale.to_bits(), "d={d}");
+            assert_eq!(back.signs, packed.signs, "d={d}");
+            assert_eq!(back.len, d);
+            // wrong-size payloads are typed errors, not panics
+            let err = decode_onebit(&wire[..wire.len() - 1], d, &mut back).unwrap_err();
+            assert!(matches!(err, TransportError::PayloadSize { .. }), "d={d}: {err}");
         }
     }
 }

@@ -286,6 +286,182 @@ pub fn ef_finish_words(s: &[f32], signs: &[u64], scale_bits: u32, err: &mut [f32
 }
 
 // ---------------------------------------------------------------------
+// fp16 wire buffers (ISSUE 4 satellite — ROADMAP open item)
+// ---------------------------------------------------------------------
+//
+// The paper runs *all* methods with fp16 communication enabled, and the
+// volume ledger / clock model have always charged 2 bytes per element
+// for the full-precision AllReduce — but until ISSUE 4 the reduction
+// itself summed raw f32s, so the charged kernel had no implementation
+// and a real wire could not reproduce the in-process arithmetic. These
+// kernels materialize the half-precision pack/unpack (IEEE 754
+// binary16, round-to-nearest-even, subnormals and ±inf/NaN handled),
+// and the fp AllReduce now models the fp16 wire exactly on *every*
+// path: each worker's upload is fp16-rounded, the server accumulates
+// the rounded values in f32 in fixed worker order, and the broadcast
+// mean is fp16-rounded again. A multi-process rank sending literal
+// packed bytes therefore reproduces the in-process engine reduction
+// bit for bit (`comm::transport`, DESIGN.md §Transport).
+
+/// Convert one f32 to IEEE 754 binary16 bits (round-to-nearest-even;
+/// overflow → ±inf, NaN payload truncated but kept non-zero).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x7f_ffff;
+    if exp == 0xff {
+        // inf / NaN: keep the top mantissa bits, never round a NaN to inf
+        if man == 0 {
+            return sign | 0x7c00;
+        }
+        let m = (man >> 13) as u16 & 0x3ff;
+        return sign | 0x7c00 | if m == 0 { 1 } else { m };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow to inf
+    }
+    if e <= 0 {
+        // subnormal range (or underflow to zero): shift the 24-bit
+        // significand so its weight matches f16 subnormals, RNE.
+        let shift = (14 - e) as u32;
+        if shift >= 32 {
+            return sign;
+        }
+        // a carry out of the 10-bit mantissa lands in the exponent
+        // field as the smallest normal — exactly right
+        return sign | shift_rne(man | 0x80_0000, shift) as u16;
+    }
+    let mut e16 = e as u32;
+    let mut m16 = shift_rne(man, 13);
+    if m16 == 0x400 {
+        m16 = 0;
+        e16 += 1;
+        if e16 >= 0x1f {
+            return sign | 0x7c00;
+        }
+    }
+    sign | ((e16 as u16) << 10) | m16 as u16
+}
+
+/// `v >> shift` with round-to-nearest, ties-to-even.
+fn shift_rne(v: u32, shift: u32) -> u32 {
+    if shift == 0 {
+        return v;
+    }
+    let kept = v >> shift;
+    let rem = v & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rem > half || (rem == half && kept & 1 == 1) {
+        kept + 1
+    } else {
+        kept
+    }
+}
+
+/// Convert IEEE 754 binary16 bits to the exact f32 they denote.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal: normalize into an f32 normal
+            let p = 31 - man.leading_zeros(); // MSB position, 0..=9
+            sign | ((p + 103) << 23) | ((man << (23 - p)) & 0x7f_ffff)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// The value `x` becomes after one trip over an fp16 wire.
+#[inline]
+pub fn fp16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Wire bytes of a d-element fp16 buffer (what the ledger and clock
+/// model have always charged for the full-precision AllReduce).
+pub fn fp16_wire_bytes(d: usize) -> usize {
+    2 * d
+}
+
+/// Pack `src` into fp16 bits, one u16 per element.
+pub fn pack_fp16(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f32_to_f16_bits(s);
+    }
+}
+
+/// Unpack fp16 bits into exact f32 values.
+pub fn unpack_fp16(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f16_bits_to_f32(s);
+    }
+}
+
+/// Pack `src` as little-endian fp16 wire bytes, appended to `out`.
+pub fn pack_fp16_bytes(src: &[f32], out: &mut Vec<u8>) {
+    out.reserve(2 * src.len());
+    for &x in src {
+        out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+    }
+}
+
+/// Unpack little-endian fp16 wire bytes: `dst[i] = f16→f32(src[2i..])`.
+pub fn unpack_fp16_bytes(src: &[u8], dst: &mut [f32]) {
+    assert_eq!(src.len(), 2 * dst.len());
+    for (d, c) in dst.iter_mut().zip(src.chunks_exact(2)) {
+        *d = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+    }
+}
+
+/// Accumulate little-endian fp16 wire bytes: `dst[i] += f16→f32(...)`.
+/// The server-side add of one worker's upload, in f32 — bitwise the
+/// same addition [`add_fp16_rounded`] performs on the in-process path.
+pub fn add_fp16_bytes(src: &[u8], dst: &mut [f32]) {
+    assert_eq!(src.len(), 2 * dst.len());
+    for (d, c) in dst.iter_mut().zip(src.chunks_exact(2)) {
+        *d += f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+    }
+}
+
+/// `dst[i] = fp16_round(src[i])` — a worker's upload as the in-process
+/// server observes it (pack + unpack without materializing the bytes).
+pub fn copy_fp16_rounded(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = fp16_round(s);
+    }
+}
+
+/// `dst[i] += fp16_round(src[i])` — in-process form of one worker's
+/// fp16 upload accumulating into the server sum.
+pub fn add_fp16_rounded(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += fp16_round(s);
+    }
+}
+
+/// `dst[i] = fp16_round(dst[i] * inv)` — the mean scale plus the fp16
+/// rounding of the broadcast leg, fused.
+pub fn finish_mean_fp16(dst: &mut [f32], inv: f32) {
+    for d in dst.iter_mut() {
+        *d = fp16_round(*d * inv);
+    }
+}
+
+// ---------------------------------------------------------------------
 // Ablation codecs (related work, Section 2)
 // ---------------------------------------------------------------------
 
@@ -521,6 +697,105 @@ mod tests {
             for j in 0..d {
                 assert_eq!(err[j].to_bits(), ref_err[j].to_bits(), "d={d} j={j}");
             }
+        }
+    }
+
+    #[test]
+    fn fp16_known_constants() {
+        // Anchors from the IEEE 754 binary16 tables.
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // f16::MAX
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00); // rounds to +inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f32_to_f16_bits(1.0 / 3.0), 0x3555);
+        // smallest subnormal 2^-24 and the tie just below it
+        assert_eq!(f32_to_f16_bits(5.960_464_5e-8), 0x0001);
+        assert_eq!(f32_to_f16_bits(2.980_232_2e-8), 0x0000); // 2^-25 ties to even (0)
+        assert_eq!(f32_to_f16_bits(4.470_348_4e-8), 0x0001); // 1.5×2^-25 rounds up
+        // smallest normal 2^-14
+        assert_eq!(f32_to_f16_bits(6.103_515_6e-5), 0x0400);
+        // NaN stays NaN (payload may shrink but never to inf)
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // the reverse direction on the same anchors is exact
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7bff), 65504.0);
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_5e-8);
+        assert_eq!(f16_bits_to_f32(0x0400), 6.103_515_6e-5);
+        assert_eq!(f16_bits_to_f32(0xfc00), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn fp16_round_is_idempotent_and_close() {
+        // One wire trip projects onto the f16-representable set: a
+        // second trip changes nothing, and the first stays within half
+        // an f16 ulp (2^-11 relative in the normal range).
+        let mut rng = Rng::new(5);
+        let mut v = vec![0.0f32; 4096];
+        rng.fill_normal(&mut v, 3.0);
+        v.extend_from_slice(&[0.0, -0.0, 1e-7, -1e-7, 6e-5, 70000.0, -70000.0]);
+        for &x in &v {
+            let once = fp16_round(x);
+            let twice = fp16_round(once);
+            assert_eq!(once.to_bits(), twice.to_bits(), "x={x}");
+            if x.abs() > 1e-4 && x.abs() < 60000.0 {
+                assert!((once - x).abs() <= x.abs() * 4.9e-4, "x={x} -> {once}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_pack_forms_agree() {
+        // u16 buffers, byte buffers and the fused rounded kernels are
+        // three views of the same wire: all must agree bit for bit.
+        let mut rng = Rng::new(6);
+        let mut src = vec![0.0f32; 777];
+        rng.fill_normal(&mut src, 2.0);
+
+        let mut u16s = vec![0u16; 777];
+        pack_fp16(&src, &mut u16s);
+        let mut bytes = Vec::new();
+        pack_fp16_bytes(&src, &mut bytes);
+        assert_eq!(bytes.len(), fp16_wire_bytes(777));
+        for (i, c) in bytes.chunks_exact(2).enumerate() {
+            assert_eq!(u16::from_le_bytes([c[0], c[1]]), u16s[i], "i={i}");
+        }
+
+        let mut via_u16 = vec![0.0f32; 777];
+        unpack_fp16(&u16s, &mut via_u16);
+        let mut via_bytes = vec![0.0f32; 777];
+        unpack_fp16_bytes(&bytes, &mut via_bytes);
+        let mut via_round = vec![0.0f32; 777];
+        copy_fp16_rounded(&mut via_round, &src);
+        for i in 0..777 {
+            assert_eq!(via_u16[i].to_bits(), via_bytes[i].to_bits(), "i={i}");
+            assert_eq!(via_u16[i].to_bits(), via_round[i].to_bits(), "i={i}");
+        }
+
+        // and the accumulate forms
+        let mut acc_bytes = vec![1.5f32; 777];
+        add_fp16_bytes(&bytes, &mut acc_bytes);
+        let mut acc_round = vec![1.5f32; 777];
+        add_fp16_rounded(&mut acc_round, &src);
+        for i in 0..777 {
+            assert_eq!(acc_bytes[i].to_bits(), acc_round[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn fp16_roundtrip_is_exact_on_representables() {
+        // Every finite f16 bit pattern → f32 → f16 must come back
+        // identical (the broadcast leg relies on this).
+        for h in 0u16..=0xffff {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/NaN handled above
+            }
+            let x = f16_bits_to_f32(h);
+            assert_eq!(f32_to_f16_bits(x), h, "h={h:#06x} x={x}");
         }
     }
 

@@ -1,13 +1,20 @@
 //! Communication substrate: codecs, AllReduce algorithms (paper
-//! Algorithms 2 & 3), the analytic network-timing model, and the
+//! Algorithms 2 & 3) in both in-process and transport-backed forms,
+//! the real multi-process transport (framed TCP / in-proc channels,
+//! DESIGN.md §Transport), the analytic network-timing model, and the
 //! volume/round ledger behind Figure 4.
 
 pub mod allreduce;
 pub mod compress;
 pub mod network;
+pub mod transport;
 pub mod volume;
 
-pub use allreduce::{allreduce_mean, EfAllReduce, WireStats, WorkerBufs, SERVER_CHUNK};
+pub use allreduce::{
+    allreduce_mean, allreduce_mean_transport, onebit_payload_bytes, EfAllReduce, ReduceBackend,
+    WireStats, WorkerBufs, SERVER_CHUNK,
+};
 pub use compress::{compress, decompress_into, wire_bytes, OneBit};
 pub use network::{ComputeModel, Fabric, ETHERNET, INFINIBAND};
+pub use transport::{FrameHeader, FrameKind, RankLink, Transport, TransportError, HEADER_BYTES};
 pub use volume::VolumeLedger;

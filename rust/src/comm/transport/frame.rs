@@ -1,0 +1,266 @@
+//! The wire protocol: length-prefixed frames with a versioned header.
+//!
+//! Every message either backend moves — collective payloads, barriers,
+//! handshakes — is one frame:
+//!
+//! ```text
+//! offset  size  field        notes
+//!      0     4  magic        0x5A41_3031 ("ZA01"), little-endian
+//!      4     2  version      wire protocol version (1)
+//!      6     2  kind         FrameKind discriminant
+//!      8     4  rank         sender rank
+//!     12     4  dim          logical tensor length this round concerns
+//!     16     4  chunk        codec chunk association (Ef frames), else 0
+//!     20     8  seq          collective sequence number
+//!     28     8  payload_len  bytes following the header
+//!     36     …  payload
+//! ```
+//!
+//! The header exists for *corruption and mismatch detection*: a
+//! receiver validates magic/version/kind structurally at decode time
+//! ([`decode_header`]) and then checks the expected kind, sender rank,
+//! sequence number, tensor dim and chunk association against what its
+//! own schedule says the next frame must be ([`FrameHeader::expect`]).
+//! Every violation is a typed [`TransportError`] — never a panic, and
+//! never a silently wrong answer: a truncated stream, a reordered or
+//! replayed round, a rank running a different model dim or a different
+//! codec chunk size all fail loudly (`tests/transport_wire.rs`).
+
+use std::fmt;
+
+/// "ZA01" — first bytes of every frame.
+pub const MAGIC: u32 = 0x5A41_3031;
+/// Wire protocol version; bumped on any layout change.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_BYTES: usize = 36;
+/// Upper bound a receiver accepts for one payload (1 GiB — far above
+/// any tensor this system moves; a corrupt length field fails fast
+/// instead of attempting a absurd allocation).
+pub const MAX_PAYLOAD: u64 = 1 << 30;
+
+/// What a frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Handshake: dim = world, chunk = CODEC_CHUNK, payload = the
+    /// 8-byte run-spec fingerprint.
+    Hello = 1,
+    /// Empty-payload barrier token.
+    Barrier = 2,
+    /// fp16-packed dense payload (the fp AllReduce legs).
+    FpF16 = 3,
+    /// Exact little-endian f32 payload (final param gather).
+    FpF32 = 4,
+    /// Packed 1-bit payload: f32 scale + u64 sign words.
+    Ef = 5,
+    /// One f32 loss value (control plane; not ledgered).
+    Loss = 6,
+    /// Graceful teardown.
+    Bye = 7,
+}
+
+impl FrameKind {
+    pub fn from_u16(v: u16) -> Option<FrameKind> {
+        Some(match v {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Barrier,
+            3 => FrameKind::FpF16,
+            4 => FrameKind::FpF32,
+            5 => FrameKind::Ef,
+            6 => FrameKind::Loss,
+            7 => FrameKind::Bye,
+            _ => return None,
+        })
+    }
+}
+
+/// Decoded frame header (see the module docs for the byte layout).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    pub rank: u32,
+    pub dim: u32,
+    pub chunk: u32,
+    pub seq: u64,
+    pub payload_len: u64,
+}
+
+impl FrameHeader {
+    pub fn new(kind: FrameKind, rank: usize, seq: u64, dim: usize, chunk: usize) -> FrameHeader {
+        FrameHeader {
+            kind,
+            rank: rank as u32,
+            dim: dim as u32,
+            chunk: chunk as u32,
+            seq,
+            payload_len: 0,
+        }
+    }
+
+    /// Serialize into the fixed-size header block.
+    pub fn encode(&self) -> [u8; HEADER_BYTES] {
+        let mut b = [0u8; HEADER_BYTES];
+        b[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+        b[4..6].copy_from_slice(&VERSION.to_le_bytes());
+        b[6..8].copy_from_slice(&(self.kind as u16).to_le_bytes());
+        b[8..12].copy_from_slice(&self.rank.to_le_bytes());
+        b[12..16].copy_from_slice(&self.dim.to_le_bytes());
+        b[16..20].copy_from_slice(&self.chunk.to_le_bytes());
+        b[20..28].copy_from_slice(&self.seq.to_le_bytes());
+        b[28..36].copy_from_slice(&self.payload_len.to_le_bytes());
+        b
+    }
+
+    /// Validate this frame against what the receiver's schedule says
+    /// the next frame must be. Typed errors, checked most-structural
+    /// first (kind, then sender, then sequence, then shape).
+    pub fn expect(
+        &self,
+        kind: FrameKind,
+        from: usize,
+        seq: u64,
+        dim: usize,
+        chunk: usize,
+    ) -> Result<(), TransportError> {
+        if self.kind != kind {
+            return Err(TransportError::KindMismatch { want: kind, got: self.kind });
+        }
+        if self.rank != from as u32 {
+            return Err(TransportError::RankMismatch { want: from as u32, got: self.rank });
+        }
+        if self.seq != seq {
+            return Err(TransportError::SeqMismatch { want: seq, got: self.seq });
+        }
+        if self.dim != dim as u32 {
+            return Err(TransportError::DimMismatch { want: dim as u32, got: self.dim });
+        }
+        if self.chunk != chunk as u32 {
+            return Err(TransportError::ChunkMismatch { want: chunk as u32, got: self.chunk });
+        }
+        Ok(())
+    }
+}
+
+/// Decode and structurally validate a header block.
+pub fn decode_header(b: &[u8; HEADER_BYTES]) -> Result<FrameHeader, TransportError> {
+    let le32 = |o: usize| u32::from_le_bytes(b[o..o + 4].try_into().expect("4 bytes"));
+    let le16 = |o: usize| u16::from_le_bytes(b[o..o + 2].try_into().expect("2 bytes"));
+    let le64 = |o: usize| u64::from_le_bytes(b[o..o + 8].try_into().expect("8 bytes"));
+    let magic = le32(0);
+    if magic != MAGIC {
+        return Err(TransportError::BadMagic { got: magic });
+    }
+    let version = le16(4);
+    if version != VERSION {
+        return Err(TransportError::BadVersion { got: version });
+    }
+    let kind_raw = le16(6);
+    let kind = FrameKind::from_u16(kind_raw).ok_or(TransportError::BadKind { got: kind_raw })?;
+    let payload_len = le64(28);
+    if payload_len > MAX_PAYLOAD {
+        return Err(TransportError::Oversize { len: payload_len });
+    }
+    Ok(FrameHeader { kind, rank: le32(8), dim: le32(12), chunk: le32(16), seq: le64(20), payload_len })
+}
+
+/// Encode one whole frame (header + payload) into `out` (appended).
+pub fn encode_frame(mut header: FrameHeader, payload: &[u8], out: &mut Vec<u8>) {
+    header.payload_len = payload.len() as u64;
+    out.extend_from_slice(&header.encode());
+    out.extend_from_slice(payload);
+}
+
+/// Decode one whole frame from a byte buffer (the in-proc backend's
+/// message unit). The buffer must contain exactly one frame; short
+/// reads are [`TransportError::Truncated`], excess bytes are
+/// [`TransportError::PayloadSize`].
+pub fn decode_frame(bytes: &[u8], payload: &mut Vec<u8>) -> Result<FrameHeader, TransportError> {
+    if bytes.len() < HEADER_BYTES {
+        return Err(TransportError::Truncated { needed: HEADER_BYTES, got: bytes.len() });
+    }
+    let header = decode_header(bytes[..HEADER_BYTES].try_into().expect("header block"))?;
+    let want = header.payload_len as usize;
+    let got = bytes.len() - HEADER_BYTES;
+    if got < want {
+        return Err(TransportError::Truncated { needed: want, got });
+    }
+    if got > want {
+        return Err(TransportError::PayloadSize { want, got });
+    }
+    payload.clear();
+    payload.extend_from_slice(&bytes[HEADER_BYTES..]);
+    Ok(header)
+}
+
+/// Everything that can go wrong on the wire — all typed: a corrupt,
+/// truncated, reordered or mismatched frame must surface as one of
+/// these, never as a panic or a silently wrong reduction.
+#[derive(Debug)]
+pub enum TransportError {
+    /// Underlying socket/OS failure.
+    Io(std::io::Error),
+    /// The peer hung up at a frame boundary.
+    Closed { peer: usize },
+    /// First 4 bytes were not the protocol magic.
+    BadMagic { got: u32 },
+    /// Protocol version this build does not speak.
+    BadVersion { got: u16 },
+    /// Unknown frame kind discriminant.
+    BadKind { got: u16 },
+    /// The stream/buffer ended inside a frame.
+    Truncated { needed: usize, got: usize },
+    /// Header declares a payload larger than [`MAX_PAYLOAD`].
+    Oversize { len: u64 },
+    /// Payload length disagrees with what the kind/dim dictate.
+    PayloadSize { want: usize, got: usize },
+    /// Received a different frame kind than the schedule expects.
+    KindMismatch { want: FrameKind, got: FrameKind },
+    /// Frame stamped by a different sender than this edge carries.
+    RankMismatch { want: u32, got: u32 },
+    /// Out-of-order / replayed collective round.
+    SeqMismatch { want: u64, got: u64 },
+    /// Peer is reducing a different tensor length.
+    DimMismatch { want: u32, got: u32 },
+    /// Peer packs with a different codec chunk association.
+    ChunkMismatch { want: u32, got: u32 },
+    /// Handshake-time validation failure (bad rank, world or spec
+    /// fingerprint mismatch, timeout).
+    Handshake(String),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use TransportError::*;
+        match self {
+            Io(e) => write!(f, "transport I/O error: {e}"),
+            Closed { peer } => write!(f, "rank {peer} closed the connection"),
+            BadMagic { got } => write!(f, "bad frame magic {got:#010x} (want {MAGIC:#010x})"),
+            BadVersion { got } => write!(f, "wire protocol version {got} (this build speaks {VERSION})"),
+            BadKind { got } => write!(f, "unknown frame kind {got}"),
+            Truncated { needed, got } => write!(f, "truncated frame: needed {needed} bytes, got {got}"),
+            Oversize { len } => write!(f, "frame payload length {len} exceeds the {MAX_PAYLOAD}-byte cap"),
+            PayloadSize { want, got } => write!(f, "payload size mismatch: want {want} bytes, got {got}"),
+            KindMismatch { want, got } => write!(f, "expected a {want:?} frame, got {got:?}"),
+            RankMismatch { want, got } => write!(f, "frame stamped by rank {got}, expected rank {want}"),
+            SeqMismatch { want, got } => write!(f, "collective seq mismatch: expected {want}, got {got} (reordered or replayed round)"),
+            DimMismatch { want, got } => write!(f, "tensor dim mismatch: this rank reduces d={want}, peer sent d={got}"),
+            ChunkMismatch { want, got } => write!(f, "codec chunk mismatch: this build packs at {want}, peer at {got}"),
+            Handshake(msg) => write!(f, "handshake failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io(e)
+    }
+}

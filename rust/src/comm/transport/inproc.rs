@@ -1,0 +1,130 @@
+//! Channel-backed [`Transport`]: ranks inside one process, connected by
+//! `std::sync::mpsc` channels that carry **fully encoded frames**.
+//!
+//! This is the default backend and the one tests lean on: it needs no
+//! sockets or subprocesses, yet exercises the identical frame
+//! encode/decode path the TCP backend uses — a frame corrupted,
+//! truncated or mis-sequenced in-proc fails exactly like one on a
+//! socket. Each rank loop runs on its own thread; only root↔worker
+//! edges exist (collectives are root-star shaped).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::frame::{decode_frame, encode_frame, FrameHeader, TransportError};
+use super::Transport;
+
+/// One rank of an in-process group (see [`group`]).
+pub struct InProc {
+    rank: usize,
+    world: usize,
+    /// `tx[i]` sends toward rank i; workers only hold `tx[0]`.
+    tx: Vec<Option<Sender<Vec<u8>>>>,
+    /// `rx[i]` receives from rank i; workers only hold `rx[0]`.
+    rx: Vec<Option<Receiver<Vec<u8>>>>,
+}
+
+/// Build a fully-wired `world`-rank group; index = rank. Endpoints are
+/// `Send` — move each to its rank's thread.
+pub fn group(world: usize) -> Vec<InProc> {
+    assert!(world >= 1, "a transport group needs at least rank 0");
+    let mut eps: Vec<InProc> = (0..world)
+        .map(|rank| InProc {
+            rank,
+            world,
+            tx: (0..world).map(|_| None).collect(),
+            rx: (0..world).map(|_| None).collect(),
+        })
+        .collect();
+    let (root, workers) = eps.split_at_mut(1);
+    for (i, w) in workers.iter_mut().enumerate() {
+        let r = i + 1;
+        let (down_tx, down_rx) = channel(); // root → r
+        let (up_tx, up_rx) = channel(); // r → root
+        root[0].tx[r] = Some(down_tx);
+        root[0].rx[r] = Some(up_rx);
+        w.tx[0] = Some(up_tx);
+        w.rx[0] = Some(down_rx);
+    }
+    eps
+}
+
+impl Transport for InProc {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&mut self, to: usize, header: FrameHeader, payload: &[u8])
+        -> Result<(), TransportError> {
+        let tx = self.tx[to]
+            .as_ref()
+            .unwrap_or_else(|| panic!("no in-proc edge {} -> {to}", self.rank));
+        let mut bytes = Vec::with_capacity(super::HEADER_BYTES + payload.len());
+        encode_frame(header, payload, &mut bytes);
+        tx.send(bytes).map_err(|_| TransportError::Closed { peer: to })
+    }
+
+    fn recv(&mut self, from: usize, payload: &mut Vec<u8>) -> Result<FrameHeader, TransportError> {
+        let rx = self.rx[from]
+            .as_ref()
+            .unwrap_or_else(|| panic!("no in-proc edge {from} -> {}", self.rank));
+        let bytes = rx.recv().map_err(|_| TransportError::Closed { peer: from })?;
+        decode_frame(&bytes, payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::FrameKind;
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_between_ranks() {
+        let mut eps = group(2);
+        let mut w = eps.pop().unwrap();
+        let mut root = eps.pop().unwrap();
+        assert_eq!(root.rank(), 0);
+        assert_eq!(w.rank(), 1);
+        assert_eq!(root.world(), 2);
+
+        let h = std::thread::spawn(move || {
+            let mut payload = Vec::new();
+            let header = w.recv(0, &mut payload).unwrap();
+            assert_eq!(header.kind, FrameKind::FpF32);
+            assert_eq!(header.rank, 0);
+            assert_eq!(header.seq, 9);
+            assert_eq!(&payload, &[1, 2, 3]);
+            w.send(0, FrameHeader::new(FrameKind::Loss, 1, 9, 1, 0), &[4, 5]).unwrap();
+        });
+        root.send(1, FrameHeader::new(FrameKind::FpF32, 0, 9, 3, 0), &[1, 2, 3]).unwrap();
+        let mut payload = Vec::new();
+        let header = root.recv(1, &mut payload).unwrap();
+        assert_eq!(header.kind, FrameKind::Loss);
+        assert_eq!(&payload, &[4, 5]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn hangup_is_a_typed_close() {
+        let mut eps = group(2);
+        let w = eps.pop().unwrap();
+        let mut root = eps.pop().unwrap();
+        drop(w);
+        let mut payload = Vec::new();
+        let err = root.recv(1, &mut payload).unwrap_err();
+        assert!(matches!(err, TransportError::Closed { peer: 1 }), "{err}");
+        let err =
+            root.send(1, FrameHeader::new(FrameKind::Barrier, 0, 0, 0, 0), &[]).unwrap_err();
+        assert!(matches!(err, TransportError::Closed { peer: 1 }), "{err}");
+    }
+
+    #[test]
+    fn world_one_has_no_edges_and_needs_none() {
+        let eps = group(1);
+        assert_eq!(eps.len(), 1);
+        assert_eq!(eps[0].world(), 1);
+    }
+}

@@ -1,0 +1,314 @@
+//! `comm::transport` — real multi-process compressed collectives
+//! (ISSUE 4 tentpole).
+//!
+//! Everything above this module simulates the fabric analytically
+//! (`comm::network` prices bytes that never move). This subsystem
+//! moves the *actual* compressed payloads between ranks:
+//!
+//! * [`frame`] — the versioned, length-prefixed wire protocol; every
+//!   corruption/mismatch class is a typed [`TransportError`];
+//! * [`Transport`] — the rank-based backend trait (framed send/recv
+//!   between rank 0 and the workers); two implementations:
+//!   [`inproc::InProc`] (std::sync::mpsc channels carrying encoded
+//!   frames — the default, and what tests use) and [`tcp::Tcp`]
+//!   (std::net loopback/LAN sockets, zero new dependencies);
+//! * [`RankLink`] — one connected rank plus the persistent scratch the
+//!   collectives need; carries the barrier / loss-gather /
+//!   param-gather control-plane collectives, and is what the
+//!   transport-backed reductions in `comm::allreduce`
+//!   (`allreduce_mean_transport`, `EfAllReduce::reduce_transport`)
+//!   drive.
+//!
+//! **The core contract** (DESIGN.md §Transport): an N-rank group —
+//! over either backend — produces *bitwise identical* model
+//! trajectories to the single-process `ExecMode::Threaded(N)` engine,
+//! because rank 0 runs the same fixed worker-order server legs with
+//! the same fixed-chunk codec association, and the fp16/1-bit payload
+//! bytes decode to exactly the values the in-process kernels compute
+//! (`tests/transport_parity.rs`, `ci.sh`'s TCP smoke).
+//!
+//! Collectives are root-star shaped (gather-to-root + broadcast), the
+//! same topology the in-process server leg models; both backends only
+//! materialize rank-0↔worker edges.
+
+pub mod frame;
+pub mod inproc;
+pub mod tcp;
+
+pub use frame::{
+    decode_frame, decode_header, encode_frame, FrameHeader, FrameKind, TransportError,
+    HEADER_BYTES, MAGIC, MAX_PAYLOAD, VERSION,
+};
+
+use crate::comm::compress::OneBit;
+
+/// A connected rank of a transport group: framed point-to-point
+/// send/recv. Only root↔worker edges are required (collectives are
+/// root-star shaped). Implementations are [`Send`] so rank loops can
+/// run on spawned threads (`inproc` groups, the TCP test harness).
+pub trait Transport: Send {
+    /// This endpoint's rank (0 = root/server).
+    fn rank(&self) -> usize;
+    /// Total ranks in the group.
+    fn world(&self) -> usize;
+    /// Send one frame to `to`. `header.payload_len` is overwritten
+    /// with `payload.len()`.
+    fn send(&mut self, to: usize, header: FrameHeader, payload: &[u8])
+        -> Result<(), TransportError>;
+    /// Block for the next frame from `from`; the payload lands in
+    /// `payload` and the structurally-validated header is returned.
+    /// Schedule-level validation (kind/rank/seq/dim/chunk) is the
+    /// caller's job via [`FrameHeader::expect`].
+    fn recv(&mut self, from: usize, payload: &mut Vec<u8>) -> Result<FrameHeader, TransportError>;
+}
+
+/// One rank's connection plus the persistent scratch its collectives
+/// reuse across rounds. Owns the boxed [`Transport`]; the
+/// transport-backed reductions in `comm::allreduce` and the rank
+/// trainer loop (`coordinator::distributed`) both drive it.
+pub struct RankLink {
+    tp: Box<dyn Transport>,
+    /// Next collective sequence number. Every rank executes the same
+    /// deterministic schedule, so equal seq values mean "the same
+    /// logical round" — any divergence is a typed `SeqMismatch`.
+    seq: u64,
+    /// Receive-side payload scratch.
+    pub(crate) payload: Vec<u8>,
+    /// Send-side payload scratch.
+    pub(crate) wire: Vec<u8>,
+    /// Root-side EF gather targets (one packed upload per rank).
+    pub(crate) gathered: Vec<OneBit>,
+}
+
+impl RankLink {
+    pub fn new(tp: Box<dyn Transport>) -> RankLink {
+        RankLink { tp, seq: 1, payload: Vec::new(), wire: Vec::new(), gathered: Vec::new() }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.tp.rank()
+    }
+
+    pub fn world(&self) -> usize {
+        self.tp.world()
+    }
+
+    /// Sequence number for the next collective round (all ranks call
+    /// the collectives in the same order, so these agree by
+    /// construction — and mismatches are detected, not absorbed).
+    pub(crate) fn next_seq(&mut self) -> u64 {
+        let s = self.seq;
+        self.seq += 1;
+        s
+    }
+
+    /// Send the contents of `self.wire` as one frame.
+    pub(crate) fn send_wire(
+        &mut self,
+        to: usize,
+        kind: FrameKind,
+        seq: u64,
+        dim: usize,
+        chunk: usize,
+    ) -> Result<(), TransportError> {
+        let RankLink { tp, wire, .. } = self;
+        tp.send(to, FrameHeader::new(kind, tp.rank(), seq, dim, chunk), wire)
+    }
+
+    /// Receive into `self.payload` and validate the header against the
+    /// expected (kind, sender, seq, dim, chunk).
+    pub(crate) fn recv_expect(
+        &mut self,
+        from: usize,
+        kind: FrameKind,
+        seq: u64,
+        dim: usize,
+        chunk: usize,
+    ) -> Result<(), TransportError> {
+        let RankLink { tp, payload, .. } = self;
+        let header = tp.recv(from, payload)?;
+        header.expect(kind, from, seq, dim, chunk)
+    }
+
+    /// Validate the received payload length.
+    pub(crate) fn expect_payload(&self, want: usize) -> Result<(), TransportError> {
+        if self.payload.len() != want {
+            return Err(TransportError::PayloadSize { want, got: self.payload.len() });
+        }
+        Ok(())
+    }
+
+    /// Size the root-side EF gather buffers (no-op once sized).
+    pub(crate) fn ensure_gathered(&mut self, world: usize, d: usize) {
+        if self.gathered.len() != world || self.gathered.iter().any(|p| p.len != d) {
+            self.gathered = (0..world).map(|_| OneBit::zeros(d)).collect();
+        }
+    }
+
+    /// Root-star barrier: workers check in, root releases them.
+    pub fn barrier(&mut self) -> Result<(), TransportError> {
+        let seq = self.next_seq();
+        let world = self.world();
+        if world <= 1 {
+            return Ok(());
+        }
+        self.wire.clear();
+        if self.rank() == 0 {
+            for r in 1..world {
+                self.recv_expect(r, FrameKind::Barrier, seq, 0, 0)?;
+                self.expect_payload(0)?;
+            }
+            for r in 1..world {
+                self.send_wire(r, FrameKind::Barrier, seq, 0, 0)?;
+            }
+        } else {
+            self.send_wire(0, FrameKind::Barrier, seq, 0, 0)?;
+            self.recv_expect(0, FrameKind::Barrier, seq, 0, 0)?;
+            self.expect_payload(0)?;
+        }
+        Ok(())
+    }
+
+    /// Gather every rank's scalar loss to root; root returns the
+    /// worker-order f64 mean — the exact association the in-process
+    /// trainer uses — workers return `None`. Control plane: these 4
+    /// bytes are deliberately *not* ledgered (the ledger counts
+    /// optimizer reduction rounds, matching the in-process runs).
+    pub fn gather_mean_loss(&mut self, mine: f32) -> Result<Option<f64>, TransportError> {
+        let seq = self.next_seq();
+        let world = self.world();
+        if self.rank() != 0 {
+            self.wire.clear();
+            self.wire.extend_from_slice(&mine.to_le_bytes());
+            self.send_wire(0, FrameKind::Loss, seq, 1, 0)?;
+            return Ok(None);
+        }
+        let mut sum = mine as f64;
+        for r in 1..world {
+            self.recv_expect(r, FrameKind::Loss, seq, 1, 0)?;
+            self.expect_payload(4)?;
+            let bytes: [u8; 4] = self.payload[..4].try_into().expect("4-byte loss");
+            sum += f32::from_le_bytes(bytes) as f64;
+        }
+        Ok(Some(sum / world as f64))
+    }
+
+    /// Gather every rank's params to root as **exact** f32 bytes and
+    /// average them in rank order with the same copy/axpy/scale
+    /// association as `DistOptimizer::mean_params` — so the root's
+    /// result is bitwise the in-process worker mean. Returns `true` on
+    /// root (out filled), `false` on workers (out untouched).
+    pub fn gather_params_mean(
+        &mut self,
+        mine: &[f32],
+        out: &mut [f32],
+    ) -> Result<bool, TransportError> {
+        let seq = self.next_seq();
+        let world = self.world();
+        let d = mine.len();
+        if self.rank() != 0 {
+            self.wire.clear();
+            self.wire.reserve(4 * d);
+            for &x in mine {
+                self.wire.extend_from_slice(&x.to_le_bytes());
+            }
+            self.send_wire(0, FrameKind::FpF32, seq, d, 0)?;
+            return Ok(false);
+        }
+        assert_eq!(out.len(), d);
+        out.copy_from_slice(mine);
+        for r in 1..world {
+            self.recv_expect(r, FrameKind::FpF32, seq, d, 0)?;
+            self.expect_payload(4 * d)?;
+            for (o, c) in out.iter_mut().zip(self.payload.chunks_exact(4)) {
+                // `axpy(out, 1.0, x)` adds 1.0·x[j] — multiplying by
+                // 1.0 is exact, so a plain += matches it bit for bit.
+                *o += f32::from_le_bytes(c.try_into().expect("4-byte f32"));
+            }
+        }
+        crate::tensor::scale(out, 1.0 / world as f32);
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_and_loss_gather_over_inproc() {
+        let mut eps = inproc::group(3);
+        let w2 = eps.pop().unwrap();
+        let w1 = eps.pop().unwrap();
+        let root = eps.pop().unwrap();
+        let h1 = std::thread::spawn(move || {
+            let mut link = RankLink::new(Box::new(w1));
+            link.barrier().unwrap();
+            assert_eq!(link.gather_mean_loss(2.0).unwrap(), None);
+            link
+        });
+        let h2 = std::thread::spawn(move || {
+            let mut link = RankLink::new(Box::new(w2));
+            link.barrier().unwrap();
+            assert_eq!(link.gather_mean_loss(4.0).unwrap(), None);
+            link
+        });
+        let mut link = RankLink::new(Box::new(root));
+        link.barrier().unwrap();
+        let mean = link.gather_mean_loss(0.0).unwrap().unwrap();
+        // worker-order f64 association: ((0 + 2) + 4) / 3
+        assert_eq!(mean.to_bits(), (((0.0f64 + 2.0) + 4.0) / 3.0).to_bits());
+        h1.join().unwrap();
+        h2.join().unwrap();
+    }
+
+    #[test]
+    fn params_gather_matches_mean_params_association() {
+        let mut eps = inproc::group(2);
+        let w1 = eps.pop().unwrap();
+        let root = eps.pop().unwrap();
+        let a = vec![1.0f32, -0.5, 3.25, 0.1];
+        let b = vec![0.5f32, 2.5, -1.25, 0.7];
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            let mut link = RankLink::new(Box::new(w1));
+            let mut unused = Vec::new();
+            assert!(!link.gather_params_mean(&b2, &mut unused).unwrap());
+        });
+        let mut link = RankLink::new(Box::new(root));
+        let mut out = vec![0.0f32; 4];
+        assert!(link.gather_params_mean(&a, &mut out).unwrap());
+        h.join().unwrap();
+        // reference: the DistOptimizer::mean_params association
+        let mut want = a.clone();
+        crate::tensor::axpy(&mut want, 1.0, &b);
+        crate::tensor::scale(&mut want, 0.5);
+        for j in 0..4 {
+            assert_eq!(out[j].to_bits(), want[j].to_bits(), "j={j}");
+        }
+    }
+
+    #[test]
+    fn desynced_schedules_surface_as_seq_mismatch() {
+        // Rank 1 runs one extra collective (schedule divergence): the
+        // root's next expected seq no longer matches — typed error,
+        // not a wrong reduction.
+        let mut eps = inproc::group(2);
+        let w1 = eps.pop().unwrap();
+        let root = eps.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut link = RankLink::new(Box::new(w1));
+            let _ = link.gather_mean_loss(1.0); // seq 1 (extra round)
+            let _ = link.gather_mean_loss(2.0); // seq 2
+        });
+        let mut link = RankLink::new(Box::new(root));
+        // Root's first gather expects seq 1 and gets it; its second
+        // expects seq 2 — but we skip a local round to desync.
+        let first = link.gather_mean_loss(0.0);
+        assert!(first.is_ok());
+        link.seq += 5; // simulate the schedules drifting apart
+        let err = link.gather_mean_loss(0.0).unwrap_err();
+        assert!(matches!(err, TransportError::SeqMismatch { .. }), "{err}");
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,417 @@
+//! Rank-aware training loop over a [`crate::comm::transport`] group
+//! (ISSUE 4): each OS process (or thread, under the in-proc backend)
+//! materializes **one** worker replica and drives the same
+//! `DistOptimizer` step bodies the in-process [`super::Trainer`] runs —
+//! with every cross-worker reduction going through the framed
+//! transport collectives instead of the engine.
+//!
+//! The deployment contract (DESIGN.md §Transport): a [`DistSpec`] run
+//! over N ranks — `zo-adam launch --ranks N --transport {inproc,tcp}`
+//! — produces **bitwise identical** parameters, per-step losses and
+//! ledger round counts to [`run_local`] with `ExecMode::Threaded(N)`
+//! (or `Sequential`; the engine modes are themselves bitwise equal).
+//! [`check_parity`] pins that equality; `tests/transport_parity.rs`
+//! and `ci.sh`'s TCP smoke run it for every optimizer family.
+//!
+//! The per-rank ledger counts the **actual framed bytes** each
+//! reduction moved (header + payload), not the analytic estimate —
+//! this is where the paper's wire-volume claims become measurements of
+//! real bytes on a real socket.
+
+use crate::comm::transport::{RankLink, TransportError};
+use crate::comm::volume::VolumeLedger;
+use crate::comm::ReduceBackend;
+use crate::grad::synthetic::NoisyQuadratic;
+use crate::grad::GradientSource;
+use crate::optim::policy::{SyncPolicy, SyncSchedule, VarSchedule};
+use crate::optim::{
+    Adam, ConstLr, DistOptimizer, FrozenVarAdam, Hyper, MomentumSgd, NaiveOneBitAdam, SignSgd,
+    ZeroOneAdam,
+};
+
+use super::engine::{Engine, ExecMode};
+use super::trainer::{NoObserver, RunResult, Trainer, TrainerConfig};
+
+/// Optimizer families a distributed run can launch — the same set the
+/// engine-parity suite pins, plus the no-local-steps ablation.
+pub const FAMILIES: [&str; 7] = [
+    "adam",
+    "momentum-sgd",
+    "signsgd-ef",
+    "naive-1bit-adam",
+    "1bit-adam",
+    "01adam",
+    "01adam-nolocal",
+];
+
+/// Everything that defines one distributed training run. Root and
+/// workers must construct identical specs (the CLI passes the same
+/// arguments to every `zo-adam worker`); the [`DistSpec::fingerprint`]
+/// rides in the TCP handshake so a mismatched worker is rejected
+/// before any training traffic moves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistSpec {
+    /// One of [`FAMILIES`].
+    pub family: String,
+    /// Model dimension.
+    pub d: usize,
+    pub steps: u64,
+    /// Ranks in the group == logical data-parallel workers.
+    pub world: usize,
+    /// Data seed; rank r draws worker-r noise streams, exactly like
+    /// in-process worker r.
+    pub seed: u64,
+    pub lr: f64,
+    /// Condition number of the synthetic quadratic objective.
+    pub kappa: f64,
+    /// Per-worker gradient noise σ.
+    pub sigma: f32,
+    /// Constant initial parameter value.
+    pub init: f32,
+}
+
+impl Default for DistSpec {
+    fn default() -> Self {
+        DistSpec {
+            family: "01adam".to_string(),
+            d: 2 * crate::comm::SERVER_CHUNK + 777,
+            steps: 60,
+            world: 4,
+            seed: 0,
+            lr: 0.01,
+            kappa: 5.0,
+            sigma: 0.1,
+            init: 0.8,
+        }
+    }
+}
+
+impl DistSpec {
+    /// FNV-1a over the canonical field encoding — the handshake token
+    /// that catches workers launched with different arguments.
+    pub fn fingerprint(&self) -> u64 {
+        let canon = format!(
+            "{}|{}|{}|{}|{}|{:016x}|{:016x}|{:08x}|{:08x}",
+            self.family,
+            self.d,
+            self.steps,
+            self.world,
+            self.seed,
+            self.lr.to_bits(),
+            self.kappa.to_bits(),
+            self.sigma.to_bits(),
+            self.init.to_bits(),
+        );
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in canon.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    /// The synthetic objective every rank (and the local reference)
+    /// trains on. Pure per `(worker, t)` stream — rank r computing
+    /// worker r's gradient is bitwise the in-process computation.
+    pub fn source(&self) -> NoisyQuadratic {
+        NoisyQuadratic::new(self.d, self.kappa, self.sigma, self.seed)
+    }
+
+    /// Build the family's optimizer over `n_workers` materialized
+    /// replicas: `world` for the in-process reference, 1 per transport
+    /// rank. All schedule parameters derive deterministically from the
+    /// spec, so both shapes run identical policies.
+    pub fn build_optimizer(&self, n_workers: usize) -> Option<Box<dyn DistOptimizer>> {
+        let init = vec![self.init; self.d];
+        let h = Hyper::default();
+        let lr: Box<ConstLr> = Box::new(ConstLr(self.lr));
+        Some(match self.family.as_str() {
+            "adam" => Box::new(Adam::new(init, n_workers, h, lr)),
+            "momentum-sgd" => Box::new(MomentumSgd::new(init, n_workers, 0.9, lr)),
+            "signsgd-ef" => Box::new(SignSgd::new(init, n_workers, lr)),
+            "naive-1bit-adam" => Box::new(NaiveOneBitAdam::new(init, n_workers, h, lr)),
+            "1bit-adam" => {
+                let t0 = (self.steps / 8).max(2);
+                Box::new(FrozenVarAdam::onebit_adam(init, n_workers, h, lr, t0))
+            }
+            "01adam" => Box::new(ZeroOneAdam::new(
+                init,
+                n_workers,
+                h,
+                lr,
+                VarSchedule::paper(),
+                SyncSchedule::scaled_bert(self.steps),
+            )),
+            "01adam-nolocal" => Box::new(ZeroOneAdam::new(
+                init,
+                n_workers,
+                h,
+                lr,
+                VarSchedule::paper(),
+                SyncSchedule::new(SyncPolicy::Always),
+            )),
+            _ => return None,
+        })
+    }
+}
+
+/// What one rank's training loop produced. Only rank 0 carries the
+/// aggregated fields (gathered/averaged params, the loss trace, the
+/// evaluation); every rank carries its own ledger — the round counts
+/// are identical across ranks by construction.
+pub struct RankResult {
+    pub rank: usize,
+    pub world: usize,
+    /// Worker-order mean of the final replicas (root only; exact f32
+    /// gather — see `RankLink::gather_params_mean`).
+    pub final_params: Vec<f32>,
+    /// Mean loss of the last step (root only; NaN elsewhere).
+    pub final_loss: f64,
+    /// Held-out loss at the final mean params (root only).
+    pub final_eval: Option<f32>,
+    /// Per-step worker-order mean losses (root only).
+    pub losses: Vec<f64>,
+    /// Actual framed bytes + round counts this rank's reductions moved.
+    pub ledger: VolumeLedger,
+    pub wall_s: f64,
+}
+
+/// Run one rank of a distributed training job to completion. The same
+/// function serves the root (rank 0) and every worker — the collective
+/// legs differ inside the transport, not here.
+pub fn run_rank(link: &mut RankLink, spec: &DistSpec) -> Result<RankResult, TransportError> {
+    assert_eq!(
+        link.world(),
+        spec.world,
+        "transport group size does not match the run spec"
+    );
+    let rank = link.rank();
+    let d = spec.d;
+    let mut src = spec.source();
+    let mut opt = spec
+        .build_optimizer(1)
+        .unwrap_or_else(|| panic!("unknown optimizer family '{}'", spec.family));
+    // Local per-replica math is engine-mode independent (DESIGN.md §3),
+    // so ranks run sequentially; parallelism across workers is the
+    // process fan-out itself.
+    let eng = Engine::sequential();
+    let mut grads = vec![vec![0.0f32; d]];
+    let mut ledger = VolumeLedger::new(d);
+    let mut losses = Vec::new();
+    let wall = crate::util::Stopwatch::start();
+
+    // Everyone reaches the loop before any reduction traffic starts —
+    // and the barrier itself is exercised every run.
+    link.barrier()?;
+
+    for t in 0..spec.steps {
+        // Rank r *is* worker r: same params, same noise stream, same
+        // gradient bits as in-process worker r.
+        let loss = src.grad(opt.params(0), rank, t, &mut grads[0]);
+        let info = opt.step_comm(t, &grads, &eng, &mut ReduceBackend::Transport(&mut *link))?;
+        ledger.record_step(&info.rounds);
+        // Control-plane loss gather (not ledgered): the root's trace is
+        // the worker-order f64 mean the in-process trainer logs.
+        if let Some(mean) = link.gather_mean_loss(loss)? {
+            losses.push(mean);
+        }
+    }
+
+    // Final model: shared-state families hold identical replicas on
+    // every rank (root copies its own); per-replica families gather
+    // exact f32 params and average in rank order — both reproduce
+    // `DistOptimizer::mean_params` bit for bit.
+    let mut final_params = Vec::new();
+    if opt.shared_state() {
+        if rank == 0 {
+            final_params = vec![0.0f32; d];
+            opt.mean_params(&mut final_params);
+        }
+    } else {
+        let mut out = vec![0.0f32; d];
+        if link.gather_params_mean(opt.params(0), &mut out)? {
+            final_params = out;
+        }
+    }
+
+    let (final_loss, final_eval) = if rank == 0 {
+        (
+            losses.last().copied().unwrap_or(f64::NAN),
+            src.eval_loss(&final_params),
+        )
+    } else {
+        (f64::NAN, None)
+    };
+
+    Ok(RankResult {
+        rank,
+        world: spec.world,
+        final_params,
+        final_loss,
+        final_eval,
+        losses,
+        ledger,
+        wall_s: wall.elapsed_secs(),
+    })
+}
+
+/// The single-process reference for [`check_parity`]: the ordinary
+/// [`Trainer`] over `spec.world` materialized workers.
+pub fn run_local(spec: &DistSpec, exec: ExecMode) -> RunResult {
+    let mut src = spec.source();
+    let mut opt = spec
+        .build_optimizer(spec.world)
+        .unwrap_or_else(|| panic!("unknown optimizer family '{}'", spec.family));
+    let cfg = TrainerConfig {
+        steps: spec.steps,
+        log_every: 1,
+        eval_every: 0,
+        fabric: None,
+        sim_gpus: 0,
+        compute_ms: 0.0,
+        exec,
+        verbose: false,
+    };
+    Trainer::run(&mut src, opt.as_mut(), &cfg, &mut NoObserver)
+}
+
+/// Run the whole group on threads over the in-proc channel backend;
+/// results indexed by rank. The default `zo-adam launch` path and what
+/// the parity tests drive.
+pub fn launch_inproc(spec: &DistSpec) -> Result<Vec<RankResult>, TransportError> {
+    let links = crate::comm::transport::inproc::group(spec.world);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = links
+            .into_iter()
+            .map(|tp| {
+                s.spawn(move || {
+                    let mut link = RankLink::new(Box::new(tp));
+                    run_rank(&mut link, spec)
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(spec.world);
+        for h in handles {
+            out.push(h.join().expect("rank thread panicked")?);
+        }
+        Ok(out)
+    })
+}
+
+/// The subsystem's core contract, as an executable check: rank 0's
+/// distributed result must equal the in-process run **bit for bit** —
+/// final parameters, every step's mean loss, the final evaluation, and
+/// the ledger's round counts. (Byte totals intentionally differ: the
+/// distributed ledger counts real framed bytes, headers and
+/// word-aligned sign payloads included.)
+pub fn check_parity(dist: &RankResult, local: &RunResult) -> Result<(), String> {
+    if dist.rank != 0 {
+        return Err("parity is checked against rank 0's result".to_string());
+    }
+    if dist.final_params.len() != local.final_params.len() {
+        return Err(format!(
+            "final param dim {} vs local {}",
+            dist.final_params.len(),
+            local.final_params.len()
+        ));
+    }
+    for (j, (a, b)) in dist.final_params.iter().zip(&local.final_params).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!("final_params[{j}]: {a} (dist) != {b} (local)"));
+        }
+    }
+    let dl = &dist.ledger;
+    let ll = &local.ledger;
+    if (dl.steps, dl.fp_rounds, dl.onebit_rounds, dl.skipped_steps)
+        != (ll.steps, ll.fp_rounds, ll.onebit_rounds, ll.skipped_steps)
+    {
+        return Err(format!(
+            "ledger rounds differ: dist (steps {}, fp {}, 1bit {}, skipped {}) vs local \
+             (steps {}, fp {}, 1bit {}, skipped {})",
+            dl.steps, dl.fp_rounds, dl.onebit_rounds, dl.skipped_steps, ll.steps, ll.fp_rounds,
+            ll.onebit_rounds, ll.skipped_steps
+        ));
+    }
+    if dist.losses.len() != local.log.records.len() {
+        return Err(format!(
+            "loss trace length {} vs local {} (local must log every step)",
+            dist.losses.len(),
+            local.log.records.len()
+        ));
+    }
+    for (mean, rec) in dist.losses.iter().zip(&local.log.records) {
+        if mean.to_bits() != rec.loss.to_bits() {
+            return Err(format!(
+                "loss@t={}: {mean} (dist) != {} (local)",
+                rec.t, rec.loss
+            ));
+        }
+    }
+    match (dist.final_eval, local.final_eval) {
+        (Some(a), Some(b)) if a.to_bits() == b.to_bits() => {}
+        (None, None) => {}
+        (a, b) => return Err(format!("final_eval {a:?} (dist) != {b:?} (local)")),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_tracks_every_field() {
+        let base = DistSpec::default();
+        let fp = base.fingerprint();
+        assert_eq!(fp, base.clone().fingerprint(), "deterministic");
+        let variants = [
+            DistSpec { family: "adam".into(), ..base.clone() },
+            DistSpec { d: base.d + 1, ..base.clone() },
+            DistSpec { steps: base.steps + 1, ..base.clone() },
+            DistSpec { world: base.world + 1, ..base.clone() },
+            DistSpec { seed: base.seed + 1, ..base.clone() },
+            DistSpec { lr: base.lr * 2.0, ..base.clone() },
+            DistSpec { kappa: base.kappa * 2.0, ..base.clone() },
+            DistSpec { sigma: base.sigma * 2.0, ..base.clone() },
+            DistSpec { init: base.init + 0.5, ..base.clone() },
+        ];
+        for v in variants {
+            assert_ne!(v.fingerprint(), fp, "{v:?} must change the fingerprint");
+        }
+    }
+
+    #[test]
+    fn every_family_builds_for_both_shapes() {
+        for family in FAMILIES {
+            let spec = DistSpec { family: family.to_string(), d: 32, ..DistSpec::default() };
+            let local = spec.build_optimizer(4).unwrap_or_else(|| panic!("{family}"));
+            assert_eq!(local.n_workers(), 4, "{family}");
+            assert_eq!(local.dim(), 32, "{family}");
+            let rank = spec.build_optimizer(1).unwrap_or_else(|| panic!("{family}"));
+            assert_eq!(rank.n_workers(), 1, "{family}");
+            // only 0/1 Adam's replicas diverge between syncs
+            assert_eq!(local.shared_state(), !family.starts_with("01adam"), "{family}");
+        }
+        assert!(DistSpec { family: "nope".into(), ..DistSpec::default() }
+            .build_optimizer(2)
+            .is_none());
+    }
+
+    #[test]
+    fn world_one_inproc_run_matches_local_sequential() {
+        // The degenerate group: one rank, no frames — still must match
+        // the single-worker in-process run bit for bit.
+        for family in ["adam", "01adam"] {
+            let spec = DistSpec {
+                family: family.to_string(),
+                d: 130,
+                steps: 8,
+                world: 1,
+                ..DistSpec::default()
+            };
+            let dist = launch_inproc(&spec).unwrap();
+            let local = run_local(&spec, ExecMode::Sequential);
+            check_parity(&dist[0], &local).unwrap_or_else(|e| panic!("{family}: {e}"));
+        }
+    }
+}

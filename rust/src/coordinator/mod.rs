@@ -1,12 +1,15 @@
-//! The L3 coordinator: training-loop orchestration, the deterministic
-//! parallel execution engine, metrics, profiling.
+//! The L3 coordinator: training-loop orchestration (in-process and
+//! rank-distributed), the deterministic parallel execution engine,
+//! metrics, profiling.
 
+pub mod distributed;
 pub mod engine;
 pub mod metrics;
 mod pool;
 pub mod profiling;
 pub mod trainer;
 
+pub use distributed::{check_parity, launch_inproc, run_local, run_rank, DistSpec, RankResult};
 pub use engine::{Engine, ExecMode, MAX_POOL_THREADS};
 pub use metrics::{MetricLog, StepRecord};
 pub use profiling::MomentProfiler;

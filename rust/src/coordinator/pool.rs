@@ -5,15 +5,16 @@
 //! cost and a handful of OS allocations each, thousands of times per
 //! training run — the dominant overhead on short regions). This module
 //! replaces the per-region spawn with threads created once and parked
-//! on a condvar; each region becomes a **publish–work–barrier** cycle
+//! on condvars; each region becomes a **publish–work–barrier** cycle
 //! that performs no heap allocation in steady state:
 //!
 //! * **publish** — the coordinator carves its region into per-thread
 //!   blocks (stack-allocated descriptors, see `engine::run_split`),
-//!   stores one type-erased [`Task`] pointer per worker slot under the
-//!   pool mutex, bumps the region epoch and notifies the pool;
-//! * **work** — each woken worker takes the task in its slot (if any),
-//!   runs it, and decrements the epoch's pending count;
+//!   stores one type-erased [`Task`] pointer into each participating
+//!   worker's **own slot** (its private mutex + condvar), bumps that
+//!   slot's epoch and notifies *that worker only*;
+//! * **work** — each notified worker takes the task in its slot, runs
+//!   it, and decrements the region's pending count;
 //! * **barrier** — the coordinator runs its own share of the region,
 //!   then blocks on the done condvar until pending reaches zero. Only
 //!   after that do the borrows smuggled through the task pointers
@@ -21,14 +22,26 @@
 //!   scoped-thread version it replaces: every parallel region is still
 //!   a barrier.
 //!
-//! Panic contract: a panicking task marks the epoch but the barrier
+//! **Per-slot parking (ISSUE 4).** The PR 3 pool kept one shared
+//! condvar and `notify_all`-ed the whole pool per region, so a 64-wide
+//! pool running a 2-block region woke 62 workers just so they could
+//! take `None` and re-park — pure wakeup churn on wide pools running
+//! small regions (the common shape once lane chunking keeps regions
+//! narrow). Each worker now parks on its own condvar and is only ever
+//! notified when a task was published into its slot; idle workers
+//! sleep through the region entirely. Each slot counts its condvar
+//! wake-ups ([`Pool::wake_count`]) so the property is testable, not
+//! just intended (`idle_workers_sleep_through_small_regions`).
+//!
+//! Panic contract: a panicking task marks the region but the barrier
 //! still completes (no worker may keep running into a freed stack
 //! frame), and the coordinator re-raises *after* the barrier. Tasks
-//! run outside the pool mutex, so a panic poisons nothing and the pool
-//! stays fully usable — `#[should_panic]` tests and the CLI's error
-//! paths can keep driving the same engine afterwards.
+//! run outside every pool mutex, so a panic poisons nothing and the
+//! pool stays fully usable — `#[should_panic]` tests and the CLI's
+//! error paths can keep driving the same engine afterwards.
 
 use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 
@@ -68,33 +81,46 @@ impl Task {
     }
 }
 
-struct State {
-    /// Region counter; a bump publishes the tasks of a new region.
+/// One worker's private parking spot: publishing a task locks only
+/// this mutex and notifies only this condvar.
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+    /// Condvar wake-ups this worker has experienced (returns from
+    /// `cv.wait`, spurious included). The per-slot-parking win is that
+    /// idle workers' counters stay ~0 while small regions run.
+    wakes: AtomicU64,
+}
+
+struct SlotState {
+    /// Bumped once per task published into this slot.
     epoch: u64,
-    /// One slot per worker; `None` = idle this region.
-    tasks: [Option<Task>; MAX_THREADS],
+    /// `Some` between publish and the worker's take.
+    task: Option<Task>,
+    shutdown: bool,
+}
+
+/// Region-completion state shared by the whole pool (the barrier).
+struct Done {
     /// Workers still running the current region.
     pending: usize,
     /// Some task of the current region panicked.
     panicked: bool,
-    shutdown: bool,
 }
 
 struct Shared {
-    state: Mutex<State>,
-    /// Workers park here between regions.
-    work: Condvar,
-    /// The coordinator waits here for `pending == 0` — the barrier.
-    done: Condvar,
+    slots: Vec<Slot>,
+    done: Mutex<Done>,
+    done_cv: Condvar,
 }
 
-/// Lock, shrugging off poison: tasks run *outside* the mutex, so a
-/// poisoned lock only means some thread panicked between state
+/// Lock, shrugging off poison: tasks run *outside* every pool mutex,
+/// so a poisoned lock only means some thread panicked between state
 /// transitions that are each individually complete — the state is
 /// always consistent and the pool must keep operating (e.g. through
 /// `#[should_panic]` tests).
-fn lock(shared: &Shared) -> MutexGuard<'_, State> {
-    shared.state.lock().unwrap_or_else(PoisonError::into_inner)
+fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// The persistent pool: `workers` parked threads plus the calling
@@ -113,20 +139,20 @@ impl std::fmt::Debug for Pool {
 
 impl Pool {
     /// Spawn the pool. The only heap allocations the pool ever
-    /// performs happen here (thread stacks and bookkeeping are paid
-    /// once, at construction — not per region).
+    /// performs happen here (thread stacks, slots and bookkeeping are
+    /// paid once, at construction — not per region).
     pub(crate) fn new(workers: usize) -> Pool {
         let workers = workers.min(MAX_THREADS);
         let shared = Arc::new(Shared {
-            state: Mutex::new(State {
-                epoch: 0,
-                tasks: [None; MAX_THREADS],
-                pending: 0,
-                panicked: false,
-                shutdown: false,
-            }),
-            work: Condvar::new(),
-            done: Condvar::new(),
+            slots: (0..workers)
+                .map(|_| Slot {
+                    state: Mutex::new(SlotState { epoch: 0, task: None, shutdown: false }),
+                    cv: Condvar::new(),
+                    wakes: AtomicU64::new(0),
+                })
+                .collect(),
+            done: Mutex::new(Done { pending: 0, panicked: false }),
+            done_cv: Condvar::new(),
         });
         let handles = (0..workers)
             .map(|i| {
@@ -142,6 +168,14 @@ impl Pool {
 
     pub(crate) fn workers(&self) -> usize {
         self.handles.len()
+    }
+
+    /// Condvar wake-ups worker `i` has experienced since construction.
+    /// With per-slot parking this stays ~0 for workers no region ever
+    /// publishes a task to.
+    #[cfg_attr(not(test), allow(dead_code))]
+    pub(crate) fn wake_count(&self, i: usize) -> u64 {
+        self.shared.slots[i].wakes.load(Ordering::Relaxed)
     }
 
     /// Run one parallel region: `tasks[i]` is handed to pool worker
@@ -163,27 +197,33 @@ impl Pool {
             own();
             return;
         }
+        // Arm the barrier *before* the first notify so no worker can
+        // drive pending below zero, then publish each task into its
+        // worker's own slot — only the k participating workers are
+        // locked and woken; the rest of the pool sleeps on.
         {
-            let mut st = lock(&self.shared);
-            assert_eq!(st.pending, 0, "engine parallel regions must not nest");
-            for (slot, t) in st.tasks.iter_mut().zip(tasks) {
-                *slot = Some(*t);
-            }
-            st.pending = tasks.len();
-            st.panicked = false;
+            let mut done = lock(&self.shared.done);
+            assert_eq!(done.pending, 0, "engine parallel regions must not nest");
+            done.pending = tasks.len();
+            done.panicked = false;
+        }
+        for (slot, t) in self.shared.slots.iter().zip(tasks) {
+            let mut st = lock(&slot.state);
+            debug_assert!(st.task.is_none(), "slot still holds an unconsumed task");
+            st.task = Some(*t);
             st.epoch = st.epoch.wrapping_add(1);
-            self.shared.work.notify_all();
+            slot.cv.notify_one();
         }
         // The coordinator is never idle while the pool runs — and if
         // its own share panics, the barrier must still complete first:
         // workers hold pointers into this very stack frame.
         let own_result = panic::catch_unwind(AssertUnwindSafe(own));
         let worker_panicked = {
-            let mut st = lock(&self.shared);
-            while st.pending != 0 {
-                st = self.shared.done.wait(st).unwrap_or_else(PoisonError::into_inner);
+            let mut done = lock(&self.shared.done);
+            while done.pending != 0 {
+                done = self.shared.done_cv.wait(done).unwrap_or_else(PoisonError::into_inner);
             }
-            st.panicked
+            done.panicked
         };
         if let Err(p) = own_result {
             panic::resume_unwind(p);
@@ -196,10 +236,10 @@ impl Pool {
 
 impl Drop for Pool {
     fn drop(&mut self) {
-        {
-            let mut st = lock(&self.shared);
+        for slot in &self.shared.slots {
+            let mut st = lock(&slot.state);
             st.shutdown = true;
-            self.shared.work.notify_all();
+            slot.cv.notify_one();
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -208,32 +248,35 @@ impl Drop for Pool {
 }
 
 fn worker_loop(shared: &Shared, idx: usize) {
+    let slot = &shared.slots[idx];
     let mut seen = 0u64;
     loop {
         let task = {
-            let mut st = lock(shared);
+            let mut st = lock(&slot.state);
             loop {
                 if st.shutdown {
                     return;
                 }
                 if st.epoch != seen {
                     seen = st.epoch;
-                    break st.tasks[idx].take();
+                    break st.task.take();
                 }
-                st = shared.work.wait(st).unwrap_or_else(PoisonError::into_inner);
+                st = slot.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+                slot.wakes.fetch_add(1, Ordering::Relaxed);
             }
         };
-        // `None`: this worker is idle for the current region (fewer
-        // blocks than workers) — go straight back to the condvar.
+        // An epoch bump without a task cannot happen (epochs only move
+        // when a task is published into this very slot), but stay
+        // defensive: the barrier accounting below must not run twice.
         let Some(task) = task else { continue };
         let ok = panic::catch_unwind(AssertUnwindSafe(|| unsafe { (task.run)(task.data) })).is_ok();
-        let mut st = lock(shared);
+        let mut done = lock(&shared.done);
         if !ok {
-            st.panicked = true;
+            done.panicked = true;
         }
-        st.pending -= 1;
-        if st.pending == 0 {
-            shared.done.notify_one();
+        done.pending -= 1;
+        if done.pending == 0 {
+            shared.done_cv.notify_one();
         }
     }
 }
@@ -284,6 +327,34 @@ mod tests {
             assert_eq!(hits.load(Ordering::SeqCst), 100 + k, "round {round}");
             assert!(slots.iter().all(|s| s.is_none()), "round {round}: task not consumed");
         }
+    }
+
+    #[test]
+    fn idle_workers_sleep_through_small_regions() {
+        // The ISSUE 4 satellite: a wide pool running single-block
+        // regions must not wake its idle workers. Worker 0 gets every
+        // task; workers 1..7 are never notified, so their wake
+        // counters stay at (essentially) zero — under the old shared
+        // `notify_all` design every region woke all 8, i.e. this sum
+        // would be ~7 × regions.
+        let pool = Pool::new(8);
+        let hits = AtomicUsize::new(0);
+        let regions = 200u64;
+        for _ in 0..regions {
+            let mut slots = vec![Some(Probe { hits: &hits, boom: false })];
+            let tasks = publish(&mut slots);
+            unsafe { pool.run_region(&tasks, || {}) };
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), regions as usize);
+        assert!(pool.wake_count(0) >= 1, "the busy worker must actually park and wake");
+        let idle: u64 = (1..8).map(|i| pool.wake_count(i)).sum();
+        // Strictly 0 modulo (OS-permitted, practically nonexistent)
+        // spurious wakeups; any real notify_all regression lands at
+        // ~7 × regions = 1400.
+        assert!(
+            idle < regions / 2,
+            "idle workers woke {idle} times across {regions} single-block regions"
+        );
     }
 
     #[test]

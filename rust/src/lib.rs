@@ -5,13 +5,20 @@
 //! (Lu, Li, Zhang, De Sa, He).
 //!
 //! Architecture (see DESIGN.md at the repository root):
-//! * [`comm`] — 1-bit codecs, error-feedback AllReduce (paper Alg. 2/3),
-//!   the analytic network-timing model, and the volume ledger.
+//! * [`comm`] — 1-bit codecs + fp16 wire kernels, error-feedback
+//!   AllReduce (paper Alg. 2/3) in both in-process and
+//!   transport-backed forms, the [`comm::transport`] subsystem (real
+//!   multi-process collectives over framed TCP / in-proc channels,
+//!   bitwise identical to the in-process engine — DESIGN.md
+//!   §Transport), the analytic network-timing model, and the volume
+//!   ledger (which under a transport counts actual framed bytes).
 //! * [`optim`] — the distributed optimizers: 0/1 Adam (Alg. 1), 1-bit
 //!   Adam / frozen-variance family (Alg. 4), original Adam (Eq. 3), SGD
 //!   baselines; T_v/T_u policies; LR schedules. Every step is
 //!   phase-split into a per-worker local phase and a fixed-order global
-//!   reduce/apply phase (DESIGN.md §3).
+//!   reduce/apply phase (DESIGN.md §3), and parameterized over the
+//!   reduction backend (`step_comm`: in-process engine or one rank of
+//!   a transport group).
 //! * [`runtime`] — PJRT loader/executor for AOT HLO artifacts (L2 JAX
 //!   graphs with L1 Pallas kernels inlined). Python never runs here.
 //!   Offline builds link the vendored `xla` stub (DESIGN.md §1) and
@@ -22,11 +29,14 @@
 //! * [`coordinator`] — the deterministic parallel execution engine
 //!   ([`coordinator::engine`]: `ExecMode::{Sequential, Threaded(n)}`,
 //!   bitwise-identical by the DESIGN.md §3 contract; a persistent
-//!   condvar-parked worker pool whose regions are publish–work–barrier
-//!   cycles; zero-allocation `run_mut`/`run_split` primitives — both
-//!   modes — and the fixed-chunk reduction contract of DESIGN.md
-//!   §Hot-path), the training loop, simulated cluster clock, metrics,
-//!   Fig-1 profiler.
+//!   worker pool with per-slot parking — idle workers sleep through
+//!   regions they have no block in — whose regions are
+//!   publish–work–barrier cycles; zero-allocation `run_mut`/`run_split`
+//!   primitives — both modes — and the fixed-chunk reduction contract
+//!   of DESIGN.md §Hot-path), the training loop, the rank-distributed
+//!   loop ([`coordinator::distributed`]: `zo-adam launch/worker`,
+//!   bitwise parity with the engine), simulated cluster clock,
+//!   metrics, Fig-1 profiler.
 //! * [`data`] / [`eval`] — synthetic workloads and downstream evals.
 //! * [`config`] / [`exp`] — paper workload presets and one driver per
 //!   table/figure (DESIGN.md §4).

@@ -6,6 +6,7 @@
 //! ```text
 //! zo-adam info
 //! zo-adam train --model lm_tiny --algo 01adam --steps 500 --workers 4
+//! zo-adam launch --ranks 4 --transport tcp --family 01adam --check-parity
 //! zo-adam fig2 --task bert_base --steps 1500
 //! zo-adam fig3
 //! zo-adam fig4
@@ -35,6 +36,8 @@ fn main() {
     let result = match cmd.as_str() {
         "info" => cmd_info(rest),
         "train" => cmd_train(rest),
+        "launch" => cmd_launch(rest),
+        "worker" => cmd_worker(rest),
         "fig1" => cmd_fig1(rest),
         "fig2" | "fig6" => cmd_fig2(rest, &cmd),
         "fig3" => cmd_fig3(rest),
@@ -66,6 +69,8 @@ fn usage() -> String {
      Commands:\n\
      \x20 info              manifest + PJRT platform summary\n\
      \x20 train             generic training launcher (--model --algo --steps --workers)\n\
+     \x20 launch            multi-rank run over a real transport (--ranks --transport inproc|tcp)\n\
+     \x20 worker            one TCP rank of a launch (spawned by `launch`; --rank --connect)\n\
      \x20 fig1              momentum/variance profiling (Adam motivation study)\n\
      \x20 fig2              sample-/time-wise convergence (adam vs 1bit vs 0/1)\n\
      \x20 fig3              throughput vs #GPUs (Ethernet + InfiniBand)\n\
@@ -387,6 +392,245 @@ fn cmd_theory(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// Multi-process transport runs (ISSUE 4)
+// ---------------------------------------------------------------------
+
+/// The `--family …` spec options shared by `launch` and `worker` — the
+/// worker processes must be handed byte-identical values (the TCP
+/// handshake fingerprint enforces it). Defaults come from
+/// `DistSpec::default()` so the CLI, the tests and the docs share one
+/// source of truth (float `to_string` round-trips exactly).
+fn spec_args(args: Args) -> Args {
+    let s = zo_adam::coordinator::DistSpec::default();
+    args.opt("family", &s.family, "optimizer family (see coordinator::distributed::FAMILIES)")
+        .opt("d", &s.d.to_string(), "model dimension (default spans two codec chunks, off-word)")
+        .opt("steps", &s.steps.to_string(), "training steps")
+        .opt("seed", &s.seed.to_string(), "data seed")
+        .opt("lr", &s.lr.to_string(), "constant learning rate")
+        .opt("kappa", &s.kappa.to_string(), "quadratic condition number")
+        .opt("sigma", &s.sigma.to_string(), "per-worker gradient noise")
+        .opt("init", &s.init.to_string(), "initial parameter value")
+}
+
+fn spec_from(p: &zo_adam::util::cli::Parsed, world: usize) -> zo_adam::coordinator::DistSpec {
+    zo_adam::coordinator::DistSpec {
+        family: p.get("family").to_string(),
+        d: p.get_usize("d"),
+        steps: p.get_u64("steps"),
+        world,
+        seed: p.get_u64("seed"),
+        lr: p.get_f64("lr"),
+        kappa: p.get_f64("kappa"),
+        sigma: p.get_f64("sigma") as f32,
+        init: p.get_f64("init") as f32,
+    }
+}
+
+fn print_rank0_summary(spec: &zo_adam::coordinator::DistSpec, root: &zo_adam::coordinator::RankResult, transport: &str) {
+    println!(
+        "[launch] {} over {} {transport} rank(s), d={}, {} steps: final loss {:.6}, eval {:?}, \
+         {} rounds ({} fp + {} 1bit, {} local-only steps), {:.3} bits/param on the wire \
+         (framed bytes, headers included), wall {:.2}s",
+        spec.family,
+        spec.world,
+        spec.d,
+        spec.steps,
+        root.final_loss,
+        root.final_eval,
+        root.ledger.rounds_total(),
+        root.ledger.fp_rounds,
+        root.ledger.onebit_rounds,
+        root.ledger.skipped_steps,
+        root.ledger.bits_per_param(),
+        root.wall_s,
+    );
+}
+
+/// Run the in-process reference and pin the distributed result to it
+/// bit for bit (the ISSUE 4 acceptance criterion, and ci.sh's smoke).
+fn verify_parity(
+    spec: &zo_adam::coordinator::DistSpec,
+    root: &zo_adam::coordinator::RankResult,
+) -> Result<()> {
+    use zo_adam::coordinator::{check_parity, run_local};
+    let reference = run_local(spec, ExecMode::with_threads(spec.world));
+    match check_parity(root, &reference) {
+        Ok(()) => {
+            println!(
+                "[launch] PARITY OK: {}-rank transport run is bitwise identical to \
+                 ExecMode::{} (params, per-step losses, eval, round counts)",
+                spec.world,
+                ExecMode::with_threads(spec.world).name()
+            );
+            Ok(())
+        }
+        Err(e) => anyhow::bail!("transport/in-process parity violated: {e}"),
+    }
+}
+
+fn cmd_launch(rest: &[String]) -> Result<()> {
+    let p = parse(
+        spec_args(
+            Args::new("zo-adam launch", "multi-rank training over a real transport")
+                .opt("ranks", "4", "number of ranks (= data-parallel workers)")
+                .opt("transport", "inproc", "inproc (threads+channels) | tcp (worker processes)")
+                .opt("port", "0", "TCP listen port on 127.0.0.1 (0 = ephemeral)")
+                .flag("check-parity", "re-run in-process and require bitwise-identical results")
+                .flag("quiet", "suppress worker output"),
+        ),
+        rest,
+    );
+    let world = p.get_usize("ranks").max(1);
+    let spec = spec_from(&p, world);
+    anyhow::ensure!(
+        zo_adam::coordinator::distributed::FAMILIES.contains(&spec.family.as_str()),
+        "unknown family '{}' (one of: {})",
+        spec.family,
+        zo_adam::coordinator::distributed::FAMILIES.join(", ")
+    );
+    let transport = p.get("transport").to_string();
+    let root = match transport.as_str() {
+        "inproc" => {
+            let mut results = zo_adam::coordinator::launch_inproc(&spec)
+                .map_err(|e| anyhow::anyhow!("in-proc launch failed: {e}"))?;
+            results.truncate(1);
+            results.pop().expect("rank 0 result")
+        }
+        "tcp" => launch_tcp(&spec, p.get_usize("port"), p.get_flag("quiet"))?,
+        other => anyhow::bail!("unknown transport '{other}' (inproc|tcp)"),
+    };
+    print_rank0_summary(&spec, &root, &transport);
+    if p.get_flag("check-parity") {
+        verify_parity(&spec, &root)?;
+    }
+    Ok(())
+}
+
+/// TCP path: bind loopback, spawn one `zo-adam worker` process per
+/// non-root rank, run rank 0 in this process, then reap the children.
+fn launch_tcp(
+    spec: &zo_adam::coordinator::DistSpec,
+    port: usize,
+    quiet: bool,
+) -> Result<zo_adam::coordinator::RankResult> {
+    use std::process::{Command, Stdio};
+    use zo_adam::comm::transport::tcp::Tcp;
+    use zo_adam::comm::RankLink;
+
+    anyhow::ensure!(port <= u16::MAX as usize, "--port {port} is out of range (0-65535)");
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
+    let addr = listener.local_addr()?.to_string();
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::new();
+    for rank in 1..spec.world {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker")
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--connect")
+            .arg(&addr)
+            .arg("--ranks")
+            .arg(spec.world.to_string())
+            .arg("--family")
+            .arg(&spec.family)
+            .arg("--d")
+            .arg(spec.d.to_string())
+            .arg("--steps")
+            .arg(spec.steps.to_string())
+            .arg("--seed")
+            .arg(spec.seed.to_string())
+            .arg("--lr")
+            .arg(spec.lr.to_string())
+            .arg("--kappa")
+            .arg(spec.kappa.to_string())
+            .arg("--sigma")
+            .arg(spec.sigma.to_string())
+            .arg("--init")
+            .arg(spec.init.to_string());
+        if quiet {
+            cmd.arg("--quiet").stdout(Stdio::null());
+        }
+        children.push((rank, cmd.spawn().map_err(|e| {
+            anyhow::anyhow!("spawning worker rank {rank} ({}): {e}", exe.display())
+        })?));
+    }
+    let root_result = (|| -> Result<_> {
+        let tp = Tcp::root(listener, spec.world, spec.fingerprint())
+            .map_err(|e| anyhow::anyhow!("root handshake: {e}"))?;
+        let mut link = RankLink::new(Box::new(tp));
+        zo_adam::coordinator::run_rank(&mut link, spec)
+            .map_err(|e| anyhow::anyhow!("rank 0 failed: {e}"))
+    })();
+    // Reap the children regardless of the root's fate: on a root
+    // error their sockets die and they exit promptly on their own.
+    let mut failures = Vec::new();
+    for (rank, mut child) in children {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
+            Err(e) => failures.push(format!("rank {rank} not reaped: {e}")),
+        }
+    }
+    // Report worker exit statuses together with (and ahead of) the
+    // root's own error: "rank 2 exited with signal 6" is the diagnosis,
+    // the root's "connection closed" is only the symptom.
+    match root_result {
+        Ok(root) => {
+            anyhow::ensure!(failures.is_empty(), "worker failures: {}", failures.join("; "));
+            Ok(root)
+        }
+        Err(e) if failures.is_empty() => Err(e),
+        Err(e) => anyhow::bail!("worker failures: {}; root then failed with: {e:#}", failures.join("; ")),
+    }
+}
+
+fn cmd_worker(rest: &[String]) -> Result<()> {
+    let p = parse(
+        spec_args(
+            Args::new("zo-adam worker", "one TCP rank of a `zo-adam launch` run")
+                .opt_req("rank", "this process's rank (1..ranks)")
+                .opt_req("connect", "root address, e.g. 127.0.0.1:4321")
+                .opt("ranks", "4", "total ranks in the group")
+                .flag("quiet", "no output on success"),
+        ),
+        rest,
+    );
+    let world = p.get_usize("ranks");
+    let rank = p.get_usize("rank");
+    anyhow::ensure!(
+        rank >= 1 && rank < world,
+        "--rank {rank} is not a worker rank of a {world}-rank group (valid: 1..{world})"
+    );
+    let spec = spec_from(&p, world);
+    anyhow::ensure!(
+        zo_adam::coordinator::distributed::FAMILIES.contains(&spec.family.as_str()),
+        "unknown family '{}' (one of: {})",
+        spec.family,
+        zo_adam::coordinator::distributed::FAMILIES.join(", ")
+    );
+    let tp = zo_adam::comm::transport::tcp::Tcp::connect(
+        p.get("connect"),
+        rank,
+        world,
+        spec.fingerprint(),
+    )
+    .map_err(|e| anyhow::anyhow!("worker rank {rank} handshake: {e}"))?;
+    let mut link = zo_adam::comm::RankLink::new(Box::new(tp));
+    let res = zo_adam::coordinator::run_rank(&mut link, &spec)
+        .map_err(|e| anyhow::anyhow!("worker rank {rank} failed: {e}"))?;
+    if !p.get_flag("quiet") {
+        println!(
+            "[worker {rank}] done: {} steps, {} rounds, {} framed bytes/worker, wall {:.2}s",
+            spec.steps,
+            res.ledger.rounds_total(),
+            res.ledger.bytes_total,
+            res.wall_s
+        );
+    }
+    Ok(())
+}
+
 /// Hot-path perf suite: codec / allreduce / optimizer-step microbenches
 /// plus a short materialized 0/1 Adam run. Writes a machine-readable
 /// report (BENCH_PR2.json) and gates `step/` entries against a baseline
@@ -538,6 +782,70 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
                 report.metric("allreduce/ef1bit/speedup", s / t);
                 println!("  -> EF-1bit threaded speedup: {:.2}x", s / t);
             }
+        }
+    }
+
+    // -- transport ----------------------------------------------------
+    // ISSUE 4: framed round-trips over both backends — a 64 B frame for
+    // latency and a 4 MiB frame for bandwidth (bytes = payload both
+    // directions, so GB/s is the echoed wire rate). A rank-1 echo peer
+    // runs on a thread; TCP goes over a real loopback socket.
+    println!("\n-- transport (rank-0 <-> rank-1 echo) --");
+    {
+        use zo_adam::comm::transport::{
+            inproc, tcp::Tcp, FrameHeader, FrameKind, Transport,
+        };
+
+        fn echo_loop(mut tp: impl Transport) {
+            let mut payload = Vec::new();
+            loop {
+                let header = tp.recv(0, &mut payload).expect("echo recv");
+                if header.kind == FrameKind::Bye {
+                    return;
+                }
+                tp.send(0, FrameHeader::new(header.kind, 1, header.seq, 0, 0), &payload)
+                    .expect("echo send");
+            }
+        }
+
+        let small = vec![0u8; 64];
+        let big = vec![0u8; 4 << 20];
+        let mut backends: Vec<(&str, Box<dyn Transport>, std::thread::JoinHandle<()>)> =
+            Vec::new();
+        {
+            let mut group = inproc::group(2);
+            let peer = group.pop().expect("rank 1");
+            let root = group.pop().expect("rank 0");
+            backends.push(("inproc", Box::new(root), std::thread::spawn(move || echo_loop(peer))));
+        }
+        match Tcp::loopback_group(2, 0xbe7c) {
+            Ok(mut group) => {
+                let peer = group.pop().expect("rank 1");
+                let root = group.pop().expect("rank 0");
+                backends.push(("tcp", Box::new(root), std::thread::spawn(move || echo_loop(peer))));
+            }
+            Err(e) => println!("  (tcp loopback unavailable: {e}; skipping tcp entries)"),
+        }
+        for (label, mut root, echo) in backends {
+            let mut seq = 0u64;
+            let mut recv_buf = Vec::new();
+            let mut b = Bench::new();
+            report.push(&b.run(&format!("transport/{label}/rtt_64B"), || {
+                seq += 1;
+                root.send(1, FrameHeader::new(FrameKind::FpF32, 0, seq, 0, 0), &small)
+                    .expect("send");
+                root.recv(1, &mut recv_buf).expect("recv");
+            }));
+            let mut b = Bench::new().with_bytes(2 * big.len() as u64);
+            report.push(&b.run(&format!("transport/{label}/echo_4MiB"), || {
+                seq += 1;
+                root.send(1, FrameHeader::new(FrameKind::FpF32, 0, seq, 0, 0), &big)
+                    .expect("send");
+                root.recv(1, &mut recv_buf).expect("recv");
+            }));
+            root.send(1, FrameHeader::new(FrameKind::Bye, 0, seq + 1, 0, 0), &[])
+                .expect("bye");
+            echo.join().expect("echo thread");
         }
     }
 

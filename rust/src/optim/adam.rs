@@ -2,7 +2,8 @@
 //! AllReduce of the gradient every step, shared optimizer state.
 
 use super::{DistOptimizer, Hyper, LrSchedule, Rounds, StepInfo, StepScratch};
-use crate::comm::allreduce::allreduce_mean_eng;
+use crate::comm::allreduce::ReduceBackend;
+use crate::comm::TransportError;
 use crate::coordinator::engine::Engine;
 
 pub struct Adam {
@@ -51,13 +52,21 @@ impl DistOptimizer for Adam {
         out.copy_from_slice(&self.x); // all replicas are the shared x
     }
 
-    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
+    fn step_comm(
+        &mut self,
+        t: u64,
+        grads: &[Vec<f32>],
+        eng: &Engine,
+        comm: &mut ReduceBackend<'_>,
+    ) -> Result<StepInfo, TransportError> {
         assert_eq!(grads.len(), self.n);
         let gamma = self.lr.lr(t) as f32;
         let Hyper { beta1, beta2, eps } = self.hyper;
 
-        // Global reduce: fixed worker order inside each coordinate chunk.
-        let wire = allreduce_mean_eng(grads, &mut self.scratch.gbar, eng);
+        // Global reduce: fixed worker order inside each coordinate
+        // chunk (in-process) or fixed rank order at the transport root
+        // — the same additions either way.
+        let wire = comm.allreduce_mean(grads, &mut self.scratch.gbar, eng)?;
 
         // Apply phase, fused (Equation 3, conventional post-update
         // order): m ← β1 m + (1−β1)ḡ;  v ← β2 v + (1−β2)ḡ²;
@@ -83,12 +92,12 @@ impl DistOptimizer for Adam {
             },
         );
 
-        StepInfo {
+        Ok(StepInfo {
             lr: gamma as f64,
             synced: true,
             var_updated: true,
             rounds: Rounds::one(wire),
-        }
+        })
     }
 
     fn momentum(&self) -> Option<&[f32]> {

@@ -27,7 +27,7 @@ pub use policy::{SyncPolicy, SyncSchedule, VarPolicy, VarSchedule};
 pub use sgd::{MomentumSgd, SignSgd};
 pub use zeroone_adam::ZeroOneAdam;
 
-use crate::comm::WireStats;
+use crate::comm::{ReduceBackend, TransportError, WireStats};
 use crate::coordinator::engine::Engine;
 
 /// Adam-family hyperparameters (paper: β1=0.9, β2=0.999, ε=1e-8).
@@ -141,9 +141,20 @@ pub struct StepInfo {
 /// mode-independent coordinate chunks, so `ExecMode::Threaded` is
 /// bitwise identical to `ExecMode::Sequential` for every optimizer.
 ///
+/// Since ISSUE 4 the implementation surface is `step_comm`, which is
+/// additionally **parameterized over the reduction backend**
+/// ([`ReduceBackend`], DESIGN.md §Transport): the same step body runs
+/// with all n workers materialized in-process (`ReduceBackend::Local`,
+/// infallible — `step`/`step_engine` wrap it) or as one rank of a
+/// multi-process transport group materializing a single worker
+/// (`ReduceBackend::Transport`), where every cross-worker reduction is
+/// a framed collective. Because both backends implement identical
+/// arithmetic in identical order, the two deployments are bitwise
+/// interchangeable (`tests/transport_parity.rs`).
+///
 /// `Sync` is a supertrait so the trainer's parallel gradient phase can
 /// read `params(w)` from pool threads; optimizer state is only ever
-/// mutated through `step_engine`'s exclusive borrow.
+/// mutated through `step_comm`'s exclusive borrow.
 pub trait DistOptimizer: Sync {
     fn name(&self) -> &'static str;
     fn dim(&self) -> usize;
@@ -161,7 +172,33 @@ pub trait DistOptimizer: Sync {
     /// Apply one global step, scheduling the per-worker local phase on
     /// `eng`. Must produce bitwise identical state and [`StepInfo`] for
     /// every engine width.
-    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo;
+    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
+        match self.step_comm(t, grads, eng, &mut ReduceBackend::Local) {
+            Ok(info) => info,
+            Err(e) => unreachable!("in-process reductions are infallible: {e}"),
+        }
+    }
+
+    /// The implementation surface: one step whose reductions run on
+    /// `comm` — the in-process engine or a transport rank. With
+    /// `ReduceBackend::Transport`, `grads` holds exactly this rank's
+    /// one materialized worker and errors are real wire failures; with
+    /// `ReduceBackend::Local` the call cannot fail.
+    fn step_comm(
+        &mut self,
+        t: u64,
+        grads: &[Vec<f32>],
+        eng: &Engine,
+        comm: &mut ReduceBackend<'_>,
+    ) -> Result<StepInfo, TransportError>;
+
+    /// False when worker replicas can diverge between syncs (0/1 Adam's
+    /// local steps): `mean_params` then genuinely averages, and a
+    /// multi-process deployment must gather before evaluating. True for
+    /// the shared-state families, whose replicas are one tensor.
+    fn shared_state(&self) -> bool {
+        true
+    }
 
     /// Average model across workers (for evaluation / checkpoints).
     fn mean_params(&self, out: &mut [f32]) {

@@ -10,7 +10,8 @@
 //! unit tests below demonstrate this collapse quantitatively.
 
 use super::{DistOptimizer, Hyper, LrSchedule, Rounds, StepInfo, StepScratch};
-use crate::comm::allreduce::EfAllReduce;
+use crate::comm::allreduce::{EfAllReduce, ReduceBackend};
+use crate::comm::TransportError;
 use crate::coordinator::engine::Engine;
 
 pub struct NaiveOneBitAdam {
@@ -79,11 +80,17 @@ impl DistOptimizer for NaiveOneBitAdam {
         out.copy_from_slice(&self.x);
     }
 
-    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
+    fn step_comm(
+        &mut self,
+        t: u64,
+        grads: &[Vec<f32>],
+        eng: &Engine,
+        comm: &mut ReduceBackend<'_>,
+    ) -> Result<StepInfo, TransportError> {
         let gamma = self.lr.lr(t) as f32;
         let Hyper { beta1, beta2, eps } = self.hyper;
         // The mistake under study: both moments fed the ±scale signal.
-        let wire = self.ef.reduce_eng(grads, &mut self.scratch.gbar, eng);
+        let wire = comm.ef_reduce(&mut self.ef, grads, &mut self.scratch.gbar, eng)?;
         let chunk = eng.chunk_len(self.x.len());
         let gbar = &self.scratch.gbar;
         eng.run_split(
@@ -103,7 +110,7 @@ impl DistOptimizer for NaiveOneBitAdam {
                 }
             },
         );
-        StepInfo { lr: gamma as f64, synced: true, var_updated: true, rounds: Rounds::one(wire) }
+        Ok(StepInfo { lr: gamma as f64, synced: true, var_updated: true, rounds: Rounds::one(wire) })
     }
 
     fn momentum(&self) -> Option<&[f32]> {

@@ -13,7 +13,8 @@
 
 use super::policy::{VarPolicy, VarSchedule};
 use super::{DistOptimizer, Hyper, LrSchedule, Rounds, StepInfo, StepScratch};
-use crate::comm::allreduce::{allreduce_mean_eng, EfAllReduce};
+use crate::comm::allreduce::{EfAllReduce, ReduceBackend};
+use crate::comm::TransportError;
 use crate::coordinator::engine::Engine;
 
 pub struct FrozenVarAdam {
@@ -100,20 +101,26 @@ impl DistOptimizer for FrozenVarAdam {
         out.copy_from_slice(&self.x);
     }
 
-    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
+    fn step_comm(
+        &mut self,
+        t: u64,
+        grads: &[Vec<f32>],
+        eng: &Engine,
+        comm: &mut ReduceBackend<'_>,
+    ) -> Result<StepInfo, TransportError> {
         assert_eq!(grads.len(), self.n);
         let gamma = self.lr.lr(t) as f32;
         let Hyper { beta1, beta2, eps } = self.hyper;
 
         let var_update = self.var_sched.is_update_step(t);
         let wire = if var_update {
-            // Full-precision round: exact mean, v will absorb ḡ².
-            allreduce_mean_eng(grads, &mut self.scratch.gbar, eng)
+            // Full-precision round (fp16 wire): v will absorb ḡ².
+            comm.allreduce_mean(grads, &mut self.scratch.gbar, eng)?
         } else {
             // Compression stage: EF-1-bit round (Algorithm 2) — the
             // per-worker compress leg and the server chunks run on the
-            // pool.
-            self.ef.reduce_eng(grads, &mut self.scratch.gbar, eng)
+            // pool (or across the transport group's ranks).
+            comm.ef_reduce(&mut self.ef, grads, &mut self.scratch.gbar, eng)?
         };
 
         let d = self.x.len();
@@ -160,12 +167,12 @@ impl DistOptimizer for FrozenVarAdam {
             );
         }
 
-        StepInfo {
+        Ok(StepInfo {
             lr: gamma as f64,
             synced: true,
             var_updated: var_update,
             rounds: Rounds::one(wire),
-        }
+        })
     }
 
     fn momentum(&self) -> Option<&[f32]> {

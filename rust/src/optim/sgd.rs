@@ -10,7 +10,8 @@
 //!   point.
 
 use super::{DistOptimizer, LrSchedule, Rounds, StepInfo, StepScratch};
-use crate::comm::allreduce::{allreduce_mean_eng, EfAllReduce};
+use crate::comm::allreduce::{EfAllReduce, ReduceBackend};
+use crate::comm::TransportError;
 use crate::coordinator::engine::Engine;
 
 pub struct MomentumSgd {
@@ -57,12 +58,18 @@ impl DistOptimizer for MomentumSgd {
         out.copy_from_slice(&self.x);
     }
 
-    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
+    fn step_comm(
+        &mut self,
+        t: u64,
+        grads: &[Vec<f32>],
+        eng: &Engine,
+        comm: &mut ReduceBackend<'_>,
+    ) -> Result<StepInfo, TransportError> {
         let gamma = self.lr.lr(t) as f32;
         let beta = self.beta;
         // Reduce (fixed worker order per coordinate), then the fused
         // heavy-ball apply in per-coordinate chunks.
-        let wire = allreduce_mean_eng(grads, &mut self.scratch.gbar, eng);
+        let wire = comm.allreduce_mean(grads, &mut self.scratch.gbar, eng)?;
         let chunk = eng.chunk_len(self.x.len());
         let gbar = &self.scratch.gbar;
         eng.run_split(
@@ -77,7 +84,7 @@ impl DistOptimizer for MomentumSgd {
                 }
             },
         );
-        StepInfo { lr: gamma as f64, synced: true, var_updated: false, rounds: Rounds::one(wire) }
+        Ok(StepInfo { lr: gamma as f64, synced: true, var_updated: false, rounds: Rounds::one(wire) })
     }
 
     fn momentum(&self) -> Option<&[f32]> {
@@ -128,18 +135,24 @@ impl DistOptimizer for SignSgd {
         out.copy_from_slice(&self.x);
     }
 
-    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
+    fn step_comm(
+        &mut self,
+        t: u64,
+        grads: &[Vec<f32>],
+        eng: &Engine,
+        comm: &mut ReduceBackend<'_>,
+    ) -> Result<StepInfo, TransportError> {
         let gamma = self.lr.lr(t) as f32;
         // Local phase: per-worker EF compress (engine-parallel inside
-        // reduce_eng); global phase: chunk-parallel ordered server mean,
-        // then the chunk-parallel apply.
-        let wire = self.ef.reduce_eng(grads, &mut self.scratch.gbar, eng);
+        // reduce_eng, or this rank's lane under a transport); global
+        // phase: ordered server mean, then the chunk-parallel apply.
+        let wire = comm.ef_reduce(&mut self.ef, grads, &mut self.scratch.gbar, eng)?;
         let chunk = eng.chunk_len(self.x.len());
         let gbar = &self.scratch.gbar;
         eng.run_split(self.x.len(), chunk, &mut self.x[..], |_ci, off, xc: &mut [f32]| {
             crate::tensor::axpy(xc, -gamma, &gbar[off..off + xc.len()]);
         });
-        StepInfo { lr: gamma as f64, synced: true, var_updated: false, rounds: Rounds::one(wire) }
+        Ok(StepInfo { lr: gamma as f64, synced: true, var_updated: false, rounds: Rounds::one(wire) })
     }
 }
 

@@ -26,7 +26,8 @@
 
 use super::policy::{SyncSchedule, VarSchedule};
 use super::{DistOptimizer, Hyper, LrSchedule, Rounds, StepInfo, StepScratch};
-use crate::comm::allreduce::{allreduce_mean_eng, EfAllReduce, WorkerBufs};
+use crate::comm::allreduce::{EfAllReduce, ReduceBackend, WorkerBufs};
+use crate::comm::TransportError;
 use crate::coordinator::engine::Engine;
 
 /// One worker's replica state — the unit the engine's local phase
@@ -147,7 +148,13 @@ impl DistOptimizer for ZeroOneAdam {
         &self.reps[worker].x
     }
 
-    fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
+    fn step_comm(
+        &mut self,
+        t: u64,
+        grads: &[Vec<f32>],
+        eng: &Engine,
+        comm: &mut ReduceBackend<'_>,
+    ) -> Result<StepInfo, TransportError> {
         assert_eq!(grads.len(), self.n);
         let gamma = self.lr.lr(t) as f32;
         let Hyper { beta1, beta2, eps } = self.hyper;
@@ -161,7 +168,7 @@ impl DistOptimizer for ZeroOneAdam {
         // the very first step).
         let var_updated = self.var_sched.is_update_step(t);
         if var_updated {
-            rounds.push(allreduce_mean_eng(grads, &mut self.scratch.gbar, eng));
+            rounds.push(comm.allreduce_mean(grads, &mut self.scratch.gbar, eng)?);
             // Fused v + rsv refresh, chunk-parallel (per-coordinate
             // independent, so pool scheduling cannot change a bit).
             let chunk = eng.chunk_len(d);
@@ -217,7 +224,7 @@ impl DistOptimizer for ZeroOneAdam {
         if synced {
             {
                 let ZeroOneAdam { reps, ef, scratch, .. } = self;
-                rounds.push(ef.reduce_eng(&UBufs(&reps[..]), &mut scratch.ubar, eng));
+                rounds.push(comm.ef_reduce(ef, &UBufs(&reps[..]), &mut scratch.ubar, eng)?);
             }
 
             let inv_gsum = if self.gamma_accum > 0.0 {
@@ -265,7 +272,13 @@ impl DistOptimizer for ZeroOneAdam {
             self.var_sched.stop();
         }
 
-        StepInfo { lr: gamma as f64, synced, var_updated, rounds }
+        Ok(StepInfo { lr: gamma as f64, synced, var_updated, rounds })
+    }
+
+    /// Replicas genuinely diverge between syncs: `mean_params` averages
+    /// and a transport deployment must gather (DESIGN.md §Transport).
+    fn shared_state(&self) -> bool {
+        false
     }
 
     fn momentum(&self) -> Option<&[f32]> {

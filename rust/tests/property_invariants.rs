@@ -176,7 +176,12 @@ fn prop_fp_allreduce_is_permutation_invariant_mean() {
         let mut out2 = vec![0.0f32; d];
         allreduce_mean(&rev, &mut out2);
         for i in 0..d {
-            assert!((out1[i] - out2[i]).abs() <= 1e-5);
+            // ISSUE 4: the fp AllReduce models the fp16 wire, so the
+            // broadcast is fp16-rounded — reversing the accumulation
+            // order can shift the f32 sum by an ulp, which the final
+            // rounding may widen to one fp16 ulp (~4.9e-4 relative).
+            let tol = 1e-3 * out1[i].abs().max(1.0);
+            assert!((out1[i] - out2[i]).abs() <= tol, "i={i}: {} vs {}", out1[i], out2[i]);
         }
     });
 }

@@ -1,0 +1,178 @@
+//! ISSUE 4 acceptance: a multi-rank run over a **real transport**
+//! (in-proc channels and loopback TCP, plus actual spawned worker
+//! processes through the CLI) produces bitwise-identical parameters,
+//! per-step losses, evaluations and ledger round counts to the
+//! single-process `ExecMode::Threaded(N)` engine — for every optimizer
+//! family. This is the subsystem's core contract (DESIGN.md
+//! §Transport): the codec, the error-feedback state on every rank, the
+//! fp16 wire and the sync policies are exercised end-to-end the way a
+//! deployment would run them, and nothing about the trajectory changes.
+
+use zo_adam::comm::transport::tcp::Tcp;
+use zo_adam::comm::transport::RankLink;
+use zo_adam::comm::{onebit_payload_bytes, HEADER_BYTES, SERVER_CHUNK};
+use zo_adam::coordinator::distributed::FAMILIES;
+use zo_adam::coordinator::{check_parity, launch_inproc, run_local, run_rank, DistSpec, ExecMode};
+
+fn spec(family: &str, d: usize, steps: u64, world: usize) -> DistSpec {
+    DistSpec {
+        family: family.to_string(),
+        d,
+        steps,
+        world,
+        seed: 7,
+        lr: 0.01,
+        kappa: 4.0,
+        sigma: 0.15,
+        init: 0.8,
+    }
+}
+
+#[test]
+fn four_inproc_ranks_are_bitwise_threaded4_for_every_family() {
+    // d spans two codec chunks and sits off the 64-bit words, so the
+    // chunked server leg, ragged sign words and the fp16 wire all see
+    // their multi-chunk paths; 12 steps cross 1-bit Adam's T0 and
+    // several 0/1 Adam syncs.
+    let d = 2 * SERVER_CHUNK + 777;
+    for family in FAMILIES {
+        let spec = spec(family, d, 12, 4);
+        let results = launch_inproc(&spec).unwrap_or_else(|e| panic!("{family}: {e}"));
+        let local = run_local(&spec, ExecMode::Threaded(4));
+        check_parity(&results[0], &local).unwrap_or_else(|e| panic!("{family}: {e}"));
+        // every rank counted the same rounds
+        for r in &results[1..] {
+            assert_eq!(r.ledger.fp_rounds, results[0].ledger.fp_rounds, "{family} rank {}", r.rank);
+            assert_eq!(
+                r.ledger.onebit_rounds, results[0].ledger.onebit_rounds,
+                "{family} rank {}",
+                r.rank
+            );
+            assert_eq!(
+                r.ledger.bytes_total, results[0].ledger.bytes_total,
+                "{family} rank {}",
+                r.rank
+            );
+        }
+    }
+}
+
+#[test]
+fn four_tcp_ranks_are_bitwise_threaded4() {
+    // Real loopback sockets for the families with the richest comm
+    // schedules: 0/1 Adam (fp rounds + 1-bit syncs + local steps) and
+    // 1-bit Adam (fp stage then EF stage).
+    for family in ["01adam", "1bit-adam"] {
+        let spec = spec(family, SERVER_CHUNK + 321, 10, 4);
+        let group = Tcp::loopback_group(4, spec.fingerprint())
+            .unwrap_or_else(|e| panic!("{family}: loopback group: {e}"));
+        let results: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = group
+                .into_iter()
+                .map(|tp| {
+                    let spec = &spec;
+                    s.spawn(move || {
+                        let mut link = RankLink::new(Box::new(tp));
+                        run_rank(&mut link, spec)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank thread").unwrap_or_else(|e| panic!("{family}: {e}")))
+                .collect()
+        });
+        let local = run_local(&spec, ExecMode::Threaded(4));
+        check_parity(&results[0], &local).unwrap_or_else(|e| panic!("{family} over tcp: {e}"));
+    }
+}
+
+#[test]
+fn distributed_ledger_counts_actual_framed_bytes() {
+    // The ISSUE 4 wiring claim: under a transport the ledger counts
+    // header + payload per direction — exactly, per round kind.
+    let d = 1500;
+    let spec = spec("01adam-nolocal", d, 6, 3);
+    let results = launch_inproc(&spec).unwrap();
+    let ledger = &results[0].ledger;
+    let fp_frame = (HEADER_BYTES + 2 * d) as u64; // fp16 payload
+    let ef_frame = (HEADER_BYTES + onebit_payload_bytes(d)) as u64;
+    let want = ledger.fp_rounds * 2 * fp_frame + ledger.onebit_rounds * 2 * ef_frame;
+    assert_eq!(ledger.bytes_total, want, "framed-byte accounting must be exact");
+    // and the analytic in-process run charges strictly less (no
+    // headers, tight bit packing)
+    let local = run_local(&spec, ExecMode::Sequential);
+    assert!(local.ledger.bytes_total < ledger.bytes_total);
+}
+
+#[test]
+fn two_ranks_with_different_dims_fail_typed_not_wrong() {
+    // A rank trained with the wrong --d must produce a typed dim
+    // mismatch, not a corrupted reduction.
+    use zo_adam::comm::TransportError;
+    let good = spec("adam", 256, 4, 2);
+    let mut bad = good.clone();
+    bad.d = 128;
+    let links = zo_adam::comm::transport::inproc::group(2);
+    let errs: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = links
+            .into_iter()
+            .enumerate()
+            .map(|(rank, tp)| {
+                let run_spec = if rank == 0 { good.clone() } else { bad.clone() };
+                s.spawn(move || {
+                    let mut link = RankLink::new(Box::new(tp));
+                    run_rank(&mut link, &run_spec)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+    });
+    let failed = errs.iter().filter(|r| r.is_err()).count();
+    assert!(failed >= 1, "dim mismatch must fail at least one rank");
+    let has_typed = errs.iter().any(|r| {
+        matches!(
+            r,
+            Err(TransportError::DimMismatch { .. })
+                | Err(TransportError::PayloadSize { .. })
+                | Err(TransportError::Closed { .. })
+                | Err(TransportError::Truncated { .. })
+        )
+    });
+    assert!(has_typed, "failure must be a typed transport error");
+}
+
+#[test]
+fn multiprocess_tcp_launch_binary_smoke() {
+    // The full deployment shape: `zo-adam launch --transport tcp`
+    // spawns real `zo-adam worker` OS processes over loopback and
+    // verifies bitwise parity against the in-process engine itself
+    // (--check-parity exits non-zero on any mismatch).
+    let exe = env!("CARGO_BIN_EXE_zo-adam");
+    let out = std::process::Command::new(exe)
+        .args([
+            "launch",
+            "--ranks",
+            "3",
+            "--transport",
+            "tcp",
+            "--family",
+            "01adam",
+            "--d",
+            "1500",
+            "--steps",
+            "8",
+            "--check-parity",
+            "--quiet",
+        ])
+        .output()
+        .expect("run zo-adam launch");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "launch failed ({}):\nstdout:\n{stdout}\nstderr:\n{stderr}",
+        out.status
+    );
+    assert!(stdout.contains("PARITY OK"), "missing parity line:\n{stdout}");
+}
