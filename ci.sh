@@ -28,26 +28,51 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
     # workload in-process on ExecMode::Threaded(4) and FAILS unless the
     # final parameters, per-step losses, eval and ledger round counts
     # are bitwise identical — the transport subsystem's core contract.
+    # At this shape (4 ranks, d=3000) the automatic dispatch already
+    # elects the ISSUE 5 pattern-table server path, so this default run
+    # doubles as the table leg of the table-vs-sweep parity smoke
+    # below.
     step "zo-adam launch --ranks 4 --transport tcp (bitwise parity smoke)"
-    cargo run --release --bin zo-adam -- launch --ranks 4 --transport tcp \
-        --family 01adam --d 3000 --steps 40 --check-parity --quiet
+    launch_summary() {
+        env "$@" cargo run --release --bin zo-adam -- launch \
+            --ranks 4 --transport tcp --family 01adam --d 3000 --steps 40 \
+            --check-parity --quiet | grep '^\[launch\]' | sed 's/wall [0-9.]*s//'
+    }
+    sum_table="$(launch_summary)"
+    echo "$sum_table"
+
+    # Table-vs-sweep server parity smoke (ISSUE 5): the same 4-rank TCP
+    # run forced onto the per-worker sweep path. Each run already
+    # asserts transport-vs-inprocess bitwise parity internally
+    # (--check-parity); across the two runs the training summaries must
+    # be byte-identical too (modulo wall time), because the pattern
+    # table replays the sweep's fixed worker-order addition chain
+    # exactly.
+    step "zo-adam launch table-vs-sweep server parity (ISSUE 5)"
+    sum_sweep="$(launch_summary ZO_SERVER_TABLE=sweep)"
+    if [ "$sum_table" != "$sum_sweep" ]; then
+        printf 'table/sweep summaries differ:\n  table: %s\n  sweep: %s\n' \
+            "$sum_table" "$sum_sweep"
+        exit 1
+    fi
+    echo "table and sweep server paths produced identical training summaries"
 
     # Perf-regression gate: quick-window hot-path suite (codec /
-    # allreduce / optimizer-step / materialized 0/1 Adam run) that
-    # compares the optimizer-step medians against the committed
-    # BENCH_PR2.json and FAILS on a >30% regression. A baseline
-    # committed with "bootstrap": true (no toolchain on the authoring
-    # container) skips the gate once and is replaced by real numbers;
-    # an existing measured baseline is never overwritten (no silent
-    # re-baselining — regenerate deliberately with `zo-adam bench
-    # --refresh`).
+    # allreduce / EF server-leg sweep-vs-table / optimizer-step /
+    # materialized 0/1 Adam run) that compares the step/ AND
+    # server_leg/ medians against the committed BENCH_PR2.json and
+    # FAILS on a >30% regression. A baseline committed with
+    # "bootstrap": true (no toolchain on the authoring container)
+    # skips the gate once and is replaced by real numbers; an existing
+    # measured baseline is never overwritten (no silent re-baselining
+    # — regenerate deliberately with `zo-adam bench --refresh`).
     # Bench trend history (ROADMAP): alongside the long-lived gated
     # baseline, every PR commits one BENCH_PR<n>.json snapshot of this
     # run's numbers (always overwritten for the *current* PR index —
     # bump PR_INDEX when a new PR starts). `zo-adam bench` prints the
     # cross-snapshot p50/steps-per-s trend at the end of every run, so
     # drift that stays under the 30% gate is still visible across PRs.
-    PR_INDEX="${PR_INDEX:-4}"
+    PR_INDEX="${PR_INDEX:-5}"
     step "zo-adam bench (perf gate vs BENCH_PR2.json, history BENCH_PR${PR_INDEX}.json)"
     ZO_BENCH_QUICK=1 cargo run --release --bin zo-adam -- bench --quick \
         --json BENCH_PR2.json --baseline BENCH_PR2.json --tolerance 0.30 \

@@ -1,6 +1,9 @@
 //! Microbenchmark: full-precision vs error-feedback 1-bit AllReduce
 //! (paper Algorithms 3 and 2) across worker counts, sequential vs the
-//! chunk-parallel engine path (server leg included since PR 2).
+//! chunk-parallel engine path (server leg included since PR 2), and
+//! the whole EF round under each forced server-accumulation path
+//! (per-worker sweep vs the PR 5 pattern table — bitwise identical,
+//! so the delta is pure server-leg throughput).
 
 use zo_adam::benchkit::Bench;
 use zo_adam::comm::allreduce::{allreduce_mean_eng, EfAllReduce};
@@ -37,6 +40,16 @@ fn main() {
             b.run(&format!("ef_1bit_allreduce/n{n}/1M/{}", mode.name()), || {
                 ef.reduce_eng(&bufs, &mut out, &eng);
             });
+            // the same round with the server accumulation pinned to
+            // each path (identical bits; only the root leg's speed
+            // changes)
+            for (path, force) in [("sweep", false), ("table", true)] {
+                let mut ef = EfAllReduce::new(n, d);
+                ef.force_server_path(Some(force));
+                b.run(&format!("ef_1bit_allreduce/n{n}/1M/{}/{path}", mode.name()), || {
+                    ef.reduce_eng(&bufs, &mut out, &eng);
+                });
+            }
         }
     }
 }

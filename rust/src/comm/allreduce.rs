@@ -263,15 +263,54 @@ impl PackedSet for [OneBit] {
     }
 }
 
+/// Process-wide override of the server-accumulation dispatch, read
+/// once: `ZO_SERVER_TABLE=1|table` forces the pattern table,
+/// `0|sweep` the per-worker sweep; unset/anything else defers to the
+/// (n, d) policy. Both paths are bitwise identical, so this is a perf
+/// knob — ci.sh's parity smoke launches whole runs under each setting
+/// and requires their summaries to match.
+fn server_table_env() -> Option<bool> {
+    use std::sync::OnceLock;
+    static OVERRIDE: OnceLock<Option<bool>> = OnceLock::new();
+    *OVERRIDE.get_or_init(|| match std::env::var("ZO_SERVER_TABLE").ok().as_deref() {
+        Some("1") | Some("table") => Some(true),
+        Some("0") | Some("sweep") => Some(false),
+        _ => None,
+    })
+}
+
+/// The automatic table-vs-sweep choice for an (n, d) server leg — the
+/// env override, else [`compress::table_pays_off`]. A function of the
+/// round shape only (never of mode or schedule), so every engine width
+/// and the transport root dispatch identically.
+fn auto_table(n: usize, d: usize) -> bool {
+    n <= compress::TABLE_BITS
+        && server_table_env().unwrap_or_else(|| compress::table_pays_off(n, d))
+}
+
 /// The EF server round over n packed uploads (Algorithm 2's server
 /// side), shared verbatim by [`EfAllReduce::reduce_eng`] (in-process)
 /// and [`EfAllReduce::reduce_transport`] (rank 0). Phase a: per
-/// [`SERVER_CHUNK`] chunk — ordered worker accumulation, + δ̄,
+/// [`SERVER_CHUNK`] chunk — the ordered worker accumulation, + δ̄,
 /// sign-pack, f64 ‖·‖₁ partial. The partials then combine in chunk
 /// order (the fixed association). Phase b: per chunk — δ̄ ← s − z̄ and
 /// the dense ±scale broadcast, one fused stream. Chunk structure is
 /// mode-independent, so every engine width — including the transport
 /// root's sequential engine — produces identical bits.
+///
+/// **Pattern-table accumulation (ISSUE 5 tentpole).** With `use_table`
+/// the n-pass `accumulate_words` loop of phase a is replaced by one
+/// sweep: the coordinator builds the 2^n-entry chain-replay table
+/// *outside* the parallel region (`compress::build_sign_table` —
+/// regions then capture it read-only, the `coordinator::pool` sharing
+/// discipline), and each chunk bit-transposes its slice of the n sign
+/// words into per-coordinate indices (`pattern`, carved per chunk by
+/// the same `run_split` bundle) and stores `table[pattern]`. Each
+/// entry replays the exact fixed worker-order f32 addition chain, so
+/// the two phase-a forms are bitwise identical by construction
+/// (`tests/kernel_parity.rs`, the forced-path tests below). Callers
+/// pick the path via a (round-shape-only) policy and may force either
+/// for tests/benches — never per mode, though even that would be safe.
 #[allow(clippy::too_many_arguments)]
 fn ef_server_leg<P: PackedSet + ?Sized>(
     inputs: &P,
@@ -281,12 +320,37 @@ fn ef_server_leg<P: PackedSet + ?Sized>(
     sum: &mut [f32],
     packed: &mut OneBit,
     chunk_l1: &mut [f64],
+    table: &mut Vec<f32>,
+    pattern: &mut [u16],
+    use_table: bool,
     out: &mut [f32],
     eng: &Engine,
 ) {
     packed.len = d;
     let inv_n = 1.0 / n as f32;
-    {
+    if use_table {
+        debug_assert_eq!(pattern.len(), d);
+        compress::build_sign_table(n, inv_n, |w| inputs.get(w).scale, table);
+        let table_ro: &[f32] = table;
+        let err_ro: &[f32] = server_err;
+        eng.run_split(
+            d,
+            SERVER_CHUNK,
+            (
+                &mut sum[..],
+                Blocks::new(&mut packed.signs[..], 64),
+                Blocks::new(&mut chunk_l1[..], SERVER_CHUNK),
+                &mut pattern[..],
+            ),
+            |_ci, off, (s, signs, part, pat)| {
+                let w0 = off / 64;
+                let words = signs.data;
+                compress::transpose_sign_words(n, |w, k| inputs.get(w).signs[w0 + k], pat);
+                compress::table_lookup(table_ro, pat, s);
+                part.data[0] = compress::fold_err_signs_l1(s, &err_ro[off..off + s.len()], words);
+            },
+        );
+    } else {
         let err_ro: &[f32] = server_err;
         eng.run_split(
             d,
@@ -355,6 +419,16 @@ pub struct EfAllReduce {
     /// Per-chunk f64 ‖·‖₁ partials of the server reduction, combined in
     /// chunk order (the fixed-chunk determinism contract).
     chunk_l1: Vec<f64>,
+    /// The 2^n-entry pattern table, rebuilt each table-path round from
+    /// the round's n scales (capacity reserved up front, so steady
+    /// state never allocates). Empty whenever the sweep path runs.
+    table: Vec<f32>,
+    /// Per-coordinate sign-pattern indices of the table sweep, carved
+    /// per chunk by the server region (same laziness as the table).
+    pattern: Vec<u16>,
+    /// Test/bench override of the table-vs-sweep dispatch;
+    /// `None` = automatic ((n, d) policy / `ZO_SERVER_TABLE`).
+    server_path: Option<bool>,
 }
 
 impl EfAllReduce {
@@ -362,6 +436,12 @@ impl EfAllReduce {
         // n > 1 always runs the server leg in-process; n == 1 may be a
         // transport worker rank that never does (see `server_err`).
         let server_d = if n > 1 { d } else { 0 };
+        // Multi-lane reducers know their round shape now: if the policy
+        // will pick the table, reserve it here so the hot path stays
+        // allocation-free (`tests/zero_alloc.rs`). Transport roots
+        // (n == 1 at construction) size it on the first server round,
+        // like the rest of their server scratch.
+        let eager_table = n > 1 && auto_table(n, d);
         EfAllReduce {
             n,
             d,
@@ -376,6 +456,9 @@ impl EfAllReduce {
             sum: vec![0.0; server_d],
             packed: OneBit::zeros(d),
             chunk_l1: vec![0.0; server_d.div_ceil(SERVER_CHUNK)],
+            table: Vec::with_capacity(if eager_table { 1 << n } else { 0 }),
+            pattern: vec![0u16; if eager_table { d } else { 0 }],
+            server_path: None,
         }
     }
 
@@ -388,6 +471,39 @@ impl EfAllReduce {
             self.server_err = vec![0.0; self.d];
             self.sum = vec![0.0; self.d];
             self.chunk_l1 = vec![0.0; self.d.div_ceil(SERVER_CHUNK)];
+        }
+    }
+
+    /// Which phase-a form this round's server leg runs: the forced path
+    /// if set (clamped — patterns wider than [`compress::TABLE_BITS`]
+    /// don't fit the u16 index), else the automatic policy. Both forms
+    /// are bitwise identical, so this decides performance only.
+    fn use_table(&self, n: usize) -> bool {
+        match self.server_path {
+            Some(t) => t && n <= compress::TABLE_BITS,
+            None => auto_table(n, self.d),
+        }
+    }
+
+    /// Force the server accumulation onto the pattern table
+    /// (`Some(true)`) or the per-worker sweep (`Some(false)`)
+    /// regardless of the (n, d) policy; `None` restores the automatic
+    /// dispatch. The parity tests and the `server_leg/*` benches drive
+    /// both paths through this hook.
+    pub fn force_server_path(&mut self, table: Option<bool>) {
+        self.server_path = table;
+    }
+
+    /// Size the table-sweep scratch for an n-worker round on first use
+    /// — a steady-state no-op (`build_sign_table` reuses the capacity
+    /// reserved here).
+    fn ensure_table(&mut self, n: usize) {
+        if self.pattern.len() != self.d {
+            self.pattern = vec![0u16; self.d];
+        }
+        let want = 1usize << n.min(compress::TABLE_BITS);
+        if self.table.capacity() < want {
+            self.table.reserve_exact(want - self.table.len());
         }
     }
 
@@ -419,13 +535,17 @@ impl EfAllReduce {
     ///
     /// Phase 2 ([`ef_server_leg`], chunk-parallel over coordinates):
     /// z̄ = C[(1/n) Σ ẑᵢ + δ̄]; δ̄ ← … − z̄; broadcast z̄. Every
-    /// [`SERVER_CHUNK`]-sized coordinate chunk accumulates workers in
-    /// fixed index order and emits an f64 ‖·‖₁ partial; the partials are
+    /// [`SERVER_CHUNK`]-sized coordinate chunk evaluates the fixed
+    /// worker-order accumulation — as n ordered `accumulate_words`
+    /// passes, or (when the (n, d) policy elects the ISSUE 5 pattern
+    /// table) as one `table[pattern]` sweep replaying the identical
+    /// chain — and emits an f64 ‖·‖₁ partial; the partials are
     /// combined in chunk order on the coordinator thread. Because the
-    /// chunk structure is mode-independent, threaded results stay
-    /// bitwise identical to sequential ones while the formerly serial
-    /// server reduction, compression and decompress fan-out all run on
-    /// the pool. The whole round performs no heap allocation.
+    /// chunk structure is mode-independent (and both accumulation
+    /// forms are bitwise equal), threaded results stay bitwise
+    /// identical to sequential ones while the formerly serial server
+    /// reduction, compression and decompress fan-out all run on the
+    /// pool. The whole round performs no heap allocation.
     pub fn reduce_eng<B: WorkerBufs + ?Sized>(
         &mut self,
         bufs: &B,
@@ -493,8 +613,25 @@ impl EfAllReduce {
 
         // Phase 2: the shared server leg over the lanes' packed uploads.
         self.ensure_server();
-        let EfAllReduce { lanes, server_err, sum, packed, chunk_l1, .. } = self;
-        ef_server_leg(&lanes[..], n, d, server_err, sum, packed, chunk_l1, out, eng);
+        let use_table = self.use_table(n);
+        if use_table {
+            self.ensure_table(n);
+        }
+        let EfAllReduce { lanes, server_err, sum, packed, chunk_l1, table, pattern, .. } = self;
+        ef_server_leg(
+            &lanes[..],
+            n,
+            d,
+            server_err,
+            sum,
+            packed,
+            chunk_l1,
+            table,
+            pattern,
+            use_table,
+            out,
+            eng,
+        );
 
         let wire = compress::wire_bytes(d) as u64;
         WireStats {
@@ -551,10 +688,17 @@ impl EfAllReduce {
             }
             // Identical server leg to reduce_eng — fixed rank order,
             // fixed chunk association, engine width irrelevant by the
-            // mode-independence contract.
+            // mode-independence contract (and the same table-vs-sweep
+            // policy: a function of (world, d) only, so the root's
+            // choice mirrors the in-process reducer's — though either
+            // choice produces the same bits).
             let eng = Engine::sequential();
             self.ensure_server();
-            let EfAllReduce { server_err, sum, packed, chunk_l1, .. } = self;
+            let use_table = self.use_table(world);
+            if use_table {
+                self.ensure_table(world);
+            }
+            let EfAllReduce { server_err, sum, packed, chunk_l1, table, pattern, .. } = self;
             ef_server_leg(
                 &link.gathered[..],
                 world,
@@ -563,6 +707,9 @@ impl EfAllReduce {
                 sum,
                 packed,
                 chunk_l1,
+                table,
+                pattern,
+                use_table,
                 out,
                 &eng,
             );
@@ -822,6 +969,88 @@ mod tests {
                 assert_eq!(seq.server_err, chunked.server_err, "n={n} r={round}");
             }
         }
+    }
+
+    #[test]
+    fn table_and_sweep_server_legs_are_bitwise_identical() {
+        // ISSUE 5 tentpole: the pattern-table accumulation must equal
+        // the per-worker sweep bit for bit — broadcast outputs and the
+        // persistent server error across rounds, in sequential and
+        // threaded modes, with n straddling the policy boundary
+        // (2^n vs d) and the TABLE_BITS fallback, and d off the
+        // word/chunk boundaries.
+        let eng = Engine::new(ExecMode::Threaded(4));
+        for &(n, d) in &[
+            (2usize, 67usize), // 2^n ≰ d territory: policy would sweep; forced paths still agree
+            (3, 1000),
+            (8, SERVER_CHUNK + 77),
+            (16, 2 * SERVER_CHUNK + 777), // widest table
+            (compress::TABLE_BITS + 1, 1500), // force(table) must clamp to the sweep
+        ] {
+            let mut sweep = EfAllReduce::new(n, d);
+            let mut table_seq = EfAllReduce::new(n, d);
+            let mut table_thr = EfAllReduce::new(n, d);
+            sweep.force_server_path(Some(false));
+            table_seq.force_server_path(Some(true));
+            table_thr.force_server_path(Some(true));
+            let mut out_a = vec![0.0f32; d];
+            let mut out_b = vec![0.0f32; d];
+            let mut out_c = vec![0.0f32; d];
+            for round in 0..5 {
+                let bufs = rand_bufs(n, d, 4400 + round);
+                let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+                sweep.reduce(&refs, &mut out_a);
+                table_seq.reduce(&refs, &mut out_b);
+                table_thr.reduce_eng(&refs, &mut out_c, &eng);
+                for j in 0..d {
+                    assert_eq!(out_a[j].to_bits(), out_b[j].to_bits(), "n={n} d={d} r={round} j={j}");
+                    assert_eq!(out_a[j].to_bits(), out_c[j].to_bits(), "n={n} d={d} r={round} j={j}");
+                }
+                assert_eq!(sweep.server_err, table_seq.server_err, "n={n} d={d} r={round}");
+                assert_eq!(sweep.server_err, table_thr.server_err, "n={n} d={d} r={round}");
+            }
+        }
+    }
+
+    #[test]
+    fn table_path_handles_zero_scales_and_degenerate_shapes() {
+        // All-zero uploads give +0.0 scales (the chain then sums signed
+        // zeros), and a single worker is below the policy floor but
+        // must still work when forced. Both must match the sweep
+        // bitwise, persistent state included.
+        for &(n, d) in &[(1usize, 130usize), (4, 200)] {
+            let mut sweep = EfAllReduce::new(n, d);
+            let mut table = EfAllReduce::new(n, d);
+            sweep.force_server_path(Some(false));
+            table.force_server_path(Some(true));
+            let mut out_a = vec![1.0f32; d];
+            let mut out_b = vec![2.0f32; d];
+            let zeros = vec![vec![0.0f32; d]; n];
+            let mixed = rand_bufs(n, d, 77);
+            for (round, bufs) in [&zeros, &mixed, &zeros].into_iter().enumerate() {
+                let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+                sweep.reduce(&refs, &mut out_a);
+                table.reduce(&refs, &mut out_b);
+                for j in 0..d {
+                    assert_eq!(out_a[j].to_bits(), out_b[j].to_bits(), "n={n} r={round} j={j}");
+                }
+                assert_eq!(sweep.server_err, table.server_err, "n={n} r={round}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_policy_is_a_function_of_round_shape_only() {
+        // The automatic dispatch must agree between a fresh reducer and
+        // one that has already run rounds, and between engine widths —
+        // it may consult only (n, d). (Either choice is bitwise
+        // identical; this pins the policy itself.)
+        let a = EfAllReduce::new(4, 2000);
+        assert_eq!(a.use_table(4), auto_table(4, 2000));
+        let b = EfAllReduce::new(2, 3); // 2^2 > 3: table can't amortize
+        assert!(!b.use_table(2) || server_table_env() == Some(true));
+        let c = EfAllReduce::new(compress::TABLE_BITS + 1, 4096);
+        assert!(!c.use_table(compress::TABLE_BITS + 1), "u16 patterns cap the table");
     }
 
     #[test]

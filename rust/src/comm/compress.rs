@@ -286,6 +286,121 @@ pub fn ef_finish_words(s: &[f32], signs: &[u64], scale_bits: u32, err: &mut [f32
 }
 
 // ---------------------------------------------------------------------
+// Pattern-table server accumulation (ISSUE 5 tentpole)
+// ---------------------------------------------------------------------
+//
+// The EF server leg sums n one-bit uploads per coordinate in fixed
+// worker order: s[i] = ((0 + c₀) + c₁) + … + c₍ₙ₋₁₎ with
+// c_w = ±|scale_w·weight|. Each worker contributes one global scale per
+// round, so for a fixed round the value of that ordered chain depends
+// *only* on the coordinate's n-bit sign pattern — there are at most 2^n
+// distinct outcomes across all d coordinates. Instead of streaming the
+// dense f32 sum n times (`accumulate_words` once per worker), the table
+// path precomputes every outcome once per round and then performs a
+// single sweep: bit-transpose the n sign words into a per-coordinate
+// pattern index and store `table[pattern]`.
+//
+// **Bitwise identity is by construction, not by analysis:** every table
+// entry is built by replaying the exact f32 addition chain the sweep
+// would execute — same `scale·weight` product, same |·|/sign-bit
+// composition, same +0.0 start, same worker order — so `table[p]` *is*
+// the sweep's result for pattern p, bit for bit (±0 scales, negative
+// weights, NaN propagation and all). The prefix-doubling build makes
+// that replay cost O(2^n) total instead of O(2^n·n): after worker w the
+// first 2^(w+1) entries hold every (w+1)-bit prefix chain, each
+// extended from its w-bit prefix by one addition — precisely the
+// association of the sweep.
+
+/// Widest worker count the pattern table supports: patterns must fit a
+/// `u16` index and the 2^n-entry table must stay cache-resident
+/// (2^16 f32 = 256 KiB). Beyond this the server leg falls back to the
+/// per-worker sweep.
+pub const TABLE_BITS: usize = 16;
+
+/// Dispatch policy for the server accumulation: the table pays off when
+/// the O(2^n) per-round build is amortized by the d-coordinate sweep it
+/// replaces. A pure function of (n, d) — never of execution mode or
+/// schedule — so every engine width and the transport root make the
+/// same choice (and either choice is bitwise identical anyway).
+pub fn table_pays_off(n: usize, d: usize) -> bool {
+    n >= 2 && n <= TABLE_BITS && (1usize << n) <= d
+}
+
+/// Build the 2^n-entry pattern table for one server round into `table`
+/// (resized in place; steady-state allocation-free once capacity is
+/// reserved). `scale_of(w)` is worker w's upload scale; `weight` is the
+/// shared accumulation weight (1/n for the mean). Entry `p` holds the
+/// ordered chain `((0.0 + c₀) + c₁) + …` where bit w of `p` set means
+/// worker w's coordinate is non-negative (the codec's sign convention)
+/// and c_w carries the same sign composition as [`accumulate_words`]:
+/// `neg = (!bit) ^ sign(scale_w·weight)`.
+pub fn build_sign_table(
+    n: usize,
+    weight: f32,
+    scale_of: impl Fn(usize) -> f32,
+    table: &mut Vec<f32>,
+) {
+    assert!(n <= TABLE_BITS, "pattern table over {n} workers exceeds TABLE_BITS = {TABLE_BITS}");
+    table.clear();
+    table.resize(1usize << n, 0.0);
+    table[0] = 0.0; // the sweep's zeroed start
+    let mut filled = 1usize; // = 2^w entries hold every w-bit prefix chain
+    for w in 0..n {
+        let s = scale_of(w) * weight;
+        let s_bits = s.abs().to_bits();
+        let base_sign = ((s.to_bits() >> 31) & 1) as u32;
+        // bit set ⇔ coordinate ≥ 0 ⇔ neg = 0 ^ base_sign (accumulate_words)
+        let c_set = f32::from_bits(s_bits | (base_sign << 31));
+        let c_clear = f32::from_bits(s_bits | ((1 ^ base_sign) << 31));
+        // Extend every w-bit prefix by worker w's two possible addends.
+        // High half first: `p | filled` reads table[p] before the low
+        // half overwrites it.
+        for p in 0..filled {
+            let prefix = table[p];
+            table[p | filled] = prefix + c_set;
+            table[p] = prefix + c_clear;
+        }
+        filled <<= 1;
+    }
+}
+
+/// Bit-transpose the n workers' packed sign words of one word-aligned
+/// coordinate range into per-coordinate pattern indices:
+/// `pattern[i] bit w` = worker w's sign bit for coordinate i.
+/// `word_of(w, k)` returns worker w's k-th sign word of the range
+/// (k = i / 64 within the range); `n ≤ TABLE_BITS` so patterns fit u16.
+/// Bits past the range's ragged tail are read but never written out.
+pub fn transpose_sign_words(
+    n: usize,
+    word_of: impl Fn(usize, usize) -> u64,
+    pattern: &mut [u16],
+) {
+    debug_assert!(n <= TABLE_BITS);
+    for (k, chunk) in pattern.chunks_mut(64).enumerate() {
+        for p in chunk.iter_mut() {
+            *p = 0;
+        }
+        for w in 0..n {
+            let word = word_of(w, k);
+            for (b, p) in chunk.iter_mut().enumerate() {
+                *p |= (((word >> b) & 1) as u16) << w;
+            }
+        }
+    }
+}
+
+/// The table sweep itself: `out[i] = table[pattern[i]]` — one store per
+/// coordinate where the per-worker sweep performed n read-modify-write
+/// passes. Combined with [`transpose_sign_words`] this replaces the
+/// n-fold [`accumulate_words`] loop of the server leg bit for bit.
+pub fn table_lookup(table: &[f32], pattern: &[u16], out: &mut [f32]) {
+    debug_assert_eq!(pattern.len(), out.len());
+    for (o, &p) in out.iter_mut().zip(pattern) {
+        *o = table[p as usize];
+    }
+}
+
+// ---------------------------------------------------------------------
 // fp16 wire buffers (ISSUE 4 satellite — ROADMAP open item)
 // ---------------------------------------------------------------------
 //
@@ -311,12 +426,16 @@ pub fn f32_to_f16_bits(x: f32) -> u16 {
     let exp = ((bits >> 23) & 0xff) as i32;
     let man = bits & 0x7f_ffff;
     if exp == 0xff {
-        // inf / NaN: keep the top mantissa bits, never round a NaN to inf
         if man == 0 {
             return sign | 0x7c00;
         }
-        let m = (man >> 13) as u16 & 0x3ff;
-        return sign | 0x7c00 | if m == 0 { 1 } else { m };
+        // NaN: force the mantissa MSB (the quiet bit) like hardware RNE
+        // conversions (F16C `vcvtps2ph`) do, keeping the top payload
+        // bits. Truncating alone mapped a NaN whose payload sat only in
+        // the low 13 mantissa bits to 0x7c01 — a *signaling* f16 NaN
+        // (ISSUE 5 satellite) — and the quiet bit doubles as the
+        // never-rounds-to-inf guarantee.
+        return sign | 0x7e00 | ((man >> 13) as u16 & 0x1ff);
     }
     let e = exp - 127 + 15;
     if e >= 0x1f {
@@ -698,6 +817,156 @@ mod tests {
                 assert_eq!(err[j].to_bits(), ref_err[j].to_bits(), "d={d} j={j}");
             }
         }
+    }
+
+    #[test]
+    fn sign_table_entries_replay_the_ordered_chain_bitwise() {
+        // Every table entry must equal a literal scalar replay of the
+        // fixed worker-order accumulate chain for that sign pattern —
+        // including ±0 scales, negative scales (wire-decodable, never
+        // codec-produced) and negative weights.
+        let mut rng = Rng::new(51);
+        for trial in 0..40usize {
+            let n = 1 + trial % 6;
+            let scales: Vec<f32> = (0..n)
+                .map(|w| match (trial + w) % 5 {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => -(rng.uniform() as f32 + 0.1),
+                    _ => rng.uniform() as f32 * 2.0 + 1e-6,
+                })
+                .collect();
+            let weight = if trial % 3 == 0 { -0.25 } else { 1.0 / n as f32 };
+            let mut table = Vec::new();
+            build_sign_table(n, weight, |w| scales[w], &mut table);
+            assert_eq!(table.len(), 1 << n);
+            for p in 0..1usize << n {
+                // scalar replay: exactly what accumulate_words does to
+                // a zeroed coordinate whose worker-w sign bit is bit w
+                let mut acc = 0.0f32;
+                for (w, &sc) in scales.iter().enumerate() {
+                    let s = sc * weight;
+                    let s_bits = s.abs().to_bits();
+                    let base_sign = ((s.to_bits() >> 31) & 1) as u32;
+                    let neg = ((!(p >> w) & 1) as u32) ^ base_sign;
+                    acc += f32::from_bits(s_bits | (neg << 31));
+                }
+                assert_eq!(
+                    table[p].to_bits(),
+                    acc.to_bits(),
+                    "trial={trial} n={n} p={p:#06b} weight={weight}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_then_lookup_matches_the_accumulate_sweep() {
+        // The full table path (build + transpose + lookup) against the
+        // n-pass accumulate_words sweep over a zeroed target, on dims
+        // off the word boundary.
+        let mut rng = Rng::new(52);
+        for &d in &[1usize, 63, 64, 65, 257, 1000] {
+            for n in [1usize, 2, 5, 8] {
+                let uploads: Vec<OneBit> = (0..n)
+                    .map(|_| {
+                        let mut v = vec![0.0f32; d];
+                        rng.fill_normal(&mut v, 1.0);
+                        compress(&v)
+                    })
+                    .collect();
+                let inv_n = 1.0 / n as f32;
+
+                let mut sweep = vec![0.0f32; d];
+                for u in &uploads {
+                    accumulate_words(&u.signs, u.scale, inv_n, &mut sweep);
+                }
+
+                let mut table = Vec::new();
+                build_sign_table(n, inv_n, |w| uploads[w].scale, &mut table);
+                let mut pattern = vec![0u16; d];
+                transpose_sign_words(n, |w, k| uploads[w].signs[k], &mut pattern);
+                let mut got = vec![f32::NAN; d]; // stores, not accumulates
+                table_lookup(&table, &pattern, &mut got);
+                for j in 0..d {
+                    assert_eq!(got[j].to_bits(), sweep[j].to_bits(), "d={d} n={n} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_policy_boundaries() {
+        // n must amortize the 2^n build against d, fit u16 patterns,
+        // and a single worker never pays for a table.
+        assert!(!table_pays_off(1, 1 << 20));
+        assert!(table_pays_off(2, 4));
+        assert!(!table_pays_off(2, 3));
+        assert!(table_pays_off(8, 256));
+        assert!(!table_pays_off(8, 255));
+        assert!(table_pays_off(TABLE_BITS, 1 << TABLE_BITS));
+        assert!(!table_pays_off(TABLE_BITS + 1, usize::MAX));
+    }
+
+    #[test]
+    fn fp16_nan_payloads_are_quieted() {
+        // ISSUE 5 satellite: every f32 NaN — signaling ones included —
+        // must convert to a *quiet* f16 NaN (mantissa MSB set), with
+        // the sign and the top payload bits preserved. The old
+        // truncation mapped low-13-bit payloads to signaling 0x7c01.
+        crate::testkit::property(60, |g: &mut crate::testkit::Gen| {
+            let payload = match g.usize_in(0..4) {
+                0 => g.u64_in(1..1 << 13) as u32, // the old-bug class: low bits only
+                1 => 1,                           // minimal signaling payload
+                2 => 0x40_0000,                   // already-quiet, no low bits
+                _ => g.u64_in(1..0x80_0000) as u32,
+            };
+            let sign = (g.usize_in(0..2) as u32) << 31;
+            let x = f32::from_bits(sign | 0x7f80_0000 | payload);
+            assert!(x.is_nan());
+            let h = f32_to_f16_bits(x);
+            assert_eq!(h & 0x7c00, 0x7c00, "exponent all-ones: {h:#06x}");
+            assert_ne!(h & 0x3ff, 0, "stays NaN, never inf: {h:#06x}");
+            assert_eq!(h & 0x200, 0x200, "quiet bit set: {h:#06x} from payload {payload:#x}");
+            assert_eq!((h >> 15) as u32, sign >> 31, "sign preserved");
+            assert_eq!(h & 0x1ff, ((payload >> 13) & 0x1ff) as u16, "top payload bits kept");
+            // and the round trip back is a quiet f32 NaN
+            let back = f16_bits_to_f32(h);
+            assert!(back.is_nan());
+            assert_ne!(back.to_bits() & 0x40_0000, 0, "f32 quiet bit after roundtrip");
+        });
+        // the regression anchor itself
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x7f80_0001)), 0x7e00);
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0xff80_0001)), 0xfe00);
+    }
+
+    #[test]
+    fn fp16_subnormal_and_overflow_boundaries_rne() {
+        // Exact RNE behavior at the representability edges, via integer
+        // construction so the anchors are unambiguous.
+        let two = |e: i32| (2.0f64).powi(e) as f32;
+        // underflow: anything ≤ 2^-25 rounds to zero (tie to even 0);
+        // just above rounds to the smallest subnormal 2^-24
+        assert_eq!(f32_to_f16_bits(two(-25)), 0x0000);
+        assert_eq!(f32_to_f16_bits(f32::from_bits(two(-25).to_bits() + 1)), 0x0001);
+        assert_eq!(f32_to_f16_bits(-two(-25)), 0x8000);
+        assert_eq!(f32_to_f16_bits(two(-24)), 0x0001);
+        // subnormal ties go to even: 1.5·2^-24 → 2 ulps, 2.5·2^-24 → 2
+        assert_eq!(f32_to_f16_bits(1.5 * two(-24)), 0x0002);
+        assert_eq!(f32_to_f16_bits(2.5 * two(-24)), 0x0002);
+        assert_eq!(f32_to_f16_bits(3.5 * two(-24)), 0x0004);
+        // the subnormal→normal seam: 1023.5 subnormal ulps round up
+        // into the smallest normal via the carry
+        let just_below_normal = 1023.5 * two(-24);
+        assert_eq!(f32_to_f16_bits(just_below_normal), 0x0400);
+        assert_eq!(f32_to_f16_bits(f32::from_bits(just_below_normal.to_bits() - 1)), 0x03ff);
+        // overflow: the halfway point 65520 = (65504 + 65536)/2 rounds
+        // to even = inf; anything below rounds back to f16::MAX
+        assert_eq!(f32_to_f16_bits(65519.996), 0x7bff);
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-65520.0), 0xfc00);
+        // f16::MAX + 1 f32 ulp still rounds down to f16::MAX
+        assert_eq!(f32_to_f16_bits(f32::from_bits(65504.0f32.to_bits() + 1)), 0x7bff);
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub use allreduce::{
     allreduce_mean, allreduce_mean_transport, onebit_payload_bytes, EfAllReduce, ReduceBackend,
     WireStats, WorkerBufs, SERVER_CHUNK,
 };
-pub use compress::{compress, decompress_into, wire_bytes, OneBit};
+pub use compress::{compress, decompress_into, table_pays_off, wire_bytes, OneBit, TABLE_BITS};
 pub use network::{ComputeModel, Fabric, ETHERNET, INFINIBAND};
 pub use transport::{FrameHeader, FrameKind, RankLink, Transport, TransportError, HEADER_BYTES};
 pub use volume::VolumeLedger;

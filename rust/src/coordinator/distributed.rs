@@ -355,6 +355,105 @@ pub fn check_parity(dist: &RankResult, local: &RunResult) -> Result<(), String> 
     Ok(())
 }
 
+/// RAII guard over the `zo-adam worker` OS processes a TCP launch
+/// spawns (ISSUE 5 satellite). Before this guard, a failure between
+/// spawn and handshake completion leaked live workers two ways: a
+/// spawn error halfway through the worker loop `?`-propagated past the
+/// reap loop entirely, and a root error only `wait()`ed — potentially
+/// for the workers' full 30 s handshake retry window. The guard owns
+/// every spawned child from the moment it exists:
+///
+/// * [`WorkerChildren::reap`] — the happy path: block until every
+///   worker exits, report the failures;
+/// * [`WorkerChildren::shutdown`] — the root-error path: a bounded
+///   grace period for self-exits (a worker's own exit status is the
+///   diagnosis; the root's error is often just the symptom), then
+///   kill + reap whatever is left;
+/// * `Drop` — the backstop for any path that unwinds or `?`-returns
+///   past both: kill + reap unconditionally, so no error path can
+///   leave a live worker behind (`tests/launch_cleanup.rs`).
+#[derive(Default)]
+pub struct WorkerChildren {
+    children: Vec<(usize, std::process::Child)>,
+}
+
+impl WorkerChildren {
+    pub fn new() -> Self {
+        WorkerChildren { children: Vec::new() }
+    }
+
+    /// Take ownership of a freshly spawned worker.
+    pub fn push(&mut self, rank: usize, child: std::process::Child) {
+        self.children.push((rank, child));
+    }
+
+    pub fn len(&self) -> usize {
+        self.children.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    /// Happy path: block until every worker exits; returns one message
+    /// per worker that failed (empty = all clean).
+    pub fn reap(&mut self) -> Vec<String> {
+        let mut failures = Vec::new();
+        for (rank, mut child) in self.children.drain(..) {
+            match child.wait() {
+                Ok(status) if status.success() => {}
+                Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
+                Err(e) => failures.push(format!("rank {rank} not reaped: {e}")),
+            }
+        }
+        failures
+    }
+
+    /// Root-error path: poll for self-exits for up to `grace` (their
+    /// sockets just died, so healthy workers exit promptly and their
+    /// statuses are worth reporting), then kill and reap the rest.
+    /// Never blocks past `grace`; always leaves zero live workers.
+    pub fn shutdown(&mut self, grace: std::time::Duration) -> Vec<String> {
+        let deadline = std::time::Instant::now() + grace;
+        let mut notes = Vec::new();
+        let mut rest = std::mem::take(&mut self.children);
+        loop {
+            rest.retain_mut(|(rank, child)| match child.try_wait() {
+                Ok(Some(status)) if status.success() => false,
+                Ok(Some(status)) => {
+                    notes.push(format!("rank {rank} exited with {status}"));
+                    false
+                }
+                Ok(None) => true,
+                Err(e) => {
+                    notes.push(format!("rank {rank} not reaped: {e}"));
+                    false
+                }
+            });
+            if rest.is_empty() || std::time::Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        for (rank, mut child) in rest {
+            let _ = child.kill();
+            let _ = child.wait();
+            notes.push(format!("rank {rank} killed after the root failed"));
+        }
+        notes
+    }
+}
+
+impl Drop for WorkerChildren {
+    fn drop(&mut self) {
+        for (_, child) in self.children.iter_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        self.children.clear();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

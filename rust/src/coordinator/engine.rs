@@ -356,6 +356,23 @@ impl<A: Split, B: Split, C: Split> Split for (A, B, C) {
     }
 }
 
+impl<A: Split, B: Split, C: Split, D: Split> Split for (A, B, C, D) {
+    fn split_parts(self, at: usize) -> (Self, Self) {
+        let (a0, a1) = self.0.split_parts(at);
+        let (b0, b1) = self.1.split_parts(at);
+        let (c0, c1) = self.2.split_parts(at);
+        let (d0, d1) = self.3.split_parts(at);
+        ((a0, b0, c0, d0), (a1, b1, c1, d1))
+    }
+
+    fn check_chunk(&self, chunk: usize) {
+        self.0.check_chunk(chunk);
+        self.1.check_chunk(chunk);
+        self.2.check_chunk(chunk);
+        self.3.check_chunk(chunk);
+    }
+}
+
 /// A [`Split`] view over an array with one element per `per`
 /// coordinates — e.g. packed sign words (`per = 64`) or per-chunk f64
 /// reduction partials (`per = chunk`). Splits at `ceil(at / per)`

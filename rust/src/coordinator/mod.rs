@@ -9,7 +9,9 @@ mod pool;
 pub mod profiling;
 pub mod trainer;
 
-pub use distributed::{check_parity, launch_inproc, run_local, run_rank, DistSpec, RankResult};
+pub use distributed::{
+    check_parity, launch_inproc, run_local, run_rank, DistSpec, RankResult, WorkerChildren,
+};
 pub use engine::{Engine, ExecMode, MAX_POOL_THREADS};
 pub use metrics::{MetricLog, StepRecord};
 pub use profiling::MomentProfiler;

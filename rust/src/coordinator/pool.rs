@@ -39,6 +39,18 @@
 //! run outside every pool mutex, so a panic poisons nothing and the
 //! pool stays fully usable — `#[should_panic]` tests and the CLI's
 //! error paths can keep driving the same engine afterwards.
+//!
+//! **Coordinator-built, region-shared data (ISSUE 5).** Per-round
+//! derived state that every block needs — e.g. the EF server leg's
+//! 2^n-entry pattern table — is built on the coordinator *between*
+//! regions and captured read-only (`&T` through the visitor's `F:
+//! Sync`) by the blocks of the next region. The publish–work–barrier
+//! cycle makes this sound with no further synchronization: the build
+//! happens-before publish, and the barrier keeps the borrow alive
+//! until the last worker finished. Mutable per-block data, by
+//! contrast, always rides the region's `Split` bundle (one disjoint
+//! carve per block — e.g. the table sweep's per-chunk pattern
+//! indices).
 
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -509,6 +509,16 @@ fn cmd_launch(rest: &[String]) -> Result<()> {
 
 /// TCP path: bind loopback, spawn one `zo-adam worker` process per
 /// non-root rank, run rank 0 in this process, then reap the children.
+///
+/// Every spawned child is owned by a [`WorkerChildren`] guard from the
+/// moment it exists (ISSUE 5 satellite): a spawn failure halfway
+/// through the loop used to `?`-propagate past the reap loop and leak
+/// the already-spawned workers, and a root error only `wait()`ed — up
+/// to the workers' full 30 s handshake-retry window. Now the happy
+/// path reaps, a root error gets a short self-exit grace then
+/// kill + reap, and the guard's `Drop` kills anything an early return
+/// or panic would otherwise leave running
+/// (`tests/launch_cleanup.rs`).
 fn launch_tcp(
     spec: &zo_adam::coordinator::DistSpec,
     port: usize,
@@ -517,12 +527,13 @@ fn launch_tcp(
     use std::process::{Command, Stdio};
     use zo_adam::comm::transport::tcp::Tcp;
     use zo_adam::comm::RankLink;
+    use zo_adam::coordinator::WorkerChildren;
 
     anyhow::ensure!(port <= u16::MAX as usize, "--port {port} is out of range (0-65535)");
     let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
     let addr = listener.local_addr()?.to_string();
     let exe = std::env::current_exe()?;
-    let mut children = Vec::new();
+    let mut children = WorkerChildren::new();
     for rank in 1..spec.world {
         let mut cmd = Command::new(&exe);
         cmd.arg("worker")
@@ -551,9 +562,13 @@ fn launch_tcp(
         if quiet {
             cmd.arg("--quiet").stdout(Stdio::null());
         }
-        children.push((rank, cmd.spawn().map_err(|e| {
+        // A spawn failure propagates here with ranks 1..rank already
+        // running — the guard's Drop kills and reaps them on the way
+        // out (this was the original leak).
+        let child = cmd.spawn().map_err(|e| {
             anyhow::anyhow!("spawning worker rank {rank} ({}): {e}", exe.display())
-        })?));
+        })?;
+        children.push(rank, child);
     }
     let root_result = (|| -> Result<_> {
         let tp = Tcp::root(listener, spec.world, spec.fingerprint())
@@ -562,26 +577,26 @@ fn launch_tcp(
         zo_adam::coordinator::run_rank(&mut link, spec)
             .map_err(|e| anyhow::anyhow!("rank 0 failed: {e}"))
     })();
-    // Reap the children regardless of the root's fate: on a root
-    // error their sockets die and they exit promptly on their own.
-    let mut failures = Vec::new();
-    for (rank, mut child) in children {
-        match child.wait() {
-            Ok(status) if status.success() => {}
-            Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
-            Err(e) => failures.push(format!("rank {rank} not reaped: {e}")),
-        }
-    }
     // Report worker exit statuses together with (and ahead of) the
     // root's own error: "rank 2 exited with signal 6" is the diagnosis,
-    // the root's "connection closed" is only the symptom.
+    // the root's "connection closed" is only the symptom. On a root
+    // error the workers' sockets are dead, so give them a short grace
+    // to exit with that diagnosis, then kill the rest — a failed launch
+    // must never leave live workers (or block on their retry loops).
     match root_result {
         Ok(root) => {
+            let failures = children.reap();
             anyhow::ensure!(failures.is_empty(), "worker failures: {}", failures.join("; "));
             Ok(root)
         }
-        Err(e) if failures.is_empty() => Err(e),
-        Err(e) => anyhow::bail!("worker failures: {}; root then failed with: {e:#}", failures.join("; ")),
+        Err(e) => {
+            let notes = children.shutdown(std::time::Duration::from_secs(2));
+            if notes.is_empty() {
+                Err(e)
+            } else {
+                anyhow::bail!("worker failures: {}; root then failed with: {e:#}", notes.join("; "))
+            }
+        }
     }
 }
 
@@ -785,6 +800,59 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
         }
     }
 
+    // -- EF server accumulation: sweep vs pattern table ---------------
+    // ISSUE 5 tentpole: the root-rank serial leg. `sweep` streams the
+    // dense f32 sum once per worker (`accumulate_words` × n); `table`
+    // replays the ordered chain into a 2^n-entry table once per round,
+    // then bit-transposes the sign words and stores table[pattern] in a
+    // single sweep. Same bits by construction — these entries measure
+    // the throughput gap the dispatch policy banks on, at n straddling
+    // the paper's worker counts and d spanning SERVER_CHUNK multiples.
+    println!("\n-- EF server accumulation (sweep vs table) --");
+    {
+        use zo_adam::comm::compress::{
+            accumulate_words, build_sign_table, table_lookup, transpose_sign_words,
+        };
+        use zo_adam::comm::SERVER_CHUNK;
+        let mut rng = Rng::new(4);
+        for &sd in &[2 * SERVER_CHUNK, 16 * SERVER_CHUNK] {
+            let mut src = vec![0.0f32; sd];
+            let mut sum = vec![0.0f32; sd];
+            let mut pattern = vec![0u16; sd];
+            let mut table: Vec<f32> = Vec::new();
+            for &sn in &[4usize, 8, 16] {
+                let uploads: Vec<OneBit> = (0..sn)
+                    .map(|_| {
+                        rng.fill_normal(&mut src, 1.0);
+                        compress::compress(&src)
+                    })
+                    .collect();
+                let inv_n = 1.0 / sn as f32;
+                let mut b = Bench::new()
+                    .with_elements(sd as u64)
+                    .with_bytes((4 * sd * sn) as u64);
+                let label = format!("n{sn}_d{sd}");
+                let sweep = b.run(&format!("server_leg/sweep/{label}"), || {
+                    sum.iter_mut().for_each(|v| *v = 0.0);
+                    for u in &uploads {
+                        accumulate_words(&u.signs, u.scale, inv_n, &mut sum);
+                    }
+                });
+                report.push(&sweep);
+                let mut b = Bench::new().with_elements(sd as u64).with_bytes((4 * sd) as u64);
+                let table_r = b.run(&format!("server_leg/table/{label}"), || {
+                    build_sign_table(sn, inv_n, |w| uploads[w].scale, &mut table);
+                    transpose_sign_words(sn, |w, k| uploads[w].signs[k], &mut pattern);
+                    table_lookup(&table, &pattern, &mut sum);
+                });
+                report.push(&table_r);
+                let sp = sweep.p50_ns / table_r.p50_ns;
+                report.metric(&format!("server_leg/speedup/{label}"), sp);
+                println!("  -> {label}: table is {sp:.2}x the sweep");
+            }
+        }
+    }
+
     // -- transport ----------------------------------------------------
     // ISSUE 4: framed round-trips over both backends — a 64 B frame for
     // latency and a 4 MiB frame for bandwidth (bytes = payload both
@@ -961,11 +1029,15 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
 
     // Gate first: a regressing run must fail loudly *without* replacing
     // the baseline it regressed against.
+    // Gated entry families: optimizer steps (PR 2) and the EF server
+    // accumulation paths (ISSUE 5 — a sweep regression or a table path
+    // that stops beating it must fail loudly, not fade quietly).
+    const GATED_PREFIXES: [&str; 2] = ["step/", "server_leg/"];
     if let Some(base) = &baseline {
         let gated: Vec<&str> = base
             .entries
             .iter()
-            .filter(|e| e.name.starts_with("step/"))
+            .filter(|e| GATED_PREFIXES.iter().any(|p| e.name.starts_with(p)))
             .map(|e| e.name.as_str())
             .collect();
         // Nanosecond thresholds only mean something under the same
@@ -984,7 +1056,7 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
         if base.bootstrap || gated.is_empty() {
             println!(
                 "\nperf gate vs {baseline_path}: SKIPPED (bootstrap baseline — no measured \
-                 step/ entries to compare yet)"
+                 step/ or server_leg/ entries to compare yet)"
             );
         } else if !config_mismatch.is_empty() {
             println!(
@@ -993,25 +1065,33 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
                 config_mismatch.join(", ")
             );
         } else {
-            let gate = report.regressions_vs(base, "step/", tolerance);
-            if !gate.passed() {
-                for v in &gate.violations {
+            let mut compared = 0usize;
+            let mut violations = Vec::new();
+            let mut missing = Vec::new();
+            for prefix in GATED_PREFIXES {
+                let gate = report.regressions_vs(base, prefix, tolerance);
+                compared += gate.compared;
+                violations.extend(gate.violations);
+                missing.extend(gate.missing);
+            }
+            if !violations.is_empty() {
+                for v in &violations {
                     eprintln!("PERF REGRESSION: {v}");
                 }
                 anyhow::bail!(
-                    "{} optimizer-step perf regression(s) vs {baseline_path}",
-                    gate.violations.len()
+                    "{} hot-path perf regression(s) vs {baseline_path}",
+                    violations.len()
                 );
             }
             println!(
-                "\nperf gate vs {baseline_path}: OK ({}/{} step/ entries within {:.0}%)",
-                gate.compared,
+                "\nperf gate vs {baseline_path}: OK ({}/{} gated entries within {:.0}%)",
+                compared,
                 gated.len(),
                 tolerance * 100.0
             );
             // Missing entries now come from the library gate itself
             // (PerfReport::regressions_vs), so no caller can drop them.
-            for m in &gate.missing {
+            for m in &missing {
                 println!("warning: {m}");
             }
         }

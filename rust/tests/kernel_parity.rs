@@ -4,7 +4,9 @@
 //! kernels (`fold_err_signs_l1` + `ef_finish_words`) vs the two-pass
 //! `compress_with_error_into` + `decompress_into` path — across
 //! off-word lengths, ±0 scales, negative weights and random sign
-//! patterns.
+//! patterns. ISSUE 5 adds the pattern-table server accumulation
+//! (`build_sign_table` + `transpose_sign_words` + `table_lookup`)
+//! against the n-pass ordered `accumulate_words` chain it replaces.
 
 use zo_adam::comm::compress::{self, OneBit};
 use zo_adam::testkit::{property, Gen};
@@ -138,6 +140,66 @@ fn prop_chunked_lane_kernels_match_fused_compress_ef_bitwise() {
         }
         for j in 0..d {
             assert_eq!(err[j].to_bits(), ref_err[j].to_bits(), "err d={d} j={j}");
+        }
+    });
+}
+
+#[test]
+fn prop_sign_table_path_matches_ordered_accumulate_chain_bitwise() {
+    // ISSUE 5 tentpole: the single-sweep table path (build the
+    // 2^n-entry chain-replay table, bit-transpose the sign words,
+    // store table[pattern]) must equal the n-pass `accumulate_words`
+    // chain over a zeroed target bit for bit — with arbitrary
+    // (wire-decodable, never-codec-produced) sign words, ±0 and
+    // subnormal scales, zero and negative weights, random n up to
+    // TABLE_BITS and d off the 64-bit words.
+    property(30, |g: &mut Gen| {
+        let n = g.usize_in(1..compress::TABLE_BITS + 1);
+        let d = g.usize_in(1..300);
+        let uploads: Vec<OneBit> = (0..n).map(|_| arbitrary_onebit(g, d)).collect();
+        let weight = match g.usize_in(0..5) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => -g.f32_in(0.1, 2.0),
+            _ => 1.0 / n as f32, // the server leg's actual weight
+        };
+
+        let mut sweep = vec![0.0f32; d];
+        for u in &uploads {
+            compress::accumulate_words(&u.signs, u.scale, weight, &mut sweep);
+        }
+
+        let mut table = Vec::new();
+        compress::build_sign_table(n, weight, |w| uploads[w].scale, &mut table);
+        assert_eq!(table.len(), 1 << n);
+        let mut pattern = vec![0u16; d];
+        compress::transpose_sign_words(n, |w, k| uploads[w].signs[k], &mut pattern);
+        let mut got = vec![f32::NAN; d]; // lookup stores, never reads the target
+        compress::table_lookup(&table, &pattern, &mut got);
+        for j in 0..d {
+            assert_eq!(got[j].to_bits(), sweep[j].to_bits(), "n={n} d={d} j={j} weight={weight}");
+        }
+    });
+}
+
+#[test]
+fn prop_transpose_recovers_every_sign_bit() {
+    // The transpose is pure bit routing: pattern[i] bit w must equal
+    // worker w's sign bit for coordinate i, with no stray high bits.
+    property(30, |g: &mut Gen| {
+        let n = g.usize_in(1..compress::TABLE_BITS + 1);
+        let d = g.usize_in(1..520);
+        let uploads: Vec<OneBit> = (0..n).map(|_| arbitrary_onebit(g, d)).collect();
+        let mut pattern = vec![0u16; d];
+        compress::transpose_sign_words(n, |w, k| uploads[w].signs[k], &mut pattern);
+        for i in 0..d {
+            for (w, u) in uploads.iter().enumerate() {
+                let bit = (u.signs[i / 64] >> (i % 64)) & 1;
+                assert_eq!((pattern[i] >> w) as u64 & 1, bit, "n={n} d={d} i={i} w={w}");
+            }
+            if n < 16 {
+                assert_eq!(pattern[i] >> n, 0, "n={n} d={d} i={i}: stray high bits");
+            }
         }
     });
 }

@@ -1,0 +1,173 @@
+//! ISSUE 5 satellite: a failed `zo-adam launch` must never leak live
+//! `zo-adam worker` processes. The original bug had two shapes: a
+//! spawn error halfway through the worker loop `?`-propagated past the
+//! reap loop entirely (ranks spawned so far were orphaned into their
+//! 30 s handshake-retry window), and a root error only `wait()`ed —
+//! blocking on, rather than terminating, stuck workers. `launch_tcp`
+//! now owns every child through `coordinator::WorkerChildren`
+//! (reap on success, grace-then-kill on root error, kill-on-drop as
+//! the backstop); these tests drive the guard with real `zo-adam
+//! worker` OS processes in exactly those states.
+
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+use zo_adam::coordinator::WorkerChildren;
+
+fn exe() -> &'static str {
+    env!("CARGO_BIN_EXE_zo-adam")
+}
+
+/// Is `pid` a live (or zombie-unreaped) process? The guard always
+/// `wait()`s what it kills, so after it runs the pid must be fully
+/// gone. (/proc check — these tests only assert liveness on Linux,
+/// which is where CI runs; the guard logic itself is portable.)
+fn alive(pid: u32) -> bool {
+    std::path::Path::new(&format!("/proc/{pid}")).exists()
+}
+
+fn assert_dead(pid: u32, what: &str) {
+    if cfg!(target_os = "linux") {
+        assert!(!alive(pid), "{what}: pid {pid} still alive/unreaped");
+    }
+}
+
+/// Spawn a worker that stays alive: it connects to `addr` (a listener
+/// we bound but never accept/answer on), sends its Hello and then
+/// blocks reading the ack under the transport's generous IO timeout —
+/// the exact lingering process a leaked launch used to leave behind.
+fn spawn_lingering_worker(children: &mut WorkerChildren, rank: usize, addr: &str) -> u32 {
+    let child = Command::new(exe())
+        .args(["worker", "--rank", &rank.to_string(), "--ranks", "4", "--connect", addr, "--quiet"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn lingering worker");
+    let pid = child.id();
+    children.push(rank, child);
+    pid
+}
+
+#[test]
+fn dropped_guard_kills_spawned_workers() {
+    // The mid-spawn-loop failure shape: children exist, an error
+    // `?`-propagates, and the guard goes out of scope without any
+    // explicit reap. Drop must kill + reap every child.
+    let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut children = WorkerChildren::new();
+    let pids: Vec<u32> =
+        (1..3).map(|r| spawn_lingering_worker(&mut children, r, &addr)).collect();
+    assert_eq!(children.len(), 2);
+    for &pid in &pids {
+        if cfg!(target_os = "linux") {
+            assert!(alive(pid), "worker should be lingering before the drop");
+        }
+    }
+    drop(children);
+    for &pid in &pids {
+        assert_dead(pid, "dropped guard");
+    }
+}
+
+#[test]
+fn shutdown_reaps_self_exits_and_kills_stragglers() {
+    // The root-error shape: one worker already failed on its own (its
+    // exit status is the diagnosis the launch error should carry) and
+    // one is stuck in its handshake window. `shutdown` must report the
+    // first and kill the second, within the grace bound.
+    let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut children = WorkerChildren::new();
+
+    // invalid rank ⇒ fast nonzero exit, no connection attempted
+    let failing = Command::new(exe())
+        .args(["worker", "--rank", "9", "--ranks", "4", "--connect", &addr, "--quiet"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn failing worker");
+    let failing_pid = failing.id();
+    children.push(9, failing);
+    let stuck_pid = spawn_lingering_worker(&mut children, 1, &addr);
+
+    // give the failing worker ample time to exit on its own, so the
+    // two classes in `notes` are deterministic
+    std::thread::sleep(Duration::from_millis(1500));
+    let t0 = Instant::now();
+    let notes = children.shutdown(Duration::from_millis(200));
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "shutdown must be bounded by the grace period, not worker timeouts"
+    );
+    assert!(children.is_empty());
+    assert_eq!(notes.len(), 2, "one self-exit + one kill: {notes:?}");
+    assert!(
+        notes.iter().any(|n| n.starts_with("rank 9 exited with")),
+        "self-exit status must be reported: {notes:?}"
+    );
+    assert!(
+        notes.iter().any(|n| n.starts_with("rank 1 killed")),
+        "the stuck worker must be killed, not waited for: {notes:?}"
+    );
+    assert_dead(failing_pid, "self-exited worker");
+    assert_dead(stuck_pid, "killed worker");
+}
+
+#[test]
+fn reap_reports_failures_and_clean_exits() {
+    let mut children = WorkerChildren::new();
+    let ok = Command::new(exe())
+        .args(["--help"])
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn help");
+    children.push(1, ok);
+    let bad = Command::new(exe())
+        .args(["worker", "--rank", "9", "--ranks", "4", "--connect", "127.0.0.1:1", "--quiet"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn failing worker");
+    children.push(2, bad);
+    let failures = children.reap();
+    assert!(children.is_empty());
+    assert_eq!(failures.len(), 1, "{failures:?}");
+    assert!(failures[0].starts_with("rank 2 exited with"), "{failures:?}");
+}
+
+#[test]
+fn launch_bind_conflict_fails_fast_without_spawning() {
+    // The pre-spawn error path: the root's bind fails, so the launch
+    // must exit promptly with a clear error (and there is nothing to
+    // leak — the spawn loop never ran).
+    let holder = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let port = holder.local_addr().unwrap().port();
+    let t0 = Instant::now();
+    let out = Command::new(exe())
+        .args([
+            "launch",
+            "--ranks",
+            "2",
+            "--transport",
+            "tcp",
+            "--port",
+            &port.to_string(),
+            "--family",
+            "adam",
+            "--d",
+            "64",
+            "--steps",
+            "2",
+            "--quiet",
+        ])
+        .output()
+        .expect("run launch");
+    assert!(!out.status.success(), "bind conflict must fail the launch");
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "bind failure must not hang on handshake/worker timeouts"
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("error"), "stderr should carry the error: {stderr}");
+}

@@ -88,6 +88,87 @@ fn four_tcp_ranks_are_bitwise_threaded4() {
 }
 
 #[test]
+fn transport_table_and_sweep_server_legs_agree_bitwise() {
+    // ISSUE 5: rank 0 of a transport group runs the same server leg as
+    // the in-process engine, so forcing its pattern-table path and its
+    // per-worker sweep across two otherwise-identical 3-rank runs must
+    // produce identical broadcast bits, identical persistent server
+    // error — and both must match the 3-lane in-process reduction.
+    use zo_adam::comm::transport::inproc;
+    use zo_adam::comm::EfAllReduce;
+    use zo_adam::tensor::Rng;
+
+    let d = SERVER_CHUNK + 321;
+    let world = 3usize;
+    let rounds = 4u64;
+    let buf_for = move |rank: usize, round: u64| -> Vec<f32> {
+        let mut rng = Rng::new(6000 + (round * world as u64) + rank as u64);
+        let mut v = vec![0.0f32; d];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    };
+
+    let run = |force: Option<bool>| -> (Vec<f32>, Vec<f32>) {
+        let mut group = inproc::group(world);
+        let workers: Vec<_> = group.drain(1..).collect();
+        let root_tp = group.pop().expect("rank 0");
+        let handles: Vec<_> = workers
+            .into_iter()
+            .enumerate()
+            .map(|(i, tp)| {
+                let rank = i + 1;
+                std::thread::spawn(move || {
+                    let mut link = RankLink::new(Box::new(tp));
+                    let mut ef = EfAllReduce::new(1, d);
+                    let mut out = vec![0.0f32; d];
+                    for round in 0..rounds {
+                        let buf = buf_for(rank, round);
+                        let refs: Vec<&[f32]> = vec![&buf];
+                        ef.reduce_transport(&refs, &mut out, &mut link).unwrap();
+                    }
+                    out
+                })
+            })
+            .collect();
+        let mut link = RankLink::new(Box::new(root_tp));
+        let mut ef = EfAllReduce::new(1, d);
+        ef.force_server_path(force);
+        let mut out = vec![0.0f32; d];
+        for round in 0..rounds {
+            let buf = buf_for(0, round);
+            let refs: Vec<&[f32]> = vec![&buf];
+            ef.reduce_transport(&refs, &mut out, &mut link).unwrap();
+        }
+        for h in handles {
+            let w_out = h.join().expect("worker rank thread");
+            for j in 0..d {
+                assert_eq!(w_out[j].to_bits(), out[j].to_bits(), "worker broadcast j={j}");
+            }
+        }
+        (out, ef.server_err.clone())
+    };
+
+    let (out_sweep, err_sweep) = run(Some(false));
+    let (out_table, err_table) = run(Some(true));
+    for j in 0..d {
+        assert_eq!(out_sweep[j].to_bits(), out_table[j].to_bits(), "j={j}");
+    }
+    assert_eq!(err_sweep, err_table, "persistent server error diverged");
+
+    // and both equal the n-lane in-process reduction's trajectory
+    let mut local = EfAllReduce::new(world, d);
+    let mut out_local = vec![0.0f32; d];
+    for round in 0..rounds {
+        let bufs: Vec<Vec<f32>> = (0..world).map(|r| buf_for(r, round)).collect();
+        local.reduce(&bufs, &mut out_local);
+    }
+    for j in 0..d {
+        assert_eq!(out_local[j].to_bits(), out_table[j].to_bits(), "local vs transport j={j}");
+    }
+    assert_eq!(local.server_err, err_table);
+}
+
+#[test]
 fn distributed_ledger_counts_actual_framed_bytes() {
     // The ISSUE 4 wiring claim: under a transport the ledger counts
     // header + payload per direction — exactly, per round kind.
