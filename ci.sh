@@ -23,44 +23,50 @@ step "cargo test -q"
 cargo test -q
 
 if [ "${SKIP_SMOKE:-0}" != "1" ]; then
-    # Multi-process transport smoke (ISSUE 4): 4 real worker processes
-    # over loopback TCP train 0/1 Adam; --check-parity re-runs the same
-    # workload in-process on ExecMode::Threaded(4) and FAILS unless the
+    # Multi-process transport smoke (ISSUE 4 + 6): 9 real worker
+    # processes over loopback TCP train 0/1 Adam under BOTH reduction
+    # schedules — the root star and the two-level tree (tree3: groups
+    # of 3, leaders run the subtree server leg, the root combines the
+    # leader partials). --check-parity re-runs each workload in-process
+    # on ExecMode::Threaded(9) with the SAME topology and FAILS unless
     # final parameters, per-step losses, eval and ledger round counts
     # are bitwise identical — the transport subsystem's core contract.
-    # At this shape (4 ranks, d=3000) the automatic dispatch already
-    # elects the ISSUE 5 pattern-table server path, so this default run
-    # doubles as the table leg of the table-vs-sweep parity smoke
-    # below.
-    step "zo-adam launch --ranks 4 --transport tcp (bitwise parity smoke)"
+    # Note the reference is per-topology: tree3 is its own trajectory
+    # (leaders re-compress; f32 addition is not associative), so star
+    # and tree summaries are NOT expected to match each other.
+    #
+    # Within each topology, the run is repeated with the server legs
+    # forced onto the per-worker sweep path (ISSUE 5): the summaries
+    # must be byte-identical (modulo wall time), because the pattern
+    # table replays the sweep's fixed-order addition chain exactly —
+    # on the root star, on every tree leader leg, and on the weighted
+    # root combine.
     launch_summary() {
+        topo="$1"
+        shift
         env "$@" cargo run --release --bin zo-adam -- launch \
-            --ranks 4 --transport tcp --family 01adam --d 3000 --steps 40 \
-            --check-parity --quiet | grep '^\[launch\]' | sed 's/wall [0-9.]*s//'
+            --ranks 9 --transport tcp --family 01adam --d 3000 --steps 40 \
+            --topology "$topo" --check-parity --quiet \
+            | grep '^\[launch\]' | sed 's/wall [0-9.]*s//'
     }
-    sum_table="$(launch_summary)"
-    echo "$sum_table"
-
-    # Table-vs-sweep server parity smoke (ISSUE 5): the same 4-rank TCP
-    # run forced onto the per-worker sweep path. Each run already
-    # asserts transport-vs-inprocess bitwise parity internally
-    # (--check-parity); across the two runs the training summaries must
-    # be byte-identical too (modulo wall time), because the pattern
-    # table replays the sweep's fixed worker-order addition chain
-    # exactly.
-    step "zo-adam launch table-vs-sweep server parity (ISSUE 5)"
-    sum_sweep="$(launch_summary ZO_SERVER_TABLE=sweep)"
-    if [ "$sum_table" != "$sum_sweep" ]; then
-        printf 'table/sweep summaries differ:\n  table: %s\n  sweep: %s\n' \
-            "$sum_table" "$sum_sweep"
-        exit 1
-    fi
-    echo "table and sweep server paths produced identical training summaries"
+    for topo in star tree3; do
+        step "zo-adam launch --ranks 9 --topology $topo (bitwise parity smoke)"
+        sum_table="$(launch_summary "$topo")"
+        echo "$sum_table"
+        sum_sweep="$(launch_summary "$topo" ZO_SERVER_TABLE=sweep)"
+        if [ "$sum_table" != "$sum_sweep" ]; then
+            printf 'table/sweep summaries differ under --topology %s:\n  table: %s\n  sweep: %s\n' \
+                "$topo" "$sum_table" "$sum_sweep"
+            exit 1
+        fi
+        echo "table and sweep server paths identical under --topology $topo"
+    done
 
     # Perf-regression gate: quick-window hot-path suite (codec /
-    # allreduce / EF server-leg sweep-vs-table / optimizer-step /
-    # materialized 0/1 Adam run) that compares the step/ AND
-    # server_leg/ medians against the committed BENCH_PR2.json and
+    # allreduce / EF server-leg sweep-vs-table / tree-vs-star transport
+    # rounds / optimizer-step / materialized 0/1 Adam run) that
+    # compares the step/, server_leg/ AND transport/tree/ medians
+    # against the committed BENCH_PR2.json and
     # FAILS on a >30% regression. A baseline committed with
     # "bootstrap": true (no toolchain on the authoring container)
     # skips the gate once and is replaced by real numbers; an existing
@@ -72,7 +78,7 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
     # bump PR_INDEX when a new PR starts). `zo-adam bench` prints the
     # cross-snapshot p50/steps-per-s trend at the end of every run, so
     # drift that stays under the 30% gate is still visible across PRs.
-    PR_INDEX="${PR_INDEX:-5}"
+    PR_INDEX="${PR_INDEX:-6}"
     step "zo-adam bench (perf gate vs BENCH_PR2.json, history BENCH_PR${PR_INDEX}.json)"
     ZO_BENCH_QUICK=1 cargo run --release --bin zo-adam -- bench --quick \
         --json BENCH_PR2.json --baseline BENCH_PR2.json --tolerance 0.30 \

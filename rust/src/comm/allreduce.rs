@@ -36,6 +36,7 @@
 //! to `ExecMode::Sequential`.
 
 use super::compress::{self, OneBit};
+use super::topology::{Topology, TreeShape};
 use super::transport::{FrameKind, RankLink, TransportError, HEADER_BYTES};
 use crate::coordinator::engine::{Blocks, Engine};
 
@@ -138,10 +139,69 @@ pub fn allreduce_mean_eng<B: WorkerBufs + ?Sized>(
     }
 }
 
-/// Transport-backed Algorithm 3: this rank contributes `mine`; rank 0
-/// accumulates the unpacked fp16 uploads in rank order (= worker
-/// order), fp16-rounds the mean and broadcasts it. Bitwise identical
-/// to [`allreduce_mean_eng`] over the same logical buffers.
+/// Topology-dispatched Algorithm 3: the star runs the flat
+/// [`allreduce_mean_eng`]; a (normalized) tree computes per-group fp16
+/// partial sums in fixed group order — the group's uploads accumulate
+/// in worker order and the partial is fp16-rounded, exactly the bits a
+/// leader's `FpPartial` frame would carry — then combines the G
+/// partials in leader order and fp16-rounds the global 1/n mean. Every
+/// operation is per-coordinate, so the engine chunking cannot affect
+/// the bits; this is the single-process reference the transport tree
+/// schedule is tested against (`tests/topology_parity.rs`).
+pub fn allreduce_mean_topo<B: WorkerBufs + ?Sized>(
+    bufs: &B,
+    out: &mut [f32],
+    eng: &Engine,
+    topo: Topology,
+) -> WireStats {
+    let n = bufs.count();
+    let Some(shape) = topo.tree_shape(n) else {
+        return allreduce_mean_eng(bufs, out, eng);
+    };
+    assert!(n > 0, "allreduce over zero workers");
+    let d = out.len();
+    for i in 0..n {
+        assert_eq!(bufs.buf(i).len(), d);
+    }
+    let inv = 1.0 / n as f32;
+    eng.run_split(d, SERVER_CHUNK, &mut *out, |_ci, off, oc: &mut [f32]| {
+        let len = oc.len();
+        let mut gp_buf = [0.0f32; SERVER_CHUNK];
+        let gp = &mut gp_buf[..len];
+        for gi in 0..shape.n_groups() {
+            let range = shape.group_range(gi);
+            compress::copy_fp16_rounded(gp, &bufs.buf(range.start)[off..off + len]);
+            for w in range.start + 1..range.end {
+                compress::add_fp16_rounded(gp, &bufs.buf(w)[off..off + len]);
+            }
+            // the group partial is fp16-rounded before it rides up
+            // (×1.0: exact rounding of the ordered sum)
+            compress::finish_mean_fp16(gp, 1.0);
+            if gi == 0 {
+                oc.copy_from_slice(gp);
+            } else {
+                for (o, &g) in oc.iter_mut().zip(gp.iter()) {
+                    *o += g;
+                }
+            }
+        }
+        compress::finish_mean_fp16(oc, inv);
+    });
+    WireStats {
+        up_bytes: compress::fp16_wire_bytes(d) as u64,
+        down_bytes: compress::fp16_wire_bytes(d) as u64,
+        rounds: 1,
+        compressed: false,
+    }
+}
+
+/// Transport-backed Algorithm 3: this rank contributes `mine`; under
+/// the star, rank 0 accumulates the unpacked fp16 uploads in rank
+/// order (= worker order), fp16-rounds the mean and broadcasts it —
+/// bitwise identical to [`allreduce_mean_eng`] over the same logical
+/// buffers. Under a (normalized) tree topology on the link, the rank
+/// plays its tree role instead — member, leader or root — and the
+/// schedule is bitwise identical to [`allreduce_mean_topo`].
 pub fn allreduce_mean_transport(
     mine: &[f32],
     out: &mut [f32],
@@ -150,6 +210,9 @@ pub fn allreduce_mean_transport(
     let d = mine.len();
     assert_eq!(out.len(), d);
     let world = link.world();
+    if let Some(shape) = link.topology().tree_shape(world) {
+        return allreduce_mean_transport_tree(mine, out, link, shape);
+    }
     let seq = link.next_seq();
     let payload = compress::fp16_wire_bytes(d);
     if link.rank() != 0 {
@@ -179,16 +242,106 @@ pub fn allreduce_mean_transport(
     Ok(WireStats { up_bytes: framed, down_bytes: framed, rounds: 1, compressed: false })
 }
 
+/// The tree-role schedule of the fp AllReduce: members upload fp16 to
+/// their leader; each leader accumulates its group in rank order,
+/// fp16-rounds the partial sum and sends it up as one `FpPartial`; the
+/// root combines group-0's partial (computed in place) with the leader
+/// partials in fixed leader order, fp16-rounds the 1/n mean, and the
+/// packed result is relayed down the tree. Bitwise identical to
+/// [`allreduce_mean_topo`] because both execute the same per-element
+/// fp16 chains in the same order (packing an fp16-rounded value to the
+/// wire and unpacking it is the identity).
+fn allreduce_mean_transport_tree(
+    mine: &[f32],
+    out: &mut [f32],
+    link: &mut RankLink,
+    shape: TreeShape,
+) -> Result<WireStats, TransportError> {
+    let d = mine.len();
+    let world = link.world();
+    let seq = link.next_seq();
+    let payload = compress::fp16_wire_bytes(d);
+    let rank = link.rank();
+    let frames: u64;
+    if rank == 0 {
+        // group-0 partial, computed in place exactly like every other
+        // leader's (including the ×1.0 fp16 rounding)
+        let g0 = shape.group_size(0);
+        compress::copy_fp16_rounded(out, mine);
+        for r in 1..g0 {
+            link.recv_expect(r, FrameKind::FpF16, seq, d, 0)?;
+            link.expect_payload(payload)?;
+            compress::add_fp16_bytes(&link.payload, out);
+        }
+        compress::finish_mean_fp16(out, 1.0);
+        // leader partials, in fixed leader order
+        for i in 1..shape.n_groups() {
+            link.recv_expect(i * shape.group, FrameKind::FpPartial, seq, d, 0)?;
+            link.expect_payload(payload)?;
+            compress::add_fp16_bytes(&link.payload, out);
+        }
+        compress::finish_mean_fp16(out, 1.0 / world as f32);
+        link.wire.clear();
+        compress::pack_fp16_bytes(out, &mut link.wire);
+        for r in 1..g0 {
+            link.send_wire(r, FrameKind::FpF16, seq, d, 0)?;
+        }
+        for i in 1..shape.n_groups() {
+            link.send_wire(i * shape.group, FrameKind::FpF16, seq, d, 0)?;
+        }
+        frames = (g0 as u64 - 1) + (shape.n_groups() as u64 - 1);
+    } else if shape.is_leader(rank) {
+        let sz = shape.group_size(shape.group_of(rank));
+        compress::copy_fp16_rounded(out, mine);
+        for j in 1..sz {
+            link.recv_expect(rank + j, FrameKind::FpF16, seq, d, 0)?;
+            link.expect_payload(payload)?;
+            compress::add_fp16_bytes(&link.payload, out);
+        }
+        compress::finish_mean_fp16(out, 1.0);
+        link.wire.clear();
+        compress::pack_fp16_bytes(out, &mut link.wire);
+        link.send_wire(0, FrameKind::FpPartial, seq, d, 0)?;
+        // relay the root's broadcast down to the members, then decode
+        link.recv_expect(0, FrameKind::FpF16, seq, d, 0)?;
+        link.expect_payload(payload)?;
+        {
+            let RankLink { payload, wire, .. } = link;
+            wire.clear();
+            wire.extend_from_slice(payload);
+        }
+        for j in 1..sz {
+            link.send_wire(rank + j, FrameKind::FpF16, seq, d, 0)?;
+        }
+        compress::unpack_fp16_bytes(&link.payload, out);
+        frames = sz as u64;
+    } else {
+        let leader = shape.leader_of(rank);
+        link.wire.clear();
+        compress::pack_fp16_bytes(mine, &mut link.wire);
+        link.send_wire(leader, FrameKind::FpF16, seq, d, 0)?;
+        link.recv_expect(leader, FrameKind::FpF16, seq, d, 0)?;
+        link.expect_payload(payload)?;
+        compress::unpack_fp16_bytes(&link.payload, out);
+        frames = 1;
+    }
+    let framed = frames * (HEADER_BYTES + payload) as u64;
+    Ok(WireStats { up_bytes: framed, down_bytes: framed, rounds: 1, compressed: false })
+}
+
 /// The reduction backend one optimizer step drives — every cross-worker
 /// combination in `DistOptimizer::step_comm` goes through exactly one
 /// of these two arms, which is what makes the step path generic over
 /// "N replicas in one process" vs "one replica per OS process".
 pub enum ReduceBackend<'a> {
     /// All workers materialized in this process; reductions run on the
-    /// engine (infallible).
-    Local,
+    /// engine (infallible), scheduled per the given [`Topology`] — the
+    /// single-process reference a transport deployment of the same
+    /// topology reproduces bit for bit.
+    Local(Topology),
     /// This process is one rank of a transport group and materializes
-    /// exactly one worker; reductions are framed collectives.
+    /// exactly one worker; reductions are framed collectives whose
+    /// schedule follows the link's topology.
     Transport(&'a mut RankLink),
 }
 
@@ -201,7 +354,7 @@ impl ReduceBackend<'_> {
         eng: &Engine,
     ) -> Result<WireStats, TransportError> {
         match self {
-            ReduceBackend::Local => Ok(allreduce_mean_eng(bufs, out, eng)),
+            ReduceBackend::Local(topo) => Ok(allreduce_mean_topo(bufs, out, eng, *topo)),
             ReduceBackend::Transport(link) => {
                 assert_eq!(bufs.count(), 1, "transport ranks materialize exactly one worker");
                 allreduce_mean_transport(bufs.buf(0), out, link)
@@ -211,8 +364,8 @@ impl ReduceBackend<'_> {
 
     /// Algorithm 2 over whichever backend this is; `ef` owns the
     /// persistent error-feedback state either way (all n lanes +
-    /// server locally; this rank's lane — plus the server on rank 0 —
-    /// under a transport).
+    /// server locally; this rank's lane — plus the server/leader legs
+    /// its tree role runs — under a transport).
     pub fn ef_reduce<B: WorkerBufs + ?Sized>(
         &mut self,
         ef: &mut EfAllReduce,
@@ -221,7 +374,7 @@ impl ReduceBackend<'_> {
         eng: &Engine,
     ) -> Result<WireStats, TransportError> {
         match self {
-            ReduceBackend::Local => Ok(ef.reduce_eng(bufs, out, eng)),
+            ReduceBackend::Local(topo) => Ok(ef.reduce_eng_topo(bufs, out, eng, *topo)),
             ReduceBackend::Transport(link) => {
                 assert_eq!(bufs.count(), 1, "transport ranks materialize exactly one worker");
                 ef.reduce_transport(bufs, out, link)
@@ -260,6 +413,21 @@ impl PackedSet for [Lane] {
 impl PackedSet for [OneBit] {
     fn get(&self, w: usize) -> &OneBit {
         &self[w]
+    }
+}
+
+/// The transport root's view of the leader partials parked in its
+/// gather buffers: partial i sits at slot i·g (= leader i's rank), so
+/// the root leg walks the buffers with a stride instead of copying G
+/// packed vectors into a dense array.
+struct Strided<'a> {
+    bufs: &'a [OneBit],
+    stride: usize,
+}
+
+impl PackedSet for Strided<'_> {
+    fn get(&self, w: usize) -> &OneBit {
+        &self.bufs[w * self.stride]
     }
 }
 
@@ -311,10 +479,19 @@ fn auto_table(n: usize, d: usize) -> bool {
 /// (`tests/kernel_parity.rs`, the forced-path tests below). Callers
 /// pick the path via a (round-shape-only) policy and may force either
 /// for tests/benches — never per mode, though even that would be safe.
+///
+/// **Weighted accumulation (tree topology).** `weights = Some(λ)`
+/// replaces the uniform 1/n with a per-input weight λ_w — the tree's
+/// root leg combines G leader partials with λ_i = |group i|/n so the
+/// weighted sum of group means is the global 1/n mean. Both the sweep
+/// (per-call `accumulate_words` weight) and the table
+/// (`build_sign_table_weighted`) honor it, and they remain bitwise
+/// identical to each other by the same replay construction.
 #[allow(clippy::too_many_arguments)]
 fn ef_server_leg<P: PackedSet + ?Sized>(
     inputs: &P,
     n: usize,
+    weights: Option<&[f32]>,
     d: usize,
     server_err: &mut [f32],
     sum: &mut [f32],
@@ -330,7 +507,12 @@ fn ef_server_leg<P: PackedSet + ?Sized>(
     let inv_n = 1.0 / n as f32;
     if use_table {
         debug_assert_eq!(pattern.len(), d);
-        compress::build_sign_table(n, inv_n, |w| inputs.get(w).scale, table);
+        match weights {
+            Some(ws) => {
+                compress::build_sign_table_weighted(n, |w| ws[w], |w| inputs.get(w).scale, table)
+            }
+            None => compress::build_sign_table(n, inv_n, |w| inputs.get(w).scale, table),
+        }
         let table_ro: &[f32] = table;
         let err_ro: &[f32] = server_err;
         eng.run_split(
@@ -366,7 +548,8 @@ fn ef_server_leg<P: PackedSet + ?Sized>(
                 let words = signs.data;
                 for w in 0..n {
                     let p = inputs.get(w);
-                    compress::accumulate_words(&p.signs[w0..w0 + words.len()], p.scale, inv_n, s);
+                    let wt = weights.map_or(inv_n, |ws| ws[w]);
+                    compress::accumulate_words(&p.signs[w0..w0 + words.len()], p.scale, wt, s);
                 }
                 part.data[0] = compress::fold_err_signs_l1(s, &err_ro[off..off + s.len()], words);
             },
@@ -386,11 +569,69 @@ fn ef_server_leg<P: PackedSet + ?Sized>(
     });
 }
 
+/// Persistent tree-topology state of one [`EfAllReduce`] (lazily built
+/// on the first tree round; the shape is pinned for the reducer's
+/// lifetime — EF state is schedule-dependent, so changing topology
+/// mid-training would silently change the trajectory).
+///
+/// Each **leader leg** is a full [`ef_server_leg`] over its group's g_i
+/// uploads with its own persistent error δ̄_i (1-bit LAMB's per-level
+/// error feedback), producing a 1-bit group partial; the **root leg**
+/// combines the G partials with weights λ_i = g_i/n and the root's own
+/// δ̄. In-process the state holds every level; a transport rank holds
+/// only what its role runs (leaders: δ̄ of their one group; the root
+/// additionally the λ weights; members: nothing).
+struct TreeState {
+    shape: TreeShape,
+    /// Root-leg combine weights λ_i (root / in-process only).
+    weights: Vec<f32>,
+    /// Per-group leader errors δ̄_i. In-process: one entry per group
+    /// (empty vec for singleton groups, which forward their upload
+    /// unchanged). Transport: a single entry for this rank's own group
+    /// on leaders of multi-member groups.
+    leader_err: Vec<Vec<f32>>,
+    /// The G packed group partials (in-process only; transport roots
+    /// park them in the link's gather buffers instead).
+    partials: Vec<OneBit>,
+}
+
+impl TreeState {
+    /// The in-process engine's state: every level materialized.
+    fn inproc(shape: TreeShape, d: usize) -> TreeState {
+        let n_groups = shape.n_groups();
+        TreeState {
+            shape,
+            weights: (0..n_groups).map(|i| shape.weight(i)).collect(),
+            leader_err: (0..n_groups)
+                .map(|i| if shape.group_size(i) > 1 { vec![0.0; d] } else { Vec::new() })
+                .collect(),
+            partials: (0..n_groups).map(|_| OneBit::zeros(d)).collect(),
+        }
+    }
+
+    /// One transport rank's slice of the state, per its role.
+    fn rank(rank: usize, shape: TreeShape, d: usize) -> TreeState {
+        let leads_group = shape.is_leader(rank) && shape.group_size(shape.group_of(rank)) > 1;
+        TreeState {
+            shape,
+            weights: if rank == 0 {
+                (0..shape.n_groups()).map(|i| shape.weight(i)).collect()
+            } else {
+                Vec::new()
+            },
+            leader_err: if leads_group { vec![vec![0.0; d]] } else { Vec::new() },
+            partials: Vec::new(),
+        }
+    }
+}
+
 /// Error-feedback 1-bit AllReduce (Algorithm 2).
 ///
 /// Persistent state: one compression-error vector per worker (δᵢ) and
 /// one on the server (δ̄), both initialized to zero at t = 0 and carried
-/// across every call for the rest of training (Appendix A).
+/// across every call for the rest of training (Appendix A). Under a
+/// tree topology, additionally one error per group leader (δ̄_i) — see
+/// [`TreeState`].
 ///
 /// All scratch is pre-allocated at construction: the hot path performs
 /// zero heap allocation in **both** execution modes — the engine's
@@ -429,6 +670,9 @@ pub struct EfAllReduce {
     /// Test/bench override of the table-vs-sweep dispatch;
     /// `None` = automatic ((n, d) policy / `ZO_SERVER_TABLE`).
     server_path: Option<bool>,
+    /// Tree-topology state, built on the first tree-scheduled round
+    /// (star reductions never touch it).
+    tree: Option<TreeState>,
 }
 
 impl EfAllReduce {
@@ -459,6 +703,29 @@ impl EfAllReduce {
             table: Vec::with_capacity(if eager_table { 1 << n } else { 0 }),
             pattern: vec![0u16; if eager_table { d } else { 0 }],
             server_path: None,
+            tree: None,
+        }
+    }
+
+    /// Pin (or verify) the tree state for an in-process reduction.
+    fn ensure_tree_inproc(&mut self, shape: TreeShape) {
+        match &self.tree {
+            Some(t) => assert_eq!(
+                t.shape, shape,
+                "tree topology changed across rounds (EF state is schedule-dependent)"
+            ),
+            None => self.tree = Some(TreeState::inproc(shape, self.d)),
+        }
+    }
+
+    /// Pin (or verify) this transport rank's slice of the tree state.
+    fn ensure_tree_rank(&mut self, rank: usize, shape: TreeShape) {
+        match &self.tree {
+            Some(t) => assert_eq!(
+                t.shape, shape,
+                "tree topology changed across rounds (EF state is schedule-dependent)"
+            ),
+            None => self.tree = Some(TreeState::rank(rank, shape, self.d)),
         }
     }
 
@@ -557,6 +824,146 @@ impl EfAllReduce {
         let d = self.d;
         let n = self.n;
 
+        self.compress_lanes(bufs, eng);
+
+        // Phase 2: the shared server leg over the lanes' packed uploads.
+        self.ensure_server();
+        let use_table = self.use_table(n);
+        if use_table {
+            self.ensure_table(n);
+        }
+        let EfAllReduce { lanes, server_err, sum, packed, chunk_l1, table, pattern, .. } = self;
+        ef_server_leg(
+            &lanes[..],
+            n,
+            None,
+            d,
+            server_err,
+            sum,
+            packed,
+            chunk_l1,
+            table,
+            pattern,
+            use_table,
+            out,
+            eng,
+        );
+
+        let wire = compress::wire_bytes(d) as u64;
+        WireStats {
+            up_bytes: wire,
+            down_bytes: wire,
+            rounds: 1,
+            compressed: true,
+        }
+    }
+
+    /// Topology-dispatched in-process EF round: the star runs
+    /// [`Self::reduce_eng`]; a (normalized) tree runs the two-level
+    /// hierarchy entirely in this process — the same phase-1 lane
+    /// compression, then one [`ef_server_leg`] per multi-member group
+    /// over its lanes in worker order (persistent δ̄_i, producing a
+    /// packed group partial; singleton groups forward their upload
+    /// unchanged), then the weighted root leg over the G partials in
+    /// group order (λ_i = g_i/n, persistent root δ̄). This is the
+    /// single-process reference the tree transport schedule reproduces
+    /// bit for bit (`tests/topology_parity.rs`); it is *not* bitwise
+    /// equal to the star for g < n — f32 accumulation is non-
+    /// associative and each level re-compresses — which is exactly why
+    /// the tree is its own trajectory with its own reference.
+    pub fn reduce_eng_topo<B: WorkerBufs + ?Sized>(
+        &mut self,
+        bufs: &B,
+        out: &mut [f32],
+        eng: &Engine,
+        topo: Topology,
+    ) -> WireStats {
+        let Some(shape) = topo.tree_shape(self.n) else {
+            return self.reduce_eng(bufs, out, eng);
+        };
+        assert_eq!(bufs.count(), self.n, "worker count changed");
+        assert_eq!(out.len(), self.d);
+        let d = self.d;
+        let n_groups = shape.n_groups();
+
+        self.compress_lanes(bufs, eng);
+
+        self.ensure_server();
+        self.ensure_tree_inproc(shape);
+        // Per-level table-vs-sweep dispatch: each leg decides by its own
+        // width (full groups, a ragged last group, the G-wide root leg).
+        let use_t_group = self.use_table(shape.group);
+        let last_sz = shape.group_size(n_groups - 1);
+        let use_t_last = last_sz >= 2 && self.use_table(last_sz);
+        let use_t_root = self.use_table(n_groups);
+        if use_t_group || use_t_last || use_t_root {
+            self.ensure_table(shape.group.max(n_groups));
+        }
+        let EfAllReduce { lanes, server_err, sum, packed, chunk_l1, table, pattern, tree, .. } =
+            self;
+        let TreeState { weights, leader_err, partials, .. } =
+            tree.as_mut().expect("tree state pinned above");
+
+        // Leader legs, in fixed group order.
+        for gi in 0..n_groups {
+            let range = shape.group_range(gi);
+            let sz = range.len();
+            if sz == 1 {
+                // a singleton group's "partial" is its one upload
+                partials[gi].clone_from(&lanes[range.start].packed);
+            } else {
+                let use_t = if sz == shape.group { use_t_group } else { use_t_last };
+                ef_server_leg(
+                    &lanes[range.start..range.end],
+                    sz,
+                    None,
+                    d,
+                    &mut leader_err[gi],
+                    sum,
+                    &mut partials[gi],
+                    chunk_l1,
+                    table,
+                    pattern,
+                    use_t,
+                    out, // scratch; overwritten by the root leg's broadcast
+                    eng,
+                );
+            }
+        }
+
+        // Root leg: weighted combine of the partials in group order.
+        ef_server_leg(
+            &partials[..],
+            n_groups,
+            Some(&weights[..]),
+            d,
+            server_err,
+            sum,
+            packed,
+            chunk_l1,
+            table,
+            pattern,
+            use_t_root,
+            out,
+            eng,
+        );
+
+        let wire = compress::wire_bytes(d) as u64;
+        WireStats {
+            up_bytes: wire,
+            down_bytes: wire,
+            rounds: 1,
+            compressed: true,
+        }
+    }
+
+    /// Phase 1 of every in-process EF round: fused per-worker compress +
+    /// error update over the lanes. Two schedules, one bit pattern —
+    /// see [`Self::reduce_eng`].
+    fn compress_lanes<B: WorkerBufs + ?Sized>(&mut self, bufs: &B, eng: &Engine) {
+        let d = self.d;
+        let n = self.n;
+
         // Phase 1: fused per-worker compress + error update. Two
         // schedules, one bit pattern: the codec's fixed-chunk scale
         // association (compress::CODEC_CHUNK) makes the result
@@ -611,35 +1018,6 @@ impl EfAllReduce {
             }
         }
 
-        // Phase 2: the shared server leg over the lanes' packed uploads.
-        self.ensure_server();
-        let use_table = self.use_table(n);
-        if use_table {
-            self.ensure_table(n);
-        }
-        let EfAllReduce { lanes, server_err, sum, packed, chunk_l1, table, pattern, .. } = self;
-        ef_server_leg(
-            &lanes[..],
-            n,
-            d,
-            server_err,
-            sum,
-            packed,
-            chunk_l1,
-            table,
-            pattern,
-            use_table,
-            out,
-            eng,
-        );
-
-        let wire = compress::wire_bytes(d) as u64;
-        WireStats {
-            up_bytes: wire,
-            down_bytes: wire,
-            rounds: 1,
-            compressed: true,
-        }
     }
 
     /// One EF-1bit round over a [`crate::comm::transport`] group: this
@@ -653,6 +1031,11 @@ impl EfAllReduce {
     /// in-process form holds, so an N-process run is bit-for-bit an
     /// `ExecMode::Threaded(N)` run (the subsystem's core contract,
     /// `tests/transport_parity.rs`).
+    ///
+    /// Under a (normalized) tree topology on the link, the rank plays
+    /// its tree role instead ([`Self::reduce_transport_tree`]) and the
+    /// run is bit-for-bit the tree-scheduled
+    /// [`Self::reduce_eng_topo`] reference.
     pub fn reduce_transport<B: WorkerBufs + ?Sized>(
         &mut self,
         bufs: &B,
@@ -662,6 +1045,9 @@ impl EfAllReduce {
         assert_eq!(self.n, 1, "transport ranks materialize exactly one EF lane");
         assert_eq!(bufs.count(), 1);
         assert_eq!(out.len(), self.d);
+        if let Some(shape) = link.topology().tree_shape(link.world()) {
+            return self.reduce_transport_tree(bufs, out, link, shape);
+        }
         let d = self.d;
         let world = link.world();
         let seq = link.next_seq();
@@ -702,6 +1088,7 @@ impl EfAllReduce {
             ef_server_leg(
                 &link.gathered[..],
                 world,
+                None,
                 d,
                 server_err,
                 sum,
@@ -723,6 +1110,200 @@ impl EfAllReduce {
         Ok(WireStats { up_bytes: framed, down_bytes: framed, rounds: 1, compressed: true })
     }
 
+    /// The tree-role schedule of one EF round (ISSUE 6 tentpole).
+    ///
+    /// Every rank first compresses its own lane with the same fused
+    /// kernel as always; then:
+    ///
+    /// * **members** upload the packed bits to their group leader and
+    ///   receive the relayed broadcast — one frame each way;
+    /// * **leaders** of multi-member groups gather their g_i − 1
+    ///   members behind their own upload (rank order), run
+    ///   [`ef_server_leg`] over the group with their persistent δ̄_i,
+    ///   send the packed partial up as one `EfPartial`, then relay the
+    ///   root's broadcast down; **singleton leaders** forward their
+    ///   upload unchanged (no extra compression level);
+    /// * the **root** runs group 0's leader leg itself, gathers the
+    ///   other G − 1 leader partials — its combine-level ingress, the
+    ///   (⌈n/g⌉−1)/(n−1) root-bandwidth reduction this topology exists
+    ///   for — and runs the weighted root leg (λ_i = g_i/n, its
+    ///   persistent δ̄) before broadcasting to members and leaders.
+    ///
+    /// Each leg is the identical `ef_server_leg` over the identical
+    /// inputs in the identical order as [`Self::reduce_eng_topo`], so
+    /// the N-process tree run is bit-for-bit the in-process tree
+    /// reference (`tests/topology_parity.rs`). [`WireStats`] report
+    /// this rank's actual framed traffic, which under a tree is
+    /// role-dependent (root: (g−1) + (G−1) frames per direction;
+    /// relaying leaders: g_i; members and singleton leaders: 1).
+    fn reduce_transport_tree<B: WorkerBufs + ?Sized>(
+        &mut self,
+        bufs: &B,
+        out: &mut [f32],
+        link: &mut RankLink,
+        shape: TreeShape,
+    ) -> Result<WireStats, TransportError> {
+        let d = self.d;
+        let seq = link.next_seq();
+        let chunk = compress::CODEC_CHUNK;
+        let payload = onebit_payload_bytes(d);
+        let rank = link.rank();
+        let n_groups = shape.n_groups();
+
+        self.ensure_tree_rank(rank, shape);
+        let lane = &mut self.lanes[0];
+        compress::compress_ef_into(bufs.buf(0), &mut lane.err, &mut lane.packed);
+
+        let frames: u64;
+        if rank == 0 {
+            // The root is also group 0's leader: gather the group,
+            // run its leader leg (persistent δ̄_0, distinct from the
+            // root δ̄), park the partial, gather the other leaders'
+            // partials, run the weighted root leg, broadcast.
+            link.ensure_gathered(shape.world, d);
+            let g0 = shape.group_size(0);
+            link.gathered[0].clone_from(&self.lanes[0].packed);
+            for r in 1..g0 {
+                link.recv_expect(r, FrameKind::Ef, seq, d, chunk)?;
+                decode_onebit(&link.payload, d, &mut link.gathered[r])?;
+            }
+            let eng = Engine::sequential();
+            self.ensure_server();
+            let use_t_g0 = self.use_table(g0);
+            let use_t_root = self.use_table(n_groups);
+            if use_t_g0 || use_t_root {
+                self.ensure_table(g0.max(n_groups));
+            }
+            {
+                let EfAllReduce { sum, packed, chunk_l1, table, pattern, tree, .. } = self;
+                let tree = tree.as_mut().expect("tree state pinned above");
+                ef_server_leg(
+                    &link.gathered[..g0],
+                    g0,
+                    None,
+                    d,
+                    &mut tree.leader_err[0],
+                    sum,
+                    packed,
+                    chunk_l1,
+                    table,
+                    pattern,
+                    use_t_g0,
+                    out, // scratch; overwritten by the root leg
+                    &eng,
+                );
+            }
+            // park group 0's partial in its leader slot (slot 0)
+            std::mem::swap(&mut link.gathered[0], &mut self.packed);
+            for i in 1..n_groups {
+                let leader = i * shape.group;
+                link.recv_expect(leader, FrameKind::EfPartial, seq, d, chunk)?;
+                decode_onebit(&link.payload, d, &mut link.gathered[leader])?;
+            }
+            {
+                let EfAllReduce { server_err, sum, packed, chunk_l1, table, pattern, tree, .. } =
+                    self;
+                let tree = tree.as_mut().expect("tree state pinned above");
+                ef_server_leg(
+                    &Strided { bufs: &link.gathered, stride: shape.group },
+                    n_groups,
+                    Some(&tree.weights[..]),
+                    d,
+                    server_err,
+                    sum,
+                    packed,
+                    chunk_l1,
+                    table,
+                    pattern,
+                    use_t_root,
+                    out,
+                    &eng,
+                );
+            }
+            link.wire.clear();
+            encode_onebit(&self.packed, &mut link.wire);
+            for r in 1..g0 {
+                link.send_wire(r, FrameKind::Ef, seq, d, chunk)?;
+            }
+            for i in 1..n_groups {
+                link.send_wire(i * shape.group, FrameKind::Ef, seq, d, chunk)?;
+            }
+            frames = (g0 as u64 - 1) + (n_groups as u64 - 1);
+        } else if shape.is_leader(rank) {
+            let sz = shape.group_size(shape.group_of(rank));
+            if sz == 1 {
+                // singleton: this rank's upload *is* the group partial
+                link.wire.clear();
+                encode_onebit(&self.lanes[0].packed, &mut link.wire);
+                link.send_wire(0, FrameKind::EfPartial, seq, d, chunk)?;
+                link.recv_expect(0, FrameKind::Ef, seq, d, chunk)?;
+                decode_onebit(&link.payload, d, &mut self.packed)?;
+                compress::decompress_into(&self.packed, out);
+                frames = 1;
+            } else {
+                link.ensure_gathered(sz, d);
+                link.gathered[0].clone_from(&self.lanes[0].packed);
+                for j in 1..sz {
+                    link.recv_expect(rank + j, FrameKind::Ef, seq, d, chunk)?;
+                    decode_onebit(&link.payload, d, &mut link.gathered[j])?;
+                }
+                let eng = Engine::sequential();
+                self.ensure_server();
+                let use_t = self.use_table(sz);
+                if use_t {
+                    self.ensure_table(sz);
+                }
+                {
+                    let EfAllReduce { sum, packed, chunk_l1, table, pattern, tree, .. } = self;
+                    let tree = tree.as_mut().expect("tree state pinned above");
+                    ef_server_leg(
+                        &link.gathered[..sz],
+                        sz,
+                        None,
+                        d,
+                        &mut tree.leader_err[0],
+                        sum,
+                        packed,
+                        chunk_l1,
+                        table,
+                        pattern,
+                        use_t,
+                        out, // scratch; the root broadcast overwrites it
+                        &eng,
+                    );
+                }
+                link.wire.clear();
+                encode_onebit(&self.packed, &mut link.wire);
+                link.send_wire(0, FrameKind::EfPartial, seq, d, chunk)?;
+                // relay the root's broadcast down, then decode it
+                link.recv_expect(0, FrameKind::Ef, seq, d, chunk)?;
+                {
+                    let RankLink { payload, wire, .. } = link;
+                    wire.clear();
+                    wire.extend_from_slice(payload);
+                }
+                for j in 1..sz {
+                    link.send_wire(rank + j, FrameKind::Ef, seq, d, chunk)?;
+                }
+                decode_onebit(&link.payload, d, &mut self.packed)?;
+                compress::decompress_into(&self.packed, out);
+                frames = sz as u64;
+            }
+        } else {
+            // member: one frame up to the leader, one relayed down
+            let leader = shape.leader_of(rank);
+            link.wire.clear();
+            encode_onebit(&self.lanes[0].packed, &mut link.wire);
+            link.send_wire(leader, FrameKind::Ef, seq, d, chunk)?;
+            link.recv_expect(leader, FrameKind::Ef, seq, d, chunk)?;
+            decode_onebit(&link.payload, d, &mut self.packed)?;
+            compress::decompress_into(&self.packed, out);
+            frames = 1;
+        }
+        let framed = frames * (HEADER_BYTES + payload) as u64;
+        Ok(WireStats { up_bytes: framed, down_bytes: framed, rounds: 1, compressed: true })
+    }
+
     /// Reset all error state (used when an optimizer stage boundary
     /// explicitly restarts compression, e.g. 1-bit Adam at T₀).
     pub fn reset(&mut self) {
@@ -730,6 +1311,11 @@ impl EfAllReduce {
             lane.err.iter_mut().for_each(|v| *v = 0.0);
         }
         self.server_err.iter_mut().for_each(|v| *v = 0.0);
+        if let Some(tree) = &mut self.tree {
+            for e in &mut tree.leader_err {
+                e.iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
     }
 
     /// L2 norm of all error state — used by tests and the theory checks
@@ -740,7 +1326,10 @@ impl EfAllReduce {
             .iter()
             .map(|lane| crate::tensor::norm2(&lane.err).powi(2))
             .sum();
-        (w + crate::tensor::norm2(&self.server_err).powi(2)).sqrt()
+        let t: f64 = self.tree.as_ref().map_or(0.0, |tree| {
+            tree.leader_err.iter().map(|e| crate::tensor::norm2(e).powi(2)).sum()
+        });
+        (w + t + crate::tensor::norm2(&self.server_err).powi(2)).sqrt()
     }
 }
 

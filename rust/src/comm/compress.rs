@@ -340,13 +340,28 @@ pub fn build_sign_table(
     scale_of: impl Fn(usize) -> f32,
     table: &mut Vec<f32>,
 ) {
+    build_sign_table_weighted(n, |_| weight, scale_of, table)
+}
+
+/// [`build_sign_table`] with a per-worker accumulation weight
+/// `weight_of(w)` instead of one shared weight — the tree topology's
+/// root leg combines G leader partials with weights λ_i = |group i|/n
+/// (the weighted counterpart of [`accumulate_words`]'s per-call
+/// `weight`). Same replay-the-sweep construction, so it remains bitwise
+/// identical to the weighted per-worker sweep by construction.
+pub fn build_sign_table_weighted(
+    n: usize,
+    weight_of: impl Fn(usize) -> f32,
+    scale_of: impl Fn(usize) -> f32,
+    table: &mut Vec<f32>,
+) {
     assert!(n <= TABLE_BITS, "pattern table over {n} workers exceeds TABLE_BITS = {TABLE_BITS}");
     table.clear();
     table.resize(1usize << n, 0.0);
     table[0] = 0.0; // the sweep's zeroed start
     let mut filled = 1usize; // = 2^w entries hold every w-bit prefix chain
     for w in 0..n {
-        let s = scale_of(w) * weight;
+        let s = scale_of(w) * weight_of(w);
         let s_bits = s.abs().to_bits();
         let base_sign = ((s.to_bits() >> 31) & 1) as u32;
         // bit set ⇔ coordinate ≥ 0 ⇔ neg = 0 ^ base_sign (accumulate_words)

@@ -7,6 +7,7 @@
 pub mod allreduce;
 pub mod compress;
 pub mod network;
+pub mod topology;
 pub mod transport;
 pub mod volume;
 
@@ -16,5 +17,6 @@ pub use allreduce::{
 };
 pub use compress::{compress, decompress_into, table_pays_off, wire_bytes, OneBit, TABLE_BITS};
 pub use network::{ComputeModel, Fabric, ETHERNET, INFINIBAND};
+pub use topology::{Topology, TreeShape};
 pub use transport::{FrameHeader, FrameKind, RankLink, Transport, TransportError, HEADER_BYTES};
 pub use volume::VolumeLedger;

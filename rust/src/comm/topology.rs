@@ -1,0 +1,206 @@
+//! Collective topology: the root star every PR-4 collective used, plus
+//! the two-level tree (ISSUE 6 tentpole) that removes the O(n·d) root
+//! bottleneck the paper hits at 64–128 workers (PAPER.md §5).
+//!
+//! Under `Tree { group: g }`, ranks are partitioned into **fixed-order
+//! groups of g consecutive ranks** (the last group may be ragged); the
+//! lowest rank of each group is its *leader*. Group 0's leader is the
+//! root itself. Every compressed collective then runs in two levels:
+//! members send to their leader, leaders combine their subtree and
+//! send one partial to the root, the root combines the G = ⌈n/g⌉
+//! leader partials **in fixed leader order** and broadcasts the packed
+//! result back down the tree — so the root's per-round combine-level
+//! ingress is (G − 1) uploads instead of (n − 1).
+//!
+//! The group layout is pure index arithmetic ([`TreeShape`]), so every
+//! rank — and the single-process engine reference — derives the
+//! identical schedule from `(world, g)` alone; nothing about the
+//! partition is negotiated at runtime. A tree whose groups cannot
+//! split the world (`g >= world`) [normalizes](Topology::normalized)
+//! to the star, which keeps the degenerate schedules literally — not
+//! just observationally — identical.
+
+use std::fmt;
+
+/// Which schedule the collectives run. `Display`/[`Topology::parse`]
+/// round-trip the CLI spelling (`star`, `tree3`, …), and the spelling
+/// is part of the run-spec fingerprint so mismatched `--topology`
+/// launches are rejected at the handshake.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Root star: rank 0 combines all n − 1 uploads directly (PR 4).
+    Star,
+    /// Two-level tree over fixed-order groups of `group` consecutive
+    /// ranks (`group >= 2`; see the module docs).
+    Tree { group: usize },
+}
+
+impl Topology {
+    /// Collapse degenerate trees: a group size that cannot split
+    /// `world` into at least two groups is *the* star schedule, and
+    /// callers dispatch on the normalized value so `tree{g >= n}` runs
+    /// the literal star code path (bitwise equality by identity).
+    pub fn normalized(self, world: usize) -> Topology {
+        match self {
+            Topology::Tree { group } if group >= world => Topology::Star,
+            t => t,
+        }
+    }
+
+    /// The group layout of this topology over `world` ranks, if the
+    /// normalized topology is a tree.
+    pub fn tree_shape(self, world: usize) -> Option<TreeShape> {
+        match self.normalized(world) {
+            Topology::Star => None,
+            Topology::Tree { group } => Some(TreeShape::new(world, group)),
+        }
+    }
+
+    /// Parse the CLI spelling: `star`, `treeN` (fixed group size
+    /// N >= 2), or bare `tree` (g ≈ √world, the bandwidth-optimal
+    /// two-level split, clamped to >= 2).
+    pub fn parse(s: &str, world: usize) -> Result<Topology, String> {
+        match s {
+            "star" => Ok(Topology::Star),
+            "tree" => {
+                let g = ((world as f64).sqrt().round() as usize).max(2);
+                Ok(Topology::Tree { group: g })
+            }
+            _ => match s.strip_prefix("tree").and_then(|n| n.parse::<usize>().ok()) {
+                Some(g) if g >= 2 => Ok(Topology::Tree { group: g }),
+                Some(g) => Err(format!("tree group size must be >= 2, got {g}")),
+                None => Err(format!("unknown topology '{s}' (star | tree | tree<g>)")),
+            },
+        }
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Topology::Star => write!(f, "star"),
+            Topology::Tree { group } => write!(f, "tree{group}"),
+        }
+    }
+}
+
+/// The fixed group layout of a (normalized) tree over `world` ranks:
+/// group i = ranks `[i·g, min((i+1)·g, world))`, leader = the group's
+/// lowest rank. Pure `Copy` index math — capture it in engine closures
+/// and derive identical schedules on every rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TreeShape {
+    pub world: usize,
+    /// Group size g (2 <= g < world after normalization, so group 0 is
+    /// always full and there are always >= 2 groups).
+    pub group: usize,
+}
+
+impl TreeShape {
+    pub fn new(world: usize, group: usize) -> TreeShape {
+        assert!(group >= 2, "tree group size must be >= 2");
+        assert!(group < world, "tree{group} over {world} ranks normalizes to the star");
+        TreeShape { world, group }
+    }
+
+    /// Number of groups G = ⌈world/g⌉ (>= 2 after normalization).
+    pub fn n_groups(&self) -> usize {
+        self.world.div_ceil(self.group)
+    }
+
+    pub fn group_of(&self, rank: usize) -> usize {
+        rank / self.group
+    }
+
+    /// The leader every member of `rank`'s group uploads to.
+    pub fn leader_of(&self, rank: usize) -> usize {
+        (rank / self.group) * self.group
+    }
+
+    pub fn is_leader(&self, rank: usize) -> bool {
+        rank % self.group == 0
+    }
+
+    /// The ranks of group `i` (leader first — rank order *is* the
+    /// fixed combine order at both levels).
+    pub fn group_range(&self, i: usize) -> std::ops::Range<usize> {
+        let lo = i * self.group;
+        lo..((lo + self.group).min(self.world))
+    }
+
+    /// Size of group `i` (= g everywhere except a ragged last group,
+    /// which may be as small as 1).
+    pub fn group_size(&self, i: usize) -> usize {
+        self.group_range(i).len()
+    }
+
+    /// The root-leg combine weight of group `i`: λ_i = |group i| / n,
+    /// so Σ_i λ_i · (group-i mean) telescopes to the global 1/n mean.
+    pub fn weight(&self, i: usize) -> f32 {
+        self.group_size(i) as f32 / self.world as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_display() {
+        for (s, world, want) in [
+            ("star", 9, Topology::Star),
+            ("tree3", 9, Topology::Tree { group: 3 }),
+            ("tree2", 5, Topology::Tree { group: 2 }),
+            ("tree", 9, Topology::Tree { group: 3 }),
+            ("tree", 16, Topology::Tree { group: 4 }),
+            ("tree", 2, Topology::Tree { group: 2 }),
+        ] {
+            let t = Topology::parse(s, world).unwrap();
+            assert_eq!(t, want, "{s}");
+            assert_eq!(Topology::parse(&t.to_string(), world).unwrap(), t);
+        }
+        assert!(Topology::parse("tree1", 4).is_err());
+        assert!(Topology::parse("tree0", 4).is_err());
+        assert!(Topology::parse("ring", 4).is_err());
+        assert!(Topology::parse("treex", 4).is_err());
+    }
+
+    #[test]
+    fn normalization_collapses_degenerate_trees() {
+        assert_eq!(Topology::Tree { group: 4 }.normalized(4), Topology::Star);
+        assert_eq!(Topology::Tree { group: 9 }.normalized(4), Topology::Star);
+        assert_eq!(Topology::Tree { group: 2 }.normalized(2), Topology::Star);
+        assert_eq!(
+            Topology::Tree { group: 3 }.normalized(9),
+            Topology::Tree { group: 3 }
+        );
+        assert_eq!(Topology::Star.normalized(64), Topology::Star);
+        assert!(Topology::Tree { group: 4 }.tree_shape(4).is_none());
+        assert!(Topology::Tree { group: 3 }.tree_shape(9).is_some());
+    }
+
+    #[test]
+    fn group_math_covers_ragged_and_singleton_groups() {
+        // 9 ranks, g = 4: groups {0..4}, {4..8}, {8} — ragged singleton.
+        let s = TreeShape::new(9, 4);
+        assert_eq!(s.n_groups(), 3);
+        assert_eq!(s.group_range(0), 0..4);
+        assert_eq!(s.group_range(1), 4..8);
+        assert_eq!(s.group_range(2), 8..9);
+        assert_eq!(s.group_size(2), 1);
+        assert_eq!(s.leader_of(7), 4);
+        assert_eq!(s.leader_of(8), 8);
+        assert!(s.is_leader(8));
+        assert!(!s.is_leader(5));
+        assert_eq!(s.group_of(8), 2);
+        // weights telescope to 1 exactly for these shapes
+        assert_eq!(s.weight(0), 4.0 / 9.0);
+        assert_eq!(s.weight(2), 1.0 / 9.0);
+        // every rank belongs to exactly one group and leaders lead it
+        for r in 0..9 {
+            let g = s.group_of(r);
+            assert!(s.group_range(g).contains(&r));
+            assert_eq!(s.group_of(s.leader_of(r)), g);
+        }
+    }
+}

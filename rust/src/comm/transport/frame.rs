@@ -57,6 +57,12 @@ pub enum FrameKind {
     Loss = 6,
     /// Graceful teardown.
     Bye = 7,
+    /// A group leader's combined 1-bit partial riding up to the root
+    /// (tree topology; same payload layout as [`FrameKind::Ef`]).
+    EfPartial = 8,
+    /// A group leader's fp16 partial sum riding up to the root (tree
+    /// topology; same payload layout as [`FrameKind::FpF16`]).
+    FpPartial = 9,
 }
 
 impl FrameKind {
@@ -69,6 +75,8 @@ impl FrameKind {
             5 => FrameKind::Ef,
             6 => FrameKind::Loss,
             7 => FrameKind::Bye,
+            8 => FrameKind::EfPartial,
+            9 => FrameKind::FpPartial,
             _ => return None,
         })
     }
@@ -223,6 +231,9 @@ pub enum TransportError {
     DimMismatch { want: u32, got: u32 },
     /// Peer packs with a different codec chunk association.
     ChunkMismatch { want: u32, got: u32 },
+    /// A rank contacted a tree leader it does not belong to (tree
+    /// topology handshake: the member's group must be led by `leader`).
+    GroupMismatch { leader: u32, rank: u32 },
     /// Handshake-time validation failure (bad rank, world or spec
     /// fingerprint mismatch, timeout).
     Handshake(String),
@@ -245,6 +256,7 @@ impl fmt::Display for TransportError {
             SeqMismatch { want, got } => write!(f, "collective seq mismatch: expected {want}, got {got} (reordered or replayed round)"),
             DimMismatch { want, got } => write!(f, "tensor dim mismatch: this rank reduces d={want}, peer sent d={got}"),
             ChunkMismatch { want, got } => write!(f, "codec chunk mismatch: this build packs at {want}, peer at {got}"),
+            GroupMismatch { leader, rank } => write!(f, "rank {rank} belongs to a different tree group than leader {leader} (mismatched --topology?)"),
             Handshake(msg) => write!(f, "handshake failed: {msg}"),
         }
     }

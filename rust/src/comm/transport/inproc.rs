@@ -5,13 +5,16 @@
 //! sockets or subprocesses, yet exercises the identical frame
 //! encode/decode path the TCP backend uses — a frame corrupted,
 //! truncated or mis-sequenced in-proc fails exactly like one on a
-//! socket. Each rank loop runs on its own thread; only root↔worker
-//! edges exist (collectives are root-star shaped).
+//! socket. Each rank loop runs on its own thread. [`group`] wires the
+//! root-star edges every topology's control plane needs;
+//! [`group_topo`] additionally wires leader↔member edges for a tree
+//! topology's data plane.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 use super::frame::{decode_frame, encode_frame, FrameHeader, TransportError};
 use super::Transport;
+use crate::comm::topology::Topology;
 
 /// One rank of an in-process group (see [`group`]).
 pub struct InProc {
@@ -23,9 +26,17 @@ pub struct InProc {
     rx: Vec<Option<Receiver<Vec<u8>>>>,
 }
 
-/// Build a fully-wired `world`-rank group; index = rank. Endpoints are
-/// `Send` — move each to its rank's thread.
+/// Build a fully-wired `world`-rank group with star edges; index =
+/// rank. Endpoints are `Send` — move each to its rank's thread.
 pub fn group(world: usize) -> Vec<InProc> {
+    group_topo(world, Topology::Star)
+}
+
+/// [`group`], plus the leader↔member edges a (normalized) tree
+/// topology's data plane uses: every rank keeps its rank-0 edge (the
+/// control plane is root-star under every topology), and members of
+/// groups i ≥ 1 additionally get a channel pair to their group leader.
+pub fn group_topo(world: usize, topo: Topology) -> Vec<InProc> {
     assert!(world >= 1, "a transport group needs at least rank 0");
     let mut eps: Vec<InProc> = (0..world)
         .map(|rank| InProc {
@@ -44,6 +55,23 @@ pub fn group(world: usize) -> Vec<InProc> {
         root[0].rx[r] = Some(up_rx);
         w.tx[0] = Some(up_tx);
         w.rx[0] = Some(down_rx);
+    }
+    if let Some(shape) = topo.tree_shape(world) {
+        for gi in 1..shape.n_groups() {
+            let range = shape.group_range(gi);
+            let leader = range.start;
+            for m in range.start + 1..range.end {
+                let (down_tx, down_rx) = channel(); // leader → m
+                let (up_tx, up_rx) = channel(); // m → leader
+                // split_at_mut to borrow the leader and member at once
+                let (lo, hi) = eps.split_at_mut(m);
+                let (l, w) = (&mut lo[leader], &mut hi[0]);
+                l.tx[m] = Some(down_tx);
+                l.rx[m] = Some(up_rx);
+                w.tx[leader] = Some(up_tx);
+                w.rx[leader] = Some(down_rx);
+            }
+        }
     }
     eps
 }

@@ -27,9 +27,16 @@
 //! bytes decode to exactly the values the in-process kernels compute
 //! (`tests/transport_parity.rs`, `ci.sh`'s TCP smoke).
 //!
-//! Collectives are root-star shaped (gather-to-root + broadcast), the
-//! same topology the in-process server leg models; both backends only
-//! materialize rank-0↔worker edges.
+//! **Topologies.** Data-plane collectives follow the link's
+//! [`Topology`]: the root star (gather-to-root + broadcast — every
+//! rank-0↔worker edge), or the two-level tree (ISSUE 6), in which
+//! members talk only to their group leader, leaders combine their
+//! subtree with [`per-level server legs`](crate::comm::EfAllReduce)
+//! and exchange one partial/broadcast pair with the root — cutting the
+//! root's combine-level ingress from n−1 to ⌈n/g⌉−1 uploads. Tree
+//! groups add leader↔member edges; the control plane (barrier, loss
+//! and param gathers) stays root-star on the always-present rank-0
+//! edges under every topology.
 
 pub mod frame;
 pub mod inproc;
@@ -41,6 +48,7 @@ pub use frame::{
 };
 
 use crate::comm::compress::OneBit;
+use crate::comm::topology::Topology;
 
 /// A connected rank of a transport group: framed point-to-point
 /// send/recv. Only root↔worker edges are required (collectives are
@@ -78,11 +86,32 @@ pub struct RankLink {
     pub(crate) wire: Vec<u8>,
     /// Root-side EF gather targets (one packed upload per rank).
     pub(crate) gathered: Vec<OneBit>,
+    /// The collective schedule the data-plane reductions follow.
+    /// Defaults to the star; `coordinator::distributed::run_rank` sets
+    /// it from the (fingerprint-protected) run spec.
+    topology: Topology,
+    /// Framed bytes sent to each peer (header + payload), indexed by
+    /// peer rank. Measurement surface for the tree's root-ingress
+    /// claim: the bytes a peer received *from* each neighbor are that
+    /// neighbor's `tx` view and this rank's [`Self::rx_from`].
+    tx_bytes: Vec<u64>,
+    /// Framed bytes received from each peer, indexed by peer rank.
+    rx_bytes: Vec<u64>,
 }
 
 impl RankLink {
     pub fn new(tp: Box<dyn Transport>) -> RankLink {
-        RankLink { tp, seq: 1, payload: Vec::new(), wire: Vec::new(), gathered: Vec::new() }
+        let world = tp.world();
+        RankLink {
+            tp,
+            seq: 1,
+            payload: Vec::new(),
+            wire: Vec::new(),
+            gathered: Vec::new(),
+            topology: Topology::Star,
+            tx_bytes: vec![0; world],
+            rx_bytes: vec![0; world],
+        }
     }
 
     pub fn rank(&self) -> usize {
@@ -91,6 +120,31 @@ impl RankLink {
 
     pub fn world(&self) -> usize {
         self.tp.world()
+    }
+
+    /// The collective schedule this link's reductions follow.
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    /// Set the collective schedule (normalized against the world size
+    /// at the point of use; the same value must be set on every rank —
+    /// the launch fingerprint enforces this before any edge carries
+    /// data).
+    pub fn set_topology(&mut self, topology: Topology) {
+        self.topology = topology;
+    }
+
+    /// Total framed bytes this rank has sent to `peer`.
+    pub fn tx_to(&self, peer: usize) -> u64 {
+        self.tx_bytes[peer]
+    }
+
+    /// Total framed bytes this rank has received from `peer` — e.g.
+    /// the root's per-neighbor ingress, which the tree benches compare
+    /// against the star's (n−1)-upload fan-in.
+    pub fn rx_from(&self, peer: usize) -> u64 {
+        self.rx_bytes[peer]
     }
 
     /// Sequence number for the next collective round (all ranks call
@@ -111,8 +165,10 @@ impl RankLink {
         dim: usize,
         chunk: usize,
     ) -> Result<(), TransportError> {
-        let RankLink { tp, wire, .. } = self;
-        tp.send(to, FrameHeader::new(kind, tp.rank(), seq, dim, chunk), wire)
+        let RankLink { tp, wire, tx_bytes, .. } = self;
+        tp.send(to, FrameHeader::new(kind, tp.rank(), seq, dim, chunk), wire)?;
+        tx_bytes[to] += (frame::HEADER_BYTES + wire.len()) as u64;
+        Ok(())
     }
 
     /// Receive into `self.payload` and validate the header against the
@@ -125,8 +181,9 @@ impl RankLink {
         dim: usize,
         chunk: usize,
     ) -> Result<(), TransportError> {
-        let RankLink { tp, payload, .. } = self;
+        let RankLink { tp, payload, rx_bytes, .. } = self;
         let header = tp.recv(from, payload)?;
+        rx_bytes[from] += (frame::HEADER_BYTES + payload.len()) as u64;
         header.expect(kind, from, seq, dim, chunk)
     }
 

@@ -1,16 +1,28 @@
 //! TCP-backed [`Transport`]: one OS process per rank over loopback or
 //! LAN sockets. `std::net` only — zero new dependencies.
 //!
-//! Topology is the root star the collectives need: rank 0 listens and
-//! accepts `world − 1` connections; each worker connects and
-//! handshakes with a [`FrameKind::Hello`] frame carrying its rank, the
-//! expected world size (header `dim`), the codec chunk association
-//! (header `chunk`) and an 8-byte run-spec fingerprint (payload). The
-//! root validates all four — a worker launched with different CLI
-//! arguments, a different model dim or a different codec build is
-//! rejected with a typed [`TransportError::Handshake`]/mismatch error
-//! before any training traffic moves — then acks each worker with the
-//! same Hello shape.
+//! Every rank connects to rank 0 and handshakes with a
+//! [`FrameKind::Hello`] frame carrying its rank, the expected world
+//! size (header `dim`), the codec chunk association (header `chunk`)
+//! and an 8-byte run-spec fingerprint (payload prefix). The root
+//! validates all four — a worker launched with different CLI
+//! arguments, a different model dim, a different codec build **or a
+//! different `--topology`** (the fingerprint covers the topology
+//! spelling) is rejected with a typed
+//! [`TransportError::Handshake`]/mismatch error before any training
+//! traffic moves — then acks each worker with the same Hello shape.
+//!
+//! Under a tree topology ([`Tcp::root_topo`] / [`Tcp::connect_topo`])
+//! the bootstrap adds the leader↔member data-plane edges: each leader
+//! of a multi-member group binds its own member listener and announces
+//! its address in the Hello payload (after the fingerprint); the root
+//! withholds every ack until the whole world has handshaked — so a
+//! misconfigured launch dies at connect time, not mid-schedule — then
+//! relays each leader's address to that leader's members in their
+//! acks. Members then dial their leader directly with the same Hello
+//! shape, which the leader validates including **group membership**
+//! ([`validate_member`] — a rank from a different group is a typed
+//! [`TransportError::GroupMismatch`]).
 //!
 //! Sockets run with `TCP_NODELAY` (collective legs are latency-bound
 //! request/response exchanges) and generous read/write timeouts so a
@@ -23,6 +35,7 @@ use std::time::{Duration, Instant};
 use super::frame::{decode_header, FrameHeader, FrameKind, TransportError, HEADER_BYTES};
 use super::Transport;
 use crate::comm::compress::CODEC_CHUNK;
+use crate::comm::topology::{Topology, TreeShape};
 
 /// How long root waits for all workers to connect / a worker retries
 /// connecting to a not-yet-listening root.
@@ -103,12 +116,29 @@ fn read_exact_typed(
 }
 
 impl Tcp {
-    /// Rank 0: accept `world − 1` workers on `listener`, validating
-    /// each Hello (rank uniqueness/range, world size, codec chunk,
-    /// spec fingerprint) and acking it.
+    /// Rank 0: accept `world − 1` workers on `listener` under the star
+    /// topology.
     pub fn root(listener: TcpListener, world: usize, fingerprint: u64) -> Result<Tcp, TransportError> {
+        Tcp::root_topo(listener, world, fingerprint, Topology::Star)
+    }
+
+    /// Rank 0 of a `topo` group: accept `world − 1` workers, validating
+    /// each Hello (rank uniqueness/range, world size, codec chunk, spec
+    /// fingerprint). Acks are withheld until the whole world has
+    /// handshaked — a misconfigured launch dies here, not mid-schedule.
+    /// Under a tree, each member of groups i ≥ 1 is acked with its
+    /// leader's member-listener address appended to the fingerprint, so
+    /// a member never dials a leader that isn't bound yet.
+    pub fn root_topo(
+        listener: TcpListener,
+        world: usize,
+        fingerprint: u64,
+        topo: Topology,
+    ) -> Result<Tcp, TransportError> {
         assert!(world >= 1);
-        let mut conns: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+        let shape = topo.tree_shape(world);
+        let mut pending: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+        let mut hello_payload: Vec<Vec<u8>> = vec![Vec::new(); world];
         listener.set_nonblocking(true)?;
         let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
         let mut connected = 0usize;
@@ -151,30 +181,73 @@ impl Tcp {
                     "worker announced rank {r}, valid ranks are 1..{world}"
                 )));
             }
-            if conns[r].is_some() {
+            if pending[r].is_some() {
                 return Err(TransportError::Handshake(format!("duplicate rank {r}")));
             }
-            // ack with the root's own Hello
-            write_frame(&mut stream, hello_header(0, world), &fingerprint.to_le_bytes())?;
-            conns[r] = Some(stream);
+            pending[r] = Some(stream);
+            hello_payload[r] = payload;
             connected += 1;
+        }
+        // Before releasing anyone: every leader of a multi-member group
+        // i ≥ 1 must have announced a member-listener address after the
+        // fingerprint, or its members would have nothing to dial.
+        if let Some(shape) = shape {
+            for gi in 1..shape.n_groups() {
+                let l = shape.group_range(gi).start;
+                if shape.group_size(gi) >= 2 && hello_payload[l].len() <= 8 {
+                    return Err(TransportError::Handshake(format!(
+                        "group leader rank {l} announced no member-listener address \
+                         (was it launched with a different --topology?)"
+                    )));
+                }
+            }
+        }
+        let mut conns: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+        for r in 1..world {
+            let mut stream = pending[r].take().expect("all ranks connected");
+            let mut ack = fingerprint.to_le_bytes().to_vec();
+            if let Some(shape) = shape {
+                if shape.group_of(r) >= 1 && !shape.is_leader(r) {
+                    ack.extend_from_slice(&hello_payload[shape.leader_of(r)][8..]);
+                }
+            }
+            // ack with the root's own Hello
+            write_frame(&mut stream, hello_header(0, world), &ack)?;
+            conns[r] = Some(stream);
         }
         Ok(Tcp { rank: 0, world, conns })
     }
 
     /// Worker: connect to the root at `addr` (retrying while the root
-    /// is still binding), announce `rank`, await the ack.
+    /// is still binding), announce `rank`, await the ack. Star topology.
     pub fn connect(
         addr: &str,
         rank: usize,
         world: usize,
         fingerprint: u64,
     ) -> Result<Tcp, TransportError> {
+        Tcp::connect_topo(addr, rank, world, fingerprint, Topology::Star)
+    }
+
+    /// Worker of a `topo` group: the star handshake, plus the tree
+    /// data-plane edges. A leader of a multi-member group i ≥ 1 binds
+    /// its member listener *before* the Hello (so the address it
+    /// announces is already accepting when the root releases the
+    /// members) and accepts its group after the ack; a member of groups
+    /// i ≥ 1 dials the leader address relayed in the root's ack.
+    pub fn connect_topo(
+        addr: &str,
+        rank: usize,
+        world: usize,
+        fingerprint: u64,
+        topo: Topology,
+    ) -> Result<Tcp, TransportError> {
         if rank == 0 || rank >= world {
             return Err(TransportError::Handshake(format!(
                 "rank {rank} is not a worker rank of a {world}-rank group (valid: 1..{world})"
             )));
         }
+        let shape = topo.tree_shape(world);
         let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
         let mut stream = loop {
             match TcpStream::connect(addr) {
@@ -190,7 +263,24 @@ impl Tcp {
             }
         };
         configure(&stream)?;
-        write_frame(&mut stream, hello_header(rank, world), &fingerprint.to_le_bytes())?;
+        let member_listener = match shape {
+            Some(s)
+                if s.is_leader(rank) && s.group_of(rank) >= 1
+                    && s.group_size(s.group_of(rank)) >= 2 =>
+            {
+                Some(TcpListener::bind((std::net::Ipv4Addr::UNSPECIFIED, 0))?)
+            }
+            _ => None,
+        };
+        let mut hello = fingerprint.to_le_bytes().to_vec();
+        if let Some(l) = &member_listener {
+            // Advertise the IP this host reaches the root with — the
+            // one address members are known to be able to route to.
+            let advert =
+                std::net::SocketAddr::new(stream.local_addr()?.ip(), l.local_addr()?.port());
+            hello.extend_from_slice(advert.to_string().as_bytes());
+        }
+        write_frame(&mut stream, hello_header(rank, world), &hello)?;
         let mut payload = Vec::new();
         let ack = read_frame(&mut stream, &mut payload)?;
         validate_hello(&ack, &payload, world, fingerprint)?;
@@ -202,20 +292,141 @@ impl Tcp {
         }
         let mut conns: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
         conns[0] = Some(stream);
-        Ok(Tcp { rank, world, conns })
+        let mut me = Tcp { rank, world, conns };
+        if let Some(shape) = shape {
+            if let Some(listener) = member_listener {
+                me.accept_members(listener, shape, fingerprint)?;
+            } else if shape.group_of(rank) >= 1 {
+                let leader_addr = std::str::from_utf8(&payload[8..])
+                    .ok()
+                    .filter(|a| !a.is_empty())
+                    .map(str::to_owned)
+                    .ok_or_else(|| {
+                        TransportError::Handshake(format!(
+                            "rank {rank}'s ack carried no usable leader address"
+                        ))
+                    })?;
+                me.dial_leader(&leader_addr, shape, fingerprint)?;
+            }
+        }
+        Ok(me)
+    }
+
+    /// Leader side of the member handshake: accept `group_size − 1`
+    /// members, each validated with [`validate_member`] — including
+    /// that the rank actually belongs to this leader's group.
+    fn accept_members(
+        &mut self,
+        listener: TcpListener,
+        shape: TreeShape,
+        fingerprint: u64,
+    ) -> Result<(), TransportError> {
+        let mut missing = shape.group_size(shape.group_of(self.rank)) - 1;
+        listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+        while missing > 0 {
+            let (mut stream, _) = match listener.accept() {
+                Ok(s) => s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        return Err(TransportError::Handshake(format!(
+                            "leader {} timed out: {missing} group members never connected",
+                            self.rank
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            };
+            stream.set_nonblocking(false)?;
+            configure(&stream)?;
+            stream.set_read_timeout(Some(HELLO_TIMEOUT))?;
+            let mut payload = Vec::new();
+            let hello = match read_frame(&mut stream, &mut payload) {
+                Ok(h) => h,
+                Err(e) => {
+                    eprintln!("[transport] leader dropping stray connection: {e}");
+                    continue;
+                }
+            };
+            stream.set_read_timeout(Some(IO_TIMEOUT))?;
+            validate_member(&hello, &payload, self.world, fingerprint, shape, self.rank)?;
+            let r = hello.rank as usize;
+            if self.conns[r].is_some() {
+                return Err(TransportError::Handshake(format!("duplicate member rank {r}")));
+            }
+            write_frame(
+                &mut stream,
+                hello_header(self.rank, self.world),
+                &fingerprint.to_le_bytes(),
+            )?;
+            self.conns[r] = Some(stream);
+            missing -= 1;
+        }
+        Ok(())
+    }
+
+    /// Member side: dial the leader address relayed in the root's ack
+    /// and handshake with the same Hello shape the root uses.
+    fn dial_leader(
+        &mut self,
+        addr: &str,
+        shape: TreeShape,
+        fingerprint: u64,
+    ) -> Result<(), TransportError> {
+        let leader = shape.leader_of(self.rank);
+        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+        let mut stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() > deadline {
+                        return Err(TransportError::Handshake(format!(
+                            "rank {} could not reach its leader {leader} at {addr}: {e}",
+                            self.rank
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+        configure(&stream)?;
+        write_frame(&mut stream, hello_header(self.rank, self.world), &fingerprint.to_le_bytes())?;
+        let mut payload = Vec::new();
+        let ack = read_frame(&mut stream, &mut payload)?;
+        validate_hello(&ack, &payload, self.world, fingerprint)?;
+        if ack.rank as usize != leader {
+            return Err(TransportError::Handshake(format!(
+                "member handshake ack stamped by rank {}, expected leader {leader}",
+                ack.rank
+            )));
+        }
+        self.conns[leader] = Some(stream);
+        Ok(())
     }
 
     /// Test/bench helper: a fully-connected loopback group on an
     /// ephemeral port; index = rank.
     pub fn loopback_group(world: usize, fingerprint: u64) -> Result<Vec<Tcp>, TransportError> {
+        Tcp::loopback_group_topo(world, fingerprint, Topology::Star)
+    }
+
+    /// [`Tcp::loopback_group`] under an arbitrary topology: the tree
+    /// leader↔member edges bootstrap over real sockets too.
+    pub fn loopback_group_topo(
+        world: usize,
+        fingerprint: u64,
+        topo: Topology,
+    ) -> Result<Vec<Tcp>, TransportError> {
         let listener = TcpListener::bind(("127.0.0.1", 0))?;
         let addr = listener.local_addr()?.to_string();
         std::thread::scope(|s| {
-            let root = s.spawn(move || Tcp::root(listener, world, fingerprint));
+            let root = s.spawn(move || Tcp::root_topo(listener, world, fingerprint, topo));
             let workers: Vec<_> = (1..world)
                 .map(|r| {
                     let addr = addr.clone();
-                    s.spawn(move || Tcp::connect(&addr, r, world, fingerprint))
+                    s.spawn(move || Tcp::connect_topo(&addr, r, world, fingerprint, topo))
                 })
                 .collect();
             let mut out = vec![root.join().expect("root thread")?];
@@ -258,15 +469,39 @@ fn validate_hello(
             got: header.chunk,
         });
     }
-    if payload.len() != 8 {
+    // The fingerprint is the first 8 bytes; a leader's Hello (and the
+    // root's ack to a tree member) may append a utf8 socket address.
+    if payload.len() < 8 {
         return Err(TransportError::PayloadSize { want: 8, got: payload.len() });
     }
-    let theirs = u64::from_le_bytes(payload.try_into().expect("8-byte fingerprint"));
+    let theirs = u64::from_le_bytes(payload[..8].try_into().expect("8-byte fingerprint"));
     if theirs != fingerprint {
         return Err(TransportError::Handshake(format!(
             "run-spec fingerprint mismatch: ours {fingerprint:#018x}, peer {theirs:#018x} \
              (workers must be launched with identical training arguments)"
         )));
+    }
+    Ok(())
+}
+
+/// Validate a member's Hello at its group leader: everything the root
+/// checks of a worker Hello, plus that the announcing rank actually
+/// belongs to the group `leader` leads. A rank from a different group
+/// (two launches disagreeing on `--topology`, or a member dialing the
+/// wrong address) is a typed [`TransportError::GroupMismatch`], never
+/// a silently mis-wired edge.
+pub fn validate_member(
+    header: &FrameHeader,
+    payload: &[u8],
+    world: usize,
+    fingerprint: u64,
+    shape: TreeShape,
+    leader: usize,
+) -> Result<(), TransportError> {
+    validate_hello(header, payload, world, fingerprint)?;
+    let r = header.rank as usize;
+    if r >= world || r == leader || shape.leader_of(r) != leader {
+        return Err(TransportError::GroupMismatch { leader: leader as u32, rank: header.rank });
     }
     Ok(())
 }
@@ -337,6 +572,65 @@ mod tests {
         assert!(matches!(root_err, TransportError::Handshake(_)), "{root_err}");
         // the worker either sees the refused handshake or a closed pipe
         assert!(worker.is_err());
+    }
+
+    #[test]
+    fn tree_loopback_wires_leader_member_edges() {
+        // 5 ranks, groups {0,1} {2,3} {4}: rank 3 gets a direct socket
+        // to its leader 2, bootstrapped via the root-relayed address.
+        let topo = Topology::Tree { group: 2 };
+        let mut group = Tcp::loopback_group_topo(5, 0xabcd, topo).unwrap();
+        let mut w3 = group.remove(3);
+        let mut w2 = group.remove(2);
+        let h = std::thread::spawn(move || {
+            w3.send(2, FrameHeader::new(FrameKind::Ef, 3, 1, 4, 0), &[9; 4]).unwrap();
+            let mut p = Vec::new();
+            let ack = w3.recv(2, &mut p).unwrap();
+            assert_eq!(ack.kind, FrameKind::EfPartial);
+            assert_eq!(&p, &[7; 4]);
+        });
+        let mut p = Vec::new();
+        let up = w2.recv(3, &mut p).unwrap();
+        up.expect(FrameKind::Ef, 3, 1, 4, 0).unwrap();
+        assert_eq!(&p, &[9; 4]);
+        w2.send(3, FrameHeader::new(FrameKind::EfPartial, 2, 1, 4, 0), &[7; 4]).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn member_from_wrong_group_is_group_mismatch() {
+        let shape = Topology::Tree { group: 3 }.tree_shape(9).unwrap();
+        let fp: u64 = 0x5150;
+        let hello = hello_header(7, 9); // rank 7 belongs to leader 6
+        validate_member(&hello, &fp.to_le_bytes(), 9, fp, shape, 6).unwrap();
+        let err = validate_member(&hello, &fp.to_le_bytes(), 9, fp, shape, 3).unwrap_err();
+        assert!(matches!(err, TransportError::GroupMismatch { leader: 3, rank: 7 }), "{err}");
+    }
+
+    #[test]
+    fn leader_missing_listener_address_fails_fast() {
+        // Workers handshaking the star protocol against a tree root:
+        // the group-1 leader's Hello carries no member-listener
+        // address, which the root rejects before acking anyone —
+        // a typed error, not a deadlocked launch. (In a real launch
+        // the spec fingerprint already covers --topology; this is the
+        // transport-level backstop.)
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let topo = Topology::Tree { group: 2 };
+        let root = std::thread::spawn(move || Tcp::root_topo(listener, 4, 0x77, topo));
+        let workers: Vec<_> = (1..4)
+            .map(|r| {
+                let addr = addr.clone();
+                std::thread::spawn(move || Tcp::connect(&addr, r, 4, 0x77))
+            })
+            .collect();
+        let err = root.join().unwrap().unwrap_err();
+        assert!(matches!(err, TransportError::Handshake(_)), "{err}");
+        for w in workers {
+            // released with a refused handshake or a closed pipe
+            assert!(w.join().unwrap().is_err());
+        }
     }
 
     #[test]

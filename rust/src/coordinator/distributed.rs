@@ -20,7 +20,7 @@
 
 use crate::comm::transport::{RankLink, TransportError};
 use crate::comm::volume::VolumeLedger;
-use crate::comm::ReduceBackend;
+use crate::comm::{ReduceBackend, Topology};
 use crate::grad::synthetic::NoisyQuadratic;
 use crate::grad::GradientSource;
 use crate::optim::policy::{SyncPolicy, SyncSchedule, VarSchedule};
@@ -68,6 +68,10 @@ pub struct DistSpec {
     pub sigma: f32,
     /// Constant initial parameter value.
     pub init: f32,
+    /// Reduction schedule shape (`--topology`). Part of the
+    /// fingerprint: the tree trajectory differs from the star's, so
+    /// every rank — and the parity reference — must agree on it.
+    pub topology: Topology,
 }
 
 impl Default for DistSpec {
@@ -82,6 +86,7 @@ impl Default for DistSpec {
             kappa: 5.0,
             sigma: 0.1,
             init: 0.8,
+            topology: Topology::Star,
         }
     }
 }
@@ -91,7 +96,7 @@ impl DistSpec {
     /// that catches workers launched with different arguments.
     pub fn fingerprint(&self) -> u64 {
         let canon = format!(
-            "{}|{}|{}|{}|{}|{:016x}|{:016x}|{:08x}|{:08x}",
+            "{}|{}|{}|{}|{}|{:016x}|{:016x}|{:08x}|{:08x}|{}",
             self.family,
             self.d,
             self.steps,
@@ -101,6 +106,9 @@ impl DistSpec {
             self.kappa.to_bits(),
             self.sigma.to_bits(),
             self.init.to_bits(),
+            // normalized: `--topology tree9` at world 4 *is* the star
+            // schedule, so spelling it either way must still handshake
+            self.topology.normalized(self.world),
         );
         let mut h: u64 = 0xcbf2_9ce4_8422_2325;
         for b in canon.bytes() {
@@ -185,6 +193,7 @@ pub fn run_rank(link: &mut RankLink, spec: &DistSpec) -> Result<RankResult, Tran
         spec.world,
         "transport group size does not match the run spec"
     );
+    link.set_topology(spec.topology.normalized(spec.world));
     let rank = link.rank();
     let d = spec.d;
     let mut src = spec.source();
@@ -270,6 +279,7 @@ pub fn run_local(spec: &DistSpec, exec: ExecMode) -> RunResult {
         sim_gpus: 0,
         compute_ms: 0.0,
         exec,
+        topology: spec.topology,
         verbose: false,
     };
     Trainer::run(&mut src, opt.as_mut(), &cfg, &mut NoObserver)
@@ -279,7 +289,10 @@ pub fn run_local(spec: &DistSpec, exec: ExecMode) -> RunResult {
 /// results indexed by rank. The default `zo-adam launch` path and what
 /// the parity tests drive.
 pub fn launch_inproc(spec: &DistSpec) -> Result<Vec<RankResult>, TransportError> {
-    let links = crate::comm::transport::inproc::group(spec.world);
+    let links = crate::comm::transport::inproc::group_topo(
+        spec.world,
+        spec.topology.normalized(spec.world),
+    );
     std::thread::scope(|s| {
         let handles: Vec<_> = links
             .into_iter()
@@ -473,10 +486,15 @@ mod tests {
             DistSpec { kappa: base.kappa * 2.0, ..base.clone() },
             DistSpec { sigma: base.sigma * 2.0, ..base.clone() },
             DistSpec { init: base.init + 0.5, ..base.clone() },
+            DistSpec { topology: Topology::Tree { group: 2 }, ..base.clone() },
         ];
         for v in variants {
             assert_ne!(v.fingerprint(), fp, "{v:?} must change the fingerprint");
         }
+        // A degenerate tree (group ≥ world) *is* the star schedule, so
+        // either spelling must produce the same handshake token.
+        let degenerate = DistSpec { topology: Topology::Tree { group: 9 }, ..base.clone() };
+        assert_eq!(degenerate.fingerprint(), fp, "tree9 at world 4 is the star");
     }
 
     #[test]

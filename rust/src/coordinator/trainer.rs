@@ -7,6 +7,7 @@
 
 use crate::comm::network::Fabric;
 use crate::comm::volume::VolumeLedger;
+use crate::comm::{ReduceBackend, Topology};
 use crate::grad::GradientSource;
 use crate::optim::{DistOptimizer, StepInfo};
 
@@ -35,6 +36,12 @@ pub struct TrainerConfig {
     /// spawned once up front and every step's parallel regions reuse
     /// it (publish–work–barrier, no per-region spawn or allocation).
     pub exec: ExecMode,
+    /// Reduction schedule shape: the star every optimizer defaults to,
+    /// or the two-level tree (leaders combine their group, the root
+    /// combines leaders). Tree runs are their own trajectory — bitwise
+    /// equal to the transport deployment of the same topology, not to
+    /// the star (see `comm::topology`).
+    pub topology: Topology,
     /// Print progress lines.
     pub verbose: bool,
 }
@@ -49,6 +56,7 @@ impl Default for TrainerConfig {
             sim_gpus: 0,
             compute_ms: 0.0,
             exec: ExecMode::Sequential,
+            topology: Topology::Star,
             verbose: false,
         }
     }
@@ -121,6 +129,9 @@ impl Trainer {
         // One engine — and one persistent worker pool — for the whole
         // run; dropped (workers joined) when the run returns.
         let engine = Engine::new(cfg.exec);
+        // Normalize once: a tree whose group covers all n workers is
+        // the star schedule, and the collectives key off the shape.
+        let topology = cfg.topology.normalized(n);
         let wall = crate::util::Stopwatch::start();
 
         for t in 0..cfg.steps {
@@ -159,8 +170,11 @@ impl Trainer {
             let loss = losses.iter().map(|&l| l as f64).sum::<f64>() / n as f64;
 
             // Phase 2: the distributed optimizer step (comm included),
-            // with the per-worker local phase on the engine.
-            let info = opt.step_engine(t, &grads, &engine);
+            // with the per-worker local phase on the engine and the
+            // reductions on the configured topology.
+            let info = opt
+                .step_comm(t, &grads, &engine, &mut ReduceBackend::Local(topology))
+                .unwrap_or_else(|e| unreachable!("in-process reductions are infallible: {e}"));
             ledger.record_step(&info.rounds);
 
             // Phase 3: simulated cluster clock.
@@ -247,6 +261,7 @@ mod tests {
             sim_gpus: 16,
             compute_ms: 10.0,
             exec: ExecMode::Sequential,
+            topology: Topology::Star,
             verbose: false,
         };
         Trainer::run(&mut src, &mut opt, &cfg, &mut NoObserver)
@@ -267,6 +282,7 @@ mod tests {
                 sim_gpus: 16,
                 compute_ms: 5.0,
                 exec,
+                topology: Topology::Star,
                 verbose: false,
             };
             Trainer::run(&mut src, &mut opt, &cfg, &mut NoObserver)

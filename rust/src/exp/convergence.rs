@@ -113,6 +113,7 @@ fn trainer_config(opts: &ConvOpts) -> TrainerConfig {
         compute_ms: opts.task.compute_model().step_ms(opts.sim_gpus),
         exec: opts.exec,
         verbose: opts.verbose,
+        ..Default::default()
     }
 }
 

@@ -411,6 +411,11 @@ fn spec_args(args: Args) -> Args {
         .opt("kappa", &s.kappa.to_string(), "quadratic condition number")
         .opt("sigma", &s.sigma.to_string(), "per-worker gradient noise")
         .opt("init", &s.init.to_string(), "initial parameter value")
+        .opt(
+            "topology",
+            &s.topology.to_string(),
+            "reduction schedule: star | tree (g ~ sqrt(ranks)) | tree<g>",
+        )
 }
 
 fn spec_from(p: &zo_adam::util::cli::Parsed, world: usize) -> zo_adam::coordinator::DistSpec {
@@ -424,16 +429,19 @@ fn spec_from(p: &zo_adam::util::cli::Parsed, world: usize) -> zo_adam::coordinat
         kappa: p.get_f64("kappa"),
         sigma: p.get_f64("sigma") as f32,
         init: p.get_f64("init") as f32,
+        topology: zo_adam::comm::Topology::parse(p.get("topology"), world)
+            .unwrap_or_else(|e| panic!("--topology: {e}")),
     }
 }
 
 fn print_rank0_summary(spec: &zo_adam::coordinator::DistSpec, root: &zo_adam::coordinator::RankResult, transport: &str) {
     println!(
-        "[launch] {} over {} {transport} rank(s), d={}, {} steps: final loss {:.6}, eval {:?}, \
+        "[launch] {} over {} {transport} rank(s) [{}], d={}, {} steps: final loss {:.6}, eval {:?}, \
          {} rounds ({} fp + {} 1bit, {} local-only steps), {:.3} bits/param on the wire \
          (framed bytes, headers included), wall {:.2}s",
         spec.family,
         spec.world,
+        spec.topology.normalized(spec.world),
         spec.d,
         spec.steps,
         root.final_loss,
@@ -558,7 +566,9 @@ fn launch_tcp(
             .arg("--sigma")
             .arg(spec.sigma.to_string())
             .arg("--init")
-            .arg(spec.init.to_string());
+            .arg(spec.init.to_string())
+            .arg("--topology")
+            .arg(spec.topology.to_string());
         if quiet {
             cmd.arg("--quiet").stdout(Stdio::null());
         }
@@ -571,8 +581,13 @@ fn launch_tcp(
         children.push(rank, child);
     }
     let root_result = (|| -> Result<_> {
-        let tp = Tcp::root(listener, spec.world, spec.fingerprint())
-            .map_err(|e| anyhow::anyhow!("root handshake: {e}"))?;
+        let tp = Tcp::root_topo(
+            listener,
+            spec.world,
+            spec.fingerprint(),
+            spec.topology.normalized(spec.world),
+        )
+        .map_err(|e| anyhow::anyhow!("root handshake: {e}"))?;
         let mut link = RankLink::new(Box::new(tp));
         zo_adam::coordinator::run_rank(&mut link, spec)
             .map_err(|e| anyhow::anyhow!("rank 0 failed: {e}"))
@@ -624,11 +639,12 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
         spec.family,
         zo_adam::coordinator::distributed::FAMILIES.join(", ")
     );
-    let tp = zo_adam::comm::transport::tcp::Tcp::connect(
+    let tp = zo_adam::comm::transport::tcp::Tcp::connect_topo(
         p.get("connect"),
         rank,
         world,
         spec.fingerprint(),
+        spec.topology.normalized(world),
     )
     .map_err(|e| anyhow::anyhow!("worker rank {rank} handshake: {e}"))?;
     let mut link = zo_adam::comm::RankLink::new(Box::new(tp));
@@ -917,6 +933,84 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
         }
     }
 
+    // -- transport tree schedule --------------------------------------
+    // ISSUE 6 tentpole: the same 9-rank compressed EF round under the
+    // star and the two-level tree3 schedule, over the in-proc framed
+    // backend (8 worker threads loop `reduce_transport` until the root
+    // hangs up). The headline is the metric, not the wall time: the
+    // root's combine-level ingress per round — bytes from the peers
+    // whose uploads rank 0's root leg must itself combine — drops from
+    // (n − 1) uploads to (G − 1) leader partials, 0.25 of the star's
+    // fan-in at n = 9, g = 3.
+    println!("\n-- transport tree schedule (9-rank EF rounds, star vs tree3) --");
+    {
+        use zo_adam::comm::transport::inproc;
+        use zo_adam::comm::{RankLink, Topology};
+        let td = 4 * zo_adam::comm::SERVER_CHUNK + 321;
+        let tw = 9usize;
+        let mut rng = Rng::new(5);
+        let mut ingress = Vec::new();
+        for (topo, label) in [
+            (Topology::Star, "reduce_ef_n9_star"),
+            (Topology::Tree { group: 3 }, "reduce_ef_n9_g3"),
+        ] {
+            let mut links: Vec<RankLink> = inproc::group_topo(tw, topo)
+                .into_iter()
+                .map(|tp| {
+                    let mut link = RankLink::new(Box::new(tp));
+                    link.set_topology(topo);
+                    link
+                })
+                .collect();
+            let workers: Vec<_> = links
+                .drain(1..)
+                .map(|mut link| {
+                    let mut g = vec![0.0f32; td];
+                    rng.fill_normal(&mut g, 1.0);
+                    std::thread::spawn(move || {
+                        let mut ef = EfAllReduce::new(1, td);
+                        let bufs = vec![g];
+                        let mut out = vec![0.0f32; td];
+                        while ef.reduce_transport(&bufs, &mut out, &mut link).is_ok() {}
+                    })
+                })
+                .collect();
+            let mut root_link = links.pop().expect("rank 0");
+            let mut ef = EfAllReduce::new(1, td);
+            let mut g0 = vec![0.0f32; td];
+            rng.fill_normal(&mut g0, 1.0);
+            let bufs = vec![g0];
+            let mut out = vec![0.0f32; td];
+            let mut rounds = 0u64;
+            let mut b = Bench::new().with_elements(td as u64);
+            report.push(&b.run(&format!("transport/tree/{label}"), || {
+                ef.reduce_transport(&bufs, &mut out, &mut root_link).expect("root round");
+                rounds += 1;
+            }));
+            // Combine-level ingress peers: every rank under the star,
+            // only the group-1.. leaders under the tree (rank 0's own
+            // group members feed its *leader* leg — the per-group cost
+            // every leader pays, not the root bottleneck).
+            let peers: Vec<usize> = match topo.tree_shape(tw) {
+                None => (1..tw).collect(),
+                Some(s) => (1..s.n_groups()).map(|i| s.group_range(i).start).collect(),
+            };
+            let direct: u64 = peers.iter().map(|&r| root_link.rx_from(r)).sum();
+            ingress.push(direct as f64 / rounds as f64);
+            drop(root_link); // hang up: the workers' next recv is Closed
+            for w in workers {
+                w.join().expect("tree bench worker");
+            }
+        }
+        let frac = ingress[1] / ingress[0];
+        report.metric("transport/tree/root_ingress_frac_n9_g3", frac);
+        println!(
+            "  -> root combine-level ingress: star {:.0} B/round, tree3 {:.0} B/round \
+             ({frac:.3} of the star's)",
+            ingress[0], ingress[1]
+        );
+    }
+
     // -- optimizer step -----------------------------------------------
     // Gated entries need a *stationary* per-step workload: policies are
     // pinned (constant LR, fixed stages) so every measured iteration
@@ -1010,7 +1104,7 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
                 sim_gpus: 128,
                 compute_ms: 0.0,
                 exec: *mode,
-                verbose: false,
+                ..Default::default()
             };
             let res = Trainer::run(&mut src, opt.as_mut(), &cfg, &mut NoObserver);
             let sps = run_steps as f64 / res.wall_s.max(1e-9);
@@ -1029,10 +1123,11 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
 
     // Gate first: a regressing run must fail loudly *without* replacing
     // the baseline it regressed against.
-    // Gated entry families: optimizer steps (PR 2) and the EF server
+    // Gated entry families: optimizer steps (PR 2), the EF server
     // accumulation paths (ISSUE 5 — a sweep regression or a table path
-    // that stops beating it must fail loudly, not fade quietly).
-    const GATED_PREFIXES: [&str; 2] = ["step/", "server_leg/"];
+    // that stops beating it must fail loudly, not fade quietly) and the
+    // topology-scheduled transport rounds (ISSUE 6).
+    const GATED_PREFIXES: [&str; 3] = ["step/", "server_leg/", "transport/tree/"];
     if let Some(base) = &baseline {
         let gated: Vec<&str> = base
             .entries
@@ -1056,7 +1151,7 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
         if base.bootstrap || gated.is_empty() {
             println!(
                 "\nperf gate vs {baseline_path}: SKIPPED (bootstrap baseline — no measured \
-                 step/ or server_leg/ entries to compare yet)"
+                 step/, server_leg/ or transport/tree/ entries to compare yet)"
             );
         } else if !config_mismatch.is_empty() {
             println!(

@@ -171,9 +171,13 @@ pub trait DistOptimizer: Sync {
 
     /// Apply one global step, scheduling the per-worker local phase on
     /// `eng`. Must produce bitwise identical state and [`StepInfo`] for
-    /// every engine width.
+    /// every engine width. Star-topology collectives; topology-aware
+    /// callers (the trainer) construct `ReduceBackend::Local` with
+    /// their configured [`crate::comm::Topology`] and call `step_comm`
+    /// directly.
     fn step_engine(&mut self, t: u64, grads: &[Vec<f32>], eng: &Engine) -> StepInfo {
-        match self.step_comm(t, grads, eng, &mut ReduceBackend::Local) {
+        match self.step_comm(t, grads, eng, &mut ReduceBackend::Local(crate::comm::Topology::Star))
+        {
             Ok(info) => info,
             Err(e) => unreachable!("in-process reductions are infallible: {e}"),
         }

@@ -115,7 +115,7 @@ fn run(
         sim_gpus: 32,
         compute_ms: 2.5,
         exec,
-        verbose: false,
+        ..Default::default()
     };
     Trainer::run(&mut src, opt.as_mut(), &cfg, &mut NoObserver)
 }
@@ -246,7 +246,7 @@ fn threaded8_matches_sequential_on_a_longer_zeroone_run() {
             sim_gpus: 128,
             compute_ms: 1.0,
             exec,
-            verbose: false,
+            ..Default::default()
         };
         Trainer::run(&mut src, &mut opt, &cfg, &mut NoObserver)
     };

@@ -1,0 +1,350 @@
+//! ISSUE 6 acceptance: the two-level tree schedule is **bitwise equal
+//! across deployments** — the in-proc framed transport, real loopback
+//! TCP, and the single-process engine reference all running the same
+//! `(world, g)` tree produce identical parameters, per-step losses and
+//! ledger round counts, for every optimizer family and for ragged /
+//! singleton / degenerate group shapes.
+//!
+//! What the tree is NOT: bitwise equal to the star for g < n. f32
+//! addition is not associative and the leaders re-compress their
+//! subtree partial, so the tree is its own (equally valid) trajectory;
+//! `tree{g >= n}` however *normalizes* to the star and must match it
+//! byte for byte, ledger included. Both directions are pinned here.
+
+use zo_adam::comm::transport::tcp::Tcp;
+use zo_adam::comm::transport::RankLink;
+use zo_adam::comm::{onebit_payload_bytes, Topology, HEADER_BYTES, SERVER_CHUNK};
+use zo_adam::coordinator::distributed::FAMILIES;
+use zo_adam::coordinator::{check_parity, launch_inproc, run_local, run_rank, DistSpec, ExecMode};
+
+fn spec(family: &str, d: usize, steps: u64, world: usize, topology: Topology) -> DistSpec {
+    DistSpec {
+        family: family.to_string(),
+        d,
+        steps,
+        world,
+        seed: 11,
+        topology,
+        ..DistSpec::default()
+    }
+}
+
+#[test]
+fn nine_tree3_inproc_ranks_match_the_tree_scheduled_engine_for_every_family() {
+    // d spans two codec chunks and sits off the 64-bit words; 12 steps
+    // cross 1-bit Adam's T0 and several 0/1 Adam syncs; 9 ranks in
+    // groups of 3 exercise the full leader/member/root role split.
+    let d = 2 * SERVER_CHUNK + 777;
+    let topo = Topology::Tree { group: 3 };
+    for family in FAMILIES {
+        let spec = spec(family, d, 12, 9, topo);
+        let results = launch_inproc(&spec).unwrap_or_else(|e| panic!("{family}: {e}"));
+        let local = run_local(&spec, ExecMode::with_threads(9));
+        check_parity(&results[0], &local).unwrap_or_else(|e| panic!("{family}: {e}"));
+        // every rank counted the same rounds (bytes differ by role:
+        // the root and relaying leaders move more frames than members)
+        for r in &results[1..] {
+            assert_eq!(
+                (r.ledger.fp_rounds, r.ledger.onebit_rounds, r.ledger.skipped_steps),
+                (
+                    results[0].ledger.fp_rounds,
+                    results[0].ledger.onebit_rounds,
+                    results[0].ledger.skipped_steps
+                ),
+                "{family} rank {}",
+                r.rank
+            );
+        }
+    }
+}
+
+#[test]
+fn tree_shape_sweep_matches_the_engine_bitwise() {
+    // World sizes straddling group boundaries × group sizes including
+    // g ≈ √n: full groups (9/3), ragged last groups (8/3, 16/3),
+    // singleton last groups (9/4, 3/2, 9/2) all run the same schedule
+    // on the transport and in the engine.
+    let d = SERVER_CHUNK + 321;
+    for &world in &[3usize, 4, 8, 9, 16] {
+        let isq = ((world as f64).sqrt().round() as usize).max(2);
+        let mut gs = vec![2usize, 3, 4, isq];
+        gs.sort_unstable();
+        gs.dedup();
+        for g in gs {
+            if g >= world {
+                continue; // degenerate — pinned by the star-collapse test
+            }
+            let spec = spec("01adam", d, 8, world, Topology::Tree { group: g });
+            let results =
+                launch_inproc(&spec).unwrap_or_else(|e| panic!("n={world} g={g}: {e}"));
+            let local = run_local(&spec, ExecMode::with_threads(world));
+            check_parity(&results[0], &local).unwrap_or_else(|e| panic!("n={world} g={g}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn nine_tcp_tree3_ranks_match_the_engine() {
+    // Real loopback sockets, including the leader member-listener
+    // bootstrap, for the families with the richest comm schedules.
+    let topo = Topology::Tree { group: 3 };
+    for family in ["01adam", "1bit-adam"] {
+        let spec = spec(family, SERVER_CHUNK + 321, 8, 9, topo);
+        let group = Tcp::loopback_group_topo(9, spec.fingerprint(), topo)
+            .unwrap_or_else(|e| panic!("{family}: loopback group: {e}"));
+        let results: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = group
+                .into_iter()
+                .map(|tp| {
+                    let spec = &spec;
+                    s.spawn(move || {
+                        let mut link = RankLink::new(Box::new(tp));
+                        run_rank(&mut link, spec)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().expect("rank thread").unwrap_or_else(|e| panic!("{family}: {e}"))
+                })
+                .collect()
+        });
+        let local = run_local(&spec, ExecMode::with_threads(9));
+        check_parity(&results[0], &local)
+            .unwrap_or_else(|e| panic!("{family} over tcp tree3: {e}"));
+    }
+}
+
+#[test]
+fn oversized_group_collapses_to_the_star_bitwise() {
+    // tree{g >= n} normalizes to the star *schedule* — not just the
+    // same answer, the same code path. Params, losses and the ledger's
+    // exact framed bytes must all match, and the handshake fingerprint
+    // must agree so either spelling can join the same launch.
+    let d = SERVER_CHUNK + 9;
+    for family in ["01adam", "1bit-adam"] {
+        let tree = spec(family, d, 8, 4, Topology::Tree { group: 9 });
+        let star = spec(family, d, 8, 4, Topology::Star);
+        assert_eq!(tree.fingerprint(), star.fingerprint(), "{family}");
+        let a = launch_inproc(&tree).unwrap();
+        let b = launch_inproc(&star).unwrap();
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.ledger.bytes_total, rb.ledger.bytes_total, "{family} rank {}", ra.rank);
+        }
+        for (j, (x, y)) in a[0].final_params.iter().zip(&b[0].final_params).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{family} param {j}");
+        }
+        assert_eq!(a[0].losses, b[0].losses, "{family}");
+    }
+}
+
+#[test]
+fn a_real_tree_is_its_own_trajectory_not_the_star() {
+    // The impossibility argument, pinned as a test: f32 addition is
+    // not associative and leaders re-compress, so tree3 over 9 ranks
+    // CANNOT be the star's bits — if it ever is, the tree schedule has
+    // silently stopped running and the whole suite above is vacuous.
+    let tree = spec("01adam", SERVER_CHUNK + 321, 8, 9, Topology::Tree { group: 3 });
+    let star = spec("01adam", SERVER_CHUNK + 321, 8, 9, Topology::Star);
+    let a = launch_inproc(&tree).unwrap();
+    let b = launch_inproc(&star).unwrap();
+    assert!(
+        a[0].final_params
+            .iter()
+            .zip(&b[0].final_params)
+            .any(|(x, y)| x.to_bits() != y.to_bits()),
+        "tree3 and star produced identical bits — is the tree schedule actually running?"
+    );
+}
+
+#[test]
+fn tree_ledger_counts_exact_per_role_framed_bytes() {
+    // 5 ranks in groups of 2: {0,1} {2,3} {4}. Per round each rank
+    // moves k_r frames in each direction — root: (g0−1)+(G−1) = 3;
+    // group-0 member: 1; relaying leader 2: its group size 2; member
+    // 3: 1; singleton leader 4: 1 (its "partial" is its own upload).
+    let d = 1500;
+    let spec = spec("01adam-nolocal", d, 6, 5, Topology::Tree { group: 2 });
+    let results = launch_inproc(&spec).unwrap();
+    let fp_frame = (HEADER_BYTES + 2 * d) as u64; // fp16 payload
+    let ef_frame = (HEADER_BYTES + onebit_payload_bytes(d)) as u64;
+    let k = [3u64, 1, 2, 1, 1];
+    for (r, want_k) in results.iter().zip(k) {
+        let want = r.ledger.fp_rounds * 2 * want_k * fp_frame
+            + r.ledger.onebit_rounds * 2 * want_k * ef_frame;
+        assert_eq!(
+            r.ledger.bytes_total, want,
+            "rank {}: framed-byte accounting must be exact per role",
+            r.rank
+        );
+    }
+    for r in &results[1..] {
+        assert_eq!(
+            (r.ledger.fp_rounds, r.ledger.onebit_rounds),
+            (results[0].ledger.fp_rounds, results[0].ledger.onebit_rounds),
+            "rank {}",
+            r.rank
+        );
+    }
+}
+
+#[test]
+fn tree_root_combine_ingress_is_leader_partials_only() {
+    // The acceptance ratio, measured on the wire: after R direct EF
+    // rounds the root's combine-level ingress — bytes from the peers
+    // whose uploads its root leg combines — is (G−1) EfPartial frames
+    // per round under tree3 vs (n−1) Ef uploads under the star:
+    // (⌈9/3⌉−1)/(9−1) = 1/4 of the star's fan-in.
+    use zo_adam::comm::transport::inproc;
+    use zo_adam::comm::EfAllReduce;
+    use zo_adam::tensor::Rng;
+
+    let d = SERVER_CHUNK + 77;
+    let world = 9usize;
+    let rounds = 3u64;
+    let ef_frame = (HEADER_BYTES + onebit_payload_bytes(d)) as u64;
+
+    let run = |topo: Topology| -> (u64, u64) {
+        let mut links: Vec<RankLink> = inproc::group_topo(world, topo)
+            .into_iter()
+            .map(|tp| {
+                let mut link = RankLink::new(Box::new(tp));
+                link.set_topology(topo);
+                link
+            })
+            .collect();
+        let workers: Vec<_> = links
+            .drain(1..)
+            .enumerate()
+            .map(|(i, mut link)| {
+                let rank = i + 1;
+                std::thread::spawn(move || {
+                    let mut ef = EfAllReduce::new(1, d);
+                    let mut out = vec![0.0f32; d];
+                    for round in 0..rounds {
+                        let mut rng = Rng::new(100 + round * 32 + rank as u64);
+                        let mut buf = vec![0.0f32; d];
+                        rng.fill_normal(&mut buf, 1.0);
+                        let bufs = vec![buf];
+                        ef.reduce_transport(&bufs, &mut out, &mut link).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let mut root = links.pop().expect("rank 0");
+        let mut ef = EfAllReduce::new(1, d);
+        let mut out = vec![0.0f32; d];
+        for round in 0..rounds {
+            let mut rng = Rng::new(100 + round * 32);
+            let mut buf = vec![0.0f32; d];
+            rng.fill_normal(&mut buf, 1.0);
+            let bufs = vec![buf];
+            ef.reduce_transport(&bufs, &mut out, &mut root).unwrap();
+        }
+        for w in workers {
+            w.join().expect("worker thread");
+        }
+        let combine: u64 = match topo.tree_shape(world) {
+            None => (1..world).map(|r| root.rx_from(r)).sum(),
+            Some(s) => (1..s.n_groups()).map(|i| root.rx_from(s.group_range(i).start)).sum(),
+        };
+        let total: u64 = (0..world).map(|r| root.rx_from(r)).sum();
+        (combine, total)
+    };
+
+    let (star_combine, star_total) = run(Topology::Star);
+    assert_eq!(star_combine, rounds * 8 * ef_frame, "star: (n−1) uploads per round");
+    assert_eq!(star_total, star_combine);
+
+    let (tree_combine, tree_total) = run(Topology::Tree { group: 3 });
+    assert_eq!(tree_combine, rounds * 2 * ef_frame, "tree3: (G−1) leader partials per round");
+    // + the root's own group-0 members (the leader-leg cost every
+    // leader pays, regardless of topology depth)
+    assert_eq!(tree_total, rounds * 4 * ef_frame);
+    assert_eq!(tree_combine * (world as u64 - 1), star_combine * 2, "(G−1)/(n−1) ratio");
+}
+
+#[test]
+fn weighted_table_and_sweep_server_legs_agree_bitwise() {
+    // The root leg folds λ_i = |group i|/n into the combine. The
+    // weighted pattern table and the weighted sweep must produce the
+    // same bits (same prefix-doubling association as the unweighted
+    // ISSUE 5 contract), and a constant weight closure must reproduce
+    // the unweighted builder exactly.
+    use zo_adam::comm::compress::{
+        accumulate_words, build_sign_table, build_sign_table_weighted, compress, table_lookup,
+        transpose_sign_words,
+    };
+    use zo_adam::tensor::Rng;
+
+    let d = 4 * 64 + 13;
+    let n = 5usize;
+    let mut rng = Rng::new(42);
+    let uploads: Vec<_> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 1.0);
+            compress(&v)
+        })
+        .collect();
+    // the n=5, g=2 root-leg weights: λ = {2,2,1}/5 padded per upload
+    let weights: Vec<f32> = vec![2.0 / 5.0, 2.0 / 5.0, 2.0 / 5.0, 2.0 / 5.0, 1.0 / 5.0];
+
+    let mut sweep = vec![0.0f32; d];
+    for (w, u) in uploads.iter().enumerate() {
+        accumulate_words(&u.signs, u.scale, weights[w], &mut sweep);
+    }
+    let mut table = Vec::new();
+    build_sign_table_weighted(n, |w| weights[w], |w| uploads[w].scale, &mut table);
+    let mut pattern = vec![0u16; d];
+    transpose_sign_words(n, |w, k| uploads[w].signs[k], &mut pattern);
+    let mut looked = vec![0.0f32; d];
+    table_lookup(&table, &pattern, &mut looked);
+    for j in 0..d {
+        assert_eq!(sweep[j].to_bits(), looked[j].to_bits(), "j={j}");
+    }
+
+    let inv = 1.0 / n as f32;
+    let mut t1 = Vec::new();
+    build_sign_table(n, inv, |w| uploads[w].scale, &mut t1);
+    let mut t2 = Vec::new();
+    build_sign_table_weighted(n, |_| inv, |w| uploads[w].scale, &mut t2);
+    assert_eq!(t1.len(), t2.len());
+    for (a, b) in t1.iter().zip(&t2) {
+        assert_eq!(a.to_bits(), b.to_bits(), "constant weight must equal the unweighted builder");
+    }
+}
+
+#[test]
+fn mismatched_topology_launch_fails_fast_with_a_typed_error() {
+    // Two processes launched with different --topology spellings have
+    // different spec fingerprints (the spelling is normalized, then
+    // hashed), so the root rejects the worker at the handshake — a
+    // typed error naming the cause, not a deadlocked collective.
+    use zo_adam::comm::TransportError;
+    let world = 3;
+    let root_spec = spec("01adam", 256, 4, world, Topology::Tree { group: 2 });
+    let worker_spec = spec("01adam", 256, 4, world, Topology::Star);
+    // same args, same world — ONLY the topology differs, and it is
+    // enough to change the fingerprint
+    assert_ne!(root_spec.fingerprint(), worker_spec.fingerprint());
+
+    let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let root_fp = root_spec.fingerprint();
+    let root = std::thread::spawn(move || {
+        Tcp::root_topo(listener, world, root_fp, Topology::Tree { group: 2 })
+    });
+    // rank 1 joins with the wrong topology; rank 2 never shows up —
+    // the root must still fail fast on the fingerprint, not time out
+    let worker = Tcp::connect_topo(&addr, 1, world, worker_spec.fingerprint(), Topology::Star);
+    match root.join().expect("root thread") {
+        Ok(_) => panic!("root accepted a worker with a mismatched topology fingerprint"),
+        Err(TransportError::Handshake(msg)) => {
+            assert!(msg.contains("fingerprint"), "unexpected handshake error: {msg}")
+        }
+        Err(other) => panic!("expected a handshake rejection, got {other:?}"),
+    }
+    assert!(worker.is_err(), "the mismatched worker must not come up");
+}

@@ -25,6 +25,7 @@ fn spec(family: &str, d: usize, steps: u64, world: usize) -> DistSpec {
         kappa: 4.0,
         sigma: 0.15,
         init: 0.8,
+        ..DistSpec::default()
     }
 }
 

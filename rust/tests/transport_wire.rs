@@ -9,7 +9,7 @@ use zo_adam::comm::transport::{
 };
 use zo_adam::testkit::{property, Gen};
 
-const KINDS: [FrameKind; 7] = [
+const KINDS: [FrameKind; 9] = [
     FrameKind::Hello,
     FrameKind::Barrier,
     FrameKind::FpF16,
@@ -17,6 +17,8 @@ const KINDS: [FrameKind; 7] = [
     FrameKind::Ef,
     FrameKind::Loss,
     FrameKind::Bye,
+    FrameKind::EfPartial,
+    FrameKind::FpPartial,
 ];
 
 fn arbitrary_header(g: &mut Gen) -> FrameHeader {
@@ -167,6 +169,54 @@ fn prop_schedule_mismatches_are_typed_errors() {
             Err(TransportError::ChunkMismatch { .. })
         ));
     });
+}
+
+#[test]
+fn partial_kinds_have_pinned_wire_values() {
+    // The tree's leader-combine kinds are wire protocol now: their u16
+    // values must never drift (an old binary would decode a new frame
+    // as BadKind, not as the wrong collective).
+    for (kind, want) in [(FrameKind::EfPartial, 8u16), (FrameKind::FpPartial, 9u16)] {
+        let header = FrameHeader::new(kind, 3, 5, 64, 0);
+        let mut bytes = Vec::new();
+        encode_frame(header, &[], &mut bytes);
+        assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), want, "{kind:?}");
+        let mut sink = Vec::new();
+        assert_eq!(decode_frame(&bytes, &mut sink).unwrap().kind, kind);
+    }
+}
+
+#[test]
+fn member_hello_outside_the_group_is_group_mismatch() {
+    // The leader-side handshake validator: a rank whose group (under
+    // the *receiver's* topology) is led by someone else gets a typed
+    // GroupMismatch — the mismatched `--topology` failure mode surfaces
+    // as an error naming both ranks, never a mis-wired edge.
+    use zo_adam::comm::transport::tcp::validate_member;
+    use zo_adam::comm::Topology;
+    let world = 9;
+    let fp: u64 = 0xd00d;
+    let shape = Topology::Tree { group: 4 }.tree_shape(world).unwrap();
+    let hello = |rank: usize| {
+        FrameHeader::new(FrameKind::Hello, rank, 0, world, zo_adam::comm::compress::CODEC_CHUNK)
+    };
+    // ranks 5..8 belong to leader 4
+    validate_member(&hello(5), &fp.to_le_bytes(), world, fp, shape, 4).unwrap();
+    for (rank, leader) in [(5usize, 8usize), (8, 4), (4, 4), (1, 4)] {
+        let err = validate_member(&hello(rank), &fp.to_le_bytes(), world, fp, shape, leader)
+            .unwrap_err();
+        match err {
+            TransportError::GroupMismatch { leader: l, rank: r } => {
+                assert_eq!((l as usize, r as usize), (leader, rank));
+            }
+            other => panic!("rank {rank} at leader {leader}: {other:?}"),
+        }
+    }
+    // ...and a fingerprint mismatch still loses to the handshake check
+    assert!(matches!(
+        validate_member(&hello(5), &fp.to_le_bytes(), world, 0xbad, shape, 4),
+        Err(TransportError::Handshake(_))
+    ));
 }
 
 #[test]
