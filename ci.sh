@@ -62,10 +62,26 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
         echo "table and sweep server paths identical under --topology $topo"
     done
 
+    # Chaos smoke (ISSUE 7): seeded fault injection against the same
+    # bitwise contract. Under BOTH reduction schedules, a run whose
+    # rank-1 edge is severed mid-stream (drop: reconnect + resume-at-
+    # seq) and one whose frames are delayed (straggler+jitter) must
+    # finish with results bit-for-bit identical to the clean in-process
+    # reference — --check-parity makes `zo-adam chaos` exit nonzero on
+    # any cell that fails to recover, breaks parity, never actually
+    # resumed, or overruns its wall budget. Same seed = same faults;
+    # this smoke is as reproducible as the parity one above.
+    step "zo-adam chaos (drop/straggler recovery, star + tree3, bitwise parity)"
+    cargo run --release --bin zo-adam -- chaos \
+        --scenarios drop,straggler,jitter --topologies star,tree3 \
+        --ranks 5 --family 01adam --d 3000 --steps 20 \
+        --recv-deadline 10 --resume-window 5 --cell-budget 120 --check-parity
+
     # Perf-regression gate: quick-window hot-path suite (codec /
     # allreduce / EF server-leg sweep-vs-table / tree-vs-star transport
-    # rounds / optimizer-step / materialized 0/1 Adam run) that
-    # compares the step/, server_leg/ AND transport/tree/ medians
+    # rounds / chaos recovery RTTs / optimizer-step / materialized 0/1
+    # Adam run) that compares the step/, server_leg/, transport/tree/
+    # AND transport/chaos/ medians
     # against the committed BENCH_PR2.json and
     # FAILS on a >30% regression. A baseline committed with
     # "bootstrap": true (no toolchain on the authoring container)
@@ -78,7 +94,7 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
     # bump PR_INDEX when a new PR starts). `zo-adam bench` prints the
     # cross-snapshot p50/steps-per-s trend at the end of every run, so
     # drift that stays under the 30% gate is still visible across PRs.
-    PR_INDEX="${PR_INDEX:-6}"
+    PR_INDEX="${PR_INDEX:-7}"
     step "zo-adam bench (perf gate vs BENCH_PR2.json, history BENCH_PR${PR_INDEX}.json)"
     ZO_BENCH_QUICK=1 cargo run --release --bin zo-adam -- bench --quick \
         --json BENCH_PR2.json --baseline BENCH_PR2.json --tolerance 0.30 \

@@ -26,6 +26,18 @@
 //! makes literal packed bytes on a socket bit-compatible with the
 //! in-process path.
 //!
+//! **Fault tolerance (ISSUE 7).** The transport-backed forms are
+//! written as a strict request/response frame schedule in fixed rank
+//! order, which makes every `send_wire`/`recv_expect` call here a
+//! *frame-boundary resume point*: if a connection drops between two
+//! calls, the TCP backend's reconnect-with-resume handshake
+//! retransmits exactly the frames the peer had not yet processed and
+//! the schedule continues at the same position. Because the server leg
+//! accumulates in fixed worker order regardless of *when* each frame
+//! arrived, a recovered run is bit-for-bit the uninterrupted run —
+//! the collectives need no fault-handling code of their own
+//! (DESIGN.md §Fault model; `tests/chaos_matrix.rs`).
+//!
 //! The in-process variants are engine-aware (DESIGN.md §3 and
 //! §Hot-path): the `_eng` variants parallelize the per-worker
 //! compress/error-feedback phase *and* the server leg — the latter as

@@ -63,6 +63,13 @@ pub enum FrameKind {
     /// A group leader's fp16 partial sum riding up to the root (tree
     /// topology; same payload layout as [`FrameKind::FpF16`]).
     FpPartial = 9,
+    /// Reconnect-after-drop handshake (ISSUE 7): `seq` carries the
+    /// count of frames the sender has *fully received* on the dead
+    /// edge, `dim`/`chunk`/payload mirror [`FrameKind::Hello`]'s
+    /// world/codec/fingerprint checks. Each side retransmits exactly
+    /// the frames the other is missing, so a resumed connection
+    /// re-enters the round at the precise frame boundary it left.
+    Resume = 10,
 }
 
 impl FrameKind {
@@ -77,6 +84,7 @@ impl FrameKind {
             7 => FrameKind::Bye,
             8 => FrameKind::EfPartial,
             9 => FrameKind::FpPartial,
+            10 => FrameKind::Resume,
             _ => return None,
         })
     }
@@ -234,8 +242,21 @@ pub enum TransportError {
     /// A rank contacted a tree leader it does not belong to (tree
     /// topology handshake: the member's group must be led by `leader`).
     GroupMismatch { leader: u32, rank: u32 },
-    /// Handshake-time validation failure (bad rank, world or spec
-    /// fingerprint mismatch, timeout).
+    /// No frame arrived from `peer` within the recv deadline. A dead
+    /// or wedged peer surfaces as this instead of an infinite block;
+    /// it is terminal (resume only heals *detected* link death —
+    /// a silent peer gets no retransmission target).
+    Timeout { peer: usize, waited_ms: u64 },
+    /// Handshake spec fingerprints disagree: the peer was launched
+    /// with a different family/d/steps/seed/topology spec.
+    FingerprintMismatch { want: u64, got: u64 },
+    /// Handshake world sizes disagree.
+    WorldMismatch { want: u32, got: u32 },
+    /// Two workers presented the same rank during the handshake.
+    DuplicateRank { rank: u32 },
+    /// Handshake-time validation failure (bad rank range, malformed
+    /// hello, unreachable root) — the residue the structured variants
+    /// above don't cover.
     Handshake(String),
 }
 
@@ -257,6 +278,10 @@ impl fmt::Display for TransportError {
             DimMismatch { want, got } => write!(f, "tensor dim mismatch: this rank reduces d={want}, peer sent d={got}"),
             ChunkMismatch { want, got } => write!(f, "codec chunk mismatch: this build packs at {want}, peer at {got}"),
             GroupMismatch { leader, rank } => write!(f, "rank {rank} belongs to a different tree group than leader {leader} (mismatched --topology?)"),
+            Timeout { peer, waited_ms } => write!(f, "timed out waiting on rank {peer} after {waited_ms} ms"),
+            FingerprintMismatch { want, got } => write!(f, "spec fingerprint mismatch: this rank runs {want:#018x}, peer presented {got:#018x} (ranks launched with different specs?)"),
+            WorldMismatch { want, got } => write!(f, "world size mismatch: this rank expects {want} ranks, peer claims {got}"),
+            DuplicateRank { rank } => write!(f, "duplicate rank {rank} in the handshake (two workers launched with the same --rank?)"),
             Handshake(msg) => write!(f, "handshake failed: {msg}"),
         }
     }

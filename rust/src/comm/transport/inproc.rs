@@ -10,7 +10,8 @@
 //! [`group_topo`] additionally wires leader↔member edges for a tree
 //! topology's data plane.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
 
 use super::frame::{decode_frame, encode_frame, FrameHeader, TransportError};
 use super::Transport;
@@ -24,6 +25,10 @@ pub struct InProc {
     tx: Vec<Option<Sender<Vec<u8>>>>,
     /// `rx[i]` receives from rank i; workers only hold `rx[0]`.
     rx: Vec<Option<Receiver<Vec<u8>>>>,
+    /// Per-recv deadline (ISSUE 7): `None` = block forever (the
+    /// default — channel peers can't silently die without also
+    /// disconnecting, so deadlines are opt-in chaos armor here).
+    deadline: Option<Duration>,
 }
 
 /// Build a fully-wired `world`-rank group with star edges; index =
@@ -44,6 +49,7 @@ pub fn group_topo(world: usize, topo: Topology) -> Vec<InProc> {
             world,
             tx: (0..world).map(|_| None).collect(),
             rx: (0..world).map(|_| None).collect(),
+            deadline: None,
         })
         .collect();
     let (root, workers) = eps.split_at_mut(1);
@@ -99,8 +105,20 @@ impl Transport for InProc {
         let rx = self.rx[from]
             .as_ref()
             .unwrap_or_else(|| panic!("no in-proc edge {from} -> {}", self.rank));
-        let bytes = rx.recv().map_err(|_| TransportError::Closed { peer: from })?;
+        let bytes = match self.deadline {
+            None => rx.recv().map_err(|_| TransportError::Closed { peer: from })?,
+            Some(d) => rx.recv_timeout(d).map_err(|e| match e {
+                RecvTimeoutError::Timeout => {
+                    TransportError::Timeout { peer: from, waited_ms: d.as_millis() as u64 }
+                }
+                RecvTimeoutError::Disconnected => TransportError::Closed { peer: from },
+            })?,
+        };
         decode_frame(&bytes, payload)
+    }
+
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
     }
 }
 
@@ -147,6 +165,33 @@ mod tests {
         let err =
             root.send(1, FrameHeader::new(FrameKind::Barrier, 0, 0, 0, 0), &[]).unwrap_err();
         assert!(matches!(err, TransportError::Closed { peer: 1 }), "{err}");
+    }
+
+    #[test]
+    fn deadline_turns_a_dropped_frame_into_a_timeout() {
+        use super::super::chaos::{Chaos, FaultKind, FaultPlan, FaultRule};
+        let mut eps = group(2);
+        let w = eps.pop().unwrap();
+        let mut root = eps.pop().unwrap();
+        root.set_recv_deadline(Some(Duration::from_millis(50)));
+        // The wrapper swallows the worker's first frame: without a
+        // deadline the root would block forever; with one, the loss
+        // surfaces as a typed Timeout within the bound.
+        let plan = FaultPlan::new(1).with(FaultRule::new(FaultKind::DropFrame).at_frame(1));
+        let mut w = Chaos::new(w, plan);
+        w.send(0, FrameHeader::new(FrameKind::Loss, 1, 1, 1, 0), &[0, 0, 0, 0]).unwrap();
+        let t0 = std::time::Instant::now();
+        let mut payload = Vec::new();
+        let err = root.recv(1, &mut payload).unwrap_err();
+        assert!(matches!(err, TransportError::Timeout { peer: 1, .. }), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "timeout overslept its deadline");
+        // Clearing the deadline restores blocking semantics; a real
+        // frame still round-trips through the wrapper.
+        root.set_recv_deadline(None);
+        w.send(0, FrameHeader::new(FrameKind::Loss, 1, 2, 1, 0), &[1, 2, 3, 4]).unwrap();
+        let header = root.recv(1, &mut payload).unwrap();
+        assert_eq!(header.seq, 2);
+        assert_eq!(&payload, &[1, 2, 3, 4]);
     }
 
     #[test]

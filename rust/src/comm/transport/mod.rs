@@ -38,10 +38,12 @@
 //! and param gathers) stays root-star on the always-present rank-0
 //! edges under every topology.
 
+pub mod chaos;
 pub mod frame;
 pub mod inproc;
 pub mod tcp;
 
+pub use chaos::{Chaos, FaultKind, FaultPlan, FaultRule, Scenario};
 pub use frame::{
     decode_frame, decode_header, encode_frame, FrameHeader, FrameKind, TransportError,
     HEADER_BYTES, MAGIC, MAX_PAYLOAD, VERSION,
@@ -49,6 +51,7 @@ pub use frame::{
 
 use crate::comm::compress::OneBit;
 use crate::comm::topology::Topology;
+use std::time::Duration;
 
 /// A connected rank of a transport group: framed point-to-point
 /// send/recv. Only root↔worker edges are required (collectives are
@@ -68,6 +71,18 @@ pub trait Transport: Send {
     /// Schedule-level validation (kind/rank/seq/dim/chunk) is the
     /// caller's job via [`FrameHeader::expect`].
     fn recv(&mut self, from: usize, payload: &mut Vec<u8>) -> Result<FrameHeader, TransportError>;
+    /// Bound every subsequent [`Transport::recv`]: a peer silent for
+    /// longer surfaces [`TransportError::Timeout`] instead of blocking
+    /// forever. `None` restores the backend default. Default impl:
+    /// no-op (backends without a clock keep blocking semantics).
+    fn set_recv_deadline(&mut self, _deadline: Option<Duration>) {}
+    /// Successful reconnect-with-resume handshakes this endpoint has
+    /// performed (0 for backends without recovery). Chaos scenarios
+    /// assert this is nonzero to prove a drop was *recovered*, not
+    /// silently absent.
+    fn resumes(&self) -> u64 {
+        0
+    }
 }
 
 /// One rank's connection plus the persistent scratch its collectives
@@ -133,6 +148,16 @@ impl RankLink {
     /// data).
     pub fn set_topology(&mut self, topology: Topology) {
         self.topology = topology;
+    }
+
+    /// Bound every recv on this link (see [`Transport::set_recv_deadline`]).
+    pub fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
+        self.tp.set_recv_deadline(deadline);
+    }
+
+    /// Successful drop-recoveries the underlying transport performed.
+    pub fn resumes(&self) -> u64 {
+        self.tp.resumes()
     }
 
     /// Total framed bytes this rank has sent to `peer`.

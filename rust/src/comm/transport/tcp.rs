@@ -8,9 +8,11 @@
 //! validates all four — a worker launched with different CLI
 //! arguments, a different model dim, a different codec build **or a
 //! different `--topology`** (the fingerprint covers the topology
-//! spelling) is rejected with a typed
-//! [`TransportError::Handshake`]/mismatch error before any training
-//! traffic moves — then acks each worker with the same Hello shape.
+//! spelling) is rejected with a typed mismatch error
+//! ([`TransportError::WorldMismatch`] /
+//! [`TransportError::FingerprintMismatch`] /
+//! [`TransportError::DuplicateRank`] / …) before any training traffic
+//! moves — then acks each worker with the same Hello shape.
 //!
 //! Under a tree topology ([`Tcp::root_topo`] / [`Tcp::connect_topo`])
 //! the bootstrap adds the leader↔member data-plane edges: each leader
@@ -24,43 +26,139 @@
 //! ([`validate_member`] — a rank from a different group is a typed
 //! [`TransportError::GroupMismatch`]).
 //!
+//! # Fault tolerance (ISSUE 7; DESIGN.md §Fault model)
+//!
 //! Sockets run with `TCP_NODELAY` (collective legs are latency-bound
-//! request/response exchanges) and generous read/write timeouts so a
-//! hung peer surfaces as an I/O error instead of a silent stall.
+//! request/response exchanges) and a configurable **per-recv
+//! deadline** ([`TcpOpts::recv_deadline`]): a peer silent for longer
+//! surfaces as a typed [`TransportError::Timeout`], never an infinite
+//! block. Detected link death (EOF / reset / broken pipe) on a
+//! root↔worker edge is **recoverable**: the worker re-dials the root
+//! with jittered exponential backoff, both sides exchange a
+//! [`FrameKind::Resume`] handshake carrying how many frames each has
+//! fully received on the edge, and each retransmits exactly the gap
+//! from a small per-peer ring of its most recent frames
+//! ([`RETAINED_FRAMES`]). The collectives are strict request/response
+//! exchanges — at most 2 unacknowledged frames in flight per
+//! direction — so the ring provably covers a connection loss, and
+//! because the schedule's accumulation order never changes, a
+//! recovered run is **bitwise identical** to an uninterrupted one.
+//! Leader↔member tree edges are deliberately *not* resumable (neither
+//! side retains a dial/accept path for them): a severed member edge
+//! fails fast with its typed error, bounded by the deadline.
 
+use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
+use super::chaos::{self, FaultKind, FaultPlan};
 use super::frame::{decode_header, FrameHeader, FrameKind, TransportError, HEADER_BYTES};
 use super::Transport;
 use crate::comm::compress::CODEC_CHUNK;
 use crate::comm::topology::{Topology, TreeShape};
 
-/// How long root waits for all workers to connect / a worker retries
-/// connecting to a not-yet-listening root.
+/// Default bootstrap window: how long root waits for all workers to
+/// connect / a worker keeps re-dialing a not-yet-listening root
+/// ([`TcpOpts::connect_timeout`] overrides).
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
 /// Per-connection budget for the Hello frame itself: a stray or
 /// stalled connection (port scanner, half-open socket) may cost the
 /// root at most this long before being dropped — it must not consume
 /// the whole group deadline or kill the launch.
 const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
-/// Per-read/write socket timeout during training: every step
-/// exchanges frames, so a peer silent this long is gone.
+/// Default per-recv deadline during training: every step exchanges
+/// frames, so a peer silent this long is gone.
 const IO_TIMEOUT: Duration = Duration::from_secs(120);
+/// Default wall-clock budget for one drop-recovery (redial/re-accept
+/// plus the resume handshake).
+const RESUME_WINDOW: Duration = Duration::from_secs(5);
+/// Encoded frames retained per peer for resume retransmission. The
+/// collectives are strict request/response schedules: a sender runs at
+/// most 2 frames ahead of its peer's reads on any edge (e.g. a
+/// worker's Loss(s) then next round's Ef(s+1) before the root's
+/// broadcast reply), so 4 retained frames provably cover the gap a
+/// single connection loss can open.
+const RETAINED_FRAMES: usize = 4;
+
+/// Tunables for the TCP bootstrap and recovery state machine. All
+/// deadlines are wall-clock; `Default` preserves the pre-ISSUE-7
+/// behavior (30 s handshake window, 120 s per-recv deadline).
+#[derive(Clone, Copy, Debug)]
+pub struct TcpOpts {
+    /// Total window for the bootstrap dial/accept phase, retried with
+    /// jittered exponential backoff (`--connect-timeout`).
+    pub connect_timeout: Duration,
+    /// Per-recv deadline during training (`--recv-deadline`): a peer
+    /// silent for longer is a typed [`TransportError::Timeout`].
+    pub recv_deadline: Duration,
+    /// Wall-clock budget for one reconnect-with-resume
+    /// (`--resume-window`).
+    pub resume_window: Duration,
+    /// Total successful resumes allowed per endpoint before link death
+    /// becomes terminal — a backstop against flapping networks
+    /// consuming unbounded recovery work.
+    pub max_resumes: u32,
+}
+
+impl Default for TcpOpts {
+    fn default() -> TcpOpts {
+        TcpOpts {
+            connect_timeout: HANDSHAKE_TIMEOUT,
+            recv_deadline: IO_TIMEOUT,
+            resume_window: RESUME_WINDOW,
+            max_resumes: 16,
+        }
+    }
+}
+
+/// What an endpoint needs to rebuild a dead root↔worker edge. Only
+/// the root (which keeps its listener) and workers' rank-0 edges
+/// (which keep the root's address) are resumable.
+struct ResumeCtx {
+    fingerprint: u64,
+    /// Worker side: the root address to re-dial.
+    root_addr: Option<String>,
+    /// Root side: the bootstrap listener, kept nonblocking, to
+    /// re-accept resuming workers on.
+    listener: Option<TcpListener>,
+    window: Duration,
+    attempts_left: u32,
+}
 
 /// One rank of a TCP group.
 pub struct Tcp {
     rank: usize,
     world: usize,
     /// `conns[i]` is the socket to rank i; root holds 1..world,
-    /// workers hold only index 0.
+    /// workers hold only index 0 (plus leader/member tree edges).
     conns: Vec<Option<TcpStream>>,
+    /// Frames fully written to each peer — the resume protocol's
+    /// send-side clock. Handshake frames are not counted (both sides
+    /// start at 0 after bootstrap).
+    sent: Vec<u64>,
+    /// Frames fully read from each peer — the resume protocol's
+    /// receive-side clock, and what a [`FrameKind::Resume`] hello
+    /// carries in its `seq` field.
+    rcvd: Vec<u64>,
+    /// Ring of the newest encoded frames sent to each peer
+    /// (frame index, header+payload bytes), [`RETAINED_FRAMES`] deep.
+    /// Popped buffers are reused for the next send, so steady state
+    /// allocates nothing.
+    retained: Vec<VecDeque<(u64, Vec<u8>)>>,
+    /// Current per-recv deadline (socket read timeout).
+    recv_deadline: Duration,
+    /// Recovery context; `None` = every link death is terminal.
+    resume: Option<ResumeCtx>,
+    /// Seeded fault injection (chaos scenarios); `None` in production.
+    fault: Option<FaultPlan>,
+    /// Successful resume handshakes this endpoint performed.
+    resumes: u64,
 }
 
-fn configure(stream: &TcpStream) -> Result<(), TransportError> {
+fn configure(stream: &TcpStream, recv_deadline: Duration) -> Result<(), TransportError> {
     stream.set_nodelay(true)?;
-    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_read_timeout(Some(recv_deadline))?;
     stream.set_write_timeout(Some(IO_TIMEOUT))?;
     Ok(())
 }
@@ -115,11 +213,103 @@ fn read_exact_typed(
     })
 }
 
+/// Did a socket read give up at its deadline (as opposed to failing)?
+fn is_timeout(e: &TransportError) -> bool {
+    matches!(e, TransportError::Io(io) if matches!(
+        io.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    ))
+}
+
+/// Detected link death — the recoverable class: the connection is
+/// gone, so a resume handshake has a clean frame boundary to rebuild
+/// from. Deadline expiry ([`is_timeout`]) is deliberately *not* here:
+/// a silent-but-connected peer gives the resume protocol nothing to
+/// detect or retransmit, so it fails fast as [`TransportError::Timeout`].
+fn is_link_dead(e: &TransportError) -> bool {
+    match e {
+        TransportError::Closed { .. } | TransportError::Truncated { .. } => true,
+        TransportError::Io(io) => matches!(
+            io.kind(),
+            std::io::ErrorKind::ConnectionReset
+                | std::io::ErrorKind::ConnectionAborted
+                | std::io::ErrorKind::BrokenPipe
+                | std::io::ErrorKind::UnexpectedEof
+                | std::io::ErrorKind::NotConnected
+        ),
+        _ => false,
+    }
+}
+
+/// Dial `addr`, retrying with jittered exponential backoff (2 ms
+/// doubling to a 200 ms cap; deterministic per-(salt, attempt) jitter
+/// in [50%, 150%) so a world of redialing workers doesn't stampede in
+/// lockstep) until `deadline`. Failure is a typed
+/// [`TransportError::Timeout`] against `peer`.
+fn connect_backoff(
+    addr: &str,
+    deadline: Instant,
+    salt: u64,
+    peer: usize,
+) -> Result<TcpStream, TransportError> {
+    let started = Instant::now();
+    let mut delay_ms: u64 = 2;
+    let mut attempt: u64 = 0;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                let now = Instant::now();
+                if now >= deadline {
+                    eprintln!(
+                        "[transport] gave up dialing {addr} after {} attempts: {e}",
+                        attempt + 1
+                    );
+                    return Err(TransportError::Timeout {
+                        peer,
+                        waited_ms: started.elapsed().as_millis() as u64,
+                    });
+                }
+                let jitter = chaos::mix(&[salt, attempt]) % delay_ms.max(1);
+                let sleep = Duration::from_millis((delay_ms / 2 + jitter).max(1));
+                std::thread::sleep(sleep.min(deadline.saturating_duration_since(now)));
+                delay_ms = (delay_ms * 2).min(200);
+                attempt += 1;
+            }
+        }
+    }
+}
+
 impl Tcp {
+    fn fresh(rank: usize, world: usize, recv_deadline: Duration) -> Tcp {
+        Tcp {
+            rank,
+            world,
+            conns: (0..world).map(|_| None).collect(),
+            sent: vec![0; world],
+            rcvd: vec![0; world],
+            retained: (0..world).map(|_| VecDeque::new()).collect(),
+            recv_deadline,
+            resume: None,
+            fault: None,
+            resumes: 0,
+        }
+    }
+
     /// Rank 0: accept `world − 1` workers on `listener` under the star
     /// topology.
     pub fn root(listener: TcpListener, world: usize, fingerprint: u64) -> Result<Tcp, TransportError> {
         Tcp::root_topo(listener, world, fingerprint, Topology::Star)
+    }
+
+    /// [`Tcp::root_topo_opts`] with default deadlines.
+    pub fn root_topo(
+        listener: TcpListener,
+        world: usize,
+        fingerprint: u64,
+        topo: Topology,
+    ) -> Result<Tcp, TransportError> {
+        Tcp::root_topo_opts(listener, world, fingerprint, topo, &TcpOpts::default())
     }
 
     /// Rank 0 of a `topo` group: accept `world − 1` workers, validating
@@ -128,19 +318,22 @@ impl Tcp {
     /// handshaked — a misconfigured launch dies here, not mid-schedule.
     /// Under a tree, each member of groups i ≥ 1 is acked with its
     /// leader's member-listener address appended to the fingerprint, so
-    /// a member never dials a leader that isn't bound yet.
-    pub fn root_topo(
+    /// a member never dials a leader that isn't bound yet. The
+    /// listener is retained (nonblocking) afterwards: it is the root's
+    /// re-accept path for resuming workers.
+    pub fn root_topo_opts(
         listener: TcpListener,
         world: usize,
         fingerprint: u64,
         topo: Topology,
+        opts: &TcpOpts,
     ) -> Result<Tcp, TransportError> {
         assert!(world >= 1);
         let shape = topo.tree_shape(world);
         let mut pending: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
         let mut hello_payload: Vec<Vec<u8>> = vec![Vec::new(); world];
         listener.set_nonblocking(true)?;
-        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+        let deadline = Instant::now() + opts.connect_timeout;
         let mut connected = 0usize;
         while connected + 1 < world {
             let (mut stream, _) = match listener.accept() {
@@ -158,7 +351,7 @@ impl Tcp {
                 Err(e) => return Err(e.into()),
             };
             stream.set_nonblocking(false)?;
-            configure(&stream)?;
+            configure(&stream, opts.recv_deadline)?;
             // A connection that stalls or talks a different protocol
             // must cost at most HELLO_TIMEOUT and only itself: drop it
             // and keep accepting. Anything that *does* speak a valid
@@ -173,7 +366,7 @@ impl Tcp {
                     continue;
                 }
             };
-            stream.set_read_timeout(Some(IO_TIMEOUT))?;
+            stream.set_read_timeout(Some(opts.recv_deadline))?;
             validate_hello(&hello, &payload, world, fingerprint)?;
             let r = hello.rank as usize;
             if r == 0 || r >= world {
@@ -182,7 +375,7 @@ impl Tcp {
                 )));
             }
             if pending[r].is_some() {
-                return Err(TransportError::Handshake(format!("duplicate rank {r}")));
+                return Err(TransportError::DuplicateRank { rank: hello.rank });
             }
             pending[r] = Some(stream);
             hello_payload[r] = payload;
@@ -202,7 +395,7 @@ impl Tcp {
                 }
             }
         }
-        let mut conns: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+        let mut me = Tcp::fresh(0, world, opts.recv_deadline);
         for r in 1..world {
             let mut stream = pending[r].take().expect("all ranks connected");
             let mut ack = fingerprint.to_le_bytes().to_vec();
@@ -213,9 +406,16 @@ impl Tcp {
             }
             // ack with the root's own Hello
             write_frame(&mut stream, hello_header(0, world), &ack)?;
-            conns[r] = Some(stream);
+            me.conns[r] = Some(stream);
         }
-        Ok(Tcp { rank: 0, world, conns })
+        me.resume = Some(ResumeCtx {
+            fingerprint,
+            root_addr: None,
+            listener: Some(listener),
+            window: opts.resume_window,
+            attempts_left: opts.max_resumes,
+        });
+        Ok(me)
     }
 
     /// Worker: connect to the root at `addr` (retrying while the root
@@ -229,12 +429,7 @@ impl Tcp {
         Tcp::connect_topo(addr, rank, world, fingerprint, Topology::Star)
     }
 
-    /// Worker of a `topo` group: the star handshake, plus the tree
-    /// data-plane edges. A leader of a multi-member group i ≥ 1 binds
-    /// its member listener *before* the Hello (so the address it
-    /// announces is already accepting when the root releases the
-    /// members) and accepts its group after the ack; a member of groups
-    /// i ≥ 1 dials the leader address relayed in the root's ack.
+    /// [`Tcp::connect_topo_opts`] with default deadlines.
     pub fn connect_topo(
         addr: &str,
         rank: usize,
@@ -242,27 +437,37 @@ impl Tcp {
         fingerprint: u64,
         topo: Topology,
     ) -> Result<Tcp, TransportError> {
+        Tcp::connect_topo_opts(addr, rank, world, fingerprint, topo, &TcpOpts::default())
+    }
+
+    /// Worker of a `topo` group: the star handshake, plus the tree
+    /// data-plane edges. A leader of a multi-member group i ≥ 1 binds
+    /// its member listener *before* the Hello (so the address it
+    /// announces is already accepting when the root releases the
+    /// members) and accepts its group after the ack; a member of groups
+    /// i ≥ 1 dials the leader address relayed in the root's ack. The
+    /// root's address is retained: it is this worker's re-dial path
+    /// for resuming a dropped rank-0 edge.
+    pub fn connect_topo_opts(
+        addr: &str,
+        rank: usize,
+        world: usize,
+        fingerprint: u64,
+        topo: Topology,
+        opts: &TcpOpts,
+    ) -> Result<Tcp, TransportError> {
         if rank == 0 || rank >= world {
             return Err(TransportError::Handshake(format!(
                 "rank {rank} is not a worker rank of a {world}-rank group (valid: 1..{world})"
             )));
         }
         let shape = topo.tree_shape(world);
-        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
-        let mut stream = loop {
-            match TcpStream::connect(addr) {
-                Ok(s) => break s,
-                Err(e) => {
-                    if Instant::now() > deadline {
-                        return Err(TransportError::Handshake(format!(
-                            "could not reach root at {addr}: {e}"
-                        )));
-                    }
-                    std::thread::sleep(Duration::from_millis(20));
-                }
-            }
-        };
-        configure(&stream)?;
+        let deadline = Instant::now() + opts.connect_timeout;
+        let mut stream = connect_backoff(addr, deadline, rank as u64, 0)?;
+        // The ack may be withheld until the whole world handshakes, so
+        // the bootstrap read runs under the connect window, not the
+        // (possibly much tighter) training deadline.
+        configure(&stream, opts.connect_timeout.max(opts.recv_deadline))?;
         let member_listener = match shape {
             Some(s)
                 if s.is_leader(rank) && s.group_of(rank) >= 1
@@ -290,12 +495,12 @@ impl Tcp {
                 ack.rank
             )));
         }
-        let mut conns: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
-        conns[0] = Some(stream);
-        let mut me = Tcp { rank, world, conns };
+        stream.set_read_timeout(Some(opts.recv_deadline))?;
+        let mut me = Tcp::fresh(rank, world, opts.recv_deadline);
+        me.conns[0] = Some(stream);
         if let Some(shape) = shape {
             if let Some(listener) = member_listener {
-                me.accept_members(listener, shape, fingerprint)?;
+                me.accept_members(listener, shape, fingerprint, opts)?;
             } else if shape.group_of(rank) >= 1 {
                 let leader_addr = std::str::from_utf8(&payload[8..])
                     .ok()
@@ -306,9 +511,16 @@ impl Tcp {
                             "rank {rank}'s ack carried no usable leader address"
                         ))
                     })?;
-                me.dial_leader(&leader_addr, shape, fingerprint)?;
+                me.dial_leader(&leader_addr, shape, fingerprint, opts)?;
             }
         }
+        me.resume = Some(ResumeCtx {
+            fingerprint,
+            root_addr: Some(addr.to_string()),
+            listener: None,
+            window: opts.resume_window,
+            attempts_left: opts.max_resumes,
+        });
         Ok(me)
     }
 
@@ -320,10 +532,11 @@ impl Tcp {
         listener: TcpListener,
         shape: TreeShape,
         fingerprint: u64,
+        opts: &TcpOpts,
     ) -> Result<(), TransportError> {
         let mut missing = shape.group_size(shape.group_of(self.rank)) - 1;
         listener.set_nonblocking(true)?;
-        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+        let deadline = Instant::now() + opts.connect_timeout;
         while missing > 0 {
             let (mut stream, _) = match listener.accept() {
                 Ok(s) => s,
@@ -340,7 +553,7 @@ impl Tcp {
                 Err(e) => return Err(e.into()),
             };
             stream.set_nonblocking(false)?;
-            configure(&stream)?;
+            configure(&stream, opts.recv_deadline)?;
             stream.set_read_timeout(Some(HELLO_TIMEOUT))?;
             let mut payload = Vec::new();
             let hello = match read_frame(&mut stream, &mut payload) {
@@ -350,11 +563,11 @@ impl Tcp {
                     continue;
                 }
             };
-            stream.set_read_timeout(Some(IO_TIMEOUT))?;
+            stream.set_read_timeout(Some(opts.recv_deadline))?;
             validate_member(&hello, &payload, self.world, fingerprint, shape, self.rank)?;
             let r = hello.rank as usize;
             if self.conns[r].is_some() {
-                return Err(TransportError::Handshake(format!("duplicate member rank {r}")));
+                return Err(TransportError::DuplicateRank { rank: hello.rank });
             }
             write_frame(
                 &mut stream,
@@ -374,24 +587,12 @@ impl Tcp {
         addr: &str,
         shape: TreeShape,
         fingerprint: u64,
+        opts: &TcpOpts,
     ) -> Result<(), TransportError> {
         let leader = shape.leader_of(self.rank);
-        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
-        let mut stream = loop {
-            match TcpStream::connect(addr) {
-                Ok(s) => break s,
-                Err(e) => {
-                    if Instant::now() > deadline {
-                        return Err(TransportError::Handshake(format!(
-                            "rank {} could not reach its leader {leader} at {addr}: {e}",
-                            self.rank
-                        )));
-                    }
-                    std::thread::sleep(Duration::from_millis(20));
-                }
-            }
-        };
-        configure(&stream)?;
+        let deadline = Instant::now() + opts.connect_timeout;
+        let mut stream = connect_backoff(addr, deadline, self.rank as u64, leader)?;
+        configure(&stream, opts.connect_timeout.max(opts.recv_deadline))?;
         write_frame(&mut stream, hello_header(self.rank, self.world), &fingerprint.to_le_bytes())?;
         let mut payload = Vec::new();
         let ack = read_frame(&mut stream, &mut payload)?;
@@ -402,6 +603,7 @@ impl Tcp {
                 ack.rank
             )));
         }
+        stream.set_read_timeout(Some(opts.recv_deadline))?;
         self.conns[leader] = Some(stream);
         Ok(())
     }
@@ -419,14 +621,30 @@ impl Tcp {
         fingerprint: u64,
         topo: Topology,
     ) -> Result<Vec<Tcp>, TransportError> {
+        Tcp::loopback_group_opts(world, fingerprint, topo, &TcpOpts::default())
+    }
+
+    /// [`Tcp::loopback_group_topo`] with explicit deadlines — the
+    /// chaos runner's harness (tight recv deadlines, short resume
+    /// windows, generous resume caps for benches).
+    pub fn loopback_group_opts(
+        world: usize,
+        fingerprint: u64,
+        topo: Topology,
+        opts: &TcpOpts,
+    ) -> Result<Vec<Tcp>, TransportError> {
         let listener = TcpListener::bind(("127.0.0.1", 0))?;
         let addr = listener.local_addr()?.to_string();
+        let opts = *opts;
         std::thread::scope(|s| {
-            let root = s.spawn(move || Tcp::root_topo(listener, world, fingerprint, topo));
+            let root =
+                s.spawn(move || Tcp::root_topo_opts(listener, world, fingerprint, topo, &opts));
             let workers: Vec<_> = (1..world)
                 .map(|r| {
                     let addr = addr.clone();
-                    s.spawn(move || Tcp::connect_topo(&addr, r, world, fingerprint, topo))
+                    s.spawn(move || {
+                        Tcp::connect_topo_opts(&addr, r, world, fingerprint, topo, &opts)
+                    })
                 })
                 .collect();
             let mut out = vec![root.join().expect("root thread")?];
@@ -437,10 +655,195 @@ impl Tcp {
         })
     }
 
-    fn stream(&mut self, peer: usize) -> &mut TcpStream {
-        self.conns[peer]
-            .as_mut()
-            .unwrap_or_else(|| panic!("no TCP edge {} -> {peer}", self.rank))
+    /// Install a seeded fault plan on this endpoint's send path
+    /// (chaos scenarios; see [`chaos`]).
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault = if plan.is_empty() { None } else { Some(plan) };
+    }
+
+    /// Write `bytes` (one encoded frame) to the edge socket.
+    fn write_edge(&mut self, to: usize, bytes: &[u8]) -> Result<(), TransportError> {
+        let stream = match self.conns[to].as_mut() {
+            Some(s) => s,
+            None => return Err(TransportError::Closed { peer: to }),
+        };
+        stream.write_all(bytes)?;
+        stream.flush()?;
+        Ok(())
+    }
+
+    /// Is recovery even possible for a dead edge to `peer`? Only root
+    /// edges are: the root retains its listener, workers retain the
+    /// root's address. Leader↔member edges fail fast by design.
+    fn can_recover(&self, peer: usize) -> bool {
+        match &self.resume {
+            None => false,
+            Some(ctx) => {
+                ctx.attempts_left > 0
+                    && if self.rank == 0 {
+                        ctx.listener.is_some()
+                    } else {
+                        peer == 0 && ctx.root_addr.is_some()
+                    }
+            }
+        }
+    }
+
+    /// The recovery state machine's reconnect + resume-at-frame step:
+    /// rebuild the dead edge to `peer` within the resume window, then
+    /// retransmit exactly the frames the peer is missing. On any
+    /// failure the *original* `cause` is returned — recovery is
+    /// best-effort and must never mask the typed error that triggered
+    /// it.
+    fn recover_edge(&mut self, peer: usize, cause: TransportError) -> Result<(), TransportError> {
+        let Some(mut ctx) = self.resume.take() else { return Err(cause) };
+        if ctx.attempts_left == 0 {
+            self.resume = Some(ctx);
+            return Err(cause);
+        }
+        ctx.attempts_left -= 1;
+        eprintln!(
+            "[transport] rank {}: edge to rank {peer} died ({cause}); attempting resume",
+            self.rank
+        );
+        let res = if self.rank == 0 { self.root_reaccept(&ctx, peer) } else { self.redial_root(&ctx) };
+        self.resume = Some(ctx);
+        match res {
+            Ok(()) => {
+                self.resumes += 1;
+                eprintln!(
+                    "[transport] rank {}: resumed edge to rank {peer} (resume #{})",
+                    self.rank, self.resumes
+                );
+                Ok(())
+            }
+            Err(e) => {
+                eprintln!("[transport] rank {}: resume of edge to rank {peer} failed: {e}", self.rank);
+                Err(cause)
+            }
+        }
+    }
+
+    /// Worker half of the resume protocol: sever what's left of the
+    /// old socket (so the root's blocked read fails promptly), re-dial
+    /// the root with jittered backoff, exchange [`FrameKind::Resume`]
+    /// hellos (`seq` = frames received on the edge, payload = run
+    /// fingerprint) and retransmit the root's gap.
+    fn redial_root(&mut self, ctx: &ResumeCtx) -> Result<(), TransportError> {
+        let addr = ctx.root_addr.as_deref().ok_or(TransportError::Closed { peer: 0 })?;
+        self.conns[0] = None;
+        let deadline = Instant::now() + ctx.window;
+        let mut stream = connect_backoff(addr, deadline, self.rank as u64, 0)?;
+        configure(&stream, ctx.window.min(self.recv_deadline))?;
+        let resume = FrameHeader::new(FrameKind::Resume, self.rank, self.rcvd[0], self.world, CODEC_CHUNK);
+        write_frame(&mut stream, resume, &ctx.fingerprint.to_le_bytes())?;
+        let mut payload = Vec::new();
+        let ack = read_frame(&mut stream, &mut payload)?;
+        validate_resume(&ack, &payload, self.world, ctx.fingerprint)?;
+        if ack.rank != 0 {
+            return Err(TransportError::RankMismatch { want: 0, got: ack.rank });
+        }
+        stream.set_read_timeout(Some(self.recv_deadline))?;
+        self.conns[0] = Some(stream);
+        // ack.seq = frames of ours the root has; refill its gap
+        self.retransmit(0, ack.seq)
+    }
+
+    /// Root half of the resume protocol: re-accept on the retained
+    /// listener until the edge to `want` is rebuilt. Other ranks may
+    /// resume first while we wait — serve them too (their own failed
+    /// ops would otherwise race this one's window).
+    fn root_reaccept(&mut self, ctx: &ResumeCtx, want: usize) -> Result<(), TransportError> {
+        let listener = ctx.listener.as_ref().ok_or(TransportError::Closed { peer: want })?;
+        self.conns[want] = None;
+        let deadline = Instant::now() + ctx.window;
+        loop {
+            let (mut stream, _) = match listener.accept() {
+                Ok(s) => s,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        return Err(TransportError::Timeout {
+                            peer: want,
+                            waited_ms: ctx.window.as_millis() as u64,
+                        });
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            };
+            stream.set_nonblocking(false)?;
+            configure(&stream, self.recv_deadline)?;
+            stream.set_read_timeout(Some(HELLO_TIMEOUT.min(ctx.window)))?;
+            let mut payload = Vec::new();
+            let hello = match read_frame(&mut stream, &mut payload) {
+                Ok(h) => h,
+                Err(e) => {
+                    eprintln!("[transport] dropping stray connection during resume: {e}");
+                    continue;
+                }
+            };
+            let r = hello.rank as usize;
+            if let Err(e) = validate_resume(&hello, &payload, self.world, ctx.fingerprint) {
+                eprintln!("[transport] rejecting resume attempt from rank {r}: {e}");
+                continue;
+            }
+            if r == 0 || r >= self.world {
+                eprintln!("[transport] rejecting resume from invalid rank {r}");
+                continue;
+            }
+            stream.set_read_timeout(Some(self.recv_deadline))?;
+            let ack = FrameHeader::new(FrameKind::Resume, 0, self.rcvd[r], self.world, CODEC_CHUNK);
+            write_frame(&mut stream, ack, &ctx.fingerprint.to_le_bytes())?;
+            self.conns[r] = Some(stream);
+            if let Err(e) = self.retransmit(r, hello.seq) {
+                eprintln!("[transport] retransmit to resumed rank {r} failed: {e}");
+                self.conns[r] = None;
+                if r == want {
+                    return Err(e);
+                }
+                continue;
+            }
+            if r == want {
+                return Ok(());
+            }
+            // A different rank rebuilt its edge while we waited for
+            // `want`; keep accepting within the window.
+        }
+    }
+
+    /// Retransmit every frame past `peer_has` (the peer's received
+    /// count) from the retained ring, oldest first. The ring bounds
+    /// what is recoverable: a gap beyond it is a typed failure, never
+    /// a silent hole in the schedule.
+    fn retransmit(&mut self, peer: usize, peer_has: u64) -> Result<(), TransportError> {
+        if peer_has > self.sent[peer] {
+            // Peer claims frames we never sent: resume state disagrees.
+            return Err(TransportError::SeqMismatch { want: self.sent[peer], got: peer_has });
+        }
+        if peer_has == self.sent[peer] {
+            return Ok(());
+        }
+        let oldest = self.retained[peer].front().map(|(i, _)| *i).unwrap_or(u64::MAX);
+        if peer_has + 1 < oldest {
+            return Err(TransportError::Handshake(format!(
+                "resume gap to rank {peer} ({} frames) exceeds the {RETAINED_FRAMES}-frame \
+                 retransmit ring",
+                self.sent[peer] - peer_has
+            )));
+        }
+        for k in 0..self.retained[peer].len() {
+            let idx = self.retained[peer][k].0;
+            if idx > peer_has {
+                // Retransmission bypasses fault hooks: it is the
+                // recovery path, not new scheduled traffic.
+                let bytes = std::mem::take(&mut self.retained[peer][k].1);
+                let res = self.write_edge(peer, &bytes);
+                self.retained[peer][k].1 = bytes;
+                res?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -448,20 +851,22 @@ fn hello_header(rank: usize, world: usize) -> FrameHeader {
     FrameHeader::new(FrameKind::Hello, rank, 0, world, CODEC_CHUNK)
 }
 
-fn validate_hello(
+/// Shared body of the Hello and Resume handshake checks: world size,
+/// codec chunk and run fingerprint must all agree — each mismatch is
+/// its own typed error so chaos-matrix assertions (and operators)
+/// match on types, not message substrings.
+fn validate_hs(
     header: &FrameHeader,
     payload: &[u8],
     world: usize,
     fingerprint: u64,
+    want_kind: FrameKind,
 ) -> Result<(), TransportError> {
-    if header.kind != FrameKind::Hello {
-        return Err(TransportError::KindMismatch { want: FrameKind::Hello, got: header.kind });
+    if header.kind != want_kind {
+        return Err(TransportError::KindMismatch { want: want_kind, got: header.kind });
     }
     if header.dim != world as u32 {
-        return Err(TransportError::Handshake(format!(
-            "world-size mismatch: this side runs {world} ranks, peer runs {}",
-            header.dim
-        )));
+        return Err(TransportError::WorldMismatch { want: world as u32, got: header.dim });
     }
     if header.chunk != CODEC_CHUNK as u32 {
         return Err(TransportError::ChunkMismatch {
@@ -476,12 +881,27 @@ fn validate_hello(
     }
     let theirs = u64::from_le_bytes(payload[..8].try_into().expect("8-byte fingerprint"));
     if theirs != fingerprint {
-        return Err(TransportError::Handshake(format!(
-            "run-spec fingerprint mismatch: ours {fingerprint:#018x}, peer {theirs:#018x} \
-             (workers must be launched with identical training arguments)"
-        )));
+        return Err(TransportError::FingerprintMismatch { want: fingerprint, got: theirs });
     }
     Ok(())
+}
+
+fn validate_hello(
+    header: &FrameHeader,
+    payload: &[u8],
+    world: usize,
+    fingerprint: u64,
+) -> Result<(), TransportError> {
+    validate_hs(header, payload, world, fingerprint, FrameKind::Hello)
+}
+
+fn validate_resume(
+    header: &FrameHeader,
+    payload: &[u8],
+    world: usize,
+    fingerprint: u64,
+) -> Result<(), TransportError> {
+    validate_hs(header, payload, world, fingerprint, FrameKind::Resume)
 }
 
 /// Validate a member's Hello at its group leader: everything the root
@@ -517,16 +937,124 @@ impl Transport for Tcp {
 
     fn send(&mut self, to: usize, header: FrameHeader, payload: &[u8])
         -> Result<(), TransportError> {
-        write_frame(self.stream(to), header, payload)
+        let idx = self.sent[to] + 1;
+        let mut corrupt = false;
+        let mut copies = 1usize;
+        if let Some(kind) = self.fault.as_ref().and_then(|p| p.fault_for(to, idx)) {
+            match kind {
+                FaultKind::Delay { ms } => std::thread::sleep(Duration::from_millis(ms)),
+                FaultKind::Duplicate => copies = 2,
+                FaultKind::CorruptHeader => corrupt = true,
+                // A silently swallowed frame on a live connection: the
+                // receiver's deadline surfaces it as a typed Timeout.
+                FaultKind::DropFrame => return Ok(()),
+                // Sever at the frame boundary, then recover before the
+                // real send — the transparent path.
+                FaultKind::DropConn => {
+                    self.conns[to] = None;
+                    self.recover_edge(to, TransportError::Closed { peer: to })?;
+                }
+                // Half a header on the wire, then sever: the receiver
+                // discards the partial read at stream end and the
+                // resume retransmits the whole frame.
+                FaultKind::TruncateFrame => {
+                    let mut h = header;
+                    h.payload_len = payload.len() as u64;
+                    let head = h.encode();
+                    if let Some(stream) = self.conns[to].as_mut() {
+                        let _ = stream.write_all(&head[..HEADER_BYTES / 2]);
+                        let _ = stream.flush();
+                    }
+                    self.conns[to] = None;
+                    self.recover_edge(
+                        to,
+                        TransportError::Truncated { needed: HEADER_BYTES, got: HEADER_BYTES / 2 },
+                    )?;
+                }
+            }
+        }
+        let mut header = header;
+        header.payload_len = payload.len() as u64;
+        // Assemble the frame in a ring buffer: the oldest retained
+        // frame's allocation is recycled once the ring is full.
+        let mut buf = if self.retained[to].len() >= RETAINED_FRAMES {
+            let (_, mut b) = self.retained[to].pop_front().expect("full ring");
+            b.clear();
+            b
+        } else {
+            Vec::with_capacity(HEADER_BYTES + payload.len())
+        };
+        buf.extend_from_slice(&header.encode());
+        buf.extend_from_slice(payload);
+        if corrupt {
+            // Flip a magic byte: the receiver's decode rejects the
+            // frame with a typed BadMagic (fail-fast — there is no
+            // payload checksum to catch deeper corruption, so the
+            // injector only corrupts what the codec can detect).
+            buf[0] ^= 0xff;
+        }
+        for _ in 0..copies {
+            if let Err(e) = self.write_edge(to, &buf) {
+                if is_link_dead(&e) && self.can_recover(to) {
+                    self.recover_edge(to, e)?;
+                    self.write_edge(to, &buf)?;
+                } else {
+                    return Err(e);
+                }
+            }
+        }
+        // One logical frame regardless of copies: a duplicate is wire
+        // garbage for the receiver's schedule validation to reject,
+        // not schedule state.
+        self.sent[to] = idx;
+        self.retained[to].push_back((idx, buf));
+        Ok(())
     }
 
     fn recv(&mut self, from: usize, payload: &mut Vec<u8>) -> Result<FrameHeader, TransportError> {
-        read_frame(self.stream(from), payload)
+        loop {
+            let started = Instant::now();
+            let res = match self.conns[from].as_mut() {
+                Some(stream) => read_frame(stream, payload),
+                None => Err(TransportError::Closed { peer: from }),
+            };
+            match res {
+                Ok(header) => {
+                    self.rcvd[from] += 1;
+                    return Ok(header);
+                }
+                Err(e) if is_timeout(&e) => {
+                    return Err(TransportError::Timeout {
+                        peer: from,
+                        waited_ms: started.elapsed().as_millis() as u64,
+                    });
+                }
+                Err(e) if is_link_dead(&e) && self.can_recover(from) => {
+                    self.recover_edge(from, e)?;
+                    // The peer's retransmissions (if any) now head the
+                    // rebuilt stream; re-enter the read.
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
+        let d = deadline.unwrap_or(IO_TIMEOUT);
+        self.recv_deadline = d;
+        for s in self.conns.iter().flatten() {
+            let _ = s.set_read_timeout(Some(d));
+        }
+    }
+
+    fn resumes(&self) -> u64 {
+        self.resumes
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::chaos::FaultRule;
     use super::*;
 
     #[test]
@@ -569,7 +1097,10 @@ mod tests {
         let root = std::thread::spawn(move || Tcp::root(listener, 2, 0x1111));
         let worker = Tcp::connect(&addr, 1, 2, 0x2222);
         let root_err = root.join().unwrap().unwrap_err();
-        assert!(matches!(root_err, TransportError::Handshake(_)), "{root_err}");
+        assert!(
+            matches!(root_err, TransportError::FingerprintMismatch { want: 0x1111, got: 0x2222 }),
+            "{root_err}"
+        );
         // the worker either sees the refused handshake or a closed pipe
         assert!(worker.is_err());
     }
@@ -643,10 +1174,77 @@ mod tests {
             s.write_all(&[0x31, 0x30]).unwrap();
         });
         let (mut stream, _) = listener.accept().unwrap();
-        configure(&stream).unwrap();
+        configure(&stream, IO_TIMEOUT).unwrap();
         killer.join().unwrap();
         let mut p = Vec::new();
         let err = read_frame(&mut stream, &mut p).unwrap_err();
         assert!(matches!(err, TransportError::Truncated { .. }), "{err}");
+    }
+
+    #[test]
+    fn recv_deadline_surfaces_as_typed_timeout() {
+        let mut group = Tcp::loopback_group(2, 0xbeef).unwrap();
+        let _w = group.pop().unwrap(); // alive but silent
+        let mut root = group.pop().unwrap();
+        root.set_recv_deadline(Some(Duration::from_millis(60)));
+        let t0 = Instant::now();
+        let mut p = Vec::new();
+        let err = root.recv(1, &mut p).unwrap_err();
+        assert!(matches!(err, TransportError::Timeout { peer: 1, .. }), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "timeout overslept");
+    }
+
+    #[test]
+    fn dropped_connection_resumes_mid_stream() {
+        // The worker's fault plan severs its root edge at the third
+        // frame boundary; the resume handshake must rebuild the edge
+        // and retransmit whatever the root had not yet read — the
+        // root sees all five frames, in order, exactly once.
+        let opts = TcpOpts {
+            connect_timeout: Duration::from_secs(10),
+            recv_deadline: Duration::from_secs(10),
+            resume_window: Duration::from_secs(10),
+            max_resumes: 4,
+        };
+        let mut group = Tcp::loopback_group_opts(2, 0xd0d0, Topology::Star, &opts).unwrap();
+        let mut w = group.pop().unwrap();
+        let mut root = group.pop().unwrap();
+        w.set_fault_plan(
+            FaultPlan::new(1).with(FaultRule::new(FaultKind::DropConn).on_peer(0).at_frame(3)),
+        );
+        let h = std::thread::spawn(move || {
+            for s in 1..=5u64 {
+                w.send(0, FrameHeader::new(FrameKind::Loss, 1, s, 1, 0), &[s as u8, 0, 0, 0])
+                    .unwrap();
+            }
+            w
+        });
+        let mut p = Vec::new();
+        for s in 1..=5u64 {
+            let header = root.recv(1, &mut p).unwrap();
+            header.expect(FrameKind::Loss, 1, s, 1, 0).unwrap();
+            assert_eq!(p[0] as u64, s, "frame {s} payload");
+        }
+        let w = h.join().unwrap();
+        assert_eq!(w.resumes(), 1, "worker performed exactly one resume");
+        assert_eq!(root.resumes(), 1, "root re-accepted exactly once");
+    }
+
+    #[test]
+    fn resume_gap_beyond_the_ring_is_typed() {
+        let mut group = Tcp::loopback_group(2, 0xcafe).unwrap();
+        let _w = group.pop().unwrap();
+        let mut root = group.pop().unwrap();
+        // Pretend we sent far more frames than the ring retains and
+        // the peer has none of them: the resume must refuse loudly.
+        root.sent[1] = 100;
+        for i in 97..=100u64 {
+            root.retained[1].push_back((i, vec![0u8; 4]));
+        }
+        let err = root.retransmit(1, 10).unwrap_err();
+        assert!(matches!(err, TransportError::Handshake(_)), "{err}");
+        // A peer claiming frames never sent is a schedule divergence.
+        let err = root.retransmit(1, 101).unwrap_err();
+        assert!(matches!(err, TransportError::SeqMismatch { .. }), "{err}");
     }
 }

@@ -1,0 +1,262 @@
+//! Chaos scenario-matrix runner (ISSUE 7): run one (fault × topology
+//! × family) cell — a real loopback-TCP group with a seeded
+//! [`Scenario`] fault plan installed — and classify the outcome
+//! against the tripartite contract:
+//!
+//! 1. **transparently recovered**: every rank completed and rank 0's
+//!    result is *bit-for-bit* the clean in-process reference
+//!    ([`check_parity`] — params, per-step losses, eval, ledger);
+//! 2. or **typed failure**: at least one rank exited with a typed
+//!    [`TransportError`] within its deadline;
+//! 3. and **never a hang** — every wait in the cell is bounded by the
+//!    recv deadline, the resume window, or the connect window.
+//!
+//! The `zo-adam chaos` CLI and `tests/chaos_matrix.rs` both drive
+//! [`run_cell`]; [`CellReport::satisfies_contract`] is the shared
+//! judgment of which contract half a scenario must land on.
+
+use std::time::{Duration, Instant};
+
+use crate::comm::transport::tcp::{Tcp, TcpOpts};
+use crate::comm::transport::{RankLink, Scenario, TransportError};
+use crate::comm::Topology;
+
+use super::distributed::{check_parity, run_local, run_rank, DistSpec};
+use super::engine::ExecMode;
+
+/// Deadlines and seeding for one chaos cell. Defaults are sized for
+/// interactive CLI runs; tests tighten them to keep the matrix fast.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosOpts {
+    /// Seed for every rank's fault plan (same seed ⇒ same faults).
+    pub seed: u64,
+    /// Bootstrap window (dial/accept with jittered backoff).
+    pub connect_timeout: Duration,
+    /// Per-recv deadline — the bound on "never a hang".
+    pub recv_deadline: Duration,
+    /// Wall-clock budget for one reconnect-with-resume.
+    pub resume_window: Duration,
+}
+
+impl Default for ChaosOpts {
+    fn default() -> ChaosOpts {
+        ChaosOpts {
+            seed: 7,
+            connect_timeout: Duration::from_secs(10),
+            recv_deadline: Duration::from_secs(10),
+            resume_window: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Which contract half a cell landed on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellOutcome {
+    /// Every rank completed (faults, if any, were absorbed in-flight).
+    Recovered,
+    /// At least one rank exited with a typed error.
+    Failed,
+}
+
+/// The observed result of one chaos cell.
+pub struct CellReport {
+    pub scenario: Scenario,
+    pub topology: Topology,
+    pub family: String,
+    pub outcome: CellOutcome,
+    /// Total successful resume handshakes across completing ranks.
+    pub resumes: u64,
+    /// Typed errors by rank (empty iff `Recovered`).
+    pub errors: Vec<(usize, TransportError)>,
+    /// Bitwise parity vs the clean reference (`None` = not checked or
+    /// not applicable — failed cells have no trajectory to compare).
+    pub parity: Option<Result<(), String>>,
+    pub wall_s: f64,
+}
+
+impl CellReport {
+    /// Judge this cell against the scenario's half of the tripartite
+    /// contract. `Ok(())` = the contract holds.
+    pub fn satisfies_contract(&self) -> Result<(), String> {
+        if self.scenario.expects_recovery() {
+            if !self.errors.is_empty() {
+                let list: Vec<String> =
+                    self.errors.iter().map(|(r, e)| format!("rank {r}: {e}")).collect();
+                return Err(format!(
+                    "expected transparent recovery, got {} rank error(s): {}",
+                    self.errors.len(),
+                    list.join("; ")
+                ));
+            }
+            if let Some(Err(e)) = &self.parity {
+                return Err(format!("recovered run broke bitwise parity: {e}"));
+            }
+            if self.scenario.expects_resumes() && self.resumes == 0 {
+                return Err(
+                    "fault plan severed no connection (resumes == 0): the cell never \
+                     exercised recovery"
+                        .to_string(),
+                );
+            }
+            Ok(())
+        } else if self.errors.is_empty() {
+            Err("expected a typed failure, but every rank completed".to_string())
+        } else {
+            Ok(())
+        }
+    }
+
+    /// One-line summary for the matrix table.
+    pub fn describe(&self) -> String {
+        match self.outcome {
+            CellOutcome::Recovered => {
+                let parity = match &self.parity {
+                    Some(Ok(())) => ", parity ok".to_string(),
+                    Some(Err(_)) => ", PARITY BROKEN".to_string(),
+                    None => String::new(),
+                };
+                format!("recovered ({} resumes{parity})", self.resumes)
+            }
+            CellOutcome::Failed => {
+                let (r, e) = &self.errors[0];
+                format!("typed failure on {} rank(s), e.g. rank {r}: {e}", self.errors.len())
+            }
+        }
+    }
+}
+
+/// Run one chaos cell: bootstrap a real loopback-TCP group for
+/// `spec`, install `scenario`'s seeded fault plan (rank 1's sends —
+/// see [`Scenario::plan`]), train to completion on scoped threads,
+/// and classify. `with_parity` additionally runs the clean in-process
+/// reference and checks rank 0's result bit-for-bit.
+///
+/// The error return covers only harness failures (the bootstrap
+/// itself); scenario-induced rank errors land in the report.
+pub fn run_cell(
+    spec: &DistSpec,
+    scenario: Scenario,
+    opts: &ChaosOpts,
+    with_parity: bool,
+) -> Result<CellReport, TransportError> {
+    let topo = spec.topology.normalized(spec.world);
+    let wall = Instant::now();
+    let tcp_opts = TcpOpts {
+        connect_timeout: opts.connect_timeout,
+        recv_deadline: opts.recv_deadline,
+        resume_window: opts.resume_window,
+        // Generous: periodic drop plans resume many times per run; the
+        // per-attempt window above is the real bound on recovery work.
+        max_resumes: 1024,
+    };
+    let group = Tcp::loopback_group_opts(spec.world, spec.fingerprint(), topo, &tcp_opts)?;
+    let rank_results: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = group
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut tp)| {
+                if let Some(plan) = scenario.plan(opts.seed, rank) {
+                    tp.set_fault_plan(plan);
+                }
+                s.spawn(move || {
+                    let mut link = RankLink::new(Box::new(tp));
+                    run_rank(&mut link, spec)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+    });
+    let mut resumes = 0u64;
+    let mut errors = Vec::new();
+    let mut root = None;
+    for (rank, res) in rank_results.into_iter().enumerate() {
+        match res {
+            Ok(r) => {
+                resumes += r.resumes;
+                if rank == 0 {
+                    root = Some(r);
+                }
+            }
+            Err(e) => errors.push((rank, e)),
+        }
+    }
+    let outcome = if errors.is_empty() { CellOutcome::Recovered } else { CellOutcome::Failed };
+    let parity = match (&root, outcome) {
+        (Some(root), CellOutcome::Recovered) if with_parity => {
+            let local = run_local(spec, ExecMode::Threaded(spec.world));
+            Some(check_parity(root, &local))
+        }
+        _ => None,
+    };
+    Ok(CellReport {
+        scenario,
+        topology: topo,
+        family: spec.family.clone(),
+        outcome,
+        resumes,
+        errors,
+        parity,
+        wall_s: wall.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_spec() -> DistSpec {
+        DistSpec { d: 96, steps: 6, world: 3, ..DistSpec::default() }
+    }
+
+    #[test]
+    fn clean_cell_recovers_with_parity_and_no_resumes() {
+        let spec = quick_spec();
+        let report = run_cell(&spec, Scenario::Clean, &ChaosOpts::default(), true).unwrap();
+        assert_eq!(report.outcome, CellOutcome::Recovered);
+        assert_eq!(report.resumes, 0);
+        assert!(matches!(report.parity, Some(Ok(()))), "{:?}", report.parity.map(|p| p.err()));
+        report.satisfies_contract().unwrap();
+    }
+
+    #[test]
+    fn contract_judgment_matches_scenario_halves() {
+        let ok_recovered = CellReport {
+            scenario: Scenario::Drop,
+            topology: Topology::Star,
+            family: "01adam".into(),
+            outcome: CellOutcome::Recovered,
+            resumes: 2,
+            errors: Vec::new(),
+            parity: Some(Ok(())),
+            wall_s: 0.0,
+        };
+        ok_recovered.satisfies_contract().unwrap();
+        // A drop cell that never actually resumed proves nothing.
+        let no_resumes = CellReport { resumes: 0, ..ok_recovered };
+        assert!(no_resumes.satisfies_contract().is_err());
+        // A fail-fast scenario that sailed through is a broken cell.
+        let sailed = CellReport {
+            scenario: Scenario::Corrupt,
+            topology: Topology::Star,
+            family: "01adam".into(),
+            outcome: CellOutcome::Recovered,
+            resumes: 0,
+            errors: Vec::new(),
+            parity: Some(Ok(())),
+            wall_s: 0.0,
+        };
+        assert!(sailed.satisfies_contract().is_err());
+        // ... and one that failed typed satisfies it.
+        let failed = CellReport {
+            scenario: Scenario::Corrupt,
+            topology: Topology::Star,
+            family: "01adam".into(),
+            outcome: CellOutcome::Failed,
+            resumes: 0,
+            errors: vec![(0, TransportError::BadMagic { got: 0xdead })],
+            parity: None,
+            wall_s: 0.0,
+        };
+        failed.satisfies_contract().unwrap();
+    }
+}

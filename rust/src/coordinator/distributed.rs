@@ -181,19 +181,61 @@ pub struct RankResult {
     pub losses: Vec<f64>,
     /// Actual framed bytes + round counts this rank's reductions moved.
     pub ledger: VolumeLedger,
+    /// Successful transport-level drop-recoveries (reconnect + resume)
+    /// this rank performed. Zero on a healthy network; chaos scenarios
+    /// assert it is nonzero to prove a drop was actually recovered.
+    pub resumes: u64,
     pub wall_s: f64,
+}
+
+/// Per-rank runtime options that live **outside** the fingerprinted
+/// [`DistSpec`]: transport deadlines and chaos hooks may legitimately
+/// differ across ranks (a tighter deadline on one rank, a fault plan
+/// on another) without being a different *run* — they never change
+/// the trajectory, only how failures surface.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RankOpts {
+    /// Per-recv deadline pushed onto the link (`None` = the backend's
+    /// default). A peer silent for longer is a typed
+    /// `TransportError::Timeout`, never an indefinite block.
+    pub recv_deadline: Option<std::time::Duration>,
+    /// Chaos hook (`zo-adam worker --die-at-step`): abort the process
+    /// at the start of step `t` — a real SIGABRT mid-round, for the
+    /// kill-a-rank scenarios in `tests/chaos_shutdown.rs`.
+    pub die_at_step: Option<u64>,
+}
+
+/// [`run_rank_opts`] with default options — the common path.
+pub fn run_rank(link: &mut RankLink, spec: &DistSpec) -> Result<RankResult, TransportError> {
+    run_rank_opts(link, spec, &RankOpts::default())
 }
 
 /// Run one rank of a distributed training job to completion. The same
 /// function serves the root (rank 0) and every worker — the collective
 /// legs differ inside the transport, not here.
-pub fn run_rank(link: &mut RankLink, spec: &DistSpec) -> Result<RankResult, TransportError> {
+///
+/// Retry policy: there is deliberately **no retry loop at this level**.
+/// Recoverable faults (a dropped root edge) are healed *inside* the
+/// transport at frame granularity, where the resume protocol knows
+/// exactly which bytes the peer is missing; by the time an error
+/// reaches this loop it is typed and terminal — re-entering a
+/// collective here would re-send frames the schedule already counted
+/// and desynchronize every peer's seq. Fail fast, report the typed
+/// error, let the launcher's process guard clean up.
+pub fn run_rank_opts(
+    link: &mut RankLink,
+    spec: &DistSpec,
+    opts: &RankOpts,
+) -> Result<RankResult, TransportError> {
     assert_eq!(
         link.world(),
         spec.world,
         "transport group size does not match the run spec"
     );
     link.set_topology(spec.topology.normalized(spec.world));
+    if let Some(d) = opts.recv_deadline {
+        link.set_recv_deadline(Some(d));
+    }
     let rank = link.rank();
     let d = spec.d;
     let mut src = spec.source();
@@ -214,6 +256,12 @@ pub fn run_rank(link: &mut RankLink, spec: &DistSpec) -> Result<RankResult, Tran
     link.barrier()?;
 
     for t in 0..spec.steps {
+        if opts.die_at_step == Some(t) {
+            // Chaos hook: a hard, mid-round death — not a clean exit —
+            // so survivor behavior is tested against the real thing.
+            eprintln!("[chaos] rank {rank} aborting at step {t} (--die-at-step)");
+            std::process::abort();
+        }
         // Rank r *is* worker r: same params, same noise stream, same
         // gradient bits as in-process worker r.
         let loss = src.grad(opt.params(0), rank, t, &mut grads[0]);
@@ -260,6 +308,7 @@ pub fn run_rank(link: &mut RankLink, spec: &DistSpec) -> Result<RankResult, Tran
         final_eval,
         losses,
         ledger,
+        resumes: link.resumes(),
         wall_s: wall.elapsed_secs(),
     })
 }

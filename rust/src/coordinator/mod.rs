@@ -2,6 +2,7 @@
 //! rank-distributed), the deterministic parallel execution engine,
 //! metrics, profiling.
 
+pub mod chaos;
 pub mod distributed;
 pub mod engine;
 pub mod metrics;
@@ -9,8 +10,10 @@ mod pool;
 pub mod profiling;
 pub mod trainer;
 
+pub use chaos::{run_cell, CellOutcome, CellReport, ChaosOpts};
 pub use distributed::{
-    check_parity, launch_inproc, run_local, run_rank, DistSpec, RankResult, WorkerChildren,
+    check_parity, launch_inproc, run_local, run_rank, run_rank_opts, DistSpec, RankOpts,
+    RankResult, WorkerChildren,
 };
 pub use engine::{Engine, ExecMode, MAX_POOL_THREADS};
 pub use metrics::{MetricLog, StepRecord};

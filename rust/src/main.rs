@@ -38,6 +38,7 @@ fn main() {
         "train" => cmd_train(rest),
         "launch" => cmd_launch(rest),
         "worker" => cmd_worker(rest),
+        "chaos" => cmd_chaos(rest),
         "fig1" => cmd_fig1(rest),
         "fig2" | "fig6" => cmd_fig2(rest, &cmd),
         "fig3" => cmd_fig3(rest),
@@ -71,6 +72,7 @@ fn usage() -> String {
      \x20 train             generic training launcher (--model --algo --steps --workers)\n\
      \x20 launch            multi-rank run over a real transport (--ranks --transport inproc|tcp)\n\
      \x20 worker            one TCP rank of a launch (spawned by `launch`; --rank --connect)\n\
+     \x20 chaos             deterministic fault-injection matrix (--scenarios --topologies)\n\
      \x20 fig1              momentum/variance profiling (Adam motivation study)\n\
      \x20 fig2              sample-/time-wise convergence (adam vs 1bit vs 0/1)\n\
      \x20 fig3              throughput vs #GPUs (Ethernet + InfiniBand)\n\
@@ -434,6 +436,19 @@ fn spec_from(p: &zo_adam::util::cli::Parsed, world: usize) -> zo_adam::coordinat
     }
 }
 
+/// Build [`TcpOpts`] from the shared `--connect-timeout` /
+/// `--recv-deadline` / `--resume-window` options (seconds; `launch`,
+/// `worker` and `chaos` all speak the same three).
+fn tcp_opts_from(p: &zo_adam::util::cli::Parsed) -> zo_adam::comm::transport::tcp::TcpOpts {
+    use std::time::Duration;
+    zo_adam::comm::transport::tcp::TcpOpts {
+        connect_timeout: Duration::from_secs_f64(p.get_f64("connect-timeout").max(1e-3)),
+        recv_deadline: Duration::from_secs_f64(p.get_f64("recv-deadline").max(1e-3)),
+        resume_window: Duration::from_secs_f64(p.get_f64("resume-window").max(1e-3)),
+        ..Default::default()
+    }
+}
+
 fn print_rank0_summary(spec: &zo_adam::coordinator::DistSpec, root: &zo_adam::coordinator::RankResult, transport: &str) {
     println!(
         "[launch] {} over {} {transport} rank(s) [{}], d={}, {} steps: final loss {:.6}, eval {:?}, \
@@ -453,6 +468,14 @@ fn print_rank0_summary(spec: &zo_adam::coordinator::DistSpec, root: &zo_adam::co
         root.ledger.bits_per_param(),
         root.wall_s,
     );
+    // Only under injected/real faults — clean launches must keep the
+    // summary byte-identical across runs (ci.sh compares them).
+    if root.resumes > 0 {
+        println!(
+            "[launch] chaos note: rank 0 resumed {} dropped connection(s) mid-run",
+            root.resumes
+        );
+    }
 }
 
 /// Run the in-process reference and pin the distributed result to it
@@ -484,6 +507,11 @@ fn cmd_launch(rest: &[String]) -> Result<()> {
                 .opt("ranks", "4", "number of ranks (= data-parallel workers)")
                 .opt("transport", "inproc", "inproc (threads+channels) | tcp (worker processes)")
                 .opt("port", "0", "TCP listen port on 127.0.0.1 (0 = ephemeral)")
+                .opt("connect-timeout", "30", "tcp: worker dial/handshake window, seconds")
+                .opt("recv-deadline", "120", "tcp: per-recv deadline, seconds")
+                .opt("resume-window", "5", "tcp: reconnect-with-resume window, seconds")
+                .opt("kill-rank", "", "chaos: worker rank that abort()s mid-run ('' = off)")
+                .opt("kill-at-step", "5", "chaos: step at which --kill-rank dies")
                 .flag("check-parity", "re-run in-process and require bitwise-identical results")
                 .flag("quiet", "suppress worker output"),
         ),
@@ -505,7 +533,24 @@ fn cmd_launch(rest: &[String]) -> Result<()> {
             results.truncate(1);
             results.pop().expect("rank 0 result")
         }
-        "tcp" => launch_tcp(&spec, p.get_usize("port"), p.get_flag("quiet"))?,
+        "tcp" => {
+            let tcp_opts = tcp_opts_from(&p);
+            let kill = match p.get("kill-rank") {
+                "" => None,
+                s => {
+                    let r: usize = s
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--kill-rank '{s}': {e}"))?;
+                    anyhow::ensure!(
+                        r >= 1 && r < spec.world,
+                        "--kill-rank {r} is not a worker rank (valid: 1..{})",
+                        spec.world
+                    );
+                    Some((r, p.get_u64("kill-at-step")))
+                }
+            };
+            launch_tcp(&spec, p.get_usize("port"), p.get_flag("quiet"), &tcp_opts, kill)?
+        }
         other => anyhow::bail!("unknown transport '{other}' (inproc|tcp)"),
     };
     print_rank0_summary(&spec, &root, &transport);
@@ -531,6 +576,8 @@ fn launch_tcp(
     spec: &zo_adam::coordinator::DistSpec,
     port: usize,
     quiet: bool,
+    tcp_opts: &zo_adam::comm::transport::tcp::TcpOpts,
+    kill: Option<(usize, u64)>,
 ) -> Result<zo_adam::coordinator::RankResult> {
     use std::process::{Command, Stdio};
     use zo_adam::comm::transport::tcp::Tcp;
@@ -568,7 +615,18 @@ fn launch_tcp(
             .arg("--init")
             .arg(spec.init.to_string())
             .arg("--topology")
-            .arg(spec.topology.to_string());
+            .arg(spec.topology.to_string())
+            .arg("--connect-timeout")
+            .arg(tcp_opts.connect_timeout.as_secs_f64().to_string())
+            .arg("--recv-deadline")
+            .arg(tcp_opts.recv_deadline.as_secs_f64().to_string())
+            .arg("--resume-window")
+            .arg(tcp_opts.resume_window.as_secs_f64().to_string());
+        if let Some((kill_rank, kill_step)) = kill {
+            if kill_rank == rank {
+                cmd.arg("--die-at-step").arg(kill_step.to_string());
+            }
+        }
         if quiet {
             cmd.arg("--quiet").stdout(Stdio::null());
         }
@@ -581,11 +639,12 @@ fn launch_tcp(
         children.push(rank, child);
     }
     let root_result = (|| -> Result<_> {
-        let tp = Tcp::root_topo(
+        let tp = Tcp::root_topo_opts(
             listener,
             spec.world,
             spec.fingerprint(),
             spec.topology.normalized(spec.world),
+            tcp_opts,
         )
         .map_err(|e| anyhow::anyhow!("root handshake: {e}"))?;
         let mut link = RankLink::new(Box::new(tp));
@@ -622,6 +681,10 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
                 .opt_req("rank", "this process's rank (1..ranks)")
                 .opt_req("connect", "root address, e.g. 127.0.0.1:4321")
                 .opt("ranks", "4", "total ranks in the group")
+                .opt("connect-timeout", "30", "dial/handshake window, seconds")
+                .opt("recv-deadline", "120", "per-recv deadline, seconds")
+                .opt("resume-window", "5", "reconnect-with-resume window, seconds")
+                .opt("die-at-step", "", "chaos: abort() at the start of this step ('' = off)")
                 .flag("quiet", "no output on success"),
         ),
         rest,
@@ -639,16 +702,22 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
         spec.family,
         zo_adam::coordinator::distributed::FAMILIES.join(", ")
     );
-    let tp = zo_adam::comm::transport::tcp::Tcp::connect_topo(
+    let die_at_step = match p.get("die-at-step") {
+        "" => None,
+        s => Some(s.parse::<u64>().map_err(|e| anyhow::anyhow!("--die-at-step '{s}': {e}"))?),
+    };
+    let tp = zo_adam::comm::transport::tcp::Tcp::connect_topo_opts(
         p.get("connect"),
         rank,
         world,
         spec.fingerprint(),
         spec.topology.normalized(world),
+        &tcp_opts_from(&p),
     )
     .map_err(|e| anyhow::anyhow!("worker rank {rank} handshake: {e}"))?;
     let mut link = zo_adam::comm::RankLink::new(Box::new(tp));
-    let res = zo_adam::coordinator::run_rank(&mut link, &spec)
+    let opts = zo_adam::coordinator::RankOpts { recv_deadline: None, die_at_step };
+    let res = zo_adam::coordinator::run_rank_opts(&mut link, &spec, &opts)
         .map_err(|e| anyhow::anyhow!("worker rank {rank} failed: {e}"))?;
     if !p.get_flag("quiet") {
         println!(
@@ -659,6 +728,144 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
             res.wall_s
         );
     }
+    Ok(())
+}
+
+/// ISSUE 7 tentpole: run the deterministic fault-injection matrix —
+/// every requested (scenario × topology) cell over a real loopback-TCP
+/// group — and hold each cell to the tripartite contract: transparent
+/// recovery bit-for-bit with the in-process reference, or a typed
+/// error within the deadline; never a hang. Exits nonzero if any cell
+/// violates its contract half or overruns `--cell-budget`.
+fn cmd_chaos(rest: &[String]) -> Result<()> {
+    use zo_adam::comm::transport::Scenario;
+    use zo_adam::coordinator::{run_cell, ChaosOpts};
+
+    let p = parse(
+        spec_args(
+            Args::new("zo-adam chaos", "deterministic fault-injection scenario matrix")
+                .opt("ranks", "5", "ranks per cell (rank 1 carries the fault plan)")
+                .opt(
+                    "scenarios",
+                    "all",
+                    "comma list of clean|straggler|jitter|drop|truncate|corrupt|duplicate, or 'all'",
+                )
+                .opt("topologies", "star,tree3", "comma list of reduction schedules")
+                .opt("chaos-seed", "7", "fault-plan seed (same seed = same fault sequence)")
+                .opt("connect-timeout", "10", "bootstrap window, seconds")
+                .opt("recv-deadline", "10", "per-recv deadline, seconds")
+                .opt("resume-window", "5", "reconnect-with-resume window, seconds")
+                .opt("cell-budget", "60", "wall-clock bound per cell, seconds (0 = unbounded)")
+                .flag(
+                    "check-parity",
+                    "require recovered cells bitwise-identical to the in-process reference",
+                ),
+        ),
+        rest,
+    );
+    let world = p.get_usize("ranks").max(2);
+    let base = spec_from(&p, world);
+    anyhow::ensure!(
+        zo_adam::coordinator::distributed::FAMILIES.contains(&base.family.as_str()),
+        "unknown family '{}' (one of: {})",
+        base.family,
+        zo_adam::coordinator::distributed::FAMILIES.join(", ")
+    );
+    let scenarios: Vec<Scenario> = if p.get("scenarios") == "all" {
+        Scenario::ALL.to_vec()
+    } else {
+        p.get("scenarios")
+            .split(',')
+            .map(|s| {
+                Scenario::parse(s.trim()).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown scenario '{}' (one of: {})",
+                        s.trim(),
+                        Scenario::ALL.map(|sc| sc.name()).join(", ")
+                    )
+                })
+            })
+            .collect::<Result<_>>()?
+    };
+    let topologies: Vec<zo_adam::comm::Topology> = p
+        .get("topologies")
+        .split(',')
+        .map(|s| {
+            zo_adam::comm::Topology::parse(s.trim(), world)
+                .map_err(|e| anyhow::anyhow!("--topologies: {e}"))
+        })
+        .collect::<Result<_>>()?;
+    let tcp = tcp_opts_from(&p);
+    let opts = ChaosOpts {
+        seed: p.get_u64("chaos-seed"),
+        connect_timeout: tcp.connect_timeout,
+        recv_deadline: tcp.recv_deadline,
+        resume_window: tcp.resume_window,
+    };
+    let budget = p.get_f64("cell-budget");
+    let check = p.get_flag("check-parity");
+
+    println!(
+        "== zo-adam chaos == family {}, {} ranks, d={}, {} steps, seed {} \
+         (fault seed {}), deadlines: recv {:?} / resume {:?} / connect {:?}",
+        base.family,
+        world,
+        base.d,
+        base.steps,
+        base.seed,
+        opts.seed,
+        opts.recv_deadline,
+        opts.resume_window,
+        opts.connect_timeout,
+    );
+    let mut t = Table::new(
+        "Chaos matrix",
+        &["scenario", "topology", "outcome", "resumes", "wall_s", "contract"],
+    );
+    let mut violations = Vec::new();
+    for topo in &topologies {
+        for sc in &scenarios {
+            let mut spec = base.clone();
+            spec.topology = *topo;
+            let report = run_cell(&spec, *sc, &opts, check)
+                .map_err(|e| anyhow::anyhow!("{} under {topo}: cell bootstrap failed: {e}", sc.name()))?;
+            let mut contract = report.satisfies_contract();
+            if budget > 0.0 && report.wall_s > budget && contract.is_ok() {
+                contract = Err(format!(
+                    "cell overran its wall budget: {:.2}s > {budget}s (a bounded error is \
+                     required — this smells like a hidden stall)",
+                    report.wall_s
+                ));
+            }
+            t.row(vec![
+                sc.name().to_string(),
+                topo.to_string(),
+                report.describe(),
+                report.resumes.to_string(),
+                format!("{:.2}", report.wall_s),
+                match &contract {
+                    Ok(()) => "ok".to_string(),
+                    Err(_) => "VIOLATED".to_string(),
+                },
+            ]);
+            if let Err(e) = contract {
+                violations.push(format!("{} under {topo}: {e}", sc.name()));
+            }
+        }
+    }
+    t.print();
+    if !violations.is_empty() {
+        for v in &violations {
+            eprintln!("CHAOS CONTRACT VIOLATED: {v}");
+        }
+        anyhow::bail!("{} chaos cell(s) violated the recovery contract", violations.len());
+    }
+    println!(
+        "[chaos] all {} cells honored the contract (transparent recovery{} or typed \
+         failure within the deadline)",
+        scenarios.len() * topologies.len(),
+        if check { " with bitwise parity" } else { "" },
+    );
     Ok(())
 }
 
@@ -1011,6 +1218,95 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
         );
     }
 
+    // -- transport chaos recovery -------------------------------------
+    // ISSUE 7: the price of robustness, measured on a 2-rank loopback
+    // TCP echo. `clean_rtt` is the floor (same opts, no faults — the
+    // resume bookkeeping is always on, so its cost is *in* the floor);
+    // `recover_drop_rtt` severs the connection on *every* send and
+    // re-enters through the full reconnect-with-resume handshake
+    // (every-frame faulting, not rate-based: a p50 over 1-in-N slow
+    // ops would hide the recovery cost entirely); `straggler_1ms_rtt`
+    // delays every send by 1 ms, so inflation beyond ~1 ms of added
+    // RTT is scheduling overhead.
+    println!("\n-- transport chaos (2-rank TCP echo under faults) --");
+    {
+        use zo_adam::comm::transport::chaos::{FaultKind, FaultPlan, FaultRule};
+        use zo_adam::comm::transport::tcp::{Tcp, TcpOpts};
+        use zo_adam::comm::transport::{FrameHeader, FrameKind, Transport};
+        use zo_adam::comm::Topology;
+
+        fn chaos_echo_loop(mut tp: Tcp) {
+            let mut payload = Vec::new();
+            loop {
+                let header = match tp.recv(0, &mut payload) {
+                    Ok(h) => h,
+                    Err(_) => return, // root hung up between iterations
+                };
+                if header.kind == FrameKind::Bye {
+                    return;
+                }
+                tp.send(0, FrameHeader::new(header.kind, 1, header.seq, 0, 0), &payload)
+                    .expect("chaos echo send");
+            }
+        }
+
+        let opts = TcpOpts { max_resumes: u32::MAX, ..TcpOpts::default() };
+        let cases: [(&str, Option<FaultPlan>); 3] = [
+            ("clean_rtt", None),
+            (
+                "recover_drop_rtt",
+                Some(FaultPlan::new(11).with(FaultRule::new(FaultKind::DropConn).every(1))),
+            ),
+            (
+                "straggler_1ms_rtt",
+                Some(FaultPlan::new(12).with(FaultRule::new(FaultKind::Delay { ms: 1 }).every(1))),
+            ),
+        ];
+        let payload = vec![0u8; 64];
+        let mut p50s = Vec::new();
+        for (label, plan) in cases {
+            match Tcp::loopback_group_opts(2, 0xc4a05, Topology::Star, &opts) {
+                Ok(mut group) => {
+                    let peer = group.pop().expect("rank 1");
+                    let mut root = group.pop().expect("rank 0");
+                    if let Some(plan) = plan {
+                        root.set_fault_plan(plan);
+                    }
+                    let echo = std::thread::spawn(move || chaos_echo_loop(peer));
+                    let mut seq = 0u64;
+                    let mut recv_buf = Vec::new();
+                    let mut b = Bench::new();
+                    let r = b.run(&format!("transport/chaos/{label}"), || {
+                        seq += 1;
+                        root.send(1, FrameHeader::new(FrameKind::FpF32, 0, seq, 0, 0), &payload)
+                            .expect("chaos send");
+                        root.recv(1, &mut recv_buf).expect("chaos recv");
+                    });
+                    p50s.push(r.p50_ns);
+                    report.push(&r);
+                    if label != "clean_rtt" {
+                        println!("     ({} resumes during {label})", root.resumes());
+                    }
+                    let _ =
+                        root.send(1, FrameHeader::new(FrameKind::Bye, 0, seq + 1, 0, 0), &[]);
+                    drop(root);
+                    echo.join().expect("chaos echo thread");
+                }
+                Err(e) => println!("  (tcp loopback unavailable: {e}; skipping {label})"),
+            }
+        }
+        if p50s.len() == 3 {
+            let overhead = p50s[1] / p50s[0];
+            let inflation = p50s[2] / p50s[0];
+            report.metric("transport/chaos/recovery_overhead_x", overhead);
+            report.metric("transport/chaos/straggler_inflation_x", inflation);
+            println!(
+                "  -> drop+resume costs {overhead:.1}x the clean RTT; a 1 ms straggler \
+                 inflates it {inflation:.1}x"
+            );
+        }
+    }
+
     // -- optimizer step -----------------------------------------------
     // Gated entries need a *stationary* per-step workload: policies are
     // pinned (constant LR, fixed stages) so every measured iteration
@@ -1125,9 +1421,12 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
     // the baseline it regressed against.
     // Gated entry families: optimizer steps (PR 2), the EF server
     // accumulation paths (ISSUE 5 — a sweep regression or a table path
-    // that stops beating it must fail loudly, not fade quietly) and the
-    // topology-scheduled transport rounds (ISSUE 6).
-    const GATED_PREFIXES: [&str; 3] = ["step/", "server_leg/", "transport/tree/"];
+    // that stops beating it must fail loudly, not fade quietly), the
+    // topology-scheduled transport rounds (ISSUE 6) and the chaos
+    // recovery/straggler RTTs (ISSUE 7 — reconnect-with-resume getting
+    // slower is a robustness regression, not just a perf one).
+    const GATED_PREFIXES: [&str; 4] =
+        ["step/", "server_leg/", "transport/tree/", "transport/chaos/"];
     if let Some(base) = &baseline {
         let gated: Vec<&str> = base
             .entries
@@ -1151,7 +1450,7 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
         if base.bootstrap || gated.is_empty() {
             println!(
                 "\nperf gate vs {baseline_path}: SKIPPED (bootstrap baseline — no measured \
-                 step/, server_leg/ or transport/tree/ entries to compare yet)"
+                 step/, server_leg/, transport/tree/ or transport/chaos/ entries to compare yet)"
             );
         } else if !config_mismatch.is_empty() {
             println!(

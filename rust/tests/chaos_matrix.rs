@@ -1,0 +1,220 @@
+//! ISSUE 7 acceptance: the chaos scenario matrix. Every
+//! (fault × topology × family) cell must land on one half of the
+//! tripartite contract — **transparent recovery** with bit-for-bit
+//! parity against the clean in-process reference, or a **typed
+//! error** on every stranded rank within its deadline — and no cell
+//! may hang past its bounds. The fault plans are seeded and
+//! deterministic (`comm::transport::chaos`), so these are ordinary
+//! reproducible tests, not flake roulette.
+//!
+//! Also here: the `--connect-timeout` regression (a never-answering
+//! address fails typed within the window, ISSUE 7 satellite) and the
+//! dead-rank survivor bound (a rank dying mid-round strands the
+//! others for at most one deadline + resume window each).
+
+use std::time::{Duration, Instant};
+
+use zo_adam::comm::transport::tcp::{Tcp, TcpOpts};
+use zo_adam::comm::transport::{RankLink, Scenario, TransportError};
+use zo_adam::comm::{Topology, SERVER_CHUNK};
+use zo_adam::coordinator::{run_cell, run_rank, CellOutcome, ChaosOpts, DistSpec};
+
+fn spec(family: &str, topo: Topology, world: usize) -> DistSpec {
+    DistSpec {
+        family: family.to_string(),
+        // spans a codec chunk boundary off the 64-bit words, so
+        // resumed rounds replay the ragged multi-chunk wire path
+        d: SERVER_CHUNK + 321,
+        steps: 10,
+        world,
+        seed: 7,
+        lr: 0.01,
+        kappa: 4.0,
+        sigma: 0.15,
+        init: 0.8,
+        topology: topo,
+        ..DistSpec::default()
+    }
+}
+
+/// Tight-but-safe deadlines: big enough that a healthy loopback cell
+/// never trips them, small enough that a stuck cell fails the suite
+/// in seconds instead of minutes.
+fn opts() -> ChaosOpts {
+    ChaosOpts {
+        seed: 7,
+        connect_timeout: Duration::from_secs(5),
+        recv_deadline: Duration::from_secs(3),
+        resume_window: Duration::from_secs(2),
+    }
+}
+
+const TOPOLOGIES: [Topology; 2] = [Topology::Star, Topology::Tree { group: 2 }];
+
+/// One matrix slice per family (separate #[test]s so the harness runs
+/// them concurrently): every recovery scenario must complete with the
+/// exact bits of the uninterrupted run, and the severing scenarios
+/// must prove they actually exercised reconnect-with-resume.
+fn recovery_slice(family: &str) {
+    for topo in TOPOLOGIES {
+        for sc in [Scenario::Straggler, Scenario::Jitter, Scenario::Drop, Scenario::Truncate] {
+            let spec = spec(family, topo, 5);
+            let report = run_cell(&spec, sc, &opts(), true)
+                .unwrap_or_else(|e| panic!("{family}/{topo}/{}: bootstrap: {e}", sc.name()));
+            report
+                .satisfies_contract()
+                .unwrap_or_else(|e| panic!("{family}/{topo}/{}: {e}", sc.name()));
+            assert_eq!(
+                report.outcome,
+                CellOutcome::Recovered,
+                "{family}/{topo}/{}",
+                sc.name()
+            );
+            assert!(
+                matches!(report.parity, Some(Ok(()))),
+                "{family}/{topo}/{}: parity missing or broken",
+                sc.name()
+            );
+            if sc.expects_resumes() {
+                assert!(
+                    report.resumes > 0,
+                    "{family}/{topo}/{}: plan severed nothing",
+                    sc.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn recovery_scenarios_are_bitwise_transparent_01adam() {
+    recovery_slice("01adam");
+}
+
+#[test]
+fn recovery_scenarios_are_bitwise_transparent_adam() {
+    recovery_slice("adam");
+}
+
+#[test]
+fn fail_fast_scenarios_error_typed_within_the_deadline() {
+    // Corruption and replay are unrecoverable by design (DESIGN.md
+    // §Fault model): every cell must end in typed errors — and do so
+    // within the deadline budget, because a misdelivered frame must
+    // strand no rank in a silent block. One family suffices: the
+    // fault fires in the shared frame layer, below the optimizers.
+    for topo in TOPOLOGIES {
+        for sc in [Scenario::Corrupt, Scenario::Duplicate] {
+            let t0 = Instant::now();
+            let spec = spec("01adam", topo, 5);
+            let report = run_cell(&spec, sc, &opts(), false)
+                .unwrap_or_else(|e| panic!("{topo}/{}: bootstrap: {e}", sc.name()));
+            let elapsed = t0.elapsed();
+            report
+                .satisfies_contract()
+                .unwrap_or_else(|e| panic!("{topo}/{}: {e}", sc.name()));
+            assert_eq!(report.outcome, CellOutcome::Failed, "{topo}/{}", sc.name());
+            assert!(!report.errors.is_empty());
+            // Every stranded rank waits at most ~one recv deadline,
+            // plus a failed resume window for those that try; 20 s is
+            // several times that worst case on a healthy host.
+            assert!(
+                elapsed < Duration::from_secs(20),
+                "{topo}/{}: cell took {elapsed:?} — a hidden stall",
+                sc.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn same_seed_same_faults_same_resume_count() {
+    // Determinism end to end: two runs of the same severing cell must
+    // drop the same frames and therefore resume the same number of
+    // times — and both reproduce the reference bits.
+    let cell = || {
+        run_cell(&spec("01adam", Topology::Star, 3), Scenario::Drop, &opts(), true)
+            .expect("bootstrap")
+    };
+    let (a, b) = (cell(), cell());
+    assert_eq!(a.outcome, CellOutcome::Recovered);
+    assert_eq!(b.outcome, CellOutcome::Recovered);
+    assert!(a.resumes > 0);
+    assert_eq!(a.resumes, b.resumes, "seeded fault plans must replay identically");
+    assert!(matches!(a.parity, Some(Ok(()))));
+    assert!(matches!(b.parity, Some(Ok(()))));
+}
+
+#[test]
+fn never_answering_address_fails_within_the_connect_window() {
+    // ISSUE 7 satellite: the worker dial window is configurable and
+    // *bounded*. Bind a port, then close it — every retry gets
+    // connection-refused, and the backoff loop must give up with a
+    // typed Timeout once the window elapses (not the old fixed 30 s).
+    let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    let opts = TcpOpts { connect_timeout: Duration::from_secs(1), ..TcpOpts::default() };
+    let t0 = Instant::now();
+    let err = Tcp::connect_topo_opts(&addr, 1, 2, 0xfee1, Topology::Star, &opts)
+        .expect_err("nothing is listening");
+    let elapsed = t0.elapsed();
+    assert!(
+        matches!(err, TransportError::Timeout { peer: 0, .. }),
+        "want a typed dial timeout naming the root, got: {err}"
+    );
+    assert!(elapsed >= Duration::from_millis(500), "gave up before the window: {elapsed:?}");
+    assert!(elapsed < Duration::from_secs(10), "overshot the 1 s window: {elapsed:?}");
+}
+
+#[test]
+fn dead_rank_mid_round_bounds_survivor_exit() {
+    // ISSUE 7 satellite (in-process half; tests/chaos_shutdown.rs
+    // kills a real OS process): rank 2 vanishes before its first
+    // round. Each survivor must exit with a typed error within about
+    // one recv deadline plus one failed resume window — never hang on
+    // the hole in the group.
+    let spec = spec("01adam", Topology::Star, 3);
+    let opts = TcpOpts {
+        connect_timeout: Duration::from_secs(5),
+        recv_deadline: Duration::from_secs(2),
+        resume_window: Duration::from_secs(1),
+        max_resumes: 2,
+    };
+    let mut group =
+        Tcp::loopback_group_opts(3, spec.fingerprint(), Topology::Star, &opts).unwrap();
+    let dead = group.pop().expect("rank 2");
+    drop(dead); // the mid-run death: sockets close, rank 2 is gone
+    let t0 = Instant::now();
+    let results: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = group
+            .into_iter()
+            .map(|tp| {
+                let spec = &spec;
+                s.spawn(move || {
+                    let mut link = RankLink::new(Box::new(tp));
+                    run_rank(&mut link, spec)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+    });
+    let elapsed = t0.elapsed();
+    for (rank, res) in results.into_iter().enumerate() {
+        let err = res.err().unwrap_or_else(|| panic!("rank {rank} should have failed"));
+        assert!(
+            matches!(
+                err,
+                TransportError::Closed { .. }
+                    | TransportError::Truncated { .. }
+                    | TransportError::Timeout { .. }
+                    | TransportError::Io(_)
+            ),
+            "rank {rank}: want a link-death error, got: {err}"
+        );
+    }
+    assert!(
+        elapsed < Duration::from_secs(15),
+        "survivors took {elapsed:?} to notice a dead rank — the bound is broken"
+    );
+}

@@ -1,0 +1,100 @@
+//! ISSUE 7 satellite: graceful shutdown when a **real OS process**
+//! dies mid-round. `zo-adam launch --kill-rank R` arms one worker to
+//! `abort()` at a given step; the launch must then fail with a typed
+//! diagnosis naming the dead rank, do so within the deadline budget
+//! (no survivor blocks past its recv deadline + resume window), and
+//! leave **zero** live worker processes — the same guarantee
+//! `tests/launch_cleanup.rs` pins for bootstrap-time failures,
+//! extended here to mid-training death.
+
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn exe() -> &'static str {
+    env!("CARGO_BIN_EXE_zo-adam")
+}
+
+/// A seed value unlikely to collide with any other test's workers: it
+/// shows up verbatim in each worker's argv (`--seed <marker>`), so a
+/// /proc cmdline scan can find survivors of *this* launch only.
+const MARKER_SEED: &str = "424243777";
+
+/// Count live processes whose cmdline contains both `worker` and the
+/// marker seed (Linux only; elsewhere returns 0 and the assertion is
+/// vacuous, matching launch_cleanup.rs's liveness gating).
+fn surviving_workers() -> usize {
+    if !cfg!(target_os = "linux") {
+        return 0;
+    }
+    let Ok(entries) = std::fs::read_dir("/proc") else { return 0 };
+    entries
+        .flatten()
+        .filter(|e| e.file_name().to_string_lossy().chars().all(|c| c.is_ascii_digit()))
+        .filter(|e| {
+            std::fs::read(e.path().join("cmdline"))
+                .map(|raw| {
+                    let cmdline = String::from_utf8_lossy(&raw).replace('\0', " ");
+                    cmdline.contains("worker") && cmdline.contains(MARKER_SEED)
+                })
+                .unwrap_or(false)
+        })
+        .count()
+}
+
+#[test]
+fn killed_rank_fails_the_launch_typed_bounded_and_leaves_no_survivors() {
+    let t0 = Instant::now();
+    let out = Command::new(exe())
+        .args([
+            "launch",
+            "--ranks",
+            "4",
+            "--transport",
+            "tcp",
+            "--kill-rank",
+            "2",
+            "--kill-at-step",
+            "3",
+            "--recv-deadline",
+            "3",
+            "--resume-window",
+            "1",
+            "--d",
+            "512",
+            "--steps",
+            "40",
+            "--seed",
+            MARKER_SEED,
+            "--quiet",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .output()
+        .expect("run zo-adam launch");
+    let elapsed = t0.elapsed();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+
+    assert!(
+        !out.status.success(),
+        "a launch whose rank 2 aborted must fail\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    // The diagnosis must name the dead rank (the worker-status note
+    // and/or the chaos abort line), not just echo the root's symptom.
+    assert!(stderr.contains("rank 2"), "stderr must name the dead rank:\n{stderr}");
+    // Budget: rank 2 dies within a step or two; the root notices at
+    // its next read from it (≤ one 3 s recv deadline), burns at most
+    // one 1 s resume window waiting for a reconnect that never comes,
+    // then shuts the survivors down under a 2 s grace. 40 s is that
+    // worst case with an order of magnitude of host-noise headroom —
+    // the old failure mode was minutes of silent blocking.
+    assert!(
+        elapsed < Duration::from_secs(40),
+        "launch took {elapsed:?} to fail — survivors overslept their deadlines"
+    );
+    assert_eq!(
+        surviving_workers(),
+        0,
+        "a failed launch left live `zo-adam worker` processes behind"
+    );
+}

@@ -9,7 +9,7 @@ use zo_adam::comm::transport::{
 };
 use zo_adam::testkit::{property, Gen};
 
-const KINDS: [FrameKind; 9] = [
+const KINDS: [FrameKind; 10] = [
     FrameKind::Hello,
     FrameKind::Barrier,
     FrameKind::FpF16,
@@ -19,6 +19,7 @@ const KINDS: [FrameKind; 9] = [
     FrameKind::Bye,
     FrameKind::EfPartial,
     FrameKind::FpPartial,
+    FrameKind::Resume,
 ];
 
 fn arbitrary_header(g: &mut Gen) -> FrameHeader {
@@ -173,10 +174,15 @@ fn prop_schedule_mismatches_are_typed_errors() {
 
 #[test]
 fn partial_kinds_have_pinned_wire_values() {
-    // The tree's leader-combine kinds are wire protocol now: their u16
-    // values must never drift (an old binary would decode a new frame
-    // as BadKind, not as the wrong collective).
-    for (kind, want) in [(FrameKind::EfPartial, 8u16), (FrameKind::FpPartial, 9u16)] {
+    // The tree's leader-combine kinds and the reconnect handshake are
+    // wire protocol now: their u16 values must never drift (an old
+    // binary would decode a new frame as BadKind, not as the wrong
+    // collective — or worse, treat a data frame as a Resume).
+    for (kind, want) in [
+        (FrameKind::EfPartial, 8u16),
+        (FrameKind::FpPartial, 9u16),
+        (FrameKind::Resume, 10u16),
+    ] {
         let header = FrameHeader::new(kind, 3, 5, 64, 0);
         let mut bytes = Vec::new();
         encode_frame(header, &[], &mut bytes);
@@ -212,10 +218,11 @@ fn member_hello_outside_the_group_is_group_mismatch() {
             other => panic!("rank {rank} at leader {leader}: {other:?}"),
         }
     }
-    // ...and a fingerprint mismatch still loses to the handshake check
+    // ...and a fingerprint mismatch still loses to the handshake check,
+    // now as the structured variant carrying both fingerprints
     assert!(matches!(
         validate_member(&hello(5), &fp.to_le_bytes(), world, 0xbad, shape, 4),
-        Err(TransportError::Handshake(_))
+        Err(TransportError::FingerprintMismatch { want: 0xbad, got: 0xd00d })
     ));
 }
 
