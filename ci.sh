@@ -19,6 +19,14 @@ fi
 step "cargo build --release"
 cargo build --release
 
+# Static invariants (ISSUE 8, DESIGN.md §Static invariants): the
+# in-crate analyzer walks rust/src + rust/tests and denies the idioms
+# that would silently break the determinism, zero-alloc, typed-error
+# and wire-pinning contracts. --deny-all is the CI posture: directive
+# hygiene warnings and a missing wire.lock are errors here too.
+step "zo-adam lint --deny-all"
+cargo run --release --bin zo-adam -- lint --deny-all --json
+
 step "cargo test -q"
 cargo test -q
 
@@ -94,7 +102,7 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
     # bump PR_INDEX when a new PR starts). `zo-adam bench` prints the
     # cross-snapshot p50/steps-per-s trend at the end of every run, so
     # drift that stays under the 30% gate is still visible across PRs.
-    PR_INDEX="${PR_INDEX:-7}"
+    PR_INDEX="${PR_INDEX:-8}"
     step "zo-adam bench (perf gate vs BENCH_PR2.json, history BENCH_PR${PR_INDEX}.json)"
     ZO_BENCH_QUICK=1 cargo run --release --bin zo-adam -- bench --quick \
         --json BENCH_PR2.json --baseline BENCH_PR2.json --tolerance 0.30 \

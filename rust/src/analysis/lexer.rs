@@ -1,0 +1,393 @@
+//! A minimal hand-rolled Rust lexer for the invariant analyzer.
+//!
+//! The offline environment ships no syn/proc-macro2, and the rules in
+//! [`super::rules`] only need a *token-accurate* view of the source:
+//! identifiers, punctuation, numeric literals and the positions of
+//! comments. String and char literal *contents* are deliberately
+//! opaque (`Tok::Str` / `Tok::Char`) so that a banned idiom quoted
+//! inside a test fixture or an error message never trips a rule.
+//!
+//! The lexer is total: any byte sequence produces a token stream (an
+//! unterminated literal simply runs to end of input), so the analyzer
+//! can never panic on the tree it walks.
+
+/// One source token. Comment text is collected separately in
+/// [`Comment`]; whitespace is discarded.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword (`fn`, `unsafe`, `HashMap`, …).
+    Ident(String),
+    /// One punctuation character. Multi-char operators (`::`, `->`)
+    /// appear as consecutive `Punct` tokens — rules match sequences.
+    Punct(char),
+    /// Numeric literal, raw text preserved (`0x5A41_3031`, `1.0f32`).
+    Num(String),
+    /// String literal (normal, raw, byte); contents opaque.
+    Str,
+    /// Char or byte-char literal; contents opaque.
+    Char,
+    /// Lifetime (`'a`).
+    Lifetime,
+}
+
+/// A token with the 1-based line it starts on.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// A comment with its text (delimiters stripped, trimmed), the
+/// 1-based line it *starts* on, and whether it begins its line (no
+/// code before it — the form `// lint:` directives must take to apply
+/// to the *next* line rather than their own).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub text: String,
+    pub line: u32,
+    pub own_line: bool,
+}
+
+/// The lexed view of one file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens + comments. Never fails.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    // Has any token started on the current line yet? (Comments and
+    // whitespace don't count — this drives `Comment::own_line`.)
+    let mut line_has_code = false;
+
+    macro_rules! push_tok {
+        ($t:expr) => {{
+            out.tokens.push(Token { tok: $t, line });
+            line_has_code = true;
+        }};
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            line_has_code = false;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc comments `///` and `//!`).
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let raw: String = chars[start..j].iter().collect();
+            let text = raw.trim_start_matches(['/', '!']).trim().to_string();
+            out.comments.push(Comment { text, line, own_line: !line_has_code });
+            i = j;
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start_line = line;
+            let own = !line_has_code;
+            let mut j = i + 2;
+            let mut depth = 1usize;
+            let body_start = j;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    line_has_code = false;
+                } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 1;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 1;
+                }
+                j += 1;
+            }
+            let body_end = j.saturating_sub(2).max(body_start);
+            let raw: String = chars[body_start..body_end.min(n)].iter().collect();
+            out.comments.push(Comment {
+                text: raw.trim_start_matches(['*', '!']).trim().to_string(),
+                line: start_line,
+                own_line: own,
+            });
+            i = j;
+            continue;
+        }
+        // String literal.
+        if c == '"' {
+            push_tok!(Tok::Str);
+            i += 1;
+            while i < n {
+                match chars[i] {
+                    '\\' => i += 2,
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            continue;
+        }
+        // Identifier — with raw-string / byte-literal prefix handling.
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(chars[i]) {
+                i += 1;
+            }
+            let word: String = chars[start..i].iter().collect();
+            let next = chars.get(i).copied();
+            // r"…" / br"…" / r#"…"# / br#"…"#
+            if (word == "r" || word == "br") && matches!(next, Some('"') | Some('#')) {
+                let mut hashes = 0usize;
+                let mut j = i;
+                while j < n && chars[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && chars[j] == '"' {
+                    j += 1;
+                    // scan for `"` followed by `hashes` hash marks
+                    'raw: while j < n {
+                        if chars[j] == '\n' {
+                            line += 1;
+                        } else if chars[j] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && j + 1 + k < n && chars[j + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                j += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        j += 1;
+                    }
+                    push_tok!(Tok::Str);
+                    i = j;
+                    continue;
+                }
+                // `r#ident` raw identifier: fall through as the ident
+                // after the hash.
+                push_tok!(Tok::Ident(word));
+                continue;
+            }
+            // b'…' byte char / b"…" byte string
+            if word == "b" && next == Some('\'') {
+                push_tok!(Tok::Char);
+                i += 1; // opening quote
+                if i < n && chars[i] == '\\' {
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                while i < n && chars[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                continue;
+            }
+            if word == "b" && next == Some('"') {
+                push_tok!(Tok::Str);
+                i += 1;
+                while i < n {
+                    match chars[i] {
+                        '\\' => i += 2,
+                        '"' => {
+                            i += 1;
+                            break;
+                        }
+                        '\n' => {
+                            line += 1;
+                            i += 1;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                continue;
+            }
+            push_tok!(Tok::Ident(word));
+            continue;
+        }
+        // Number.
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            let mut seen_dot = false;
+            while i < n {
+                let d = chars[i];
+                if is_ident_cont(d) {
+                    // covers hex digits, underscores, exponents and
+                    // type suffixes alike — all one literal token
+                    i += 1;
+                    // `1e-3`: a sign directly after an exponent marker
+                    if (d == 'e' || d == 'E')
+                        && !chars[start..i - 1].iter().any(|&p| p == 'x' || p == 'X')
+                        && matches!(chars.get(i), Some('+') | Some('-'))
+                        && chars.get(i + 1).is_some_and(|c2| c2.is_ascii_digit())
+                    {
+                        i += 1;
+                    }
+                } else if d == '.'
+                    && !seen_dot
+                    && chars.get(i + 1).is_some_and(|c2| c2.is_ascii_digit())
+                {
+                    seen_dot = true;
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            push_tok!(Tok::Num(chars[start..i].iter().collect()));
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let next = chars.get(i + 1).copied();
+            let after = chars.get(i + 2).copied();
+            if next.is_some_and(|c2| is_ident_start(c2)) && after != Some('\'') {
+                // lifetime: 'a, 'static
+                i += 2;
+                while i < n && is_ident_cont(chars[i]) {
+                    i += 1;
+                }
+                push_tok!(Tok::Lifetime);
+                continue;
+            }
+            push_tok!(Tok::Char);
+            i += 1;
+            if i < n && chars[i] == '\\' {
+                i += 2;
+            } else {
+                i += 1;
+            }
+            while i < n && chars[i] != '\'' && chars[i] != '\n' {
+                i += 1;
+            }
+            if i < n && chars[i] == '\'' {
+                i += 1;
+            }
+            continue;
+        }
+        push_tok!(Tok::Punct(c));
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(l: &Lexed) -> Vec<&str> {
+        l.tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_lines() {
+        let l = lex("fn main() {\n    x.sum::<f32>();\n}\n");
+        assert_eq!(idents(&l), vec!["fn", "main", "x", "sum", "f32"]);
+        let sum = l
+            .tokens
+            .iter()
+            .find(|t| matches!(&t.tok, Tok::Ident(s) if s == "sum"))
+            .unwrap();
+        assert_eq!(sum.line, 2);
+    }
+
+    #[test]
+    fn string_contents_are_opaque() {
+        let l = lex(r#"let s = "HashMap::new() Instant::now()";"#);
+        assert!(!idents(&l).contains(&"HashMap"));
+        assert_eq!(l.tokens.iter().filter(|t| t.tok == Tok::Str).count(), 1);
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let l = lex("let a = r#\"vec![\"quoted\"]\"#; let b = \"esc \\\" quote\"; let c = b\"x\";");
+        assert!(!idents(&l).contains(&"vec"));
+        assert_eq!(l.tokens.iter().filter(|t| t.tok == Tok::Str).count(), 3);
+    }
+
+    #[test]
+    fn comments_carry_text_line_and_ownline() {
+        let l = lex("let x = 1; // trailing note\n// lint: hot-path\nfn f() {}\n");
+        assert_eq!(l.comments.len(), 2);
+        assert_eq!(l.comments[0].text, "trailing note");
+        assert!(!l.comments[0].own_line);
+        assert_eq!(l.comments[1].text, "lint: hot-path");
+        assert!(l.comments[1].own_line);
+        assert_eq!(l.comments[1].line, 2);
+    }
+
+    #[test]
+    fn doc_and_block_comments() {
+        let l = lex("/// Safety: fine\n/* block\nspanning */ let y = 2;\n");
+        assert_eq!(l.comments[0].text, "Safety: fine");
+        assert_eq!(l.comments[1].line, 2);
+        // the let after the block comment is code on line 3
+        assert_eq!(l.tokens[0].line, 3);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let esc = '\\n'; }");
+        assert_eq!(l.tokens.iter().filter(|t| t.tok == Tok::Lifetime).count(), 2);
+        assert_eq!(l.tokens.iter().filter(|t| t.tok == Tok::Char).count(), 2);
+    }
+
+    #[test]
+    fn numbers_keep_raw_text() {
+        let l = lex("const M: u32 = 0x5A41_3031; let f = 1.5e-3f64; let r = 0..5;");
+        let nums: Vec<&str> = l
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Num(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec!["0x5A41_3031", "1.5e-3f64", "0", "5"]);
+    }
+
+    #[test]
+    fn unterminated_literals_do_not_hang() {
+        let _ = lex("let s = \"never closed");
+        let _ = lex("let r = r#\"never closed");
+        let _ = lex("let c = 'x");
+        let _ = lex("/* never closed");
+    }
+}

@@ -1,0 +1,171 @@
+//! `zo-adam lint` — the in-crate invariant analyzer.
+//!
+//! Every guarantee this crate makes is enforced dynamically somewhere
+//! — bitwise parity by `check_parity` and the parity tests, the
+//! zero-alloc hot path by a counting global allocator, the typed
+//! transport fault model by the chaos matrix. This module enforces
+//! the *source idioms* behind those guarantees statically, so a stray
+//! `HashMap` iteration or `.iter().sum::<f32>()` on a reduce leg is a
+//! lint failure at review time, not a parity break three PRs later.
+//!
+//! Zero dependencies by construction (the crate's vendored-shims
+//! constraint): a hand-rolled lexer ([`lexer`]), a token-rule engine
+//! ([`rules`]), and a reporter with file:line spans and JSON output
+//! ([`report`]). The rules and the contracts they guard are
+//! documented in DESIGN.md §"Static invariants".
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use report::{Finding, LintReport, RuleId, Severity};
+pub use rules::{check_lock, extract_wire_surface, lint_source, WireSurface};
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// The files whose constants make up the W1 wire surface.
+pub const WIRE_FILES: &[&str] = &[
+    "rust/src/comm/transport/frame.rs",
+    "rust/src/comm/compress.rs",
+    "rust/src/comm/allreduce.rs",
+    "rust/src/comm/transport/tcp.rs",
+];
+
+/// Walk up from `start` to the repo root — the first ancestor that
+/// contains `rust/src`. Works from the repo root and from inside
+/// `rust/` (where `cargo run` puts the cwd).
+pub fn resolve_root(start: &Path) -> Option<PathBuf> {
+    let mut cur = Some(start.to_path_buf());
+    while let Some(dir) = cur {
+        if dir.join("rust").join("src").is_dir() {
+            return Some(dir);
+        }
+        cur = dir.parent().map(Path::to_path_buf);
+    }
+    None
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            walk(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Every `.rs` file under `rust/src` + `rust/tests`, sorted, so runs
+/// are deterministic regardless of directory-entry order.
+pub fn collect_rs_files(root: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    walk(&root.join("rust").join("src"), &mut out);
+    walk(&root.join("rust").join("tests"), &mut out);
+    out.sort();
+    out
+}
+
+fn rel_of(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
+}
+
+/// Extract the live wire surface from the tree (for `--write-lock`
+/// and the W1 check).
+pub fn wire_surface_from_tree(root: &Path) -> Result<WireSurface, String> {
+    let mut files = Vec::new();
+    for rel in WIRE_FILES {
+        let p = root.join(rel);
+        let src =
+            fs::read_to_string(&p).map_err(|e| format!("read {}: {e}", p.display()))?;
+        files.push((rel.to_string(), src));
+    }
+    extract_wire_surface(&files)
+}
+
+/// Lint the whole tree: per-file token rules plus the tree-level W1
+/// lock check. With `deny_all`, hygiene warnings (L0, a missing
+/// wire.lock) are promoted to errors — the CI posture.
+pub fn run_tree(root: &Path, deny_all: bool) -> Result<LintReport, String> {
+    let files = collect_rs_files(root);
+    if files.is_empty() {
+        return Err(format!(
+            "no .rs files under {} (expected rust/src + rust/tests)",
+            root.display()
+        ));
+    }
+    let mut rep = LintReport::default();
+    for p in &files {
+        let src =
+            fs::read_to_string(p).map_err(|e| format!("read {}: {e}", p.display()))?;
+        rep.findings.extend(lint_source(&rel_of(root, p), &src));
+    }
+    rep.files_scanned = files.len();
+
+    match wire_surface_from_tree(root) {
+        Ok(surface) => match fs::read_to_string(root.join("wire.lock")) {
+            Ok(lock) => rep.findings.extend(check_lock(&surface, &lock)),
+            Err(_) => rep.findings.push(Finding {
+                rule: RuleId::W1,
+                severity: Severity::Warn,
+                file: "wire.lock".to_string(),
+                line: 0,
+                msg: "wire.lock missing — pin the wire surface with `zo-adam lint --write-lock`"
+                    .to_string(),
+            }),
+        },
+        Err(e) => rep.findings.push(Finding {
+            rule: RuleId::W1,
+            severity: Severity::Deny,
+            file: "wire.lock".to_string(),
+            line: 0,
+            msg: e,
+        }),
+    }
+
+    if deny_all {
+        rep.deny_all();
+    }
+    rep.sort();
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_root_walks_up_from_rust_src() {
+        let here = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let root = resolve_root(here).expect("repo root above manifest dir");
+        assert!(root.join("rust").join("src").join("lib.rs").is_file());
+        assert_eq!(resolve_root(&root).as_deref(), Some(root.as_path()));
+    }
+
+    #[test]
+    fn collect_is_sorted_and_sees_both_trees() {
+        let root = resolve_root(Path::new(env!("CARGO_MANIFEST_DIR"))).expect("root");
+        let files = collect_rs_files(&root);
+        let rels: Vec<String> = files.iter().map(|p| rel_of(&root, p)).collect();
+        assert!(rels.iter().any(|r| r == "rust/src/lib.rs"));
+        assert!(rels.iter().any(|r| r.starts_with("rust/tests/")));
+        let mut sorted = rels.clone();
+        sorted.sort();
+        assert_eq!(rels, sorted);
+    }
+
+    #[test]
+    fn tree_wire_surface_matches_the_shipped_constants() {
+        let root = resolve_root(Path::new(env!("CARGO_MANIFEST_DIR"))).expect("root");
+        let s = wire_surface_from_tree(&root).expect("wire surface extracts");
+        assert_eq!(s.magic, crate::comm::transport::frame::MAGIC as u64);
+        assert_eq!(s.version, crate::comm::transport::frame::VERSION as u64);
+        assert_eq!(s.codec_chunk, crate::comm::compress::CODEC_CHUNK as u64);
+        assert_eq!(s.kinds.len(), 10);
+        assert_eq!(s.kinds.first().map(|(k, v)| (k.as_str(), *v)), Some(("Hello", 1)));
+        assert_eq!(s.kinds.last().map(|(k, v)| (k.as_str(), *v)), Some(("Resume", 10)));
+    }
+}

@@ -1,0 +1,234 @@
+//! Findings, severities and the two output formats of `zo-adam lint`.
+
+use crate::util::json::Json;
+use std::fmt;
+
+/// The named rules (DESIGN.md §Static invariants). Each one guards a
+/// contract the runtime tests enforce dynamically; the analyzer
+/// rejects the *source idioms* that break the contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    /// No wall-clock / hash-order / ambient-randomness reads in the
+    /// deterministic modules (bitwise parity contract).
+    D1,
+    /// No unordered float reductions (`.sum()`, `.product()`,
+    /// `.fold()`) in the deterministic kernels — reductions must go
+    /// through the fixed-chunk kernels.
+    D2,
+    /// No allocation idioms inside `// lint: hot-path` functions
+    /// (zero-alloc steady-state contract, `tests/zero_alloc.rs`).
+    A1,
+    /// No non-test `unwrap()` / `expect("…")` / `panic!` in
+    /// `comm::transport` (typed `TransportError` contract).
+    E1,
+    /// Every `unsafe` block/fn/impl needs an adjacent `// SAFETY:`
+    /// comment.
+    U1,
+    /// The pinned wire surface must byte-match the committed
+    /// `wire.lock`.
+    W1,
+    /// Lint-directive hygiene: malformed `// lint:` comments,
+    /// allowlist entries without a reason.
+    L0,
+}
+
+pub const ALL_RULES: &[RuleId] =
+    &[RuleId::D1, RuleId::D2, RuleId::A1, RuleId::E1, RuleId::U1, RuleId::W1, RuleId::L0];
+
+impl RuleId {
+    pub fn name(self) -> &'static str {
+        match self {
+            RuleId::D1 => "D1",
+            RuleId::D2 => "D2",
+            RuleId::A1 => "A1",
+            RuleId::E1 => "E1",
+            RuleId::U1 => "U1",
+            RuleId::W1 => "W1",
+            RuleId::L0 => "L0",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<RuleId> {
+        ALL_RULES.iter().copied().find(|r| r.name() == s)
+    }
+
+    /// The contract this rule guards — shown in human output.
+    pub fn contract(self) -> &'static str {
+        match self {
+            RuleId::D1 => "bitwise seq/threaded/TCP parity (no ambient time, hash order or randomness)",
+            RuleId::D2 => "bitwise parity (float reductions must use the fixed-chunk kernels)",
+            RuleId::A1 => "zero-alloc hot path (tests/zero_alloc.rs)",
+            RuleId::E1 => "typed TransportError fault model (no panics on the wire path)",
+            RuleId::U1 => "every unsafe carries its proof obligation",
+            RuleId::W1 => "pinned wire surface (wire.lock)",
+            RuleId::L0 => "lint directive hygiene",
+        }
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warn,
+    Deny,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// One finding, anchored to a file:line span.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: RuleId,
+    pub severity: Severity,
+    /// Repo-root-relative path with forward slashes
+    /// (`rust/src/comm/compress.rs`, or `wire.lock` for W1 drift).
+    pub file: String,
+    /// 1-based; 0 when the finding has no line anchor.
+    pub line: u32,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: {} [{}] {} — guards: {}",
+            self.file, self.line, self.rule, self.msg, self.rule.contract()
+        )
+    }
+}
+
+/// The result of one lint run over the tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// Stable order: file, then line, then rule.
+    pub fn sort(&mut self) {
+        self.findings
+            .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    }
+
+    /// Promote every warning to an error (`--deny-all`).
+    pub fn deny_all(&mut self) {
+        for f in &mut self.findings {
+            f.severity = Severity::Deny;
+        }
+    }
+
+    pub fn deny_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Deny).count()
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warn).count()
+    }
+
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}: {}\n", f.severity.name(), f));
+        }
+        out.push_str(&format!(
+            "lint: {} file(s) scanned, {} error(s), {} warning(s)\n",
+            self.files_scanned,
+            self.deny_count(),
+            self.warn_count()
+        ));
+        out
+    }
+
+    pub fn render_json(&self) -> String {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::Obj(vec![
+                    ("rule".to_string(), Json::Str(f.rule.name().to_string())),
+                    ("severity".to_string(), Json::Str(f.severity.name().to_string())),
+                    ("file".to_string(), Json::Str(f.file.clone())),
+                    ("line".to_string(), Json::Num(f.line as f64)),
+                    ("msg".to_string(), Json::Str(f.msg.clone())),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("files_scanned".to_string(), Json::Num(self.files_scanned as f64)),
+            ("errors".to_string(), Json::Num(self.deny_count() as f64)),
+            ("warnings".to_string(), Json::Num(self.warn_count() as f64)),
+            ("findings".to_string(), Json::Arr(findings)),
+        ])
+        .to_string_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_names_round_trip() {
+        for r in ALL_RULES {
+            assert_eq!(RuleId::from_name(r.name()), Some(*r));
+        }
+        assert_eq!(RuleId::from_name("Z9"), None);
+    }
+
+    #[test]
+    fn report_sorts_counts_and_promotes() {
+        let mut rep = LintReport::default();
+        rep.findings.push(Finding {
+            rule: RuleId::U1,
+            severity: Severity::Deny,
+            file: "b.rs".into(),
+            line: 9,
+            msg: "x".into(),
+        });
+        rep.findings.push(Finding {
+            rule: RuleId::L0,
+            severity: Severity::Warn,
+            file: "a.rs".into(),
+            line: 3,
+            msg: "y".into(),
+        });
+        rep.sort();
+        assert_eq!(rep.findings[0].file, "a.rs");
+        assert_eq!((rep.deny_count(), rep.warn_count()), (1, 1));
+        rep.deny_all();
+        assert_eq!((rep.deny_count(), rep.warn_count()), (2, 0));
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut rep = LintReport { findings: vec![], files_scanned: 7 };
+        rep.findings.push(Finding {
+            rule: RuleId::D1,
+            severity: Severity::Deny,
+            file: "rust/src/x.rs".into(),
+            line: 1,
+            msg: "Instant::now".into(),
+        });
+        let parsed = crate::util::json::Json::parse(&rep.render_json()).expect("valid json");
+        assert_eq!(parsed.req("files_scanned").unwrap().as_usize(), Some(7));
+        let arr = match parsed.req("findings").unwrap() {
+            Json::Arr(a) => a,
+            other => panic!("findings not an array: {other:?}"),
+        };
+        assert_eq!(arr[0].req("rule").unwrap().as_str(), Some("D1"));
+    }
+}

@@ -1,0 +1,737 @@
+//! The rule engine: module scopes, `// lint:` directives, the token
+//! rules D1/D2/A1/E1/U1, and the W1 pinned wire surface.
+//!
+//! Rules run over the token stream from [`super::lexer`], so banned
+//! idioms quoted in strings or fixtures never fire. Test regions
+//! (`#[cfg(test)]` items, `#[test]` functions) are exempt from the
+//! determinism and fault-model rules — tests may time, unwrap and
+//! panic freely — while U1 (SAFETY comments) applies everywhere:
+//! an unsound test is still unsound.
+
+use super::lexer::{lex, Lexed, Tok, Token};
+use super::report::{Finding, RuleId, Severity};
+
+// ---------------------------------------------------------------------------
+// Scopes: which files each rule patrols. Paths are repo-root-relative
+// with forward slashes.
+// ---------------------------------------------------------------------------
+
+/// D1 — no ambient time / hash-order / randomness. The deterministic
+/// modules plus the transport layer, where the legitimately-timed
+/// code (deadlines, backoff) carries explicit per-line allows.
+fn d1_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/comm/")
+        || rel.starts_with("rust/src/optim/")
+        || rel == "rust/src/coordinator/engine.rs"
+        || rel == "rust/src/coordinator/pool.rs"
+}
+
+/// D2 — no unordered float reductions. Strictly the kernels on the
+/// parity-critical arithmetic path: every float reduction there must
+/// go through the fixed-chunk kernels (or carry an allow with a
+/// written order-independence argument).
+fn d2_scope(rel: &str) -> bool {
+    matches!(
+        rel,
+        "rust/src/comm/compress.rs"
+            | "rust/src/comm/allreduce.rs"
+            | "rust/src/comm/topology.rs"
+            | "rust/src/coordinator/engine.rs"
+            | "rust/src/coordinator/pool.rs"
+    ) || rel.starts_with("rust/src/optim/")
+}
+
+/// E1 — typed errors only; panicking idioms are banned outside tests.
+fn e1_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/comm/transport/")
+}
+
+// ---------------------------------------------------------------------------
+// Token helpers
+// ---------------------------------------------------------------------------
+
+fn is_id(t: &Token, s: &str) -> bool {
+    matches!(&t.tok, Tok::Ident(w) if w == s)
+}
+
+fn is_p(t: &Token, c: char) -> bool {
+    matches!(t.tok, Tok::Punct(p) if p == c)
+}
+
+/// Match a mixed ident/punct sequence at `i`. Single-character
+/// non-identifier entries match punctuation; everything else matches
+/// an identifier.
+fn seq(toks: &[Token], i: usize, pat: &[&str]) -> bool {
+    if i + pat.len() > toks.len() {
+        return false;
+    }
+    pat.iter().enumerate().all(|(k, p)| {
+        let first = p.chars().next().unwrap_or(' ');
+        if p.len() == 1 && !(first.is_ascii_alphanumeric() || first == '_') {
+            is_p(&toks[i + k], first)
+        } else {
+            is_id(&toks[i + k], p)
+        }
+    })
+}
+
+/// Index of the `}` closing the `{` at `open` (or the last token if
+/// unbalanced — never past the end, never panics).
+fn brace_match(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if is_p(t, '{') {
+            depth += 1;
+        } else if is_p(t, '}') {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+// ---------------------------------------------------------------------------
+// Test regions
+// ---------------------------------------------------------------------------
+
+/// Per-token mask: true for tokens inside a `#[cfg(test)]` item or a
+/// `#[test]` function. The match is on the exact token sequence, so
+/// `#[cfg_attr(not(test), …)]` does NOT gate a region.
+fn test_mask(toks: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        let gate = if seq(toks, i, &["#", "[", "cfg", "(", "test", ")", "]"]) {
+            Some(7)
+        } else if seq(toks, i, &["#", "[", "test", "]"]) {
+            Some(4)
+        } else {
+            None
+        };
+        let Some(len) = gate else {
+            i += 1;
+            continue;
+        };
+        // The gated item runs to its body's closing brace, or to the
+        // `;` of a braceless item (`#[cfg(test)] use …;`).
+        let mut j = i + len;
+        while j < toks.len() && !is_p(&toks[j], '{') && !is_p(&toks[j], ';') {
+            j += 1;
+        }
+        let end = if j < toks.len() && is_p(&toks[j], '{') { brace_match(toks, j) } else { j };
+        let end = end.min(toks.len().saturating_sub(1));
+        for m in mask.iter_mut().take(end + 1).skip(i) {
+            *m = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+// Directives
+// ---------------------------------------------------------------------------
+
+fn l0(rel: &str, line: u32, msg: String) -> Finding {
+    Finding { rule: RuleId::L0, severity: Severity::Warn, file: rel.to_string(), line, msg }
+}
+
+/// Line the next code token after `after` starts on (for own-line
+/// directives, which govern the line below them).
+fn next_code_line(lx: &Lexed, after: u32) -> u32 {
+    lx.tokens.iter().find(|t| t.line > after).map(|t| t.line).unwrap_or(after + 1)
+}
+
+/// Parse `// lint:` comments into (allowed (rule, line) pairs,
+/// hot-path marker lines), reporting hygiene problems as L0.
+fn parse_directives(
+    rel: &str,
+    lx: &Lexed,
+    findings: &mut Vec<Finding>,
+) -> (Vec<(RuleId, u32)>, Vec<u32>) {
+    let mut allows = Vec::new();
+    let mut hot = Vec::new();
+    for c in &lx.comments {
+        let Some(rest) = c.text.strip_prefix("lint:") else { continue };
+        let rest = rest.trim();
+        if rest == "hot-path" {
+            if c.own_line {
+                hot.push(c.line);
+            } else {
+                findings.push(l0(
+                    rel,
+                    c.line,
+                    "`lint: hot-path` must be on its own line above the function".to_string(),
+                ));
+            }
+            continue;
+        }
+        if let Some(inner) = rest.strip_prefix("allow(") {
+            let Some(close) = inner.find(')') else {
+                findings.push(l0(rel, c.line, "malformed allow directive: missing `)`".to_string()));
+                continue;
+            };
+            let name = inner[..close].trim();
+            let Some(rule) = RuleId::from_name(name) else {
+                findings.push(l0(rel, c.line, format!("allow names unknown rule `{name}`")));
+                continue;
+            };
+            let reason = inner[close + 1..]
+                .trim_start_matches(|ch: char| {
+                    ch.is_whitespace() || ch == '\u{2014}' || ch == '\u{2013}' || ch == '-' || ch == ':'
+                })
+                .trim();
+            if reason.is_empty() {
+                findings.push(l0(
+                    rel,
+                    c.line,
+                    format!("allow({name}) without a reason — write `lint: allow({name}) — <why>`"),
+                ));
+            }
+            let target = if c.own_line { next_code_line(lx, c.line) } else { c.line };
+            allows.push((rule, target));
+            continue;
+        }
+        findings.push(l0(rel, c.line, format!("unrecognized lint directive `{}`", c.text)));
+    }
+    (allows, hot)
+}
+
+/// Per-token mask of `// lint: hot-path` function bodies: each marker
+/// covers the brace-matched body of the next `fn` below it.
+fn hot_mask(toks: &[Token], markers: &[u32]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    for &ml in markers {
+        let Some(start) = toks.iter().position(|t| t.line > ml) else { continue };
+        let Some(fi) = (start..toks.len()).find(|&j| is_id(&toks[j], "fn")) else { continue };
+        let Some(bi) = (fi..toks.len()).find(|&j| is_p(&toks[j], '{')) else { continue };
+        let end = brace_match(toks, bi);
+        for m in mask.iter_mut().take(end + 1).skip(bi) {
+            *m = true;
+        }
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+// The analyzer proper
+// ---------------------------------------------------------------------------
+
+/// Lint one file. `rel` is the repo-root-relative path (it selects
+/// which rules apply); `src` is the file text. This is the whole
+/// analyzer for everything except W1, which is a tree-level check
+/// (see [`check_lock`] / [`super::run_tree`]).
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let rel = rel.replace('\\', "/");
+    let lx = lex(src);
+    let toks = &lx.tokens;
+    let in_test = test_mask(toks);
+
+    let mut findings = Vec::new();
+    let (allows, hot_lines) = parse_directives(&rel, &lx, &mut findings);
+    let hot = hot_mask(toks, &hot_lines);
+
+    let allowed =
+        |rule: RuleId, line: u32| allows.iter().any(|&(r, l)| r == rule && l == line);
+    let deny = |findings: &mut Vec<Finding>, rule: RuleId, line: u32, msg: String| {
+        if !allowed(rule, line) {
+            findings.push(Finding {
+                rule,
+                severity: Severity::Deny,
+                file: rel.clone(),
+                line,
+                msg,
+            });
+        }
+    };
+
+    let (d1, d2, e1) = (d1_scope(&rel), d2_scope(&rel), e1_scope(&rel));
+
+    for i in 0..toks.len() {
+        let line = toks[i].line;
+
+        // U1: every unsafe needs an adjacent SAFETY comment — tests
+        // included. `unsafe fn(` (a function-pointer *type*) carries
+        // no obligation of its own and is skipped.
+        if is_id(&toks[i], "unsafe") && !seq(toks, i + 1, &["fn", "("]) {
+            let lo = line.saturating_sub(5);
+            let hi = line + 1;
+            let documented = lx.comments.iter().any(|c| {
+                c.line >= lo
+                    && c.line <= hi
+                    && c.text.to_ascii_lowercase().starts_with("safety")
+            });
+            if !documented {
+                deny(
+                    &mut findings,
+                    RuleId::U1,
+                    line,
+                    "`unsafe` without an adjacent `// SAFETY:` comment".to_string(),
+                );
+            }
+        }
+
+        // A1: allocation idioms inside hot-path-marked bodies.
+        if hot[i] {
+            let hit = if seq(toks, i, &["vec", "!"]) {
+                Some("vec![]")
+            } else if seq(toks, i, &["Vec", ":", ":", "new"]) {
+                Some("Vec::new")
+            } else if seq(toks, i, &["Box", ":", ":", "new"]) {
+                Some("Box::new")
+            } else if seq(toks, i, &["String", ":", ":", "from"]) {
+                Some("String::from")
+            } else if seq(toks, i, &["format", "!"]) {
+                Some("format!")
+            } else if seq(toks, i, &[".", "collect"]) {
+                Some(".collect()")
+            } else if seq(toks, i, &[".", "to_vec"]) {
+                Some(".to_vec()")
+            } else {
+                None
+            };
+            if let Some(idiom) = hit {
+                deny(
+                    &mut findings,
+                    RuleId::A1,
+                    line,
+                    format!("allocation idiom `{idiom}` in a `lint: hot-path` function"),
+                );
+            }
+        }
+
+        if in_test[i] {
+            continue;
+        }
+
+        // D1: ambient time, unordered containers, ambient randomness.
+        if d1 {
+            if seq(toks, i, &["Instant", ":", ":", "now"]) {
+                deny(
+                    &mut findings,
+                    RuleId::D1,
+                    line,
+                    "`Instant::now()` in a deterministic module".to_string(),
+                );
+            }
+            if is_id(&toks[i], "SystemTime") {
+                deny(
+                    &mut findings,
+                    RuleId::D1,
+                    line,
+                    "`SystemTime` in a deterministic module".to_string(),
+                );
+            }
+            if let Tok::Ident(w) = &toks[i].tok {
+                if w == "HashMap" || w == "HashSet" {
+                    deny(
+                        &mut findings,
+                        RuleId::D1,
+                        line,
+                        format!("`{w}` (unordered iteration) in a deterministic module"),
+                    );
+                }
+                if w == "thread_rng" || w == "from_entropy" {
+                    deny(
+                        &mut findings,
+                        RuleId::D1,
+                        line,
+                        format!("ambient randomness `{w}` in a deterministic module"),
+                    );
+                }
+            }
+        }
+
+        // D2: unordered float reduction adaptors. `.sum::<f32>()`,
+        // `.product()`, `.fold(…)` — the turbofish or the call both
+        // start with the token right after the method name.
+        if d2 {
+            if let (true, Some(Token { tok: Tok::Ident(w), .. })) =
+                (is_p(&toks[i], '.'), toks.get(i + 1))
+            {
+                if (w == "sum" || w == "product" || w == "fold")
+                    && toks.get(i + 2).is_some_and(|t| is_p(t, '(') || is_p(t, ':'))
+                {
+                    deny(
+                        &mut findings,
+                        RuleId::D2,
+                        line,
+                        format!(
+                            "unordered reduction `.{w}()` on the parity-critical path — use the fixed-chunk kernels"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // E1: panicking idioms in the transport layer. `.expect(` only
+        // counts with a string-literal message — `FrameHeader::expect(
+        // kind, …)` is the protocol method, not a panic.
+        if e1 {
+            if seq(toks, i, &[".", "unwrap", "("]) {
+                deny(
+                    &mut findings,
+                    RuleId::E1,
+                    line,
+                    "`.unwrap()` in comm::transport — return a typed TransportError".to_string(),
+                );
+            }
+            if seq(toks, i, &[".", "expect", "("])
+                && toks.get(i + 3).is_some_and(|t| t.tok == Tok::Str)
+            {
+                deny(
+                    &mut findings,
+                    RuleId::E1,
+                    line,
+                    "`.expect(\"…\")` in comm::transport — return a typed TransportError".to_string(),
+                );
+            }
+            if seq(toks, i, &["panic", "!"]) {
+                deny(
+                    &mut findings,
+                    RuleId::E1,
+                    line,
+                    "`panic!` in comm::transport — return a typed TransportError".to_string(),
+                );
+            }
+        }
+    }
+
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// W1: the pinned wire surface
+// ---------------------------------------------------------------------------
+
+/// Everything two builds must agree on to talk to each other:
+/// header magic + version, the codec and server chunk sizes that fix
+/// the deterministic addition order, the resume ring depth, and every
+/// `FrameKind` discriminant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireSurface {
+    pub magic: u64,
+    pub version: u64,
+    pub codec_chunk: u64,
+    pub server_chunk: u64,
+    pub retained_frames: u64,
+    /// `FrameKind` variants in declaration order.
+    pub kinds: Vec<(String, u64)>,
+}
+
+/// Parse an integer literal as the lexer captured it: `4096`,
+/// `0x5A41_3031`, `4usize` all resolve; `1 << 30` is not a literal.
+fn parse_num(raw: &str) -> Option<u64> {
+    let s: String = raw.chars().filter(|c| *c != '_').collect();
+    let (digits, radix) = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => (hex, 16),
+        None => (s.as_str(), 10),
+    };
+    let end = digits
+        .char_indices()
+        .find(|(_, c)| !c.is_digit(radix))
+        .map(|(i, _)| i)
+        .unwrap_or(digits.len());
+    if end == 0 {
+        return None;
+    }
+    u64::from_str_radix(&digits[..end], radix).ok()
+}
+
+/// Extract the wire surface from `(rel, src)` pairs (the files in
+/// [`super::WIRE_FILES`]). Constants may be literals or single-path
+/// references to another wire constant (`SERVER_CHUNK =
+/// compress::CODEC_CHUNK`), resolved by terminal name.
+pub fn extract_wire_surface(files: &[(String, String)]) -> Result<WireSurface, String> {
+    let mut literals: Vec<(String, u64)> = Vec::new();
+    let mut refs: Vec<(String, String)> = Vec::new();
+    let mut kinds: Vec<(String, u64)> = Vec::new();
+
+    for (_, src) in files {
+        let lx = lex(src);
+        let toks = &lx.tokens;
+        for i in 0..toks.len() {
+            // const NAME: Type = <value>;
+            if is_id(&toks[i], "const")
+                && toks.get(i + 2).is_some_and(|t| is_p(t, ':'))
+            {
+                let Some(Token { tok: Tok::Ident(name), .. }) = toks.get(i + 1) else { continue };
+                let mut j = i + 3;
+                while j < toks.len() && !is_p(&toks[j], '=') && !is_p(&toks[j], ';') {
+                    j += 1;
+                }
+                if j >= toks.len() || !is_p(&toks[j], '=') {
+                    continue;
+                }
+                let vstart = j + 1;
+                let mut k = vstart;
+                while k < toks.len() && !is_p(&toks[k], ';') {
+                    k += 1;
+                }
+                let value = &toks[vstart..k];
+                if let [Token { tok: Tok::Num(n), .. }] = value {
+                    if let Some(v) = parse_num(n) {
+                        literals.push((name.clone(), v));
+                    }
+                } else if let Some(last) = value.iter().rev().find_map(|t| match &t.tok {
+                    Tok::Ident(w) => Some(w.clone()),
+                    _ => None,
+                }) {
+                    refs.push((name.clone(), last));
+                }
+            }
+            // enum FrameKind { Name = N, … }
+            if seq(toks, i, &["enum", "FrameKind"]) {
+                let Some(bi) = (i + 2..toks.len()).find(|&j| is_p(&toks[j], '{')) else {
+                    continue;
+                };
+                let end = brace_match(toks, bi);
+                let mut j = bi + 1;
+                while j + 2 < end {
+                    if let (Token { tok: Tok::Ident(v), .. }, true, Token { tok: Tok::Num(n), .. }) =
+                        (&toks[j], is_p(&toks[j + 1], '='), &toks[j + 2])
+                    {
+                        if let Some(val) = parse_num(n) {
+                            kinds.push((v.clone(), val));
+                            j += 3;
+                            continue;
+                        }
+                    }
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    let get = |name: &str| -> Result<u64, String> {
+        if let Some((_, v)) = literals.iter().find(|(n, _)| n == name) {
+            return Ok(*v);
+        }
+        if let Some((_, target)) = refs.iter().find(|(n, _)| n == name) {
+            if let Some((_, v)) = literals.iter().find(|(n, _)| n == target) {
+                return Ok(*v);
+            }
+        }
+        Err(format!("wire constant `{name}` not found in the wire files"))
+    };
+    if kinds.is_empty() {
+        return Err("`enum FrameKind` with explicit discriminants not found".to_string());
+    }
+    Ok(WireSurface {
+        magic: get("MAGIC")?,
+        version: get("VERSION")?,
+        codec_chunk: get("CODEC_CHUNK")?,
+        server_chunk: get("SERVER_CHUNK")?,
+        retained_frames: get("RETAINED_FRAMES")?,
+        kinds,
+    })
+}
+
+impl WireSurface {
+    /// The canonical `key = value` pairs, in lock-file order.
+    pub fn pairs(&self) -> Vec<(String, String)> {
+        let mut p = vec![
+            ("MAGIC".to_string(), format!("0x{:08X}", self.magic)),
+            ("VERSION".to_string(), self.version.to_string()),
+            ("CODEC_CHUNK".to_string(), self.codec_chunk.to_string()),
+            ("SERVER_CHUNK".to_string(), self.server_chunk.to_string()),
+            ("RETAINED_FRAMES".to_string(), self.retained_frames.to_string()),
+        ];
+        for (k, v) in &self.kinds {
+            p.push((format!("FrameKind::{k}"), v.to_string()));
+        }
+        p
+    }
+
+    /// Render the lock file (`wire.lock`) byte-for-byte.
+    pub fn render(&self) -> String {
+        let mut s = String::from(
+            "# zo-adam wire surface — generated by `zo-adam lint --write-lock`; do not edit by hand.\n",
+        );
+        for (k, v) in self.pairs() {
+            s.push_str(&k);
+            s.push_str(" = ");
+            s.push_str(&v);
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Diff the live wire surface against the committed lock text. Every
+/// mismatch — drifted value, unpinned key, orphaned pin — is a W1
+/// deny: renumbering a frame kind must be a deliberate lock
+/// regeneration, never a side effect.
+pub fn check_lock(surface: &WireSurface, lock: &str) -> Vec<Finding> {
+    let w1 = |line: u32, msg: String| Finding {
+        rule: RuleId::W1,
+        severity: Severity::Deny,
+        file: "wire.lock".to_string(),
+        line,
+        msg,
+    };
+    let mut findings = Vec::new();
+    let mut pinned: Vec<(String, String, u32)> = Vec::new();
+    for (idx, raw) in lock.lines().enumerate() {
+        let line = raw.trim();
+        let lineno = idx as u32 + 1;
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match line.split_once('=') {
+            Some((k, v)) => pinned.push((k.trim().to_string(), v.trim().to_string(), lineno)),
+            None => findings.push(w1(lineno, format!("unparseable lock line `{line}`"))),
+        }
+    }
+    let current = surface.pairs();
+    for (k, v) in &current {
+        match pinned.iter().find(|(pk, _, _)| pk == k) {
+            None => findings.push(w1(
+                0,
+                format!(
+                    "`{k} = {v}` is live on the wire but not pinned — regenerate wire.lock deliberately with `zo-adam lint --write-lock`"
+                ),
+            )),
+            Some((_, pv, lineno)) if pv != v => findings.push(w1(
+                *lineno,
+                format!("wire drift: `{k}` is `{v}` in the source tree but pinned as `{pv}`"),
+            )),
+            Some(_) => {}
+        }
+    }
+    for (pk, pv, lineno) in &pinned {
+        if !current.iter().any(|(k, _)| k == pk) {
+            findings.push(w1(
+                *lineno,
+                format!("`{pk} = {pv}` is pinned but no longer extractable from the tree"),
+            ));
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(findings: &[Finding]) -> Vec<RuleId> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn scope_gates_d1() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(rules_fired(&lint_source("rust/src/comm/compress.rs", src)), vec![RuleId::D1]);
+        // Same idiom outside the deterministic modules: clean.
+        assert!(lint_source("rust/src/benchkit/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_region_is_exempt_but_cfg_attr_is_not() {
+        let gated = "#[cfg(test)]\nmod tests {\n    fn f() { let t = Instant::now(); }\n}\n";
+        assert!(lint_source("rust/src/comm/compress.rs", gated).is_empty());
+        let attr =
+            "#[cfg_attr(not(test), allow(dead_code))]\nfn f() { let t = Instant::now(); }\n";
+        assert_eq!(
+            rules_fired(&lint_source("rust/src/comm/compress.rs", attr)),
+            vec![RuleId::D1]
+        );
+    }
+
+    #[test]
+    fn allow_trailing_and_own_line() {
+        let trailing =
+            "fn f() { let t = Instant::now(); } // lint: allow(D1) — backoff timing only\n";
+        assert!(lint_source("rust/src/comm/transport/tcp.rs", trailing).is_empty());
+        let own =
+            "// lint: allow(D1) — backoff timing only\nlet t = Instant::now();\n";
+        assert!(lint_source("rust/src/comm/transport/tcp.rs", own).is_empty());
+        // The allow pins one line; the next violation still fires.
+        let partial =
+            "// lint: allow(D1) — first only\nlet a = Instant::now();\nlet b = Instant::now();\n";
+        assert_eq!(lint_source("rust/src/comm/transport/tcp.rs", partial).len(), 1);
+    }
+
+    #[test]
+    fn allow_without_reason_is_l0() {
+        let src = "fn f() { let t = Instant::now(); } // lint: allow(D1)\n";
+        let f = lint_source("rust/src/comm/transport/tcp.rs", src);
+        assert_eq!(rules_fired(&f), vec![RuleId::L0]);
+        assert_eq!(f[0].severity, Severity::Warn);
+    }
+
+    #[test]
+    fn expect_requires_string_message() {
+        // The frame-protocol method `header.expect(kind, …)` is not a
+        // panicking idiom; `.expect("msg")` is.
+        let protocol = "fn f() -> Result<(), E> { header.expect(kind, from, seq)?; Ok(()) }\n";
+        assert!(lint_source("rust/src/comm/transport/mod.rs", protocol).is_empty());
+        let panicking = "fn f() { x.expect(\"boom\"); }\n";
+        assert_eq!(
+            rules_fired(&lint_source("rust/src/comm/transport/mod.rs", panicking)),
+            vec![RuleId::E1]
+        );
+    }
+
+    #[test]
+    fn unsafe_fn_pointer_type_is_exempt() {
+        let src = "struct Task { run: unsafe fn(*mut ()) }\n";
+        assert!(lint_source("rust/src/coordinator/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_window_reaches_over_one_code_line() {
+        let src = "// SAFETY: ptr is pinned for the region\nlet data = p.cast();\n*task = unsafe { Task::new(data) };\n";
+        assert!(lint_source("rust/src/coordinator/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn parse_num_forms() {
+        assert_eq!(parse_num("4096"), Some(4096));
+        assert_eq!(parse_num("0x5A41_3031"), Some(0x5A41_3031));
+        assert_eq!(parse_num("4usize"), Some(4));
+        assert_eq!(parse_num("1"), Some(1));
+        assert_eq!(parse_num("xyz"), None);
+    }
+
+    fn mini_wire_files() -> Vec<(String, String)> {
+        let frame = "pub const MAGIC: u32 = 0x5A41_3031;\npub const VERSION: u16 = 1;\npub enum FrameKind {\n    Hello = 1,\n    Resume = 10,\n}\n";
+        let compress = "pub const CODEC_CHUNK: usize = 4096;\n";
+        let allreduce = "pub const SERVER_CHUNK: usize = compress::CODEC_CHUNK;\n";
+        let tcp = "pub const RETAINED_FRAMES: usize = 4;\n";
+        vec![
+            ("frame.rs".to_string(), frame.to_string()),
+            ("compress.rs".to_string(), compress.to_string()),
+            ("allreduce.rs".to_string(), allreduce.to_string()),
+            ("tcp.rs".to_string(), tcp.to_string()),
+        ]
+    }
+
+    #[test]
+    fn wire_surface_extracts_and_resolves_refs() {
+        let s = extract_wire_surface(&mini_wire_files()).expect("extracts");
+        assert_eq!(s.magic, 0x5A41_3031);
+        assert_eq!(s.server_chunk, 4096);
+        assert_eq!(s.kinds, vec![("Hello".to_string(), 1), ("Resume".to_string(), 10)]);
+        let lock = s.render();
+        assert!(lock.contains("MAGIC = 0x5A413031"));
+        assert!(lock.contains("FrameKind::Resume = 10"));
+        // A freshly rendered lock always verifies.
+        assert!(check_lock(&s, &lock).is_empty());
+    }
+
+    #[test]
+    fn lock_drift_orphan_and_unpinned_all_fire() {
+        let s = extract_wire_surface(&mini_wire_files()).expect("extracts");
+        let lock = s.render();
+        let drifted = lock.replace("FrameKind::Resume = 10", "FrameKind::Resume = 11");
+        assert_eq!(check_lock(&s, &drifted).len(), 1);
+        let orphaned = format!("{lock}FrameKind::Gone = 99\n");
+        assert_eq!(check_lock(&s, &orphaned).len(), 1);
+        let mut shrunk: Vec<&str> = lock.lines().collect();
+        shrunk.retain(|l| !l.starts_with("VERSION"));
+        assert_eq!(check_lock(&s, &shrunk.join("\n")).len(), 1);
+    }
+}

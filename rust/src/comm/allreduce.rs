@@ -122,6 +122,7 @@ pub fn allreduce_mean<B: WorkerBufs + ?Sized>(bufs: &B, out: &mut [f32]) -> Wire
 /// sees the exact additions of the sequential path — and of the
 /// transport path, whose packed fp16 bytes decode to the very values
 /// [`compress::add_fp16_rounded`] adds here. Allocation-free.
+// lint: hot-path
 pub fn allreduce_mean_eng<B: WorkerBufs + ?Sized>(
     bufs: &B,
     out: &mut [f32],
@@ -499,6 +500,7 @@ fn auto_table(n: usize, d: usize) -> bool {
 /// (per-call `accumulate_words` weight) and the table
 /// (`build_sign_table_weighted`) honor it, and they remain bitwise
 /// identical to each other by the same replay construction.
+// lint: hot-path
 #[allow(clippy::too_many_arguments)]
 fn ef_server_leg<P: PackedSet + ?Sized>(
     inputs: &P,
@@ -570,7 +572,7 @@ fn ef_server_leg<P: PackedSet + ?Sized>(
 
     // Combine the ‖·‖₁ partials in chunk order (fixed association,
     // independent of the pool width).
-    let l1: f64 = chunk_l1.iter().sum();
+    let l1: f64 = chunk_l1.iter().sum(); // lint: allow(D2) — combines per-chunk partials in fixed chunk order, pool-width independent
     packed.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
 
     let scale_bits = packed.scale.to_bits();
@@ -972,6 +974,7 @@ impl EfAllReduce {
     /// Phase 1 of every in-process EF round: fused per-worker compress +
     /// error update over the lanes. Two schedules, one bit pattern —
     /// see [`Self::reduce_eng`].
+    // lint: hot-path
     fn compress_lanes<B: WorkerBufs + ?Sized>(&mut self, bufs: &B, eng: &Engine) {
         let d = self.d;
         let n = self.n;
@@ -1019,7 +1022,7 @@ impl EfAllReduce {
                 );
                 // chunk-order combine — the exact association
                 // compress_ef_into uses sequentially
-                let l1: f64 = lane.chunk_l1.iter().sum();
+                let l1: f64 = lane.chunk_l1.iter().sum(); // lint: allow(D2) — combines per-chunk partials in fixed chunk order, pool-width independent
                 lane.packed.scale = if d == 0 { 0.0 } else { (l1 / d as f64) as f32 };
                 // pass 2, chunk-parallel: δ ← s − (±scale)
                 let scale_bits = lane.packed.scale.to_bits();
@@ -1337,9 +1340,9 @@ impl EfAllReduce {
             .lanes
             .iter()
             .map(|lane| crate::tensor::norm2(&lane.err).powi(2))
-            .sum();
+            .sum(); // lint: allow(D2) — diagnostic norm for tests/theory checks, not on the reduction path
         let t: f64 = self.tree.as_ref().map_or(0.0, |tree| {
-            tree.leader_err.iter().map(|e| crate::tensor::norm2(e).powi(2)).sum()
+            tree.leader_err.iter().map(|e| crate::tensor::norm2(e).powi(2)).sum() // lint: allow(D2) — diagnostic norm for tests/theory checks, not on the reduction path
         });
         (w + t + crate::tensor::norm2(&self.server_err).powi(2)).sqrt()
     }

@@ -49,6 +49,7 @@ pub fn wire_bytes(d: usize) -> usize {
 }
 
 /// Compress `src` into `dst` (reusing its buffers).
+// lint: hot-path
 pub fn compress_into(src: &[f32], dst: &mut OneBit) {
     let d = src.len();
     dst.len = d;
@@ -72,6 +73,7 @@ pub fn compress_into(src: &[f32], dst: &mut OneBit) {
 /// most [`CODEC_CHUNK`] coordinates and combine the partials in chunk
 /// order. `signs_out` must hold exactly `ceil(src.len()/64)` words and
 /// `src` must start on a 64-coordinate boundary of the logical tensor.
+// lint: hot-path
 pub fn pack_signs_l1(src: &[f32], signs_out: &mut [u64]) -> f64 {
     debug_assert_eq!(signs_out.len(), src.len().div_ceil(64));
     let mut l1 = 0.0f64;
@@ -101,6 +103,7 @@ pub fn compress(src: &[f32]) -> OneBit {
 /// the sign branchlessly through the f32 sign bit (scale ≥ 0 by
 /// construction), which lets the loop vectorize (§Perf in
 /// EXPERIMENTS.md: 141 → >1000 Melem/s).
+// lint: hot-path
 pub fn decompress_into(src: &OneBit, out: &mut [f32]) {
     assert_eq!(out.len(), src.len);
     let s_bits = src.scale.to_bits();
@@ -116,6 +119,7 @@ pub fn decompress_into(src: &OneBit, out: &mut [f32]) {
 /// out[i] += ±scale — the accumulate form used by the server-side mean
 /// (avoids materializing each worker's dense decompression).
 /// Word-hoisted + branchless like [`decompress_into`].
+// lint: hot-path
 pub fn accumulate_into(src: &OneBit, weight: f32, out: &mut [f32]) {
     assert_eq!(out.len(), src.len);
     accumulate_words(&src.signs, src.scale, weight, out);
@@ -132,6 +136,7 @@ pub fn accumulate_into(src: &OneBit, weight: f32, out: &mut [f32]) {
 /// sign bit per coordinate reproduces `out[i] + weight·(±scale)` bit
 /// for bit (including ±0 scales and negative weights) — pinned by
 /// `tests/kernel_parity.rs`.
+// lint: hot-path
 pub fn accumulate_words(signs: &[u64], scale: f32, weight: f32, out: &mut [f32]) {
     let s = scale * weight;
     let s_bits = s.abs().to_bits();
@@ -150,6 +155,7 @@ pub fn accumulate_words(signs: &[u64], scale: f32, weight: f32, out: &mut [f32])
 ///
 /// Two passes (the scale is a global statistic, so the error update
 /// cannot start before the ‖·‖₁ pass finishes), both word-hoisted.
+// lint: hot-path
 pub fn compress_with_error_into(src: &[f32], dst: &mut OneBit, err: &mut [f32]) {
     compress_into(src, dst);
     let s_bits = dst.scale.to_bits();
@@ -175,6 +181,7 @@ pub fn compress_with_error_into(src: &[f32], dst: &mut OneBit, err: &mut [f32]) 
 /// association is fixed-chunk, bitwise identical to the engine's
 /// chunk-parallel evaluation of the same two passes
 /// (`EfAllReduce::reduce_eng`'s lane-chunked schedule).
+// lint: hot-path
 pub fn compress_ef_into(z: &[f32], err: &mut [f32], dst: &mut OneBit) {
     let d = z.len();
     assert_eq!(err.len(), d);
@@ -200,6 +207,7 @@ pub fn compress_ef_into(z: &[f32], err: &mut [f32], dst: &mut OneBit) {
 /// the fixed-chunk association of the module docs). `signs_out` must
 /// hold exactly `ceil(z.len()/64)` words and `z` must start on a
 /// 64-coordinate boundary of the logical tensor.
+// lint: hot-path
 pub fn ef_fold_signs_l1(z: &[f32], err: &mut [f32], signs_out: &mut [u64]) -> f64 {
     debug_assert_eq!(z.len(), err.len());
     debug_assert_eq!(signs_out.len(), z.len().div_ceil(64));
@@ -223,6 +231,7 @@ pub fn ef_fold_signs_l1(z: &[f32], err: &mut [f32], signs_out: &mut [u64]) -> f6
 /// from the stash [`ef_fold_signs_l1`] left in `err`. Per-coordinate
 /// independent, so ranges may be cut at any word boundary; `signs` may
 /// extend past the range (extra words are ignored).
+// lint: hot-path
 pub fn ef_err_finish_words(err: &mut [f32], signs: &[u64], scale_bits: u32) {
     for (word, ec) in signs.iter().zip(err.chunks_mut(64)) {
         let word = *word;
@@ -241,6 +250,7 @@ pub fn ef_err_finish_words(err: &mut [f32], signs: &[u64], scale_bits: u32) {
 /// `compress_into`'s scale exactly). `signs_out` must hold exactly
 /// `ceil(s.len()/64)` words and `s` must start on a 64-coordinate
 /// boundary of the logical tensor.
+// lint: hot-path
 pub fn fold_err_signs_l1(s: &mut [f32], err: &[f32], signs_out: &mut [u64]) -> f64 {
     debug_assert_eq!(s.len(), err.len());
     debug_assert_eq!(signs_out.len(), s.len().div_ceil(64));
@@ -266,6 +276,7 @@ pub fn fold_err_signs_l1(s: &mut [f32], err: &[f32], signs_out: &mut [u64]) -> f
 /// stream. `scale_bits` is `scale.to_bits()` (scale ≥ 0 by
 /// construction); `signs` may extend past the range (extra words are
 /// ignored).
+// lint: hot-path
 pub fn ef_finish_words(s: &[f32], signs: &[u64], scale_bits: u32, err: &mut [f32], out: &mut [f32]) {
     debug_assert_eq!(s.len(), err.len());
     debug_assert_eq!(s.len(), out.len());
@@ -334,6 +345,7 @@ pub fn table_pays_off(n: usize, d: usize) -> bool {
 /// worker w's coordinate is non-negative (the codec's sign convention)
 /// and c_w carries the same sign composition as [`accumulate_words`]:
 /// `neg = (!bit) ^ sign(scale_w·weight)`.
+// lint: hot-path
 pub fn build_sign_table(
     n: usize,
     weight: f32,
@@ -349,6 +361,7 @@ pub fn build_sign_table(
 /// (the weighted counterpart of [`accumulate_words`]'s per-call
 /// `weight`). Same replay-the-sweep construction, so it remains bitwise
 /// identical to the weighted per-worker sweep by construction.
+// lint: hot-path
 pub fn build_sign_table_weighted(
     n: usize,
     weight_of: impl Fn(usize) -> f32,
@@ -385,6 +398,7 @@ pub fn build_sign_table_weighted(
 /// `word_of(w, k)` returns worker w's k-th sign word of the range
 /// (k = i / 64 within the range); `n ≤ TABLE_BITS` so patterns fit u16.
 /// Bits past the range's ragged tail are read but never written out.
+// lint: hot-path
 pub fn transpose_sign_words(
     n: usize,
     word_of: impl Fn(usize, usize) -> u64,
@@ -408,6 +422,7 @@ pub fn transpose_sign_words(
 /// coordinate where the per-worker sweep performed n read-modify-write
 /// passes. Combined with [`transpose_sign_words`] this replaces the
 /// n-fold [`accumulate_words`] loop of the server leg bit for bit.
+// lint: hot-path
 pub fn table_lookup(table: &[f32], pattern: &[u16], out: &mut [f32]) {
     debug_assert_eq!(pattern.len(), out.len());
     for (o, &p) in out.iter_mut().zip(pattern) {
@@ -528,6 +543,7 @@ pub fn fp16_wire_bytes(d: usize) -> usize {
 }
 
 /// Pack `src` into fp16 bits, one u16 per element.
+// lint: hot-path
 pub fn pack_fp16(src: &[f32], dst: &mut [u16]) {
     assert_eq!(src.len(), dst.len());
     for (d, &s) in dst.iter_mut().zip(src) {
@@ -536,6 +552,7 @@ pub fn pack_fp16(src: &[f32], dst: &mut [u16]) {
 }
 
 /// Unpack fp16 bits into exact f32 values.
+// lint: hot-path
 pub fn unpack_fp16(src: &[u16], dst: &mut [f32]) {
     assert_eq!(src.len(), dst.len());
     for (d, &s) in dst.iter_mut().zip(src) {
@@ -571,6 +588,7 @@ pub fn add_fp16_bytes(src: &[u8], dst: &mut [f32]) {
 
 /// `dst[i] = fp16_round(src[i])` — a worker's upload as the in-process
 /// server observes it (pack + unpack without materializing the bytes).
+// lint: hot-path
 pub fn copy_fp16_rounded(dst: &mut [f32], src: &[f32]) {
     assert_eq!(dst.len(), src.len());
     for (d, &s) in dst.iter_mut().zip(src) {
@@ -580,6 +598,7 @@ pub fn copy_fp16_rounded(dst: &mut [f32], src: &[f32]) {
 
 /// `dst[i] += fp16_round(src[i])` — in-process form of one worker's
 /// fp16 upload accumulating into the server sum.
+// lint: hot-path
 pub fn add_fp16_rounded(dst: &mut [f32], src: &[f32]) {
     assert_eq!(dst.len(), src.len());
     for (d, &s) in dst.iter_mut().zip(src) {
@@ -589,6 +608,7 @@ pub fn add_fp16_rounded(dst: &mut [f32], src: &[f32]) {
 
 /// `dst[i] = fp16_round(dst[i] * inv)` — the mean scale plus the fp16
 /// rounding of the broadcast leg, fused.
+// lint: hot-path
 pub fn finish_mean_fp16(dst: &mut [f32], inv: f32) {
     for d in dst.iter_mut() {
         *d = fp16_round(*d * inv);

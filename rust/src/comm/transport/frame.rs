@@ -159,9 +159,9 @@ impl FrameHeader {
 
 /// Decode and structurally validate a header block.
 pub fn decode_header(b: &[u8; HEADER_BYTES]) -> Result<FrameHeader, TransportError> {
-    let le32 = |o: usize| u32::from_le_bytes(b[o..o + 4].try_into().expect("4 bytes"));
-    let le16 = |o: usize| u16::from_le_bytes(b[o..o + 2].try_into().expect("2 bytes"));
-    let le64 = |o: usize| u64::from_le_bytes(b[o..o + 8].try_into().expect("8 bytes"));
+    let le32 = |o: usize| u32::from_le_bytes(b[o..o + 4].try_into().expect("4 bytes")); // lint: allow(E1) — slice of a fixed-size array, length is static
+    let le16 = |o: usize| u16::from_le_bytes(b[o..o + 2].try_into().expect("2 bytes")); // lint: allow(E1) — slice of a fixed-size array, length is static
+    let le64 = |o: usize| u64::from_le_bytes(b[o..o + 8].try_into().expect("8 bytes")); // lint: allow(E1) — slice of a fixed-size array, length is static
     let magic = le32(0);
     if magic != MAGIC {
         return Err(TransportError::BadMagic { got: magic });
@@ -194,7 +194,7 @@ pub fn decode_frame(bytes: &[u8], payload: &mut Vec<u8>) -> Result<FrameHeader, 
     if bytes.len() < HEADER_BYTES {
         return Err(TransportError::Truncated { needed: HEADER_BYTES, got: bytes.len() });
     }
-    let header = decode_header(bytes[..HEADER_BYTES].try_into().expect("header block"))?;
+    let header = decode_header(bytes[..HEADER_BYTES].try_into().expect("header block"))?; // lint: allow(E1) — length checked above, slice is exactly HEADER_BYTES
     let want = header.payload_len as usize;
     let got = bytes.len() - HEADER_BYTES;
     if got < want {
@@ -258,6 +258,12 @@ pub enum TransportError {
     /// hello, unreachable root) — the residue the structured variants
     /// above don't cover.
     Handshake(String),
+    /// A transport-internal invariant broke (handshake accounting,
+    /// retained-ring bookkeeping, a helper thread dying). These are
+    /// bugs, not network conditions — but the fault model says they
+    /// still surface as typed errors, never as panics on the wire
+    /// path.
+    Internal(String),
 }
 
 impl fmt::Display for TransportError {
@@ -283,6 +289,7 @@ impl fmt::Display for TransportError {
             WorldMismatch { want, got } => write!(f, "world size mismatch: this rank expects {want} ranks, peer claims {got}"),
             DuplicateRank { rank } => write!(f, "duplicate rank {rank} in the handshake (two workers launched with the same --rank?)"),
             Handshake(msg) => write!(f, "handshake failed: {msg}"),
+            Internal(msg) => write!(f, "transport invariant violated: {msg}"),
         }
     }
 }

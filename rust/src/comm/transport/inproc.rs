@@ -93,18 +93,24 @@ impl Transport for InProc {
 
     fn send(&mut self, to: usize, header: FrameHeader, payload: &[u8])
         -> Result<(), TransportError> {
-        let tx = self.tx[to]
-            .as_ref()
-            .unwrap_or_else(|| panic!("no in-proc edge {} -> {to}", self.rank));
+        let Some(tx) = self.tx[to].as_ref() else {
+            return Err(TransportError::Internal(format!(
+                "no in-proc edge {} -> {to}",
+                self.rank
+            )));
+        };
         let mut bytes = Vec::with_capacity(super::HEADER_BYTES + payload.len());
         encode_frame(header, payload, &mut bytes);
         tx.send(bytes).map_err(|_| TransportError::Closed { peer: to })
     }
 
     fn recv(&mut self, from: usize, payload: &mut Vec<u8>) -> Result<FrameHeader, TransportError> {
-        let rx = self.rx[from]
-            .as_ref()
-            .unwrap_or_else(|| panic!("no in-proc edge {from} -> {}", self.rank));
+        let Some(rx) = self.rx[from].as_ref() else {
+            return Err(TransportError::Internal(format!(
+                "no in-proc edge {from} -> {}",
+                self.rank
+            )));
+        };
         let bytes = match self.deadline {
             None => rx.recv().map_err(|_| TransportError::Closed { peer: from })?,
             Some(d) => rx.recv_timeout(d).map_err(|e| match e {

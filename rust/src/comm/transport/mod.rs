@@ -269,7 +269,7 @@ impl RankLink {
         for r in 1..world {
             self.recv_expect(r, FrameKind::Loss, seq, 1, 0)?;
             self.expect_payload(4)?;
-            let bytes: [u8; 4] = self.payload[..4].try_into().expect("4-byte loss");
+            let bytes: [u8; 4] = self.payload[..4].try_into().expect("4-byte loss"); // lint: allow(E1) — expect_payload(4) validated the length on the previous line
             sum += f32::from_le_bytes(bytes) as f64;
         }
         Ok(Some(sum / world as f64))
@@ -305,7 +305,7 @@ impl RankLink {
             for (o, c) in out.iter_mut().zip(self.payload.chunks_exact(4)) {
                 // `axpy(out, 1.0, x)` adds 1.0·x[j] — multiplying by
                 // 1.0 is exact, so a plain += matches it bit for bit.
-                *o += f32::from_le_bytes(c.try_into().expect("4-byte f32"));
+                *o += f32::from_le_bytes(c.try_into().expect("4-byte f32")); // lint: allow(E1) — chunks_exact(4) guarantees the width
             }
         }
         crate::tensor::scale(out, 1.0 / world as f32);

@@ -79,7 +79,7 @@ const RESUME_WINDOW: Duration = Duration::from_secs(5);
 /// worker's Loss(s) then next round's Ef(s+1) before the root's
 /// broadcast reply), so 4 retained frames provably cover the gap a
 /// single connection loss can open.
-const RETAINED_FRAMES: usize = 4;
+pub const RETAINED_FRAMES: usize = 4;
 
 /// Tunables for the TCP bootstrap and recovery state machine. All
 /// deadlines are wall-clock; `Default` preserves the pre-ISSUE-7
@@ -252,14 +252,14 @@ fn connect_backoff(
     salt: u64,
     peer: usize,
 ) -> Result<TcpStream, TransportError> {
-    let started = Instant::now();
+    let started = Instant::now(); // lint: allow(D1) — wall-clock deadline arming, not on the reduction path
     let mut delay_ms: u64 = 2;
     let mut attempt: u64 = 0;
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
             Err(e) => {
-                let now = Instant::now();
+                let now = Instant::now(); // lint: allow(D1) — connect backoff timing, not on the reduction path
                 if now >= deadline {
                     eprintln!(
                         "[transport] gave up dialing {addr} after {} attempts: {e}",
@@ -333,13 +333,13 @@ impl Tcp {
         let mut pending: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
         let mut hello_payload: Vec<Vec<u8>> = vec![Vec::new(); world];
         listener.set_nonblocking(true)?;
-        let deadline = Instant::now() + opts.connect_timeout;
+        let deadline = Instant::now() + opts.connect_timeout; // lint: allow(D1) — handshake deadline, not on the reduction path
         let mut connected = 0usize;
         while connected + 1 < world {
             let (mut stream, _) = match listener.accept() {
                 Ok(s) => s,
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if Instant::now() > deadline {
+                    if Instant::now() > deadline { // lint: allow(D1) — deadline check, not on the reduction path
                         return Err(TransportError::Handshake(format!(
                             "timed out: {connected} of {} workers connected",
                             world - 1
@@ -397,7 +397,11 @@ impl Tcp {
         }
         let mut me = Tcp::fresh(0, world, opts.recv_deadline);
         for r in 1..world {
-            let mut stream = pending[r].take().expect("all ranks connected");
+            let Some(mut stream) = pending[r].take() else {
+                return Err(TransportError::Internal(format!(
+                    "handshake accounting: rank {r} counted connected but holds no stream"
+                )));
+            };
             let mut ack = fingerprint.to_le_bytes().to_vec();
             if let Some(shape) = shape {
                 if shape.group_of(r) >= 1 && !shape.is_leader(r) {
@@ -462,7 +466,7 @@ impl Tcp {
             )));
         }
         let shape = topo.tree_shape(world);
-        let deadline = Instant::now() + opts.connect_timeout;
+        let deadline = Instant::now() + opts.connect_timeout; // lint: allow(D1) — handshake deadline, not on the reduction path
         let mut stream = connect_backoff(addr, deadline, rank as u64, 0)?;
         // The ack may be withheld until the whole world handshakes, so
         // the bootstrap read runs under the connect window, not the
@@ -536,12 +540,12 @@ impl Tcp {
     ) -> Result<(), TransportError> {
         let mut missing = shape.group_size(shape.group_of(self.rank)) - 1;
         listener.set_nonblocking(true)?;
-        let deadline = Instant::now() + opts.connect_timeout;
+        let deadline = Instant::now() + opts.connect_timeout; // lint: allow(D1) — handshake deadline, not on the reduction path
         while missing > 0 {
             let (mut stream, _) = match listener.accept() {
                 Ok(s) => s,
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if Instant::now() > deadline {
+                    if Instant::now() > deadline { // lint: allow(D1) — deadline check, not on the reduction path
                         return Err(TransportError::Handshake(format!(
                             "leader {} timed out: {missing} group members never connected",
                             self.rank
@@ -590,7 +594,7 @@ impl Tcp {
         opts: &TcpOpts,
     ) -> Result<(), TransportError> {
         let leader = shape.leader_of(self.rank);
-        let deadline = Instant::now() + opts.connect_timeout;
+        let deadline = Instant::now() + opts.connect_timeout; // lint: allow(D1) — handshake deadline, not on the reduction path
         let mut stream = connect_backoff(addr, deadline, self.rank as u64, leader)?;
         configure(&stream, opts.connect_timeout.max(opts.recv_deadline))?;
         write_frame(&mut stream, hello_header(self.rank, self.world), &fingerprint.to_le_bytes())?;
@@ -647,9 +651,13 @@ impl Tcp {
                     })
                 })
                 .collect();
-            let mut out = vec![root.join().expect("root thread")?];
+            let mut out = vec![root
+                .join()
+                .map_err(|_| TransportError::Internal("root handshake thread panicked".into()))??];
             for w in workers {
-                out.push(w.join().expect("worker thread")?);
+                out.push(w.join().map_err(|_| {
+                    TransportError::Internal("worker handshake thread panicked".into())
+                })??);
             }
             Ok(out)
         })
@@ -732,7 +740,7 @@ impl Tcp {
     fn redial_root(&mut self, ctx: &ResumeCtx) -> Result<(), TransportError> {
         let addr = ctx.root_addr.as_deref().ok_or(TransportError::Closed { peer: 0 })?;
         self.conns[0] = None;
-        let deadline = Instant::now() + ctx.window;
+        let deadline = Instant::now() + ctx.window; // lint: allow(D1) — resume window deadline, not on the reduction path
         let mut stream = connect_backoff(addr, deadline, self.rank as u64, 0)?;
         configure(&stream, ctx.window.min(self.recv_deadline))?;
         let resume = FrameHeader::new(FrameKind::Resume, self.rank, self.rcvd[0], self.world, CODEC_CHUNK);
@@ -756,12 +764,12 @@ impl Tcp {
     fn root_reaccept(&mut self, ctx: &ResumeCtx, want: usize) -> Result<(), TransportError> {
         let listener = ctx.listener.as_ref().ok_or(TransportError::Closed { peer: want })?;
         self.conns[want] = None;
-        let deadline = Instant::now() + ctx.window;
+        let deadline = Instant::now() + ctx.window; // lint: allow(D1) — resume window deadline, not on the reduction path
         loop {
             let (mut stream, _) = match listener.accept() {
                 Ok(s) => s,
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if Instant::now() > deadline {
+                    if Instant::now() > deadline { // lint: allow(D1) — deadline check, not on the reduction path
                         return Err(TransportError::Timeout {
                             peer: want,
                             waited_ms: ctx.window.as_millis() as u64,
@@ -879,7 +887,7 @@ fn validate_hs(
     if payload.len() < 8 {
         return Err(TransportError::PayloadSize { want: 8, got: payload.len() });
     }
-    let theirs = u64::from_le_bytes(payload[..8].try_into().expect("8-byte fingerprint"));
+    let theirs = u64::from_le_bytes(payload[..8].try_into().expect("8-byte fingerprint")); // lint: allow(E1) — payload length checked two lines up
     if theirs != fingerprint {
         return Err(TransportError::FingerprintMismatch { want: fingerprint, got: theirs });
     }
@@ -978,9 +986,13 @@ impl Transport for Tcp {
         // Assemble the frame in a ring buffer: the oldest retained
         // frame's allocation is recycled once the ring is full.
         let mut buf = if self.retained[to].len() >= RETAINED_FRAMES {
-            let (_, mut b) = self.retained[to].pop_front().expect("full ring");
-            b.clear();
-            b
+            match self.retained[to].pop_front() {
+                Some((_, mut b)) => {
+                    b.clear();
+                    b
+                }
+                None => Vec::with_capacity(HEADER_BYTES + payload.len()),
+            }
         } else {
             Vec::with_capacity(HEADER_BYTES + payload.len())
         };
@@ -1013,7 +1025,7 @@ impl Transport for Tcp {
 
     fn recv(&mut self, from: usize, payload: &mut Vec<u8>) -> Result<FrameHeader, TransportError> {
         loop {
-            let started = Instant::now();
+            let started = Instant::now(); // lint: allow(D1) — wall-clock deadline arming, not on the reduction path
             let res = match self.conns[from].as_mut() {
                 Some(stream) => read_frame(stream, payload),
                 None => Err(TransportError::Closed { peer: from }),

@@ -78,16 +78,20 @@ pub(crate) struct Task {
     run: unsafe fn(*mut ()),
 }
 
+// SAFETY: a Task is a raw-pointer + fn-pointer bundle; the contract
+// above pins `data` valid and untouched by any other thread for the
+// region, which is exactly what makes the cross-thread move sound.
 unsafe impl Send for Task {}
 
 impl Task {
-    /// See the safety contract on [`Task`].
+    /// Safety: the caller promises the [`Task`] contract above.
     pub(crate) unsafe fn new(data: *mut (), run: unsafe fn(*mut ())) -> Task {
         Task { data, run }
     }
 
     /// Placeholder for the fixed-size publish array; never executed.
     pub(crate) const fn noop() -> Task {
+        // SAFETY: never executed (placeholder slot); touches nothing.
         unsafe fn nop(_: *mut ()) {}
         Task { data: std::ptr::null_mut(), run: nop }
     }
@@ -281,6 +285,8 @@ fn worker_loop(shared: &Shared, idx: usize) {
         // when a task is published into this very slot), but stay
         // defensive: the barrier accounting below must not run twice.
         let Some(task) = task else { continue };
+        // SAFETY: the publisher (run_region) keeps task.data valid and
+        // unaliased until the barrier below releases the region.
         let ok = panic::catch_unwind(AssertUnwindSafe(|| unsafe { (task.run)(task.data) })).is_ok();
         let mut done = lock(&shared.done);
         if !ok {
@@ -305,6 +311,8 @@ mod tests {
         boom: bool,
     }
 
+    // SAFETY: callers pass a pointer to a live `Option<Probe>` no other
+    // thread touches while the region runs.
     unsafe fn run_probe(p: *mut ()) {
         let probe = &mut *(p as *mut Option<Probe<'_>>);
         let probe = probe.take().expect("probe ran twice");
@@ -317,6 +325,8 @@ mod tests {
     fn publish<'a>(slots: &mut [Option<Probe<'a>>]) -> Vec<Task> {
         slots
             .iter_mut()
+            // SAFETY: each slot outlives the region its task runs in,
+            // and run_probe matches the `Option<Probe>` payload type.
             .map(|s| unsafe { Task::new(s as *mut Option<Probe<'a>> as *mut (), run_probe) })
             .collect()
     }
@@ -331,6 +341,8 @@ mod tests {
             let mut slots: Vec<Option<Probe<'_>>> =
                 (0..k).map(|_| Some(Probe { hits: &hits, boom: false })).collect();
             let tasks = publish(&mut slots);
+            // SAFETY: `slots` stays alive and untouched until the
+            // region barrier returns.
             unsafe {
                 pool.run_region(&tasks, || {
                     hits.fetch_add(100, Ordering::SeqCst);
@@ -355,6 +367,7 @@ mod tests {
         for _ in 0..regions {
             let mut slots = vec![Some(Probe { hits: &hits, boom: false })];
             let tasks = publish(&mut slots);
+            // SAFETY: `slots` outlives the region barrier.
             unsafe { pool.run_region(&tasks, || {}) };
         }
         assert_eq!(hits.load(Ordering::SeqCst), regions as usize);
@@ -378,6 +391,8 @@ mod tests {
             Some(Probe { hits: &hits, boom: false }),
         ];
         let tasks = publish(&mut slots);
+        // SAFETY: `slots` outlives the region barrier (a task panic is
+        // re-raised only after every task completed).
         let r = panic::catch_unwind(AssertUnwindSafe(|| unsafe {
             pool.run_region(&tasks, || {});
         }));
@@ -388,6 +403,7 @@ mod tests {
         // and the pool still works
         let mut slots = vec![Some(Probe { hits: &hits, boom: false })];
         let tasks = publish(&mut slots);
+        // SAFETY: `slots` outlives the region barrier.
         unsafe { pool.run_region(&tasks, || {}) };
         assert_eq!(hits.load(Ordering::SeqCst), 3);
     }
@@ -397,6 +413,7 @@ mod tests {
         let pool = Pool::new(0);
         assert_eq!(pool.workers(), 0);
         let mut ran = false;
+        // SAFETY: the region publishes no tasks at all.
         unsafe { pool.run_region(&[], || ran = true) };
         assert!(ran);
         // drop joins nothing
@@ -410,6 +427,7 @@ mod tests {
             let mut slots: Vec<Option<Probe<'_>>> =
                 (0..4).map(|_| Some(Probe { hits: &hits, boom: false })).collect();
             let tasks = publish(&mut slots);
+            // SAFETY: `slots` outlives the region barrier.
             unsafe { pool.run_region(&tasks, || {}) };
             assert_eq!(hits.load(Ordering::SeqCst), 4);
             drop(pool);

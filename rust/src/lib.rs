@@ -44,6 +44,7 @@
 //!   harnesses for the offline environment (DESIGN.md §1, §5); property
 //!   failures replay exactly via `TESTKIT_SEED`.
 
+pub mod analysis;
 pub mod benchkit;
 pub mod comm;
 pub mod config;

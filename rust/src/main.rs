@@ -49,6 +49,7 @@ fn main() {
         "table3" => cmd_table3(rest),
         "theory" => cmd_theory(rest),
         "bench" => cmd_bench(rest),
+        "lint" => cmd_lint(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -84,6 +85,7 @@ fn usage() -> String {
      \x20 table3            computation vs fixed-cost decomposition\n\
      \x20 theory            Theorem-1 empirical checks\n\
      \x20 bench             hot-path microbenches + BENCH json + perf-regression gate\n\
+     \x20 lint              static invariant analyzer (--deny-all --json --write-lock)\n\
      \n\
      Run `zo-adam <command> --help` for options."
         .to_string()
@@ -873,6 +875,41 @@ fn cmd_chaos(rest: &[String]) -> Result<()> {
 /// plus a short materialized 0/1 Adam run. Writes a machine-readable
 /// report (BENCH_PR2.json) and gates `step/` entries against a baseline
 /// report (ci.sh runs `bench --quick --baseline BENCH_PR2.json`).
+fn cmd_lint(rest: &[String]) -> Result<()> {
+    use zo_adam::analysis;
+
+    let p = parse(
+        Args::new("zo-adam lint", "static invariant analyzer (DESIGN.md §Static invariants)")
+            .flag("deny-all", "promote hygiene warnings (L0, missing wire.lock) to errors")
+            .flag("json", "machine-readable findings on stdout")
+            .flag("write-lock", "regenerate wire.lock from the tree and exit"),
+        rest,
+    );
+
+    let cwd = std::env::current_dir()?;
+    let root = analysis::resolve_root(&cwd)
+        .ok_or_else(|| anyhow::anyhow!("no rust/src above {}", cwd.display()))?;
+
+    if p.get_flag("write-lock") {
+        let surface = analysis::wire_surface_from_tree(&root).map_err(|e| anyhow::anyhow!(e))?;
+        let path = root.join("wire.lock");
+        std::fs::write(&path, surface.render())?;
+        println!("wrote {} ({} pinned values)", path.display(), surface.pairs().len());
+        return Ok(());
+    }
+
+    let rep = analysis::run_tree(&root, p.get_flag("deny-all")).map_err(|e| anyhow::anyhow!(e))?;
+    if p.get_flag("json") {
+        println!("{}", rep.render_json());
+    } else {
+        print!("{}", rep.render_human());
+    }
+    if rep.deny_count() > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn cmd_bench(rest: &[String]) -> Result<()> {
     use zo_adam::comm::allreduce::{allreduce_mean_eng, EfAllReduce};
     use zo_adam::comm::compress::{self, OneBit};

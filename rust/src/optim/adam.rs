@@ -52,6 +52,7 @@ impl DistOptimizer for Adam {
         out.copy_from_slice(&self.x); // all replicas are the shared x
     }
 
+    // lint: hot-path
     fn step_comm(
         &mut self,
         t: u64,

@@ -80,6 +80,7 @@ impl DistOptimizer for NaiveOneBitAdam {
         out.copy_from_slice(&self.x);
     }
 
+    // lint: hot-path
     fn step_comm(
         &mut self,
         t: u64,

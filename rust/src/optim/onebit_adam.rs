@@ -101,6 +101,7 @@ impl DistOptimizer for FrozenVarAdam {
         out.copy_from_slice(&self.x);
     }
 
+    // lint: hot-path
     fn step_comm(
         &mut self,
         t: u64,

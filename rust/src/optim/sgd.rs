@@ -58,6 +58,7 @@ impl DistOptimizer for MomentumSgd {
         out.copy_from_slice(&self.x);
     }
 
+    // lint: hot-path
     fn step_comm(
         &mut self,
         t: u64,
@@ -135,6 +136,7 @@ impl DistOptimizer for SignSgd {
         out.copy_from_slice(&self.x);
     }
 
+    // lint: hot-path
     fn step_comm(
         &mut self,
         t: u64,

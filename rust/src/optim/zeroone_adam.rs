@@ -148,6 +148,7 @@ impl DistOptimizer for ZeroOneAdam {
         &self.reps[worker].x
     }
 
+    // lint: hot-path
     fn step_comm(
         &mut self,
         t: u64,

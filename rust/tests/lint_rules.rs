@@ -1,0 +1,201 @@
+//! Per-rule fixtures for `zo-adam lint` (ISSUE 8): every rule gets a
+//! triggering fixture and a clean one, the directive grammar
+//! (`lint: allow(...)`, `lint: hot-path`) is exercised end to end, and
+//! the W1 demo shows that renumbering a pinned frame kind in the
+//! source tree turns the lint red against the committed `wire.lock`.
+//!
+//! Fixtures live in string literals. The analyzer works on the token
+//! stream, so the banned idioms quoted here are opaque to `lint_self`
+//! — this file itself still lints clean.
+
+use std::path::Path;
+
+use zo_adam::analysis::{
+    check_lock, extract_wire_surface, lint_source, resolve_root, Finding, RuleId, Severity,
+    WIRE_FILES,
+};
+
+fn fired(findings: &[Finding]) -> Vec<RuleId> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// --- D1: ambient time, unordered containers, ambient randomness ----------
+
+#[test]
+fn d1_triggers_on_time_containers_and_rng() {
+    let src = "fn f() {\n    let t = Instant::now();\n    let m: HashMap<u32, u32> = HashMap::with_capacity(4);\n    let r = thread_rng();\n}\n";
+    let f = lint_source("rust/src/optim/adam.rs", src);
+    // Instant::now once, HashMap twice (type + ctor), thread_rng once.
+    assert_eq!(fired(&f), vec![RuleId::D1; 4], "{f:?}");
+    assert!(f.iter().all(|x| x.severity == Severity::Deny));
+    assert_eq!(f[0].line, 2);
+}
+
+#[test]
+fn d1_is_silent_outside_its_scope_and_in_tests() {
+    let src = "fn f() { let t = Instant::now(); }\n";
+    assert!(lint_source("rust/src/benchkit/mod.rs", src).is_empty());
+    assert!(lint_source("rust/src/trainer.rs", src).is_empty());
+    let gated = "#[cfg(test)]\nmod tests {\n    fn f() { let t = Instant::now(); }\n}\n";
+    assert!(lint_source("rust/src/optim/adam.rs", gated).is_empty());
+}
+
+// --- D2: unordered float reductions --------------------------------------
+
+#[test]
+fn d2_triggers_on_sum_product_fold() {
+    let src = "fn f(v: &[f32]) -> f32 {\n    let a: f32 = v.iter().sum();\n    let b = v.iter().product::<f32>();\n    v.iter().fold(a, |x, y| x + y) + b\n}\n";
+    let f = lint_source("rust/src/comm/allreduce.rs", src);
+    assert_eq!(fired(&f), vec![RuleId::D2; 3], "{f:?}");
+    assert_eq!(f.iter().map(|x| x.line).collect::<Vec<_>>(), vec![2, 3, 4]);
+}
+
+#[test]
+fn d2_leaves_ordered_loops_and_unscoped_files_alone() {
+    // The fixed-chunk kernel shape: an explicit ordered loop.
+    let ordered = "fn f(v: &[f32]) -> f32 {\n    let mut acc = 0.0;\n    for x in v {\n        acc += x;\n    }\n    acc\n}\n";
+    assert!(lint_source("rust/src/comm/allreduce.rs", ordered).is_empty());
+    // `.sum()` is fine off the parity-critical path.
+    let src = "fn f(v: &[f32]) -> f32 { v.iter().sum() }\n";
+    assert!(lint_source("rust/src/benchkit/stats.rs", src).is_empty());
+}
+
+// --- A1: allocation idioms in hot-path-marked functions -------------------
+
+#[test]
+fn a1_fires_only_inside_hot_marked_bodies() {
+    let src = "// lint: hot-path\nfn hot(n: usize) -> usize {\n    let v = vec![0u8; n];\n    v.len()\n}\nfn cold(n: usize) -> usize {\n    let v = vec![1u8; n];\n    v.len()\n}\n";
+    let f = lint_source("rust/src/comm/compress.rs", src);
+    assert_eq!(fired(&f), vec![RuleId::A1], "{f:?}");
+    assert_eq!(f[0].line, 3, "only the marked body is patrolled: {f:?}");
+}
+
+#[test]
+fn a1_catches_the_full_idiom_set() {
+    let src = "// lint: hot-path\nfn hot() {\n    let a = Vec::new();\n    let b = x.collect::<Vec<u32>>();\n    let c = s.to_vec();\n    let d = format!(\"x\");\n    let e = Box::new(1);\n    let f = String::from(\"y\");\n}\n";
+    let f = lint_source("rust/src/comm/compress.rs", src);
+    assert_eq!(fired(&f), vec![RuleId::A1; 6], "{f:?}");
+}
+
+// --- E1: panicking idioms in comm::transport ------------------------------
+
+#[test]
+fn e1_triggers_on_unwrap_expect_panic() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    let a = x.unwrap();\n    let b = x.expect(\"gone\");\n    if a != b { panic!(\"mismatch\"); }\n    a\n}\n";
+    let f = lint_source("rust/src/comm/transport/tcp.rs", src);
+    assert_eq!(fired(&f), vec![RuleId::E1; 3], "{f:?}");
+}
+
+#[test]
+fn e1_spares_the_protocol_expect_and_tests() {
+    // `FrameHeader::expect(kind, …)` takes no string message — it is
+    // the wire validation method, not a panic.
+    let protocol =
+        "fn f() -> Result<(), E> {\n    header.expect(FrameKind::Ef, from, seq, dim, chunk)?;\n    Ok(())\n}\n";
+    assert!(lint_source("rust/src/comm/transport/tcp.rs", protocol).is_empty());
+    let in_test = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { x.unwrap(); }\n}\n";
+    assert!(lint_source("rust/src/comm/transport/tcp.rs", in_test).is_empty());
+    // And the whole rule is scoped to the transport layer.
+    let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    assert!(lint_source("rust/src/comm/compress.rs", src).is_empty());
+}
+
+// --- U1: SAFETY comments on unsafe ----------------------------------------
+
+#[test]
+fn u1_requires_an_adjacent_safety_comment_everywhere() {
+    let bare = "fn f(p: *mut u32) {\n    unsafe { *p = 1 };\n}\n";
+    let f = lint_source("rust/src/tensor.rs", bare);
+    assert_eq!(fired(&f), vec![RuleId::U1], "{f:?}");
+    // Tests are NOT exempt: an unsound test is still unsound.
+    let in_test = "#[cfg(test)]\nmod tests {\n    fn t(p: *mut u32) { unsafe { *p = 1 } }\n}\n";
+    assert_eq!(fired(&lint_source("rust/src/tensor.rs", in_test)), vec![RuleId::U1]);
+}
+
+#[test]
+fn u1_accepts_a_safety_comment_in_the_window() {
+    let ok = "// SAFETY: p is valid for writes, caller contract.\nfn f(p: *mut u32) {\n    unsafe { *p = 1 };\n}\n";
+    assert!(lint_source("rust/src/tensor.rs", ok).is_empty());
+    // Function-pointer *types* carry no obligation of their own.
+    let fnptr = "struct Task { run: unsafe fn(*mut ()) }\n";
+    assert!(lint_source("rust/src/tensor.rs", fnptr).is_empty());
+}
+
+// --- The directive grammar -------------------------------------------------
+
+#[test]
+fn allow_suppresses_exactly_its_target_line() {
+    let trailing = "fn f() {\n    let t = Instant::now(); // lint: allow(D1) — deadline arming, not reduction order\n    let u = Instant::now();\n}\n";
+    let f = lint_source("rust/src/comm/transport/tcp.rs", trailing);
+    assert_eq!(fired(&f), vec![RuleId::D1], "{f:?}");
+    assert_eq!(f[0].line, 3, "the un-allowed sibling still fires");
+    let own = "fn f() {\n    // lint: allow(D1) — backoff timing only\n    let t = Instant::now();\n}\n";
+    assert!(lint_source("rust/src/comm/transport/tcp.rs", own).is_empty());
+}
+
+#[test]
+fn allow_hygiene_problems_are_l0_warnings() {
+    let no_reason = "fn f() { let t = Instant::now(); } // lint: allow(D1)\n";
+    let f = lint_source("rust/src/comm/transport/tcp.rs", no_reason);
+    assert_eq!(fired(&f), vec![RuleId::L0], "{f:?}");
+    assert_eq!(f[0].severity, Severity::Warn);
+    let unknown = "fn f() {} // lint: allow(Z9) — no such rule\n";
+    assert_eq!(fired(&lint_source("rust/src/comm/transport/tcp.rs", unknown)), vec![RuleId::L0]);
+    let misplaced = "fn f() { g(); } // lint: hot-path\n";
+    assert_eq!(fired(&lint_source("rust/src/comm/compress.rs", misplaced)), vec![RuleId::L0]);
+}
+
+// --- W1: the pinned wire surface -------------------------------------------
+
+fn wire_files_with(root: &Path, mutate: impl Fn(&str, String) -> String) -> Vec<(String, String)> {
+    WIRE_FILES
+        .iter()
+        .map(|rel| {
+            let src = std::fs::read_to_string(root.join(rel)).expect("wire file readable");
+            (rel.to_string(), mutate(rel, src))
+        })
+        .collect()
+}
+
+#[test]
+fn renumbering_a_frame_kind_turns_the_lint_red() {
+    let root = resolve_root(Path::new(env!("CARGO_MANIFEST_DIR"))).expect("repo root");
+    let lock = std::fs::read_to_string(root.join("wire.lock")).expect("wire.lock is committed");
+
+    // The shipped tree verifies against the committed lock.
+    let live = extract_wire_surface(&wire_files_with(&root, |_, s| s)).expect("extracts");
+    let clean = check_lock(&live, &lock);
+    assert!(clean.is_empty(), "shipped tree drifted from wire.lock: {clean:?}");
+
+    // Renumber Resume 10 → 11 in the source: exactly one W1 deny.
+    let mutated = extract_wire_surface(&wire_files_with(&root, |rel, s| {
+        if rel.ends_with("frame.rs") { s.replace("Resume = 10", "Resume = 11") } else { s }
+    }))
+    .expect("mutated tree still extracts");
+    let f = check_lock(&mutated, &lock);
+    assert_eq!(fired(&f), vec![RuleId::W1], "{f:?}");
+    assert_eq!(f[0].severity, Severity::Deny);
+    assert!(f[0].msg.contains("wire drift"), "{}", f[0].msg);
+    assert!(f[0].msg.contains("FrameKind::Resume"), "{}", f[0].msg);
+}
+
+#[test]
+fn deleting_a_pin_or_a_constant_is_also_red() {
+    let root = resolve_root(Path::new(env!("CARGO_MANIFEST_DIR"))).expect("repo root");
+    let live = extract_wire_surface(&wire_files_with(&root, |_, s| s)).expect("extracts");
+    let lock = live.render();
+
+    // A pin with no live constant behind it (stale lock) fires...
+    let orphaned = format!("{lock}FrameKind::Gone = 99\n");
+    assert_eq!(fired(&check_lock(&live, &orphaned)), vec![RuleId::W1]);
+
+    // ...and so does a live constant nobody pinned (incomplete lock).
+    let shrunk: String = lock
+        .lines()
+        .filter(|l| !l.starts_with("RETAINED_FRAMES"))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let f = check_lock(&live, &shrunk);
+    assert_eq!(fired(&f), vec![RuleId::W1], "{f:?}");
+    assert!(f[0].msg.contains("not pinned"), "{}", f[0].msg);
+}

@@ -1,0 +1,42 @@
+//! Self-application: the shipped tree lints clean under the CI
+//! posture (`zo-adam lint --deny-all`), and the committed `wire.lock`
+//! byte-matches what `--write-lock` would regenerate. This is the
+//! ISSUE 8 acceptance gate running inside `cargo test`, so a PR that
+//! reintroduces a banned idiom — or renumbers a frame kind without
+//! regenerating the lock — fails before CI even reaches the lint step.
+
+use std::path::Path;
+
+use zo_adam::analysis::{resolve_root, run_tree, wire_surface_from_tree};
+
+fn repo_root() -> std::path::PathBuf {
+    resolve_root(Path::new(env!("CARGO_MANIFEST_DIR"))).expect("repo root above rust/")
+}
+
+#[test]
+fn shipped_tree_lints_clean_under_deny_all() {
+    let rep = run_tree(&repo_root(), true).expect("lint runs over the tree");
+    assert!(
+        rep.files_scanned > 20,
+        "suspiciously small scan ({} files) — did the walk miss rust/src?",
+        rep.files_scanned
+    );
+    let rendered: Vec<String> = rep.findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        rep.findings.is_empty(),
+        "the shipped tree must lint clean; findings:\n{}",
+        rendered.join("\n")
+    );
+}
+
+#[test]
+fn committed_wire_lock_matches_the_live_surface() {
+    let root = repo_root();
+    let surface = wire_surface_from_tree(&root).expect("wire surface extracts");
+    let lock = std::fs::read_to_string(root.join("wire.lock")).expect("wire.lock is committed");
+    assert_eq!(
+        lock,
+        surface.render(),
+        "wire.lock is stale — regenerate deliberately with `zo-adam lint --write-lock`"
+    );
+}
