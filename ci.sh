@@ -70,6 +70,25 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
         echo "table and sweep server paths identical under --topology $topo"
     done
 
+    # Traced parity smoke (ISSUE 9): the same bitwise contract with
+    # every rank's flight recorder armed. --check-parity proves tracing
+    # changed nothing; `trace --check` then validates the exported
+    # JSONL stream (per-rank monotone timestamps, balanced spans, all
+    # 4 ranks present) and the chrome renderer must produce parseable
+    # output. Trace output goes to its own file — the [launch] summary
+    # line is untouched by tracing.
+    step "zo-adam launch --ranks 4 --trace-out (traced bitwise parity + trace --check)"
+    TRACE_FILE="$(mktemp -t zo_adam_trace.XXXXXX)"
+    rm -f "$TRACE_FILE"
+    cargo run --release --bin zo-adam -- launch \
+        --ranks 4 --transport tcp --family 01adam --d 3000 --steps 20 \
+        --check-parity --quiet --trace-out "$TRACE_FILE" \
+        | grep '^\[launch\]'
+    cargo run --release --bin zo-adam -- trace --check --in "$TRACE_FILE"
+    cargo run --release --bin zo-adam -- trace --chrome --in "$TRACE_FILE" \
+        > /dev/null
+    rm -f "$TRACE_FILE"
+
     # Chaos smoke (ISSUE 7): seeded fault injection against the same
     # bitwise contract. Under BOTH reduction schedules, a run whose
     # rank-1 edge is severed mid-stream (drop: reconnect + resume-at-
@@ -88,8 +107,8 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
     # Perf-regression gate: quick-window hot-path suite (codec /
     # allreduce / EF server-leg sweep-vs-table / tree-vs-star transport
     # rounds / chaos recovery RTTs / optimizer-step / materialized 0/1
-    # Adam run) that compares the step/, server_leg/, transport/tree/
-    # AND transport/chaos/ medians
+    # Adam run) that compares the step/, server_leg/, transport/tree/,
+    # transport/chaos/ AND trace/ medians
     # against the committed BENCH_PR2.json and
     # FAILS on a >30% regression. A baseline committed with
     # "bootstrap": true (no toolchain on the authoring container)
@@ -102,7 +121,7 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
     # bump PR_INDEX when a new PR starts). `zo-adam bench` prints the
     # cross-snapshot p50/steps-per-s trend at the end of every run, so
     # drift that stays under the 30% gate is still visible across PRs.
-    PR_INDEX="${PR_INDEX:-8}"
+    PR_INDEX="${PR_INDEX:-9}"
     step "zo-adam bench (perf gate vs BENCH_PR2.json, history BENCH_PR${PR_INDEX}.json)"
     ZO_BENCH_QUICK=1 cargo run --release --bin zo-adam -- bench --quick \
         --json BENCH_PR2.json --baseline BENCH_PR2.json --tolerance 0.30 \

@@ -1,9 +1,10 @@
 //! Microbenchmark: full-precision vs error-feedback 1-bit AllReduce
 //! (paper Algorithms 3 and 2) across worker counts, sequential vs the
-//! chunk-parallel engine path (server leg included since PR 2), and
-//! the whole EF round under each forced server-accumulation path
+//! chunk-parallel engine path (server leg included since PR 2), the
+//! whole EF round under each forced server-accumulation path
 //! (per-worker sweep vs the PR 5 pattern table — bitwise identical,
-//! so the delta is pure server-leg throughput).
+//! so the delta is pure server-leg throughput), and a flight-recorded
+//! per-phase breakdown of the transport round (ISSUE 9).
 
 use zo_adam::benchkit::Bench;
 use zo_adam::comm::allreduce::{allreduce_mean_eng, EfAllReduce};
@@ -51,5 +52,74 @@ fn main() {
                 });
             }
         }
+    }
+    per_phase_breakdown();
+}
+
+/// Where a transport round's time goes, from the workers' own flight
+/// recorders: a 4-rank in-proc EF round, every worker rank armed. The
+/// headline ratio is compress : in-flight — time a worker spends in
+/// its own lane compression vs. waiting for the root's broadcast (the
+/// window the ROADMAP's overlapped-rounds item wants to hide local
+/// compute in).
+fn per_phase_breakdown() {
+    use zo_adam::comm::transport::inproc;
+    use zo_adam::comm::{RankLink, Topology, SERVER_CHUNK};
+    use zo_adam::obs::{self, PhaseId, Registry};
+
+    let d = 4 * SERVER_CHUNK + 321;
+    let world = 4usize;
+    println!("\n-- per-phase round breakdown (n = {world}, in-proc transport, traced) --");
+    let mut rng = Rng::new(9);
+    let mut links: Vec<RankLink> = inproc::group_topo(world, Topology::Star)
+        .into_iter()
+        .map(|tp| {
+            let mut link = RankLink::new(Box::new(tp));
+            link.set_topology(Topology::Star);
+            link
+        })
+        .collect();
+    let workers: Vec<_> = links
+        .drain(1..)
+        .map(|mut link| {
+            let mut g = vec![0.0f32; d];
+            rng.fill_normal(&mut g, 1.0);
+            std::thread::spawn(move || {
+                obs::arm(obs::DEFAULT_CAPACITY);
+                let mut ef = EfAllReduce::new(1, d);
+                let bufs = vec![g];
+                let mut out = vec![0.0f32; d];
+                // run until the root hangs up, then hand the recorded
+                // stream back for aggregation
+                while ef.reduce_transport(&bufs, &mut out, &mut link).is_ok() {}
+                obs::disarm().map(|rec| rec.events()).unwrap_or_default()
+            })
+        })
+        .collect();
+    let mut root_link = links.pop().expect("rank 0");
+    let mut ef = EfAllReduce::new(1, d);
+    let mut g0 = vec![0.0f32; d];
+    rng.fill_normal(&mut g0, 1.0);
+    let bufs = vec![g0];
+    let mut out = vec![0.0f32; d];
+    let mut b = Bench::new().with_elements(d as u64);
+    b.run(&format!("ef_1bit_transport/n{world}/round"), || {
+        ef.reduce_transport(&bufs, &mut out, &mut root_link).expect("root round");
+    });
+    drop(root_link); // hang up: the workers' next recv is Closed
+    let mut reg = Registry::new();
+    for w in workers {
+        reg.ingest_events(&w.join().expect("breakdown worker"));
+    }
+    print!("{}", reg.render_table());
+    let compress = reg.span(PhaseId::Compress).sum_ns();
+    let in_flight = reg.span(PhaseId::Broadcast).sum_ns();
+    if in_flight > 0 {
+        println!(
+            "  -> compress : in-flight = {:.3} (worker compute per ns of broadcast wait; \
+             {} unbalanced span(s) from ring wrap)",
+            compress as f64 / in_flight as f64,
+            reg.unbalanced,
+        );
     }
 }

@@ -51,6 +51,7 @@ use super::compress::{self, OneBit};
 use super::topology::{Topology, TreeShape};
 use super::transport::{FrameKind, RankLink, TransportError, HEADER_BYTES};
 use crate::coordinator::engine::{Blocks, Engine};
+use crate::obs::{self, PhaseId};
 
 /// Fixed coordinate-chunk size for the EF server leg *and* the chunked
 /// worker lanes — the codec's [`compress::CODEC_CHUNK`] (a multiple of
@@ -136,6 +137,7 @@ pub fn allreduce_mean_eng<B: WorkerBufs + ?Sized>(
     }
     let inv = 1.0 / n as f32;
     let chunk = eng.chunk_len(d);
+    obs::begin(PhaseId::FpRound);
     eng.run_split(d, chunk, &mut *out, |_ci, off, oc: &mut [f32]| {
         let len = oc.len();
         compress::copy_fp16_rounded(oc, &bufs.buf(0)[off..off + len]);
@@ -144,6 +146,7 @@ pub fn allreduce_mean_eng<B: WorkerBufs + ?Sized>(
         }
         compress::finish_mean_fp16(oc, inv);
     });
+    obs::end(PhaseId::FpRound);
     WireStats {
         up_bytes: compress::fp16_wire_bytes(d) as u64,
         down_bytes: compress::fp16_wire_bytes(d) as u64,
@@ -226,6 +229,7 @@ pub fn allreduce_mean_transport(
     if let Some(shape) = link.topology().tree_shape(world) {
         return allreduce_mean_transport_tree(mine, out, link, shape);
     }
+    obs::begin(PhaseId::FpRound);
     let seq = link.next_seq();
     let payload = compress::fp16_wire_bytes(d);
     if link.rank() != 0 {
@@ -252,6 +256,7 @@ pub fn allreduce_mean_transport(
         }
     }
     let framed = (HEADER_BYTES + payload) as u64;
+    obs::end(PhaseId::FpRound);
     Ok(WireStats { up_bytes: framed, down_bytes: framed, rounds: 1, compressed: false })
 }
 
@@ -271,6 +276,7 @@ fn allreduce_mean_transport_tree(
     shape: TreeShape,
 ) -> Result<WireStats, TransportError> {
     let d = mine.len();
+    obs::begin(PhaseId::FpRound);
     let world = link.world();
     let seq = link.next_seq();
     let payload = compress::fp16_wire_bytes(d);
@@ -339,6 +345,7 @@ fn allreduce_mean_transport_tree(
         frames = 1;
     }
     let framed = frames * (HEADER_BYTES + payload) as u64;
+    obs::end(PhaseId::FpRound);
     Ok(WireStats { up_bytes: framed, down_bytes: framed, rounds: 1, compressed: false })
 }
 
@@ -517,6 +524,7 @@ fn ef_server_leg<P: PackedSet + ?Sized>(
     out: &mut [f32],
     eng: &Engine,
 ) {
+    obs::begin(PhaseId::ServerLeg);
     packed.len = d;
     let inv_n = 1.0 / n as f32;
     if use_table {
@@ -581,6 +589,7 @@ fn ef_server_leg<P: PackedSet + ?Sized>(
     eng.run_split(d, SERVER_CHUNK, (&mut *server_err, &mut *out), |_ci, off, (e, o)| {
         compress::ef_finish_words(&s_ro[off..off + o.len()], &signs_ro[off / 64..], scale_bits, e, o);
     });
+    obs::end(PhaseId::ServerLeg);
 }
 
 /// Persistent tree-topology state of one [`EfAllReduce`] (lazily built
@@ -976,6 +985,7 @@ impl EfAllReduce {
     /// see [`Self::reduce_eng`].
     // lint: hot-path
     fn compress_lanes<B: WorkerBufs + ?Sized>(&mut self, bufs: &B, eng: &Engine) {
+        obs::begin(PhaseId::Compress);
         let d = self.d;
         let n = self.n;
 
@@ -1032,7 +1042,7 @@ impl EfAllReduce {
                 });
             }
         }
-
+        obs::end(PhaseId::Compress);
     }
 
     /// One EF-1bit round over a [`crate::comm::transport`] group: this
@@ -1070,14 +1080,21 @@ impl EfAllReduce {
         let payload = onebit_payload_bytes(d);
 
         let lane = &mut self.lanes[0];
+        obs::begin(PhaseId::Compress);
         compress::compress_ef_into(bufs.buf(0), &mut lane.err, &mut lane.packed);
+        obs::end(PhaseId::Compress);
 
         if link.rank() != 0 {
+            obs::begin(PhaseId::Upload);
             link.wire.clear();
             encode_onebit(&lane.packed, &mut link.wire);
             link.send_wire(0, FrameKind::Ef, seq, d, chunk)?;
-            // the server packed scratch doubles as the broadcast target
+            obs::end(PhaseId::Upload);
+            // the server packed scratch doubles as the broadcast target;
+            // the worker-side Broadcast span is the in-flight wait for it
+            obs::begin(PhaseId::Broadcast);
             link.recv_expect(0, FrameKind::Ef, seq, d, chunk)?;
+            obs::end(PhaseId::Broadcast);
             decode_onebit(&link.payload, d, &mut self.packed)?;
             compress::decompress_into(&self.packed, out);
         } else {
@@ -1115,11 +1132,13 @@ impl EfAllReduce {
                 out,
                 &eng,
             );
+            obs::begin(PhaseId::Broadcast);
             link.wire.clear();
             encode_onebit(packed, &mut link.wire);
             for r in 1..world {
                 link.send_wire(r, FrameKind::Ef, seq, d, chunk)?;
             }
+            obs::end(PhaseId::Broadcast);
         }
         let framed = (HEADER_BYTES + payload) as u64;
         Ok(WireStats { up_bytes: framed, down_bytes: framed, rounds: 1, compressed: true })
@@ -1167,7 +1186,9 @@ impl EfAllReduce {
 
         self.ensure_tree_rank(rank, shape);
         let lane = &mut self.lanes[0];
+        obs::begin(PhaseId::Compress);
         compress::compress_ef_into(bufs.buf(0), &mut lane.err, &mut lane.packed);
+        obs::end(PhaseId::Compress);
 
         let frames: u64;
         if rank == 0 {
@@ -1235,6 +1256,7 @@ impl EfAllReduce {
                     &eng,
                 );
             }
+            obs::begin(PhaseId::Broadcast);
             link.wire.clear();
             encode_onebit(&self.packed, &mut link.wire);
             for r in 1..g0 {
@@ -1243,15 +1265,20 @@ impl EfAllReduce {
             for i in 1..n_groups {
                 link.send_wire(i * shape.group, FrameKind::Ef, seq, d, chunk)?;
             }
+            obs::end(PhaseId::Broadcast);
             frames = (g0 as u64 - 1) + (n_groups as u64 - 1);
         } else if shape.is_leader(rank) {
             let sz = shape.group_size(shape.group_of(rank));
             if sz == 1 {
                 // singleton: this rank's upload *is* the group partial
+                obs::begin(PhaseId::Upload);
                 link.wire.clear();
                 encode_onebit(&self.lanes[0].packed, &mut link.wire);
                 link.send_wire(0, FrameKind::EfPartial, seq, d, chunk)?;
+                obs::end(PhaseId::Upload);
+                obs::begin(PhaseId::Broadcast);
                 link.recv_expect(0, FrameKind::Ef, seq, d, chunk)?;
+                obs::end(PhaseId::Broadcast);
                 decode_onebit(&link.payload, d, &mut self.packed)?;
                 compress::decompress_into(&self.packed, out);
                 frames = 1;
@@ -1287,11 +1314,15 @@ impl EfAllReduce {
                         &eng,
                     );
                 }
+                obs::begin(PhaseId::Upload);
                 link.wire.clear();
                 encode_onebit(&self.packed, &mut link.wire);
                 link.send_wire(0, FrameKind::EfPartial, seq, d, chunk)?;
+                obs::end(PhaseId::Upload);
                 // relay the root's broadcast down, then decode it
+                obs::begin(PhaseId::Broadcast);
                 link.recv_expect(0, FrameKind::Ef, seq, d, chunk)?;
+                obs::end(PhaseId::Broadcast);
                 {
                     let RankLink { payload, wire, .. } = link;
                     wire.clear();
@@ -1307,10 +1338,14 @@ impl EfAllReduce {
         } else {
             // member: one frame up to the leader, one relayed down
             let leader = shape.leader_of(rank);
+            obs::begin(PhaseId::Upload);
             link.wire.clear();
             encode_onebit(&self.lanes[0].packed, &mut link.wire);
             link.send_wire(leader, FrameKind::Ef, seq, d, chunk)?;
+            obs::end(PhaseId::Upload);
+            obs::begin(PhaseId::Broadcast);
             link.recv_expect(leader, FrameKind::Ef, seq, d, chunk)?;
+            obs::end(PhaseId::Broadcast);
             decode_onebit(&link.payload, d, &mut self.packed)?;
             compress::decompress_into(&self.packed, out);
             frames = 1;

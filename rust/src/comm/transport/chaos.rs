@@ -200,7 +200,11 @@ impl<T: Transport> Transport for Chaos<T> {
         payload: &[u8],
     ) -> Result<(), TransportError> {
         self.sent_idx[to] += 1;
-        match self.plan.fault_for(to, self.sent_idx[to]) {
+        let fault = self.plan.fault_for(to, self.sent_idx[to]);
+        if fault.is_some() {
+            crate::obs::mark(crate::obs::PhaseId::FaultInject);
+        }
+        match fault {
             None => self.inner.send(to, header, payload),
             Some(FaultKind::Delay { ms }) => {
                 std::thread::sleep(Duration::from_millis(ms));

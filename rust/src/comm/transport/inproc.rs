@@ -101,6 +101,7 @@ impl Transport for InProc {
         };
         let mut bytes = Vec::with_capacity(super::HEADER_BYTES + payload.len());
         encode_frame(header, payload, &mut bytes);
+        crate::obs::count(crate::obs::PhaseId::TxFrame, bytes.len() as u64);
         tx.send(bytes).map_err(|_| TransportError::Closed { peer: to })
     }
 
@@ -120,7 +121,9 @@ impl Transport for InProc {
                 RecvTimeoutError::Disconnected => TransportError::Closed { peer: from },
             })?,
         };
-        decode_frame(&bytes, payload)
+        let header = decode_frame(&bytes, payload)?;
+        crate::obs::count(crate::obs::PhaseId::RxFrame, bytes.len() as u64);
+        Ok(header)
     }
 
     fn set_recv_deadline(&mut self, deadline: Option<Duration>) {

@@ -234,6 +234,7 @@ impl RankLink {
         if world <= 1 {
             return Ok(());
         }
+        crate::obs::begin(crate::obs::PhaseId::Barrier);
         self.wire.clear();
         if self.rank() == 0 {
             for r in 1..world {
@@ -248,6 +249,7 @@ impl RankLink {
             self.recv_expect(0, FrameKind::Barrier, seq, 0, 0)?;
             self.expect_payload(0)?;
         }
+        crate::obs::end(crate::obs::PhaseId::Barrier);
         Ok(())
     }
 

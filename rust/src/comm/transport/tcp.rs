@@ -272,6 +272,7 @@ fn connect_backoff(
                 }
                 let jitter = chaos::mix(&[salt, attempt]) % delay_ms.max(1);
                 let sleep = Duration::from_millis((delay_ms / 2 + jitter).max(1));
+                crate::obs::mark(crate::obs::PhaseId::Backoff);
                 std::thread::sleep(sleep.min(deadline.saturating_duration_since(now)));
                 delay_ms = (delay_ms * 2).min(200);
                 attempt += 1;
@@ -719,6 +720,7 @@ impl Tcp {
         match res {
             Ok(()) => {
                 self.resumes += 1;
+                crate::obs::mark(crate::obs::PhaseId::Resume);
                 eprintln!(
                     "[transport] rank {}: resumed edge to rank {peer} (resume #{})",
                     self.rank, self.resumes
@@ -949,6 +951,7 @@ impl Transport for Tcp {
         let mut corrupt = false;
         let mut copies = 1usize;
         if let Some(kind) = self.fault.as_ref().and_then(|p| p.fault_for(to, idx)) {
+            crate::obs::mark(crate::obs::PhaseId::FaultInject);
             match kind {
                 FaultKind::Delay { ms } => std::thread::sleep(Duration::from_millis(ms)),
                 FaultKind::Duplicate => copies = 2,
@@ -1018,6 +1021,7 @@ impl Transport for Tcp {
         // One logical frame regardless of copies: a duplicate is wire
         // garbage for the receiver's schedule validation to reject,
         // not schedule state.
+        crate::obs::count(crate::obs::PhaseId::TxFrame, buf.len() as u64);
         self.sent[to] = idx;
         self.retained[to].push_back((idx, buf));
         Ok(())
@@ -1033,6 +1037,10 @@ impl Transport for Tcp {
             match res {
                 Ok(header) => {
                     self.rcvd[from] += 1;
+                    crate::obs::count(
+                        crate::obs::PhaseId::RxFrame,
+                        (HEADER_BYTES + payload.len()) as u64,
+                    );
                     return Ok(header);
                 }
                 Err(e) if is_timeout(&e) => {

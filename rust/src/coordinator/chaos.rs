@@ -15,7 +15,7 @@
 //! [`run_cell`]; [`CellReport::satisfies_contract`] is the shared
 //! judgment of which contract half a scenario must land on.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::comm::transport::tcp::{Tcp, TcpOpts};
 use crate::comm::transport::{RankLink, Scenario, TransportError};
@@ -140,7 +140,7 @@ pub fn run_cell(
     with_parity: bool,
 ) -> Result<CellReport, TransportError> {
     let topo = spec.topology.normalized(spec.world);
-    let wall = Instant::now();
+    let wall = crate::util::Stopwatch::start();
     let tcp_opts = TcpOpts {
         connect_timeout: opts.connect_timeout,
         recv_deadline: opts.recv_deadline,
@@ -196,7 +196,7 @@ pub fn run_cell(
         resumes,
         errors,
         parity,
-        wall_s: wall.elapsed().as_secs_f64(),
+        wall_s: wall.elapsed_secs(),
     })
 }
 

@@ -193,7 +193,7 @@ pub struct RankResult {
 /// differ across ranks (a tighter deadline on one rank, a fault plan
 /// on another) without being a different *run* — they never change
 /// the trajectory, only how failures surface.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct RankOpts {
     /// Per-recv deadline pushed onto the link (`None` = the backend's
     /// default). A peer silent for longer is a typed
@@ -203,6 +203,22 @@ pub struct RankOpts {
     /// at the start of step `t` — a real SIGABRT mid-round, for the
     /// kill-a-rank scenarios in `tests/chaos_shutdown.rs`.
     pub die_at_step: Option<u64>,
+    /// Arm this rank's flight recorder and, on success, append the
+    /// rank's JSONL run-event stream to this file (`--trace-out`).
+    /// Best-effort export: a write failure is reported, never fatal —
+    /// and the recorder never feeds back into the trajectory, so a
+    /// traced run stays bitwise identical to an untraced one.
+    pub trace_out: Option<String>,
+    /// Arm the recorder and print this rank's step/round/recovery
+    /// records to stdout as JSONL lines (`--events`).
+    pub events: bool,
+}
+
+impl RankOpts {
+    /// Does this rank record a trace at all?
+    pub fn tracing(&self) -> bool {
+        self.trace_out.is_some() || self.events
+    }
 }
 
 /// [`run_rank_opts`] with default options — the common path.
@@ -237,6 +253,10 @@ pub fn run_rank_opts(
         link.set_recv_deadline(Some(d));
     }
     let rank = link.rank();
+    if opts.tracing() {
+        crate::obs::arm(crate::obs::DEFAULT_CAPACITY);
+    }
+    let mut step_records: Vec<crate::obs::Record> = Vec::new();
     let d = spec.d;
     let mut src = spec.source();
     let mut opt = spec
@@ -264,6 +284,7 @@ pub fn run_rank_opts(
         }
         // Rank r *is* worker r: same params, same noise stream, same
         // gradient bits as in-process worker r.
+        crate::obs::begin(crate::obs::PhaseId::Step);
         let loss = src.grad(opt.params(0), rank, t, &mut grads[0]);
         let info = opt.step_comm(t, &grads, &eng, &mut ReduceBackend::Transport(&mut *link))?;
         ledger.record_step(&info.rounds);
@@ -271,6 +292,15 @@ pub fn run_rank_opts(
         // the worker-order f64 mean the in-process trainer logs.
         if let Some(mean) = link.gather_mean_loss(loss)? {
             losses.push(mean);
+        }
+        crate::obs::end(crate::obs::PhaseId::Step);
+        if opts.tracing() {
+            step_records.push(crate::obs::Record::Step {
+                rank,
+                t,
+                loss: loss as f64,
+                t_ns: crate::obs::now_ns().unwrap_or(0),
+            });
         }
     }
 
@@ -300,6 +330,10 @@ pub fn run_rank_opts(
         (f64::NAN, None)
     };
 
+    if opts.tracing() {
+        flush_trace(link, spec, opts, rank, &ledger, step_records);
+    }
+
     Ok(RankResult {
         rank,
         world: spec.world,
@@ -311,6 +345,57 @@ pub fn run_rank_opts(
         resumes: link.resumes(),
         wall_s: wall.elapsed_secs(),
     })
+}
+
+/// Export one successful rank's run-event stream (ISSUE 9): a meta
+/// record, the recorder's phase events, then the step/round/recovery
+/// records. Only reached on success — a failed rank aborts without
+/// flushing, so an exported file never carries a stream cut mid-span.
+/// Export is best-effort: an I/O failure is reported on stderr and
+/// never fails the run.
+fn flush_trace(
+    link: &RankLink,
+    spec: &DistSpec,
+    opts: &RankOpts,
+    rank: usize,
+    ledger: &VolumeLedger,
+    step_records: Vec<crate::obs::Record>,
+) {
+    use crate::obs::{self, Record};
+    let t_ns = obs::now_ns().unwrap_or(0);
+    let Some(rec) = obs::disarm() else { return };
+    let mut records = Vec::with_capacity(rec.len() + step_records.len() + 3);
+    records.push(Record::Meta {
+        rank,
+        world: spec.world,
+        family: spec.family.clone(),
+        d: spec.d,
+        steps: spec.steps,
+        topology: spec.topology.normalized(spec.world).to_string(),
+    });
+    for ev in rec.events() {
+        records.push(Record::from_event(rank, &ev));
+    }
+    records.extend(step_records);
+    records.push(Record::Round {
+        rank,
+        rounds: ledger.rounds_total(),
+        bytes: ledger.bytes_total,
+        compressed: ledger.onebit_rounds,
+    });
+    records.push(Record::Recovery { rank, resumes: link.resumes(), t_ns });
+    if opts.events {
+        for r in &records {
+            if matches!(r, Record::Step { .. } | Record::Round { .. } | Record::Recovery { .. }) {
+                println!("{}", r.to_json().to_string_compact());
+            }
+        }
+    }
+    if let Some(path) = &opts.trace_out {
+        if let Err(e) = obs::events::append_to_file(path, &records) {
+            eprintln!("[obs] rank {rank}: trace export to {path} failed: {e}");
+        }
+    }
 }
 
 /// The single-process reference for [`check_parity`]: the ordinary
@@ -338,6 +423,16 @@ pub fn run_local(spec: &DistSpec, exec: ExecMode) -> RunResult {
 /// results indexed by rank. The default `zo-adam launch` path and what
 /// the parity tests drive.
 pub fn launch_inproc(spec: &DistSpec) -> Result<Vec<RankResult>, TransportError> {
+    launch_inproc_opts(spec, &RankOpts::default())
+}
+
+/// [`launch_inproc`] with per-rank options — every rank thread runs
+/// the same `opts` (each arms its own thread-local recorder when
+/// tracing; `trace_out` appends are serialized by the exporter).
+pub fn launch_inproc_opts(
+    spec: &DistSpec,
+    opts: &RankOpts,
+) -> Result<Vec<RankResult>, TransportError> {
     let links = crate::comm::transport::inproc::group_topo(
         spec.world,
         spec.topology.normalized(spec.world),
@@ -348,7 +443,7 @@ pub fn launch_inproc(spec: &DistSpec) -> Result<Vec<RankResult>, TransportError>
             .map(|tp| {
                 s.spawn(move || {
                     let mut link = RankLink::new(Box::new(tp));
-                    run_rank(&mut link, spec)
+                    run_rank_opts(&mut link, spec, opts)
                 })
             })
             .collect();

@@ -188,6 +188,7 @@ impl Engine {
             run_split_block(0, 0, len, chunk, parts, &f);
             return;
         }
+        crate::obs::begin(crate::obs::PhaseId::Region);
         let k = self.threads.min(n_chunks);
         let chunks_per_block = n_chunks.div_ceil(k);
         let coords_per_block = chunks_per_block * chunk;
@@ -239,6 +240,7 @@ impl Engine {
                 run_split_block(ci0, off0, take0, chunk, head0, fr);
             });
         }
+        crate::obs::end(crate::obs::PhaseId::Region);
     }
 }
 

@@ -25,6 +25,21 @@ pub struct StepRecord {
     pub eval_loss: Option<f64>,
 }
 
+impl StepRecord {
+    /// Bridge into the obs run-event stream (`zo-adam train --events`):
+    /// an in-process run has exactly one logical rank, and the step's
+    /// timeline position comes from the armed recorder's clock (0 when
+    /// the run is untraced).
+    pub fn to_run_event(&self) -> crate::obs::Record {
+        crate::obs::Record::Step {
+            rank: 0,
+            t: self.t,
+            loss: self.loss,
+            t_ns: crate::obs::now_ns().unwrap_or(0),
+        }
+    }
+}
+
 /// An in-memory metric log with file writers.
 #[derive(Debug, Default, Clone)]
 pub struct MetricLog {

@@ -12,8 +12,8 @@ pub mod trainer;
 
 pub use chaos::{run_cell, CellOutcome, CellReport, ChaosOpts};
 pub use distributed::{
-    check_parity, launch_inproc, run_local, run_rank, run_rank_opts, DistSpec, RankOpts,
-    RankResult, WorkerChildren,
+    check_parity, launch_inproc, launch_inproc_opts, run_local, run_rank, run_rank_opts, DistSpec,
+    RankOpts, RankResult, WorkerChildren,
 };
 pub use engine::{Engine, ExecMode, MAX_POOL_THREADS};
 pub use metrics::{MetricLog, StepRecord};

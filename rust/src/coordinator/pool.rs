@@ -230,6 +230,7 @@ impl Pool {
             st.epoch = st.epoch.wrapping_add(1);
             slot.cv.notify_one();
         }
+        crate::obs::mark_n(crate::obs::PhaseId::RegionPublish, tasks.len() as u64);
         // The coordinator is never idle while the pool runs — and if
         // its own share panics, the barrier must still complete first:
         // workers hold pointers into this very stack frame.
@@ -241,6 +242,7 @@ impl Pool {
             }
             done.panicked
         };
+        crate::obs::mark(crate::obs::PhaseId::RegionBarrier);
         if let Err(p) = own_result {
             panic::resume_unwind(p);
         }

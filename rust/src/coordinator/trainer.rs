@@ -135,6 +135,7 @@ impl Trainer {
         let wall = crate::util::Stopwatch::start();
 
         for t in 0..cfg.steps {
+            crate::obs::begin(crate::obs::PhaseId::Step);
             // Phase 1: each worker computes its local gradient. With a
             // threaded engine and a thread-shareable source, workers fan
             // out across the pool; losses are still averaged on the
@@ -225,6 +226,7 @@ impl Trainer {
                     );
                 }
             }
+            crate::obs::end(crate::obs::PhaseId::Step);
         }
 
         let mut final_params = vec![0.0f32; d];

@@ -37,6 +37,12 @@
 //!   loop ([`coordinator::distributed`]: `zo-adam launch/worker`,
 //!   bitwise parity with the engine), simulated cluster clock,
 //!   metrics, Fig-1 profiler.
+//! * [`obs`] — the flight recorder (ISSUE 9): per-rank preallocated
+//!   ring-buffer phase tracing (all timestamping confined here — the
+//!   instrumented modules record opaque `PhaseId`s and stay clean
+//!   under lint D1), a metrics registry (log-bucketed latency
+//!   histograms, counters), and the versioned JSONL run-event stream
+//!   plus chrome://tracing exporter behind `zo-adam trace`.
 //! * [`data`] / [`eval`] — synthetic workloads and downstream evals.
 //! * [`config`] / [`exp`] — paper workload presets and one driver per
 //!   table/figure (DESIGN.md §4).
@@ -53,6 +59,7 @@ pub mod data;
 pub mod eval;
 pub mod exp;
 pub mod grad;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod tensor;

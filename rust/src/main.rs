@@ -50,6 +50,7 @@ fn main() {
         "theory" => cmd_theory(rest),
         "bench" => cmd_bench(rest),
         "lint" => cmd_lint(rest),
+        "trace" => cmd_trace(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -86,6 +87,7 @@ fn usage() -> String {
      \x20 theory            Theorem-1 empirical checks\n\
      \x20 bench             hot-path microbenches + BENCH json + perf-regression gate\n\
      \x20 lint              static invariant analyzer (--deny-all --json --write-lock)\n\
+     \x20 trace             flight-recorder streams: summary, --check, --chrome (--trace-out files)\n\
      \n\
      Run `zo-adam <command> --help` for options."
         .to_string()
@@ -169,10 +171,22 @@ fn cmd_train(rest: &[String]) -> Result<()> {
                 .opt("task", "bert_base", "paper task for schedules/timing")
                 .opt("seed", "0", "data seed")
                 .opt("threads", "1", "engine pool threads (1 = sequential; results are bitwise identical)")
+                .opt("trace-out", "", "append the run's JSONL run-event stream to this file ('' = off)")
+                .flag("events", "print step records to stdout as JSONL")
                 .flag("quiet", "suppress progress"),
         ),
         rest,
     );
+    let trace_out = match p.get("trace-out") {
+        "" => None,
+        s => Some(s.to_string()),
+    };
+    let events = p.get_flag("events");
+    if trace_out.is_some() || events {
+        // Armed before the run so the trainer's step/region/phase hooks
+        // land in this thread's (= the coordinator's) recorder.
+        zo_adam::obs::arm(zo_adam::obs::DEFAULT_CAPACITY);
+    }
     let rt = Runtime::new(artifacts_dir(&p))?;
     let algo = Algo::by_name(p.get("algo"))
         .ok_or_else(|| anyhow::anyhow!("unknown algo '{}'", p.get("algo")))?;
@@ -185,6 +199,45 @@ fn cmd_train(rest: &[String]) -> Result<()> {
 
     let runs = run_convergence(&rt, &opts, &[algo])?;
     let (_, res) = &runs[0];
+    if trace_out.is_some() || events {
+        use zo_adam::obs::{self, Record};
+        // Step records are stamped before disarming so they share the
+        // recorder's time base.
+        let step_records: Vec<Record> =
+            res.log.records.iter().map(|r| r.to_run_event()).collect();
+        let mut records = vec![Record::Meta {
+            rank: 0,
+            world: opts.workers,
+            family: algo.name().to_string(),
+            d: res.ledger.d,
+            steps: p.get_u64("steps"),
+            topology: "star".to_string(),
+        }];
+        if let Some(rec) = obs::disarm() {
+            for ev in rec.events() {
+                records.push(Record::from_event(0, &ev));
+            }
+        }
+        records.extend(step_records);
+        records.push(Record::Round {
+            rank: 0,
+            rounds: res.ledger.rounds_total(),
+            bytes: res.ledger.bytes_total,
+            compressed: res.ledger.onebit_rounds,
+        });
+        if events {
+            for r in &records {
+                if matches!(r, Record::Step { .. } | Record::Round { .. }) {
+                    println!("{}", r.to_json().to_string_compact());
+                }
+            }
+        }
+        if let Some(path) = &trace_out {
+            obs::events::append_to_file(path, &records)
+                .map_err(|e| anyhow::anyhow!("trace export to {path}: {e}"))?;
+            println!("wrote trace to {path}");
+        }
+    }
     let out = p.get("out");
     let csv = format!("{out}/train_{}_{}.csv", p.get("model"), algo.name());
     res.log.write_csv(&csv)?;
@@ -514,6 +567,8 @@ fn cmd_launch(rest: &[String]) -> Result<()> {
                 .opt("resume-window", "5", "tcp: reconnect-with-resume window, seconds")
                 .opt("kill-rank", "", "chaos: worker rank that abort()s mid-run ('' = off)")
                 .opt("kill-at-step", "5", "chaos: step at which --kill-rank dies")
+                .opt("trace-out", "", "append every rank's JSONL run-event stream to this file ('' = off)")
+                .flag("events", "print step/round/recovery records to stdout as JSONL")
                 .flag("check-parity", "re-run in-process and require bitwise-identical results")
                 .flag("quiet", "suppress worker output"),
         ),
@@ -521,6 +576,14 @@ fn cmd_launch(rest: &[String]) -> Result<()> {
     );
     let world = p.get_usize("ranks").max(1);
     let spec = spec_from(&p, world);
+    let rank_opts = zo_adam::coordinator::RankOpts {
+        trace_out: match p.get("trace-out") {
+            "" => None,
+            s => Some(s.to_string()),
+        },
+        events: p.get_flag("events"),
+        ..Default::default()
+    };
     anyhow::ensure!(
         zo_adam::coordinator::distributed::FAMILIES.contains(&spec.family.as_str()),
         "unknown family '{}' (one of: {})",
@@ -530,7 +593,7 @@ fn cmd_launch(rest: &[String]) -> Result<()> {
     let transport = p.get("transport").to_string();
     let root = match transport.as_str() {
         "inproc" => {
-            let mut results = zo_adam::coordinator::launch_inproc(&spec)
+            let mut results = zo_adam::coordinator::launch_inproc_opts(&spec, &rank_opts)
                 .map_err(|e| anyhow::anyhow!("in-proc launch failed: {e}"))?;
             results.truncate(1);
             results.pop().expect("rank 0 result")
@@ -551,7 +614,7 @@ fn cmd_launch(rest: &[String]) -> Result<()> {
                     Some((r, p.get_u64("kill-at-step")))
                 }
             };
-            launch_tcp(&spec, p.get_usize("port"), p.get_flag("quiet"), &tcp_opts, kill)?
+            launch_tcp(&spec, p.get_usize("port"), p.get_flag("quiet"), &tcp_opts, kill, &rank_opts)?
         }
         other => anyhow::bail!("unknown transport '{other}' (inproc|tcp)"),
     };
@@ -580,6 +643,7 @@ fn launch_tcp(
     quiet: bool,
     tcp_opts: &zo_adam::comm::transport::tcp::TcpOpts,
     kill: Option<(usize, u64)>,
+    rank_opts: &zo_adam::coordinator::RankOpts,
 ) -> Result<zo_adam::coordinator::RankResult> {
     use std::process::{Command, Stdio};
     use zo_adam::comm::transport::tcp::Tcp;
@@ -629,6 +693,12 @@ fn launch_tcp(
                 cmd.arg("--die-at-step").arg(kill_step.to_string());
             }
         }
+        if let Some(path) = &rank_opts.trace_out {
+            cmd.arg("--trace-out").arg(path);
+        }
+        if rank_opts.events {
+            cmd.arg("--events");
+        }
         if quiet {
             cmd.arg("--quiet").stdout(Stdio::null());
         }
@@ -650,7 +720,7 @@ fn launch_tcp(
         )
         .map_err(|e| anyhow::anyhow!("root handshake: {e}"))?;
         let mut link = RankLink::new(Box::new(tp));
-        zo_adam::coordinator::run_rank(&mut link, spec)
+        zo_adam::coordinator::run_rank_opts(&mut link, spec, rank_opts)
             .map_err(|e| anyhow::anyhow!("rank 0 failed: {e}"))
     })();
     // Report worker exit statuses together with (and ahead of) the
@@ -687,6 +757,8 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
                 .opt("recv-deadline", "120", "per-recv deadline, seconds")
                 .opt("resume-window", "5", "reconnect-with-resume window, seconds")
                 .opt("die-at-step", "", "chaos: abort() at the start of this step ('' = off)")
+                .opt("trace-out", "", "append this rank's JSONL run-event stream to this file ('' = off)")
+                .flag("events", "print step/round/recovery records to stdout as JSONL")
                 .flag("quiet", "no output on success"),
         ),
         rest,
@@ -718,7 +790,15 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
     )
     .map_err(|e| anyhow::anyhow!("worker rank {rank} handshake: {e}"))?;
     let mut link = zo_adam::comm::RankLink::new(Box::new(tp));
-    let opts = zo_adam::coordinator::RankOpts { recv_deadline: None, die_at_step };
+    let opts = zo_adam::coordinator::RankOpts {
+        recv_deadline: None,
+        die_at_step,
+        trace_out: match p.get("trace-out") {
+            "" => None,
+            s => Some(s.to_string()),
+        },
+        events: p.get_flag("events"),
+    };
     let res = zo_adam::coordinator::run_rank_opts(&mut link, &spec, &opts)
         .map_err(|e| anyhow::anyhow!("worker rank {rank} failed: {e}"))?;
     if !p.get_flag("quiet") {
@@ -729,6 +809,77 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
             res.ledger.bytes_total,
             res.wall_s
         );
+    }
+    Ok(())
+}
+
+/// ISSUE 9: inspect a flight-recorder run-event stream (the JSONL
+/// files `--trace-out` appends). Default output is the per-phase
+/// registry summary (span histograms, counters); `--check` validates
+/// the stream (schema version, per-rank monotone timestamps, balanced
+/// spans) and `--chrome` renders chrome://tracing Trace Event JSON.
+fn cmd_trace(rest: &[String]) -> Result<()> {
+    use zo_adam::obs::{self, Event, Record, Registry};
+    let p = parse(
+        Args::new("zo-adam trace", "inspect / validate / convert a run-event stream")
+            .opt_req("in", "JSONL trace file written by --trace-out")
+            .opt("out", "", "output path for --chrome ('' = stdout)")
+            .flag("check", "validate the stream and exit nonzero on any violation")
+            .flag("chrome", "render chrome://tracing Trace Event JSON"),
+        rest,
+    );
+    let path = p.get("in");
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let records = obs::parse_jsonl(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    if p.get_flag("check") {
+        let chk = obs::events::check(&records).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        println!(
+            "[trace] OK: {} records, {} phase events, {} closed spans, ranks {:?}",
+            chk.records, chk.phase_events, chk.spans, chk.ranks
+        );
+        return Ok(());
+    }
+    if p.get_flag("chrome") {
+        let rendered = obs::chrome::render(&records).to_string_compact();
+        match p.get("out") {
+            "" => println!("{rendered}"),
+            out => {
+                std::fs::write(out, &rendered)
+                    .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+                println!("wrote {out}");
+            }
+        }
+        return Ok(());
+    }
+    // Default: aggregate every rank's phase stream into one registry.
+    for r in &records {
+        if let Record::Meta { rank, world, family, d, steps, topology } = r {
+            println!("[trace] rank {rank}/{world}: {family} d={d} steps={steps} topology={topology}");
+        }
+    }
+    let mut ranks: Vec<usize> = records
+        .iter()
+        .filter_map(|r| matches!(r, Record::Phase { .. }).then(|| r.rank()))
+        .collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    let mut reg = Registry::new();
+    for rk in &ranks {
+        let evs: Vec<Event> = records
+            .iter()
+            .filter_map(|r| match r {
+                Record::Phase { rank, kind, phase, t_ns, arg } if rank == rk => {
+                    Some(Event { phase: *phase, kind: *kind, t_ns: *t_ns, arg: *arg })
+                }
+                _ => None,
+            })
+            .collect();
+        reg.ingest_events(&evs);
+    }
+    print!("{}", reg.render_table());
+    if reg.unbalanced > 0 {
+        println!("[trace] note: {} unbalanced span edge(s) (ring overwrite?)", reg.unbalanced);
     }
     Ok(())
 }
@@ -1344,6 +1495,36 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
         }
     }
 
+    // -- flight recorder hooks ----------------------------------------
+    // ISSUE 9: the per-hook cost the instrumented hot paths pay. The
+    // disarmed entry is what *every* untraced run pays at each call
+    // site (a thread-local load + branch); the armed entries are the
+    // ring-store cost a traced rank adds per mark / per span. Gated:
+    // the whole design rests on these staying in the nanoseconds.
+    println!("\n-- flight recorder (per-hook cost) --");
+    {
+        use zo_adam::obs::{self, PhaseId};
+        // `b.run` clears its sample buffers between entries; the ring
+        // is preallocated at arm() and overwrites oldest, so the armed
+        // entries allocate nothing inside the measured window.
+        assert!(!obs::is_armed(), "bench main thread starts untraced");
+        let mut b = Bench::new();
+        report.push(&b.run("trace/mark_disarmed", || {
+            obs::mark(PhaseId::Step);
+        }));
+        obs::arm(1 << 12);
+        report.push(&b.run("trace/mark_armed", || {
+            obs::mark(PhaseId::Step);
+        }));
+        report.push(&b.run("trace/span_armed", || {
+            obs::begin(PhaseId::Compress);
+            obs::end(PhaseId::Compress);
+        }));
+        let recorded = obs::with(|r| r.len() + r.dropped() as usize).unwrap_or(0);
+        obs::disarm();
+        println!("  -> {recorded} events recorded through the armed windows");
+    }
+
     // -- optimizer step -----------------------------------------------
     // Gated entries need a *stationary* per-step workload: policies are
     // pinned (constant LR, fixed stages) so every measured iteration
@@ -1459,11 +1640,13 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
     // Gated entry families: optimizer steps (PR 2), the EF server
     // accumulation paths (ISSUE 5 — a sweep regression or a table path
     // that stops beating it must fail loudly, not fade quietly), the
-    // topology-scheduled transport rounds (ISSUE 6) and the chaos
+    // topology-scheduled transport rounds (ISSUE 6), the chaos
     // recovery/straggler RTTs (ISSUE 7 — reconnect-with-resume getting
-    // slower is a robustness regression, not just a perf one).
-    const GATED_PREFIXES: [&str; 4] =
-        ["step/", "server_leg/", "transport/tree/", "transport/chaos/"];
+    // slower is a robustness regression, not just a perf one), and the
+    // flight-recorder hook costs (ISSUE 9 — every instrumented hot path
+    // pays the disarmed cost unconditionally).
+    const GATED_PREFIXES: [&str; 5] =
+        ["step/", "server_leg/", "transport/tree/", "transport/chaos/", "trace/"];
     if let Some(base) = &baseline {
         let gated: Vec<&str> = base
             .entries
@@ -1487,7 +1670,8 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
         if base.bootstrap || gated.is_empty() {
             println!(
                 "\nperf gate vs {baseline_path}: SKIPPED (bootstrap baseline — no measured \
-                 step/, server_leg/, transport/tree/ or transport/chaos/ entries to compare yet)"
+                 step/, server_leg/, transport/tree/, transport/chaos/ or trace/ entries to \
+                 compare yet)"
             );
         } else if !config_mismatch.is_empty() {
             println!(

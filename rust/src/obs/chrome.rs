@@ -1,0 +1,137 @@
+//! chrome://tracing Trace Event JSON exporter (`zo-adam trace
+//! --chrome`).
+//!
+//! Renders a parsed run-event stream as the Trace Event Format's
+//! object form (`{"traceEvents": [...]}`), loadable in
+//! chrome://tracing and Perfetto. Each rank becomes a process
+//! (`pid` = rank, named via `process_name` metadata from its `meta`
+//! record); span begin/end map to `B`/`E` duration events, marks and
+//! counters to `i` instants. Timestamps are the recorder's
+//! nanoseconds-since-arm, converted to the format's microseconds.
+
+use super::events::Record;
+use super::recorder::EventKind;
+use crate::util::json::Json;
+
+/// Render a parsed stream as Trace Event JSON.
+pub fn render(records: &[Record]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for r in records {
+        match r {
+            Record::Meta { rank, world, family, topology, .. } => {
+                events.push(Json::obj(vec![
+                    ("name", Json::Str("process_name".into())),
+                    ("ph", Json::Str("M".into())),
+                    ("pid", Json::Num(*rank as f64)),
+                    ("tid", Json::Num(0.0)),
+                    (
+                        "args",
+                        Json::obj(vec![(
+                            "name",
+                            Json::Str(format!("rank {rank}/{world} {family} {topology}")),
+                        )]),
+                    ),
+                ]));
+            }
+            Record::Phase { rank, kind, phase, t_ns, arg } => {
+                let ph = match kind {
+                    EventKind::Begin => "B",
+                    EventKind::End => "E",
+                    EventKind::Mark | EventKind::Count => "i",
+                };
+                let mut ev = vec![
+                    ("name", Json::Str(phase.name().into())),
+                    ("ph", Json::Str(ph.into())),
+                    ("pid", Json::Num(*rank as f64)),
+                    ("tid", Json::Num(0.0)),
+                    ("ts", Json::Num(*t_ns as f64 / 1000.0)),
+                ];
+                if matches!(kind, EventKind::Mark | EventKind::Count) {
+                    // instants need a scope; args carry the payload
+                    ev.push(("s", Json::Str("t".into())));
+                    ev.push(("args", Json::obj(vec![("arg", Json::Num(*arg as f64))])));
+                }
+                events.push(Json::obj(ev));
+            }
+            Record::Step { rank, t, loss, t_ns } => {
+                events.push(Json::obj(vec![
+                    ("name", Json::Str(format!("step {t}"))),
+                    ("ph", Json::Str("i".into())),
+                    ("pid", Json::Num(*rank as f64)),
+                    ("tid", Json::Num(0.0)),
+                    ("ts", Json::Num(*t_ns as f64 / 1000.0)),
+                    ("s", Json::Str("t".into())),
+                    ("args", Json::obj(vec![("loss", Json::Num(*loss))])),
+                ]));
+            }
+            // end-of-run aggregates have no timeline position
+            Record::Round { .. } | Record::Recovery { .. } => {}
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ns".into())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::PhaseId;
+
+    #[test]
+    fn spans_and_marks_map_to_trace_event_phases() {
+        let records = vec![
+            Record::Meta {
+                rank: 1,
+                world: 4,
+                family: "01adam".into(),
+                d: 64,
+                steps: 2,
+                topology: "star".into(),
+            },
+            Record::Phase {
+                rank: 1,
+                kind: EventKind::Begin,
+                phase: PhaseId::Compress,
+                t_ns: 2000,
+                arg: 0,
+            },
+            Record::Phase {
+                rank: 1,
+                kind: EventKind::End,
+                phase: PhaseId::Compress,
+                t_ns: 5000,
+                arg: 0,
+            },
+            Record::Phase {
+                rank: 1,
+                kind: EventKind::Count,
+                phase: PhaseId::TxFrame,
+                t_ns: 6000,
+                arg: 512,
+            },
+            Record::Step { rank: 1, t: 0, loss: 2.5, t_ns: 7000 },
+            Record::Round { rank: 1, rounds: 2, bytes: 1024, compressed: 2 },
+        ];
+        let j = render(&records);
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // meta + B + E + i + step-i (Round emits nothing)
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("M"));
+        assert_eq!(evs[1].get("ph").unwrap().as_str(), Some("B"));
+        assert_eq!(evs[1].get("name").unwrap().as_str(), Some("compress"));
+        // ts is microseconds
+        assert_eq!(evs[1].get("ts").unwrap().as_f64(), Some(2.0));
+        assert_eq!(evs[2].get("ph").unwrap().as_str(), Some("E"));
+        assert_eq!(evs[3].get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(
+            evs[3].get("args").unwrap().get("arg").unwrap().as_f64(),
+            Some(512.0)
+        );
+        assert_eq!(evs[4].get("args").unwrap().get("loss").unwrap().as_f64(), Some(2.5));
+        // the whole thing parses back as JSON
+        let text = j.to_string_compact();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,416 @@
+//! The versioned JSONL run-event stream (`--trace-out` / `--events`).
+//!
+//! One JSON object per line; **every** line carries `"v": 1`
+//! ([`EVENTS_VERSION`]) so readers can reject a future schema instead
+//! of misparsing it. Five record kinds (`k` field):
+//!
+//! * `meta` — once per rank: rank, world, family, d, steps, topology;
+//! * `b` / `e` / `m` / `c` — one recorded phase event (span begin/end,
+//!   mark, counter) with its phase name, nanosecond timestamp and arg;
+//! * `step` — one training step's loss (the service-daemon progress
+//!   record);
+//! * `round` — one rank's cumulative reduction-round volume;
+//! * `recovery` — a rank's resume-handshake count at run end.
+//!
+//! This is a **file/stdout format**, not a transport frame: the pinned
+//! wire surface (`wire.lock`, rule W1) is untouched. It is, by design,
+//! the schema the future training-as-a-service daemon will stream to
+//! subscribers (ROADMAP).
+//!
+//! Multi-process runs append to one shared `--trace-out` file: each
+//! rank buffers its whole stream and appends it with a single
+//! `O_APPEND` write at run end, so rank chunks interleave at line
+//! granularity at worst — and [`check`] groups by rank, so cross-rank
+//! ordering never matters.
+
+use super::recorder::{Event, EventKind};
+use super::PhaseId;
+use crate::util::json::Json;
+use std::io::Write;
+
+/// Schema version stamped on (and required of) every line.
+pub const EVENTS_VERSION: u64 = 1;
+
+/// One line of the run-event stream.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    /// Run/rank identity, once per rank.
+    Meta { rank: usize, world: usize, family: String, d: usize, steps: u64, topology: String },
+    /// One recorded phase event.
+    Phase { rank: usize, kind: EventKind, phase: PhaseId, t_ns: u64, arg: u64 },
+    /// One training step's progress.
+    Step { rank: usize, t: u64, loss: f64, t_ns: u64 },
+    /// Cumulative reduction-round volume at run end.
+    Round { rank: usize, rounds: u64, bytes: u64, compressed: u64 },
+    /// Resume handshakes performed, at run end.
+    Recovery { rank: usize, resumes: u64, t_ns: u64 },
+}
+
+impl Record {
+    /// Lift one recorder event into its stream record.
+    pub fn from_event(rank: usize, ev: &Event) -> Record {
+        Record::Phase { rank, kind: ev.kind, phase: ev.phase, t_ns: ev.t_ns, arg: ev.arg }
+    }
+
+    pub fn rank(&self) -> usize {
+        match self {
+            Record::Meta { rank, .. }
+            | Record::Phase { rank, .. }
+            | Record::Step { rank, .. }
+            | Record::Round { rank, .. }
+            | Record::Recovery { rank, .. } => *rank,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let v = ("v", Json::Num(EVENTS_VERSION as f64));
+        match self {
+            Record::Meta { rank, world, family, d, steps, topology } => Json::obj(vec![
+                v,
+                ("k", Json::Str("meta".into())),
+                ("rank", Json::Num(*rank as f64)),
+                ("world", Json::Num(*world as f64)),
+                ("family", Json::Str(family.clone())),
+                ("d", Json::Num(*d as f64)),
+                ("steps", Json::Num(*steps as f64)),
+                ("topology", Json::Str(topology.clone())),
+            ]),
+            Record::Phase { rank, kind, phase, t_ns, arg } => Json::obj(vec![
+                v,
+                ("k", Json::Str(kind.code().into())),
+                ("rank", Json::Num(*rank as f64)),
+                ("ph", Json::Str(phase.name().into())),
+                ("t_ns", Json::Num(*t_ns as f64)),
+                ("arg", Json::Num(*arg as f64)),
+            ]),
+            Record::Step { rank, t, loss, t_ns } => Json::obj(vec![
+                v,
+                ("k", Json::Str("step".into())),
+                ("rank", Json::Num(*rank as f64)),
+                ("t", Json::Num(*t as f64)),
+                ("loss", Json::Num(*loss)),
+                ("t_ns", Json::Num(*t_ns as f64)),
+            ]),
+            Record::Round { rank, rounds, bytes, compressed } => Json::obj(vec![
+                v,
+                ("k", Json::Str("round".into())),
+                ("rank", Json::Num(*rank as f64)),
+                ("rounds", Json::Num(*rounds as f64)),
+                ("bytes", Json::Num(*bytes as f64)),
+                ("compressed", Json::Num(*compressed as f64)),
+            ]),
+            Record::Recovery { rank, resumes, t_ns } => Json::obj(vec![
+                v,
+                ("k", Json::Str("recovery".into())),
+                ("rank", Json::Num(*rank as f64)),
+                ("resumes", Json::Num(*resumes as f64)),
+                ("t_ns", Json::Num(*t_ns as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Record, String> {
+        let version = field_u64(j, "v")?;
+        if version != EVENTS_VERSION {
+            return Err(format!(
+                "unsupported event-stream version {version} (this build reads v{EVENTS_VERSION})"
+            ));
+        }
+        let k = j.get("k").and_then(Json::as_str).ok_or("record missing 'k'")?;
+        let rank = field_u64(j, "rank")? as usize;
+        match k {
+            "meta" => Ok(Record::Meta {
+                rank,
+                world: field_u64(j, "world")? as usize,
+                family: field_str(j, "family")?,
+                d: field_u64(j, "d")? as usize,
+                steps: field_u64(j, "steps")?,
+                topology: field_str(j, "topology")?,
+            }),
+            "b" | "e" | "m" | "c" => {
+                let ph = field_str(j, "ph")?;
+                let phase =
+                    PhaseId::parse(&ph).ok_or_else(|| format!("unknown phase '{ph}'"))?;
+                Ok(Record::Phase {
+                    rank,
+                    kind: EventKind::parse(k).expect("matched above"),
+                    phase,
+                    t_ns: field_u64(j, "t_ns")?,
+                    arg: field_u64(j, "arg")?,
+                })
+            }
+            "step" => Ok(Record::Step {
+                rank,
+                t: field_u64(j, "t")?,
+                loss: j.get("loss").and_then(Json::as_f64).ok_or("step missing 'loss'")?,
+                t_ns: field_u64(j, "t_ns")?,
+            }),
+            "round" => Ok(Record::Round {
+                rank,
+                rounds: field_u64(j, "rounds")?,
+                bytes: field_u64(j, "bytes")?,
+                compressed: field_u64(j, "compressed")?,
+            }),
+            "recovery" => Ok(Record::Recovery {
+                rank,
+                resumes: field_u64(j, "resumes")?,
+                t_ns: field_u64(j, "t_ns")?,
+            }),
+            other => Err(format!("unknown record kind '{other}'")),
+        }
+    }
+}
+
+fn field_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .map(|n| n as u64)
+        .ok_or_else(|| format!("record missing numeric '{key}'"))
+}
+
+fn field_str(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("record missing string '{key}'"))
+}
+
+/// Render records as JSONL (one compact object per line, trailing
+/// newline).
+pub fn render_jsonl(records: &[Record]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&r.to_json().to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL stream; blank lines are skipped, any malformed or
+/// version-mismatched line is an error naming its line number.
+pub fn parse_jsonl(text: &str) -> Result<Vec<Record>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        out.push(Record::from_json(&j).map_err(|e| format!("line {}: {e}", i + 1))?);
+    }
+    Ok(out)
+}
+
+/// What a passing [`check`] observed.
+#[derive(Debug, Default)]
+pub struct TraceCheck {
+    pub records: usize,
+    pub phase_events: usize,
+    pub ranks: Vec<usize>,
+    pub spans: u64,
+}
+
+/// Validate a parsed stream: at least one record, per-rank **monotone**
+/// phase timestamps, and balanced span open/close per (rank, phase) —
+/// the `zo-adam trace --check` contract ci.sh holds the traced parity
+/// smoke to.
+pub fn check(records: &[Record]) -> Result<TraceCheck, String> {
+    if records.is_empty() {
+        return Err("event stream is empty".to_string());
+    }
+    let mut ranks: Vec<usize> = records.iter().map(Record::rank).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    let mut summary = TraceCheck { records: records.len(), ranks: ranks.clone(), ..Default::default() };
+    for &rank in &ranks {
+        let mut last_t = 0u64;
+        let mut depth = [0i64; PhaseId::COUNT];
+        for r in records.iter().filter(|r| r.rank() == rank) {
+            let Record::Phase { kind, phase, t_ns, .. } = r else { continue };
+            summary.phase_events += 1;
+            if *t_ns < last_t {
+                return Err(format!(
+                    "rank {rank}: phase timestamps regress ({} then {t_ns} ns at {})",
+                    last_t,
+                    phase.name()
+                ));
+            }
+            last_t = *t_ns;
+            match kind {
+                EventKind::Begin => depth[phase.idx()] += 1,
+                EventKind::End => {
+                    depth[phase.idx()] -= 1;
+                    if depth[phase.idx()] < 0 {
+                        return Err(format!(
+                            "rank {rank}: span '{}' closed more often than opened",
+                            phase.name()
+                        ));
+                    }
+                    summary.spans += 1;
+                }
+                EventKind::Mark | EventKind::Count => {}
+            }
+        }
+        for (i, d) in depth.iter().enumerate() {
+            if *d != 0 {
+                return Err(format!(
+                    "rank {rank}: span '{}' left {d} open at stream end",
+                    PhaseId::ALL[i].name()
+                ));
+            }
+        }
+    }
+    if summary.phase_events == 0 {
+        return Err("stream carries no phase events".to_string());
+    }
+    Ok(summary)
+}
+
+/// Serialize one rank's trace-file appends: ranks of an in-process
+/// launch share the file handle path and must not interleave writes.
+/// (Separate OS processes are serialized by the kernel's `O_APPEND`
+/// atomicity for a single `write`.)
+static APPEND_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Append `records` to `path` as JSONL, creating the file if needed.
+/// One buffered chunk, one `write_all` — rank chunks never interleave
+/// within a line.
+pub fn append_to_file(path: &str, records: &[Record]) -> std::io::Result<()> {
+    let chunk = render_jsonl(records);
+    let _guard = APPEND_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(chunk.as_bytes())?;
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Record> {
+        vec![
+            Record::Meta {
+                rank: 0,
+                world: 2,
+                family: "01adam".into(),
+                d: 128,
+                steps: 3,
+                topology: "star".into(),
+            },
+            Record::Phase {
+                rank: 0,
+                kind: EventKind::Begin,
+                phase: PhaseId::Step,
+                t_ns: 10,
+                arg: 0,
+            },
+            Record::Phase {
+                rank: 0,
+                kind: EventKind::Count,
+                phase: PhaseId::TxFrame,
+                t_ns: 15,
+                arg: 512,
+            },
+            Record::Phase { rank: 0, kind: EventKind::End, phase: PhaseId::Step, t_ns: 90, arg: 0 },
+            Record::Step { rank: 0, t: 0, loss: 1.25, t_ns: 95 },
+            Record::Round { rank: 0, rounds: 3, bytes: 4096, compressed: 3 },
+            Record::Recovery { rank: 1, resumes: 2, t_ns: 100 },
+        ]
+    }
+
+    #[test]
+    fn jsonl_round_trips_every_record_kind() {
+        let records = sample();
+        let text = render_jsonl(&records);
+        assert_eq!(text.lines().count(), records.len());
+        for line in text.lines() {
+            assert!(line.contains("\"v\":1"), "every line is versioned: {line}");
+        }
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(back, records);
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let line = "{\"v\":2,\"k\":\"meta\",\"rank\":0}";
+        let err = parse_jsonl(line).unwrap_err();
+        assert!(err.contains("version 2"), "{err}");
+        let err = parse_jsonl("{\"k\":\"meta\"}").unwrap_err();
+        assert!(err.contains("'v'"), "{err}");
+    }
+
+    #[test]
+    fn malformed_lines_name_their_line_number() {
+        let good = render_jsonl(&sample()[..1]);
+        let text = format!("{good}not json\n");
+        let err = parse_jsonl(&text).unwrap_err();
+        assert!(err.starts_with("line 2"), "{err}");
+        let err = parse_jsonl("{\"v\":1,\"k\":\"wat\",\"rank\":0}").unwrap_err();
+        assert!(err.contains("unknown record kind"), "{err}");
+    }
+
+    #[test]
+    fn check_accepts_balanced_monotone_streams() {
+        let summary = check(&sample()).unwrap();
+        assert_eq!(summary.records, 7);
+        assert_eq!(summary.phase_events, 3);
+        assert_eq!(summary.ranks, vec![0, 1]);
+        assert_eq!(summary.spans, 1);
+    }
+
+    #[test]
+    fn check_rejects_bad_streams() {
+        assert!(check(&[]).unwrap_err().contains("empty"));
+        // no phase events at all
+        let only_meta = sample()[..1].to_vec();
+        assert!(check(&only_meta).unwrap_err().contains("no phase events"));
+        // unbalanced span
+        let mut unb = sample();
+        unb.remove(3); // drop the Step End
+        assert!(check(&unb).unwrap_err().contains("left 1 open"));
+        // timestamp regression within one rank
+        let mut reg = sample();
+        if let Record::Phase { t_ns, .. } = &mut reg[2] {
+            *t_ns = 5;
+        }
+        assert!(check(&reg).unwrap_err().contains("regress"));
+        // close without open
+        let bad = vec![Record::Phase {
+            rank: 0,
+            kind: EventKind::End,
+            phase: PhaseId::Step,
+            t_ns: 1,
+            arg: 0,
+        }];
+        assert!(check(&bad).unwrap_err().contains("closed more often"));
+    }
+
+    #[test]
+    fn check_groups_by_rank_so_interleaving_is_fine() {
+        // Two ranks' chunks appended in file order rank1-then-rank0:
+        // timestamps restart per rank, which must pass.
+        let records = vec![
+            Record::Phase { rank: 1, kind: EventKind::Begin, phase: PhaseId::Step, t_ns: 500, arg: 0 },
+            Record::Phase { rank: 1, kind: EventKind::End, phase: PhaseId::Step, t_ns: 900, arg: 0 },
+            Record::Phase { rank: 0, kind: EventKind::Begin, phase: PhaseId::Step, t_ns: 10, arg: 0 },
+            Record::Phase { rank: 0, kind: EventKind::End, phase: PhaseId::Step, t_ns: 20, arg: 0 },
+        ];
+        let summary = check(&records).unwrap();
+        assert_eq!(summary.spans, 2);
+    }
+
+    #[test]
+    fn append_to_file_accumulates_rank_chunks() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("zo_obs_events_{}.jsonl", std::process::id()));
+        let path_s = path.to_string_lossy().to_string();
+        let _ = std::fs::remove_file(&path);
+        let records = sample();
+        append_to_file(&path_s, &records[..3]).unwrap();
+        append_to_file(&path_s, &records[3..]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(back, records);
+        let _ = std::fs::remove_file(&path);
+    }
+}

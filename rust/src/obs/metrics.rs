@@ -1,0 +1,325 @@
+//! The metrics registry: monotonic counters plus log-bucketed latency
+//! histograms aggregated from a recorded event stream.
+//!
+//! A [`Registry`] ingests [`Recorder`] events (or parsed JSONL phase
+//! records) and keeps, per [`PhaseId`]: a duration [`Histogram`] over
+//! matched Begin/End span pairs, a mark count, and a counter sum (the
+//! `arg` field of `Count`/`Mark` events — e.g. framed bytes from the
+//! `tx_frame`/`rx_frame` hooks, which joins the recorder's view with
+//! the `VolumeLedger`'s per-round accounting). Ingestion tolerates
+//! unbalanced spans (a ring overwrite can swallow a `Begin`); they are
+//! counted, never guessed at.
+
+use super::recorder::{Event, EventKind};
+use super::PhaseId;
+use super::Recorder;
+
+/// Power-of-two bucket count: bucket b holds durations in
+/// [2^b, 2^(b+1)) nanoseconds, so 64 buckets span every u64 duration.
+const BUCKETS: usize = 64;
+
+/// A log₂-bucketed latency histogram. Fixed-size, allocation-free.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram { buckets: [0; BUCKETS], count: 0, sum_ns: 0, max_ns: 0 }
+    }
+}
+
+impl Histogram {
+    /// Record one duration (nanoseconds).
+    pub fn record(&mut self, ns: u64) {
+        let b = 63 - ns.max(1).leading_zeros() as usize;
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_ns += ns;
+        if ns > self.max_ns {
+            self.max_ns = ns;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile (`q` in [0, 1]): the upper edge of the
+    /// bucket holding the q-th sample — within 2× of the true value by
+    /// construction of the log₂ buckets.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                // upper edge, clamped to the observed max
+                return (1u64 << (b + 1).min(63)).min(self.max_ns.max(1));
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn p50_ns(&self) -> u64 {
+        self.quantile_ns(0.50)
+    }
+
+    pub fn p90_ns(&self) -> u64 {
+        self.quantile_ns(0.90)
+    }
+
+    pub fn p99_ns(&self) -> u64 {
+        self.quantile_ns(0.99)
+    }
+}
+
+/// Per-phase aggregates over one or more recorded streams.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    /// Span-duration histograms, indexed by phase discriminant.
+    spans: Vec<Histogram>,
+    /// Point-event (`Mark`) occurrences per phase.
+    marks: Vec<u64>,
+    /// Counter sums (`Count` deltas + `Mark` args) per phase.
+    sums: Vec<u64>,
+    /// Open-span begin timestamps while ingesting (spans of one phase
+    /// do not self-nest, so one slot per phase suffices).
+    open: Vec<Option<u64>>,
+    /// `End` events whose `Begin` was missing (ring overwrite, or a
+    /// stream cut mid-span). Counted, never matched across gaps.
+    pub unbalanced: u64,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            spans: vec![Histogram::default(); PhaseId::COUNT],
+            marks: vec![0; PhaseId::COUNT],
+            sums: vec![0; PhaseId::COUNT],
+            open: vec![None; PhaseId::COUNT],
+            unbalanced: 0,
+        }
+    }
+
+    /// Fold one event stream (oldest-first) into the registry. Call
+    /// once per rank stream; open-span state resets between calls so
+    /// ranks never pair across each other.
+    pub fn ingest_events(&mut self, events: &[Event]) {
+        for slot in self.open.iter_mut() {
+            *slot = None;
+        }
+        for ev in events {
+            let i = ev.phase.idx();
+            match ev.kind {
+                EventKind::Begin => {
+                    if self.open[i].replace(ev.t_ns).is_some() {
+                        self.unbalanced += 1;
+                    }
+                }
+                EventKind::End => match self.open[i].take() {
+                    Some(t0) => self.spans[i].record(ev.t_ns.saturating_sub(t0)),
+                    None => self.unbalanced += 1,
+                },
+                EventKind::Mark => {
+                    self.marks[i] += 1;
+                    self.sums[i] += ev.arg;
+                }
+                EventKind::Count => {
+                    self.sums[i] += ev.arg;
+                }
+            }
+        }
+        for slot in self.open.iter_mut() {
+            if slot.take().is_some() {
+                self.unbalanced += 1;
+            }
+        }
+    }
+
+    /// [`Registry::ingest_events`] straight from a recorder.
+    pub fn ingest(&mut self, rec: &Recorder) {
+        self.ingest_events(&rec.events());
+    }
+
+    /// The span-duration histogram of one phase.
+    pub fn span(&self, phase: PhaseId) -> &Histogram {
+        &self.spans[phase.idx()]
+    }
+
+    /// Point-event occurrences of one phase.
+    pub fn mark_count(&self, phase: PhaseId) -> u64 {
+        self.marks[phase.idx()]
+    }
+
+    /// Counter sum of one phase (e.g. total framed bytes for
+    /// [`PhaseId::TxFrame`]).
+    pub fn counter_sum(&self, phase: PhaseId) -> u64 {
+        self.sums[phase.idx()]
+    }
+
+    /// Phases with any activity, for compact reporting.
+    pub fn active_phases(&self) -> Vec<PhaseId> {
+        PhaseId::ALL
+            .iter()
+            .copied()
+            .filter(|p| {
+                let i = p.idx();
+                self.spans[i].count() > 0 || self.marks[i] > 0 || self.sums[i] > 0
+            })
+            .collect()
+    }
+
+    /// One aligned text row per active phase (the `zo-adam trace`
+    /// summary body).
+    pub fn render_table(&self) -> String {
+        let mut out = String::from(
+            "phase            spans        p50        p90        p99       mean      marks        sum\n",
+        );
+        for p in self.active_phases() {
+            let h = self.span(p);
+            out.push_str(&format!(
+                "{:<16} {:>6} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}\n",
+                p.name(),
+                h.count(),
+                fmt_ns(h.p50_ns()),
+                fmt_ns(h.p90_ns()),
+                fmt_ns(h.p99_ns()),
+                fmt_ns(h.mean_ns() as u64),
+                self.mark_count(p),
+                self.counter_sum(p),
+            ));
+        }
+        out
+    }
+}
+
+/// Compact duration rendering for the summary table.
+fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let mut h = Histogram::default();
+        for ns in [100u64, 200, 400, 800, 1600, 3200, 6400, 12800, 25600, 51200] {
+            h.record(ns);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.max_ns(), 51200);
+        // log2 buckets: the p50 upper edge must sit within 2x of the
+        // true median (800..1600) and quantiles must be monotone.
+        let p50 = h.p50_ns();
+        assert!((800..=3200).contains(&p50), "p50 = {p50}");
+        assert!(h.p90_ns() >= p50);
+        assert!(h.p99_ns() >= h.p90_ns());
+        assert!(h.p99_ns() <= 51200);
+        assert!((h.mean_ns() - 10240.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = Histogram::default();
+        assert_eq!(h.p50_ns(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn registry_pairs_spans_and_sums_counters() {
+        let mut rec = Recorder::new(64);
+        rec.push(PhaseId::Compress, EventKind::Begin, 0);
+        rec.push(PhaseId::TxFrame, EventKind::Count, 100);
+        rec.push(PhaseId::Compress, EventKind::End, 0);
+        rec.push(PhaseId::Resume, EventKind::Mark, 1);
+        rec.push(PhaseId::TxFrame, EventKind::Count, 50);
+        let mut reg = Registry::new();
+        reg.ingest(&rec);
+        assert_eq!(reg.span(PhaseId::Compress).count(), 1);
+        assert_eq!(reg.counter_sum(PhaseId::TxFrame), 150);
+        assert_eq!(reg.mark_count(PhaseId::Resume), 1);
+        assert_eq!(reg.unbalanced, 0);
+        assert_eq!(
+            reg.active_phases(),
+            vec![PhaseId::Compress, PhaseId::TxFrame, PhaseId::Resume]
+        );
+        assert!(reg.render_table().contains("compress"));
+    }
+
+    #[test]
+    fn unbalanced_spans_are_counted_not_guessed() {
+        let mut reg = Registry::new();
+        // End with no Begin (ring overwrite ate it), then a Begin that
+        // never closes (stream cut), then a double Begin.
+        reg.ingest_events(&[
+            Event { phase: PhaseId::Step, kind: EventKind::End, t_ns: 5, arg: 0 },
+            Event { phase: PhaseId::Step, kind: EventKind::Begin, t_ns: 6, arg: 0 },
+        ]);
+        assert_eq!(reg.unbalanced, 2);
+        assert_eq!(reg.span(PhaseId::Step).count(), 0);
+        reg.ingest_events(&[
+            Event { phase: PhaseId::Step, kind: EventKind::Begin, t_ns: 1, arg: 0 },
+            Event { phase: PhaseId::Step, kind: EventKind::Begin, t_ns: 2, arg: 0 },
+            Event { phase: PhaseId::Step, kind: EventKind::End, t_ns: 9, arg: 0 },
+        ]);
+        assert_eq!(reg.unbalanced, 3);
+        assert_eq!(reg.span(PhaseId::Step).count(), 1);
+        // the surviving pair is (2, 9)
+        assert_eq!(reg.span(PhaseId::Step).sum_ns(), 7);
+    }
+
+    #[test]
+    fn rank_streams_do_not_pair_across_ingests() {
+        let mut reg = Registry::new();
+        reg.ingest_events(&[Event {
+            phase: PhaseId::Step,
+            kind: EventKind::Begin,
+            t_ns: 1,
+            arg: 0,
+        }]);
+        reg.ingest_events(&[Event {
+            phase: PhaseId::Step,
+            kind: EventKind::End,
+            t_ns: 1_000_000,
+            arg: 0,
+        }]);
+        // one dangling Begin + one dangling End, zero spans
+        assert_eq!(reg.unbalanced, 2);
+        assert_eq!(reg.span(PhaseId::Step).count(), 0);
+    }
+}

@@ -1,0 +1,289 @@
+//! `obs` — the flight recorder (ISSUE 9 tentpole): zero-dependency,
+//! per-rank phase tracing, a metrics registry, and the structured
+//! run-event stream.
+//!
+//! The paper's headline claims are *wall-clock* claims (up to 87%
+//! volume reduction, 2× throughput over 1-bit Adam), yet until this
+//! module the crate could only report one `wall_s` per run. The
+//! recorder says where a round's time goes — compress vs. upload vs.
+//! server leg vs. broadcast — which is the telemetry both ROADMAP
+//! open items need (the overlapped-rounds latency-hiding ratio, and
+//! the service daemon's streamed progress events).
+//!
+//! # Architecture
+//!
+//! * [`recorder`] — a **preallocated ring-buffer** span/event recorder.
+//!   One [`Recorder`] per rank, held in a thread-local slot (one OS
+//!   process per rank under TCP, one thread per rank in-process — in
+//!   both deployments "this thread" *is* "this rank"). Call sites
+//!   record opaque [`PhaseId`] marks through the free functions below;
+//!   **all timestamping happens inside this module**. That split is
+//!   deliberate lint interplay: `comm`, `optim`, `engine` and `pool`
+//!   live under the D1 rule (no ambient `Instant::now`), and they stay
+//!   clean because the only token they gain is an `obs::` call.
+//! * [`metrics`] — monotonic counters plus log-bucketed latency
+//!   histograms (p50/p90/p99) aggregated from a recorded event stream:
+//!   per-round phase durations, framed bytes, resume and
+//!   fault-injection counts.
+//! * [`events`] — the versioned JSONL run-event stream (`--trace-out`
+//!   / `--events`): meta, phase, step, round and recovery records.
+//!   This file format is the wire schema the future service daemon
+//!   will stream to subscribers; it is *not* a transport frame (the
+//!   pinned `wire.lock` surface is untouched).
+//! * [`chrome`] — renders a recorded run as chrome://tracing Trace
+//!   Event JSON (`zo-adam trace --chrome`).
+//!
+//! # Determinism
+//!
+//! The recorder **never feeds back into arithmetic**: events carry
+//! timestamps out, nothing flows in. A traced run is bitwise identical
+//! to an untraced one (`tests/obs_trace.rs`, ci.sh's traced parity
+//! smoke). And because the ring is preallocated at [`arm`] time and
+//! every hook is a plain array store, the zero-allocation steady-state
+//! contract extends to traced runs (`tests/zero_alloc.rs` measures
+//! with the recorder armed).
+//!
+//! # Disarmed cost
+//!
+//! Every hook starts with a thread-local load and an `Option` check;
+//! a rank that never calls [`arm`] (and every pool worker thread) pays
+//! only that. `zo-adam bench` reports the armed and disarmed per-mark
+//! cost under the gated `trace/` prefix.
+
+pub mod chrome;
+pub mod events;
+pub mod metrics;
+pub mod recorder;
+
+pub use events::{parse_jsonl, render_jsonl, Record, TraceCheck, EVENTS_VERSION};
+pub use metrics::{Histogram, Registry};
+pub use recorder::{Event, EventKind, Recorder};
+
+use std::cell::RefCell;
+
+/// Default ring capacity (events) for CLI-armed recorders: generous
+/// for any smoke-sized run, bounded for long ones (overwrite-oldest).
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+thread_local! {
+    /// This thread's (= this rank's) recorder slot. `None` = disarmed:
+    /// every hook below degrades to a thread-local load + branch.
+    static REC: RefCell<Option<Recorder>> = const { RefCell::new(None) };
+}
+
+/// Arm this thread's recorder with a fresh `capacity`-event ring. The
+/// one allocation the recorder ever performs happens here — arm before
+/// the steady state you intend to measure. Re-arming replaces any
+/// previous recorder.
+pub fn arm(capacity: usize) {
+    let _ = REC.try_with(|r| *r.borrow_mut() = Some(Recorder::new(capacity)));
+}
+
+/// Is a recorder armed on this thread?
+pub fn is_armed() -> bool {
+    REC.try_with(|r| r.borrow().is_some()).unwrap_or(false)
+}
+
+/// Take this thread's recorder (disarming it) for export/aggregation.
+pub fn disarm() -> Option<Recorder> {
+    REC.try_with(|r| r.borrow_mut().take()).ok().flatten()
+}
+
+/// Run `f` against the armed recorder, if any (read-only inspection
+/// without disarming — tests and in-run aggregation).
+pub fn with<R>(f: impl FnOnce(&Recorder) -> R) -> Option<R> {
+    REC.try_with(|r| r.borrow().as_ref().map(f)).ok().flatten()
+}
+
+/// Nanoseconds since this thread's recorder was armed (`None` when
+/// disarmed). Run-event records stamp themselves through this so a
+/// rank's whole stream shares the recorder's time base — and so the
+/// modules emitting them stay clock-free.
+pub fn now_ns() -> Option<u64> {
+    with(|rec| rec.now_ns())
+}
+
+#[inline]
+fn record(phase: PhaseId, kind: EventKind, arg: u64) {
+    let _ = REC.try_with(|r| {
+        if let Some(rec) = r.borrow_mut().as_mut() {
+            rec.push(phase, kind, arg);
+        }
+    });
+}
+
+/// Record an instantaneous point event.
+#[inline]
+pub fn mark(phase: PhaseId) {
+    record(phase, EventKind::Mark, 0);
+}
+
+/// Record a point event carrying an argument (e.g. a retry attempt).
+#[inline]
+pub fn mark_n(phase: PhaseId, arg: u64) {
+    record(phase, EventKind::Mark, arg);
+}
+
+/// Record a monotonic-counter increment of `arg` (e.g. framed bytes).
+#[inline]
+pub fn count(phase: PhaseId, arg: u64) {
+    record(phase, EventKind::Count, arg);
+}
+
+/// Open a span of `phase` (close it with [`end`]). Spans of different
+/// phases may nest; a phase does not nest with itself.
+#[inline]
+pub fn begin(phase: PhaseId) {
+    record(phase, EventKind::Begin, 0);
+}
+
+/// Close the open span of `phase`.
+#[inline]
+pub fn end(phase: PhaseId) {
+    record(phase, EventKind::End, 0);
+}
+
+/// The instrumented phases. Call sites record these opaque ids; what
+/// they mean — and when they are stamped — is entirely this module's
+/// business. Discriminants are stable (they index registry tables and
+/// appear in exported traces by *name*, never by number).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum PhaseId {
+    /// EF worker leg: lane compression (`compress_lanes`).
+    Compress = 0,
+    /// EF server leg (root star, tree leader legs, root combine).
+    ServerLeg = 1,
+    /// Worker-side encode + send of one upload frame.
+    Upload = 2,
+    /// Root/leader-side encode + send of the broadcast — and, on a
+    /// worker, the wait for it (the round's in-flight time).
+    Broadcast = 3,
+    /// The uncompressed fp16 AllReduce round.
+    FpRound = 4,
+    /// One frame written to a transport backend (arg = framed bytes).
+    TxFrame = 5,
+    /// One frame read from a transport backend (arg = framed bytes).
+    RxFrame = 6,
+    /// One successful reconnect-with-resume handshake.
+    Resume = 7,
+    /// One connect-backoff retry sleep.
+    Backoff = 8,
+    /// One injected fault (chaos plans; arg = `FaultKind` ordinal).
+    FaultInject = 9,
+    /// One engine parallel region (publish–work–barrier cycle).
+    Region = 10,
+    /// Pool tasks published for a region (arg = block count).
+    RegionPublish = 11,
+    /// Pool region barrier completed.
+    RegionBarrier = 12,
+    /// One optimizer/training step.
+    Step = 13,
+    /// One control-plane barrier collective.
+    Barrier = 14,
+}
+
+impl PhaseId {
+    /// Number of phases (registry tables are indexed by discriminant).
+    pub const COUNT: usize = 15;
+
+    pub const ALL: [PhaseId; PhaseId::COUNT] = [
+        PhaseId::Compress,
+        PhaseId::ServerLeg,
+        PhaseId::Upload,
+        PhaseId::Broadcast,
+        PhaseId::FpRound,
+        PhaseId::TxFrame,
+        PhaseId::RxFrame,
+        PhaseId::Resume,
+        PhaseId::Backoff,
+        PhaseId::FaultInject,
+        PhaseId::Region,
+        PhaseId::RegionPublish,
+        PhaseId::RegionBarrier,
+        PhaseId::Step,
+        PhaseId::Barrier,
+    ];
+
+    /// Stable export name (JSONL `ph` field, chrome span names).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PhaseId::Compress => "compress",
+            PhaseId::ServerLeg => "server_leg",
+            PhaseId::Upload => "upload",
+            PhaseId::Broadcast => "broadcast",
+            PhaseId::FpRound => "fp_round",
+            PhaseId::TxFrame => "tx_frame",
+            PhaseId::RxFrame => "rx_frame",
+            PhaseId::Resume => "resume",
+            PhaseId::Backoff => "backoff",
+            PhaseId::FaultInject => "fault_inject",
+            PhaseId::Region => "region",
+            PhaseId::RegionPublish => "region_publish",
+            PhaseId::RegionBarrier => "region_barrier",
+            PhaseId::Step => "step",
+            PhaseId::Barrier => "barrier",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PhaseId> {
+        PhaseId::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    /// Registry table index.
+    #[inline]
+    pub(crate) fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_names_round_trip_and_ids_are_dense() {
+        for (i, p) in PhaseId::ALL.iter().enumerate() {
+            assert_eq!(p.idx(), i, "dense discriminants");
+            assert_eq!(PhaseId::parse(p.name()), Some(*p));
+        }
+        assert_eq!(PhaseId::ALL.len(), PhaseId::COUNT);
+        assert_eq!(PhaseId::parse("nope"), None);
+    }
+
+    #[test]
+    fn thread_local_arm_disarm_cycle() {
+        // Hooks on a disarmed thread are no-ops.
+        assert!(!is_armed());
+        mark(PhaseId::Step);
+        assert!(disarm().is_none());
+        arm(64);
+        assert!(is_armed());
+        begin(PhaseId::Step);
+        count(PhaseId::TxFrame, 100);
+        end(PhaseId::Step);
+        let rec = disarm().expect("armed above");
+        assert!(!is_armed());
+        let evs = rec.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].kind, EventKind::Begin);
+        assert_eq!(evs[1].arg, 100);
+        assert_eq!(evs[2].phase, PhaseId::Step);
+    }
+
+    #[test]
+    fn recorders_are_per_thread() {
+        arm(16);
+        mark(PhaseId::Step);
+        let handle = std::thread::spawn(|| {
+            // A fresh thread starts disarmed regardless of the parent.
+            assert!(!is_armed());
+            arm(16);
+            mark(PhaseId::Barrier);
+            disarm().map(|r| r.events().len())
+        });
+        assert_eq!(handle.join().unwrap(), Some(1));
+        let rec = disarm().unwrap();
+        assert_eq!(rec.events()[0].phase, PhaseId::Step);
+    }
+}

@@ -1,0 +1,192 @@
+//! The preallocated ring-buffer span/event recorder.
+//!
+//! A [`Recorder`] owns one fixed-capacity event ring, allocated in
+//! full at construction. Steady state performs **no allocation**: a
+//! push is a bounds-free array store plus index arithmetic, and once
+//! the ring is full the oldest event is overwritten (a flight
+//! recorder keeps the most recent window, and `dropped` counts what
+//! fell out). Timestamps are nanoseconds since the recorder was
+//! armed, stamped here — and only here — via a monotonic clock
+//! ([`std::time::Instant`]); the instrumented modules themselves stay
+//! clock-free (DESIGN.md §Observability, lint rule D1).
+
+use super::PhaseId;
+use std::time::Instant;
+
+/// What one event records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Span open.
+    Begin,
+    /// Span close.
+    End,
+    /// Instantaneous point event (arg = optional detail).
+    Mark,
+    /// Monotonic-counter increment (arg = delta, e.g. framed bytes).
+    Count,
+}
+
+impl EventKind {
+    /// Stable single-letter export code (JSONL `k` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            EventKind::Begin => "b",
+            EventKind::End => "e",
+            EventKind::Mark => "m",
+            EventKind::Count => "c",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EventKind> {
+        match s {
+            "b" => Some(EventKind::Begin),
+            "e" => Some(EventKind::End),
+            "m" => Some(EventKind::Mark),
+            "c" => Some(EventKind::Count),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded event. `Copy` and fixed-size: the ring is a flat
+/// array of these.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub phase: PhaseId,
+    pub kind: EventKind,
+    /// Nanoseconds since this recorder was armed (monotonic).
+    pub t_ns: u64,
+    /// Kind-specific argument (bytes for `Count`, detail for `Mark`,
+    /// 0 for spans).
+    pub arg: u64,
+}
+
+const ZERO_EVENT: Event =
+    Event { phase: PhaseId::Compress, kind: EventKind::Mark, t_ns: 0, arg: 0 };
+
+/// A per-rank flight recorder: fixed-capacity, overwrite-oldest.
+#[derive(Debug)]
+pub struct Recorder {
+    t0: Instant,
+    /// The ring storage, fully materialized at construction.
+    buf: Vec<Event>,
+    /// Index of the oldest retained event.
+    head: usize,
+    /// Retained events (≤ capacity).
+    len: usize,
+    /// Events overwritten after the ring filled.
+    dropped: u64,
+}
+
+impl Recorder {
+    /// Build a recorder with room for `capacity` events. This is the
+    /// recorder's only allocation; a zero capacity is clamped to 1.
+    pub fn new(capacity: usize) -> Recorder {
+        let capacity = capacity.max(1);
+        Recorder { t0: Instant::now(), buf: vec![ZERO_EVENT; capacity], head: 0, len: 0, dropped: 0 }
+    }
+
+    /// Record one event, stamped now. Allocation-free; overwrites the
+    /// oldest event once the ring is full.
+    #[inline]
+    pub fn push(&mut self, phase: PhaseId, kind: EventKind, arg: u64) {
+        let t_ns = self.t0.elapsed().as_nanos() as u64;
+        let cap = self.buf.len();
+        let ev = Event { phase, kind, t_ns, arg };
+        if self.len < cap {
+            self.buf[(self.head + self.len) % cap] = ev;
+            self.len += 1;
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Nanoseconds since this recorder was armed — the same clock its
+    /// events are stamped with (run-event records reuse it so one
+    /// rank's stream shares a single time base).
+    pub fn now_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    /// Retained events, oldest first. Export-time only (allocates).
+    pub fn events(&self) -> Vec<Event> {
+        let cap = self.buf.len();
+        (0..self.len).map(|i| self.buf[(self.head + i) % cap]).collect()
+    }
+
+    /// Retained event count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Ring capacity (events).
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Events lost to overwrite-oldest since arming.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_retains_in_order() {
+        let mut r = Recorder::new(8);
+        assert!(r.is_empty());
+        r.push(PhaseId::Compress, EventKind::Begin, 0);
+        r.push(PhaseId::Compress, EventKind::End, 0);
+        r.push(PhaseId::TxFrame, EventKind::Count, 42);
+        let evs = r.events();
+        assert_eq!(r.len(), 3);
+        assert_eq!(evs[0].kind, EventKind::Begin);
+        assert_eq!(evs[2].arg, 42);
+        // monotone timestamps within one recorder
+        assert!(evs.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_the_newest_window() {
+        let mut r = Recorder::new(4);
+        for i in 0..10u64 {
+            r.push(PhaseId::Step, EventKind::Mark, i);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.capacity(), 4);
+        assert_eq!(r.dropped(), 6);
+        let args: Vec<u64> = r.events().iter().map(|e| e.arg).collect();
+        assert_eq!(args, vec![6, 7, 8, 9], "oldest-first, newest window retained");
+        // keep pushing: window slides, never grows
+        r.push(PhaseId::Step, EventKind::Mark, 10);
+        assert_eq!(r.events().last().unwrap().arg, 10);
+        assert_eq!(r.len(), 4);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let mut r = Recorder::new(0);
+        assert_eq!(r.capacity(), 1);
+        r.push(PhaseId::Step, EventKind::Mark, 1);
+        r.push(PhaseId::Step, EventKind::Mark, 2);
+        assert_eq!(r.events()[0].arg, 2);
+    }
+
+    #[test]
+    fn event_kind_codes_round_trip() {
+        for k in [EventKind::Begin, EventKind::End, EventKind::Mark, EventKind::Count] {
+            assert_eq!(EventKind::parse(k.code()), Some(k));
+        }
+        assert_eq!(EventKind::parse("x"), None);
+    }
+}

@@ -11,6 +11,12 @@
 //! counted too). The old "pool threads necessarily allocate spawn
 //! bookkeeping" exemption is gone.
 //!
+//! Since ISSUE 9 the measurement runs with this thread's flight
+//! recorder **armed**: the obs ring is preallocated at `arm` time and
+//! every hook is an array store, so the invariant extends verbatim to
+//! traced runs (the ring is sized to wrap mid-window, proving
+//! overwrite-oldest allocates nothing either).
+//!
 //! This file holds a single test so no concurrent test can perturb the
 //! global counter mid-measurement.
 
@@ -121,6 +127,12 @@ fn steady_state_steps_allocate_nothing() {
         ("threaded8", Engine::new(ExecMode::Threaded(8))),
     ];
 
+    // Arm this thread's flight recorder (its single ring allocation
+    // happens now, outside every measured window). 1024 events is far
+    // fewer than the windows record, so the ring provably wraps inside
+    // the measurement — overwrite-oldest must not allocate either.
+    zo_adam::obs::arm(1024);
+
     for (ename, eng) in &engines {
         let mut opts = build_suite(d, n);
         for (name, opt) in opts.iter_mut() {
@@ -137,9 +149,15 @@ fn steady_state_steps_allocate_nothing() {
             assert_eq!(
                 after - before,
                 0,
-                "{ename}/{name}: {} allocation(s) in 20 steady-state steps",
+                "{ename}/{name}: {} allocation(s) in 20 steady-state steps (recorder armed)",
                 after - before
             );
         }
     }
+
+    // The windows above really were traced: the hooks fired, filled the
+    // ring and wrapped it — all without a counted allocation.
+    let rec = zo_adam::obs::disarm().expect("recorder still armed after measurement");
+    assert_eq!(rec.len(), rec.capacity(), "ring filled during the measured windows");
+    assert!(rec.dropped() > 0, "ring wrapped during the measured windows");
 }
