@@ -104,6 +104,37 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
         --ranks 5 --family 01adam --d 3000 --steps 20 \
         --recv-deadline 10 --resume-window 5 --cell-budget 120 --check-parity
 
+    # Checkpoint/resume smoke (ISSUE 10): the snapshot contract under
+    # the ugliest realistic sequence — a 4-rank TCP run cutting
+    # hash-verified checkpoints every 5 steps has worker rank 2
+    # abort() mid-run (after the step-10 save, before the next one).
+    # That launch MUST fail. A second launch then --resume's every
+    # rank from the step-10 manifest in fresh processes and must
+    # finish with results bit-for-bit identical to an uninterrupted
+    # in-process run: --check-parity compares final params, the FULL
+    # per-step loss trace (restored prefix + resumed tail), eval and
+    # ledger round counts. The resumed run is also traced and the
+    # stream `trace --check`ed — resume and tracing compose.
+    step "zo-adam launch checkpoint smoke (save -> kill -> resume -> bitwise parity)"
+    CKPT_DIR="$(mktemp -d -t zo_adam_ckpt.XXXXXX)"
+    CKPT_TRACE="$(mktemp -t zo_adam_ckpt_trace.XXXXXX)"
+    rm -rf "$CKPT_DIR" "$CKPT_TRACE"
+    if cargo run --release --bin zo-adam -- launch \
+        --ranks 4 --transport tcp --family 01adam --d 3000 --steps 20 \
+        --checkpoint-dir "$CKPT_DIR" --checkpoint-every 5 \
+        --kill-rank 2 --kill-at-step 12 --quiet >/dev/null 2>&1; then
+        echo "killed run unexpectedly succeeded"
+        exit 1
+    fi
+    test -f "$CKPT_DIR/manifest.json" || { echo "no manifest written before the kill"; exit 1; }
+    cargo run --release --bin zo-adam -- launch \
+        --ranks 4 --transport tcp --family 01adam --d 3000 --steps 20 \
+        --resume "$CKPT_DIR" --check-parity --quiet \
+        --trace-out "$CKPT_TRACE" \
+        | grep '^\[launch\]'
+    cargo run --release --bin zo-adam -- trace --check --in "$CKPT_TRACE"
+    rm -rf "$CKPT_DIR" "$CKPT_TRACE"
+
     # Perf-regression gate: quick-window hot-path suite (codec /
     # allreduce / EF server-leg sweep-vs-table / tree-vs-star transport
     # rounds / chaos recovery RTTs / optimizer-step / materialized 0/1
@@ -121,7 +152,7 @@ if [ "${SKIP_SMOKE:-0}" != "1" ]; then
     # bump PR_INDEX when a new PR starts). `zo-adam bench` prints the
     # cross-snapshot p50/steps-per-s trend at the end of every run, so
     # drift that stays under the 30% gate is still visible across PRs.
-    PR_INDEX="${PR_INDEX:-9}"
+    PR_INDEX="${PR_INDEX:-10}"
     step "zo-adam bench (perf gate vs BENCH_PR2.json, history BENCH_PR${PR_INDEX}.json)"
     ZO_BENCH_QUICK=1 cargo run --release --bin zo-adam -- bench --quick \
         --json BENCH_PR2.json --baseline BENCH_PR2.json --tolerance 0.30 \

@@ -24,12 +24,16 @@ pub use rules::{check_lock, extract_wire_surface, lint_source, WireSurface};
 use std::fs;
 use std::path::{Path, PathBuf};
 
-/// The files whose constants make up the W1 wire surface.
+/// The files whose constants make up the W1 wire surface. The
+/// checkpoint module rides along (ISSUE 10): shard magic/version and
+/// the manifest schema are compatibility surfaces exactly like the
+/// frame header — a resumable run is a wire across time.
 pub const WIRE_FILES: &[&str] = &[
     "rust/src/comm/transport/frame.rs",
     "rust/src/comm/compress.rs",
     "rust/src/comm/allreduce.rs",
     "rust/src/comm/transport/tcp.rs",
+    "rust/src/runtime/checkpoint.rs",
 ];
 
 /// Walk up from `start` to the repo root — the first ancestor that
@@ -164,6 +168,9 @@ mod tests {
         assert_eq!(s.magic, crate::comm::transport::frame::MAGIC as u64);
         assert_eq!(s.version, crate::comm::transport::frame::VERSION as u64);
         assert_eq!(s.codec_chunk, crate::comm::compress::CODEC_CHUNK as u64);
+        assert_eq!(s.ckpt_magic, crate::runtime::checkpoint::CKPT_MAGIC as u64);
+        assert_eq!(s.ckpt_version, crate::runtime::checkpoint::CKPT_VERSION as u64);
+        assert_eq!(s.manifest_schema, crate::runtime::checkpoint::MANIFEST_SCHEMA as u64);
         assert_eq!(s.kinds.len(), 10);
         assert_eq!(s.kinds.first().map(|(k, v)| (k.as_str(), *v)), Some(("Hello", 1)));
         assert_eq!(s.kinds.last().map(|(k, v)| (k.as_str(), *v)), Some(("Resume", 10)));

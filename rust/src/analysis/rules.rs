@@ -406,10 +406,12 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
 // W1: the pinned wire surface
 // ---------------------------------------------------------------------------
 
-/// Everything two builds must agree on to talk to each other:
-/// header magic + version, the codec and server chunk sizes that fix
-/// the deterministic addition order, the resume ring depth, and every
-/// `FrameKind` discriminant.
+/// Everything two builds must agree on to talk to each other — or to
+/// read each other's checkpoints: header magic + version, the codec
+/// and server chunk sizes that fix the deterministic addition order,
+/// the resume ring depth, the checkpoint shard magic + version and
+/// manifest schema (ISSUE 10 — a resumable run is a wire across
+/// time), and every `FrameKind` discriminant.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WireSurface {
     pub magic: u64,
@@ -417,6 +419,9 @@ pub struct WireSurface {
     pub codec_chunk: u64,
     pub server_chunk: u64,
     pub retained_frames: u64,
+    pub ckpt_magic: u64,
+    pub ckpt_version: u64,
+    pub manifest_schema: u64,
     /// `FrameKind` variants in declaration order.
     pub kinds: Vec<(String, u64)>,
 }
@@ -525,6 +530,9 @@ pub fn extract_wire_surface(files: &[(String, String)]) -> Result<WireSurface, S
         codec_chunk: get("CODEC_CHUNK")?,
         server_chunk: get("SERVER_CHUNK")?,
         retained_frames: get("RETAINED_FRAMES")?,
+        ckpt_magic: get("CKPT_MAGIC")?,
+        ckpt_version: get("CKPT_VERSION")?,
+        manifest_schema: get("MANIFEST_SCHEMA")?,
         kinds,
     })
 }
@@ -538,6 +546,9 @@ impl WireSurface {
             ("CODEC_CHUNK".to_string(), self.codec_chunk.to_string()),
             ("SERVER_CHUNK".to_string(), self.server_chunk.to_string()),
             ("RETAINED_FRAMES".to_string(), self.retained_frames.to_string()),
+            ("CKPT_MAGIC".to_string(), format!("0x{:08X}", self.ckpt_magic)),
+            ("CKPT_VERSION".to_string(), self.ckpt_version.to_string()),
+            ("MANIFEST_SCHEMA".to_string(), self.manifest_schema.to_string()),
         ];
         for (k, v) in &self.kinds {
             p.push((format!("FrameKind::{k}"), v.to_string()));
@@ -701,11 +712,13 @@ mod tests {
         let compress = "pub const CODEC_CHUNK: usize = 4096;\n";
         let allreduce = "pub const SERVER_CHUNK: usize = compress::CODEC_CHUNK;\n";
         let tcp = "pub const RETAINED_FRAMES: usize = 4;\n";
+        let ckpt = "pub const CKPT_MAGIC: u32 = 0x5A43_4B31;\npub const CKPT_VERSION: u16 = 1;\npub const MANIFEST_SCHEMA: u32 = 1;\n";
         vec![
             ("frame.rs".to_string(), frame.to_string()),
             ("compress.rs".to_string(), compress.to_string()),
             ("allreduce.rs".to_string(), allreduce.to_string()),
             ("tcp.rs".to_string(), tcp.to_string()),
+            ("checkpoint.rs".to_string(), ckpt.to_string()),
         ]
     }
 
@@ -714,9 +727,12 @@ mod tests {
         let s = extract_wire_surface(&mini_wire_files()).expect("extracts");
         assert_eq!(s.magic, 0x5A41_3031);
         assert_eq!(s.server_chunk, 4096);
+        assert_eq!(s.ckpt_magic, 0x5A43_4B31);
+        assert_eq!(s.manifest_schema, 1);
         assert_eq!(s.kinds, vec![("Hello".to_string(), 1), ("Resume".to_string(), 10)]);
         let lock = s.render();
         assert!(lock.contains("MAGIC = 0x5A413031"));
+        assert!(lock.contains("CKPT_MAGIC = 0x5A434B31"));
         assert!(lock.contains("FrameKind::Resume = 10"));
         // A freshly rendered lock always verifies.
         assert!(check_lock(&s, &lock).is_empty());

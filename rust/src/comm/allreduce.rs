@@ -52,6 +52,7 @@ use super::topology::{Topology, TreeShape};
 use super::transport::{FrameKind, RankLink, TransportError, HEADER_BYTES};
 use crate::coordinator::engine::{Blocks, Engine};
 use crate::obs::{self, PhaseId};
+use crate::runtime::checkpoint::{CheckpointError, StateReader, StateWriter};
 
 /// Fixed coordinate-chunk size for the EF server leg *and* the chunked
 /// worker lanes — the codec's [`compress::CODEC_CHUNK`] (a multiple of
@@ -632,6 +633,36 @@ impl TreeState {
         }
     }
 
+    /// Overwrite the per-group leader errors with a restored snapshot
+    /// (ISSUE 10). The snapshot must match this state's group structure
+    /// exactly — the topology is fingerprint- and manifest-checked
+    /// before any load, so a disagreement here is a typed error, never
+    /// a partial restore.
+    fn restore_err(&mut self, errs: Vec<Vec<f32>>) -> Result<(), CheckpointError> {
+        if errs.len() != self.leader_err.len() {
+            return Err(CheckpointError::StateMismatch {
+                detail: format!(
+                    "tree EF snapshot holds {} leader errors, this topology has {}",
+                    errs.len(),
+                    self.leader_err.len()
+                ),
+            });
+        }
+        for (gi, (dst, src)) in self.leader_err.iter_mut().zip(errs).enumerate() {
+            if dst.len() != src.len() {
+                return Err(CheckpointError::StateMismatch {
+                    detail: format!(
+                        "tree EF snapshot group {gi}: error length {} ≠ expected {}",
+                        src.len(),
+                        dst.len()
+                    ),
+                });
+            }
+            *dst = src;
+        }
+        Ok(())
+    }
+
     /// One transport rank's slice of the state, per its role.
     fn rank(rank: usize, shape: TreeShape, d: usize) -> TreeState {
         let leads_group = shape.is_leader(rank) && shape.group_size(shape.group_of(rank)) > 1;
@@ -696,6 +727,12 @@ pub struct EfAllReduce {
     /// Tree-topology state, built on the first tree-scheduled round
     /// (star reductions never touch it).
     tree: Option<TreeState>,
+    /// Leader errors restored from a checkpoint before the tree state
+    /// exists (ISSUE 10): the tree's shape is a schedule input the
+    /// reducer only learns at its first tree round, so a resumed δ̄_i
+    /// set parks here and `ensure_tree_*` applies it right after
+    /// construction. `None` in steady state.
+    pending_tree_err: Option<Vec<Vec<f32>>>,
 }
 
 impl EfAllReduce {
@@ -727,6 +764,7 @@ impl EfAllReduce {
             pattern: vec![0u16; if eager_table { d } else { 0 }],
             server_path: None,
             tree: None,
+            pending_tree_err: None,
         }
     }
 
@@ -737,7 +775,15 @@ impl EfAllReduce {
                 t.shape, shape,
                 "tree topology changed across rounds (EF state is schedule-dependent)"
             ),
-            None => self.tree = Some(TreeState::inproc(shape, self.d)),
+            None => {
+                let mut t = TreeState::inproc(shape, self.d);
+                if let Some(errs) = self.pending_tree_err.take() {
+                    t.restore_err(errs).expect(
+                        "restored tree EF state matches the topology (manifest-checked at load)",
+                    );
+                }
+                self.tree = Some(t);
+            }
         }
     }
 
@@ -748,7 +794,15 @@ impl EfAllReduce {
                 t.shape, shape,
                 "tree topology changed across rounds (EF state is schedule-dependent)"
             ),
-            None => self.tree = Some(TreeState::rank(rank, shape, self.d)),
+            None => {
+                let mut t = TreeState::rank(rank, shape, self.d);
+                if let Some(errs) = self.pending_tree_err.take() {
+                    t.restore_err(errs).expect(
+                        "restored tree EF state matches the topology (manifest-checked at load)",
+                    );
+                }
+                self.tree = Some(t);
+            }
         }
     }
 
@@ -1366,6 +1420,83 @@ impl EfAllReduce {
                 e.iter_mut().for_each(|v| *v = 0.0);
             }
         }
+    }
+
+    /// Snapshot the persistent EF error memory (ISSUE 10): the per-lane
+    /// δᵢ, the server δ̄ (present only on reducers that have run — or
+    /// will run — a server leg), and the tree's per-leader δ̄_i when a
+    /// tree round has materialized them. Sum/packed/table/pattern are
+    /// scratch refilled every round and are deliberately absent.
+    pub fn save_state(&self, w: &mut StateWriter) {
+        w.put_str("ef");
+        w.put_u64(self.n as u64);
+        w.put_u64(self.d as u64);
+        for lane in &self.lanes {
+            w.put_f32s(&lane.err);
+        }
+        w.put_f32s(&self.server_err);
+        match &self.tree {
+            None => w.put_bool(false),
+            Some(t) => {
+                w.put_bool(true);
+                w.put_u64(t.leader_err.len() as u64);
+                for e in &t.leader_err {
+                    w.put_f32s(e);
+                }
+            }
+        }
+    }
+
+    /// Restore error memory saved by [`EfAllReduce::save_state`] into a
+    /// freshly constructed reducer of the same (n, d). The server δ̄ is
+    /// forced into existence *before* the copy (`ensure_server` zeroes
+    /// it, which must never happen after a restore); tree leader errors
+    /// park in `pending_tree_err` until the first tree round rebuilds
+    /// the shape-dependent [`TreeState`]. Every structural disagreement
+    /// is a typed [`CheckpointError`], never a partial restore.
+    pub fn load_state(&mut self, r: &mut StateReader<'_>) -> Result<(), CheckpointError> {
+        r.expect_tag("ef")?;
+        let n = r.take_u64()? as usize;
+        let d = r.take_u64()? as usize;
+        if n != self.n || d != self.d {
+            return Err(CheckpointError::StateMismatch {
+                detail: format!(
+                    "EF reducer shape mismatch: snapshot is {n} lanes × d={d}, \
+                     this reducer is {} lanes × d={}",
+                    self.n, self.d
+                ),
+            });
+        }
+        for lane in &mut self.lanes {
+            r.take_f32s_exact(&mut lane.err)?;
+        }
+        let server = r.take_f32s()?;
+        if !server.is_empty() {
+            if server.len() != self.d {
+                return Err(CheckpointError::StateMismatch {
+                    detail: format!(
+                        "EF server error length {} ≠ d={} in snapshot",
+                        server.len(),
+                        self.d
+                    ),
+                });
+            }
+            self.ensure_server();
+            self.server_err.copy_from_slice(&server);
+        }
+        self.pending_tree_err = None;
+        if r.take_bool()? {
+            let groups = r.take_u64()? as usize;
+            let mut errs = Vec::with_capacity(groups);
+            for _ in 0..groups {
+                errs.push(r.take_f32s()?);
+            }
+            match &mut self.tree {
+                Some(t) => t.restore_err(errs)?,
+                None => self.pending_tree_err = Some(errs),
+            }
+        }
+        Ok(())
     }
 
     /// L2 norm of all error state — used by tests and the theory checks

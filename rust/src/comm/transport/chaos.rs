@@ -11,10 +11,13 @@
 //! * **Byte level** — a plan installed directly into [`tcp::Tcp`] via
 //!   `set_fault_plan` perturbs real socket traffic: header corruption
 //!   ([`FaultKind::CorruptHeader`] → the receiver decodes a typed
-//!   `BadMagic`), mid-frame truncation ([`FaultKind::TruncateFrame`] —
-//!   half a header, then the connection dies), and connection drops at
-//!   frame boundaries ([`FaultKind::DropConn`]). Drops and truncations
-//!   exercise the reconnect-with-resume path; corruption is fail-fast.
+//!   `BadMagic`), payload corruption ([`FaultKind::CorruptPayload`] →
+//!   the receiver's recomputed digest disagrees with the stamped one,
+//!   a typed `PayloadCorrupt`), mid-frame truncation
+//!   ([`FaultKind::TruncateFrame`] — half a header, then the
+//!   connection dies), and connection drops at frame boundaries
+//!   ([`FaultKind::DropConn`]). Drops and truncations exercise the
+//!   reconnect-with-resume path; corruption is fail-fast.
 //! * **Typed level** — the generic [`Chaos`] wrapper works over *any*
 //!   [`Transport`] (notably `InProc`, which has no byte surface below
 //!   the typed API). Byte-level kinds degrade to their nearest typed
@@ -49,6 +52,12 @@ pub enum FaultKind {
     /// byte → receiver gets `BadMagic`; typed wrapper: mis-stamp the
     /// seq → receiver gets `SeqMismatch`).
     CorruptHeader,
+    /// Corrupt the frame *past* the header (TCP backend: flip a
+    /// payload byte, so the receiver's recomputed FNV disagrees with
+    /// the stamped digest → typed `PayloadCorrupt`; typed wrapper: no
+    /// byte surface exists, so it degrades to the header mis-stamp
+    /// like [`FaultKind::CorruptHeader`]).
+    CorruptPayload,
     /// Write a partial header, then sever the connection (TCP): the
     /// receiver sees `Truncated` at stream end and both sides run the
     /// resume protocol. Typed wrapper: degrades to `DropFrame`.
@@ -214,10 +223,12 @@ impl<T: Transport> Transport for Chaos<T> {
                 self.inner.send(to, header, payload)?;
                 self.inner.send(to, header, payload)
             }
-            Some(FaultKind::CorruptHeader) => {
+            Some(FaultKind::CorruptHeader | FaultKind::CorruptPayload) => {
                 // No byte surface above the codec: corrupt the
                 // schedule stamp instead, so the receiver's header
-                // validation rejects it (typed, fail-fast).
+                // validation rejects it (typed, fail-fast). Payload
+                // corruption degrades the same way here — a digest
+                // mismatch can only be manufactured below the codec.
                 header.seq = header.seq.wrapping_add(0x00C0_FFEE);
                 self.inner.send(to, header, payload)
             }
@@ -263,8 +274,11 @@ pub enum Scenario {
     /// Connection dies mid-header: the receiver's partial read is
     /// discarded and the resume protocol retransmits the frame.
     Truncate,
-    /// A corrupted frame header: typed `BadMagic` (TCP) /
-    /// `SeqMismatch` (typed wrapper), fail-fast on every rank.
+    /// A corrupted frame payload: the receiver's recomputed FNV
+    /// disagrees with the stamped digest — typed `PayloadCorrupt`
+    /// (TCP) / `SeqMismatch` (typed wrapper), fail-fast on every
+    /// rank. Upgraded from header-only corruption when the frame
+    /// protocol grew payload checksums (ISSUE 10).
     Corrupt,
     /// A replayed frame: typed `SeqMismatch`/`KindMismatch`,
     /// fail-fast.
@@ -337,7 +351,7 @@ impl Scenario {
                 FaultPlan::new(seed).with(FaultRule::new(FaultKind::TruncateFrame).at_frame(5))
             }
             Scenario::Corrupt => {
-                FaultPlan::new(seed).with(FaultRule::new(FaultKind::CorruptHeader).at_frame(6))
+                FaultPlan::new(seed).with(FaultRule::new(FaultKind::CorruptPayload).at_frame(6))
             }
             Scenario::Duplicate => {
                 FaultPlan::new(seed).with(FaultRule::new(FaultKind::Duplicate).at_frame(3))

@@ -57,6 +57,7 @@ use super::frame::{decode_header, FrameHeader, FrameKind, TransportError, HEADER
 use super::Transport;
 use crate::comm::compress::CODEC_CHUNK;
 use crate::comm::topology::{Topology, TreeShape};
+use crate::util::hash::fnv1a;
 
 /// Default bootstrap window: how long root waits for all workers to
 /// connect / a worker keeps re-dialing a not-yet-listening root
@@ -169,6 +170,7 @@ fn write_frame(
     payload: &[u8],
 ) -> Result<(), TransportError> {
     header.payload_len = payload.len() as u64;
+    header.payload_digest = fnv1a(payload);
     stream.write_all(&header.encode())?;
     stream.write_all(payload)?;
     stream.flush()?;
@@ -194,6 +196,9 @@ fn read_frame(
             return Err(TransportError::Truncated { needed: len, got });
         }
     }
+    // Corruption past the header is detectable too (ISSUE 10): the
+    // payload must hash back to the digest the sender stamped.
+    header.verify_payload(payload)?;
     Ok(header)
 }
 
@@ -948,14 +953,16 @@ impl Transport for Tcp {
     fn send(&mut self, to: usize, header: FrameHeader, payload: &[u8])
         -> Result<(), TransportError> {
         let idx = self.sent[to] + 1;
-        let mut corrupt = false;
+        let mut corrupt_header = false;
+        let mut corrupt_payload = false;
         let mut copies = 1usize;
         if let Some(kind) = self.fault.as_ref().and_then(|p| p.fault_for(to, idx)) {
             crate::obs::mark(crate::obs::PhaseId::FaultInject);
             match kind {
                 FaultKind::Delay { ms } => std::thread::sleep(Duration::from_millis(ms)),
                 FaultKind::Duplicate => copies = 2,
-                FaultKind::CorruptHeader => corrupt = true,
+                FaultKind::CorruptHeader => corrupt_header = true,
+                FaultKind::CorruptPayload => corrupt_payload = true,
                 // A silently swallowed frame on a live connection: the
                 // receiver's deadline surfaces it as a typed Timeout.
                 FaultKind::DropFrame => return Ok(()),
@@ -986,6 +993,7 @@ impl Transport for Tcp {
         }
         let mut header = header;
         header.payload_len = payload.len() as u64;
+        header.payload_digest = fnv1a(payload);
         // Assemble the frame in a ring buffer: the oldest retained
         // frame's allocation is recycled once the ring is full.
         let mut buf = if self.retained[to].len() >= RETAINED_FRAMES {
@@ -1001,12 +1009,20 @@ impl Transport for Tcp {
         };
         buf.extend_from_slice(&header.encode());
         buf.extend_from_slice(payload);
-        if corrupt {
+        if corrupt_header {
             // Flip a magic byte: the receiver's decode rejects the
-            // frame with a typed BadMagic (fail-fast — there is no
-            // payload checksum to catch deeper corruption, so the
-            // injector only corrupts what the codec can detect).
+            // frame with a typed BadMagic before the payload is even
+            // examined.
             buf[0] ^= 0xff;
+        }
+        if corrupt_payload {
+            // Flip the first payload byte — or, for an empty payload,
+            // a byte of the stamped digest itself: either way the
+            // receiver's recomputed FNV disagrees with the header and
+            // the frame dies typed as PayloadCorrupt (ISSUE 10's
+            // beyond-the-header corruption detection).
+            let i = if buf.len() > HEADER_BYTES { HEADER_BYTES } else { HEADER_BYTES - 8 };
+            buf[i] ^= 0xff;
         }
         for _ in 0..copies {
             if let Err(e) = self.write_edge(to, &buf) {

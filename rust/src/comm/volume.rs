@@ -7,6 +7,7 @@
 //!   * communication rounds, normalized by total steps
 
 use super::allreduce::WireStats;
+use crate::runtime::checkpoint::{CheckpointError, StateReader, StateWriter};
 
 #[derive(Debug, Clone, Default)]
 pub struct VolumeLedger {
@@ -42,6 +43,33 @@ impl VolumeLedger {
 
     pub fn rounds_total(&self) -> u64 {
         self.fp_rounds + self.onebit_rounds
+    }
+
+    /// Snapshot the full accounting state (ISSUE 10): a resumed run's
+    /// ledger must report the same Figure-4 numbers as an uninterrupted
+    /// one, so every counter — not just the step count — persists.
+    pub fn save_state(&self, w: &mut StateWriter) {
+        w.put_u64(self.d as u64);
+        w.put_u64(self.steps);
+        w.put_u64(self.fp_rounds);
+        w.put_u64(self.onebit_rounds);
+        w.put_u64(self.skipped_steps);
+        w.put_u64(self.bytes_total);
+    }
+
+    pub fn load_state(&mut self, r: &mut StateReader<'_>) -> Result<(), CheckpointError> {
+        let d = r.take_u64()? as usize;
+        if d != self.d {
+            return Err(CheckpointError::StateMismatch {
+                detail: format!("volume ledger tracks d={d} in snapshot, this run has d={}", self.d),
+            });
+        }
+        self.steps = r.take_u64()?;
+        self.fp_rounds = r.take_u64()?;
+        self.onebit_rounds = r.take_u64()?;
+        self.skipped_steps = r.take_u64()?;
+        self.bytes_total = r.take_u64()?;
+        Ok(())
     }
 
     /// Average bits each parameter coordinate spends on the wire per

@@ -28,6 +28,11 @@ use crate::optim::{
     Adam, ConstLr, DistOptimizer, FrozenVarAdam, Hyper, MomentumSgd, NaiveOneBitAdam, SignSgd,
     ZeroOneAdam,
 };
+use crate::runtime::checkpoint::{
+    read_shard, shard_info, write_shard, CheckpointCfg, CheckpointError, RunMeta, StateReader,
+    StateWriter,
+};
+use crate::runtime::manifest::RunManifest;
 
 use super::engine::{Engine, ExecMode};
 use super::trainer::{NoObserver, RunResult, Trainer, TrainerConfig};
@@ -125,6 +130,21 @@ impl DistSpec {
         NoisyQuadratic::new(self.d, self.kappa, self.sigma, self.seed)
     }
 
+    /// The identity a checkpoint manifest records (ISSUE 10): the spec
+    /// fingerprint plus the human-readable fields the loader re-checks
+    /// one by one, so a mismatched resume dies with a *named* field
+    /// rather than an opaque fingerprint diff.
+    pub fn run_meta(&self) -> RunMeta {
+        RunMeta {
+            fingerprint: self.fingerprint(),
+            family: self.family.clone(),
+            d: self.d,
+            steps: self.steps,
+            world: self.world,
+            topology: self.topology.normalized(self.world).to_string(),
+        }
+    }
+
     /// Build the family's optimizer over `n_workers` materialized
     /// replicas: `world` for the in-process reference, 1 per transport
     /// rank. All schedule parameters derive deterministically from the
@@ -212,6 +232,19 @@ pub struct RankOpts {
     /// Arm the recorder and print this rank's step/round/recovery
     /// records to stdout as JSONL lines (`--events`).
     pub events: bool,
+    /// Write per-rank checkpoint shards under this directory
+    /// (`--checkpoint-dir`). Like the other options, checkpointing
+    /// never feeds back into the trajectory — a checkpointed run is
+    /// bitwise identical to an unchecked one.
+    pub checkpoint_dir: Option<String>,
+    /// Cut a checkpoint every K completed steps (`--checkpoint-every`;
+    /// 0 = never, even when a directory is set).
+    pub checkpoint_every: u64,
+    /// Resume from the manifest in this directory (`--resume`). The
+    /// manifest is fingerprint-checked against the spec: a resume into
+    /// a different family/world/topology dies typed at load, before
+    /// any training traffic moves.
+    pub resume: Option<String>,
 }
 
 impl RankOpts {
@@ -271,11 +304,35 @@ pub fn run_rank_opts(
     let mut losses = Vec::new();
     let wall = crate::util::Stopwatch::start();
 
+    // Checkpoint/resume (ISSUE 10). Resume restores this rank's shard
+    // *before* the start barrier: it is pure local file I/O, and every
+    // rank independently verifies the same manifest, so a rank whose
+    // shard is corrupt (or whose spec mismatches) dies typed before any
+    // reduction traffic moves.
+    let meta = spec.run_meta();
+    let mut start_t = 0u64;
+    if let Some(dir) = &opts.resume {
+        let ck = CheckpointCfg {
+            dir: dir.clone(),
+            every: 0,
+            resume: true,
+            meta: meta.clone(),
+        };
+        start_t = resume_rank_checkpoint(rank, spec, &ck, opt.as_mut(), &mut ledger, &mut losses)
+            .map_err(|e| TransportError::Checkpoint(e.to_string()))?;
+    }
+    let ckpt_cfg = opts.checkpoint_dir.as_ref().map(|dir| CheckpointCfg {
+        dir: dir.clone(),
+        every: opts.checkpoint_every,
+        resume: false,
+        meta,
+    });
+
     // Everyone reaches the loop before any reduction traffic starts —
     // and the barrier itself is exercised every run.
     link.barrier()?;
 
-    for t in 0..spec.steps {
+    for t in start_t..spec.steps {
         if opts.die_at_step == Some(t) {
             // Chaos hook: a hard, mid-round death — not a clean exit —
             // so survivor behavior is tested against the real thing.
@@ -301,6 +358,15 @@ pub fn run_rank_opts(
                 loss: loss as f64,
                 t_ns: crate::obs::now_ns().unwrap_or(0),
             });
+        }
+        // Cut a checkpoint after the step completes: every rank writes
+        // its shard, then (barrier) the root digests all shards into
+        // the manifest, then (barrier) everyone proceeds — so a
+        // manifest on disk always describes a *complete* shard set.
+        if let Some(ck) = &ckpt_cfg {
+            if ck.every > 0 && (t + 1) % ck.every == 0 {
+                save_rank_checkpoint(link, spec, ck, opt.as_ref(), &ledger, &losses, t + 1)?;
+            }
         }
     }
 
@@ -345,6 +411,73 @@ pub fn run_rank_opts(
         resumes: link.resumes(),
         wall_s: wall.elapsed_secs(),
     })
+}
+
+/// Serialize this rank's snapshot — replica optimizer state (with its
+/// slice of the EF error memory), the byte-true ledger, and the loss
+/// trace (root-only content; empty elsewhere) — and publish it with
+/// the two-barrier protocol described at the call site. Checkpoint
+/// errors cross the transport boundary as
+/// [`TransportError::Checkpoint`], so the launcher's process guard
+/// handles them like any other fatal rank error.
+fn save_rank_checkpoint(
+    link: &mut RankLink,
+    spec: &DistSpec,
+    ck: &CheckpointCfg,
+    opt: &dyn DistOptimizer,
+    ledger: &VolumeLedger,
+    losses: &[f64],
+    step: u64,
+) -> Result<(), TransportError> {
+    let ckerr = |e: CheckpointError| TransportError::Checkpoint(e.to_string());
+    let rank = link.rank();
+    let mut w = StateWriter::new();
+    w.put_str("rank");
+    opt.save_state(&mut w);
+    ledger.save_state(&mut w);
+    w.put_f64s(losses);
+    write_shard(&ck.dir, rank, step, w.bytes()).map_err(ckerr)?;
+    link.barrier()?;
+    if rank == 0 {
+        let mut shards = Vec::with_capacity(spec.world);
+        for r in 0..spec.world {
+            shards.push(shard_info(&ck.dir, r).map_err(ckerr)?.into());
+        }
+        RunManifest::new(step, ck.meta.clone(), "per-rank", shards)
+            .write(&ck.dir)
+            .map_err(ckerr)?;
+    }
+    link.barrier()?;
+    Ok(())
+}
+
+/// Restore this rank's shard from a `--resume` directory; returns the
+/// step the loop resumes at. Verification order: manifest self-digest
+/// (inside [`RunManifest::load`]), then the spec identity field by
+/// field, then this rank's shard bytes against the manifest digest,
+/// then the structural decode of the state itself.
+fn resume_rank_checkpoint(
+    rank: usize,
+    spec: &DistSpec,
+    ck: &CheckpointCfg,
+    opt: &mut dyn DistOptimizer,
+    ledger: &mut VolumeLedger,
+    losses: &mut Vec<f64>,
+) -> Result<u64, CheckpointError> {
+    let man = RunManifest::load(&ck.dir)?;
+    man.check(&ck.meta, "per-rank", spec.world)?;
+    let entry = man.shard(rank)?;
+    let (step, body) = read_shard(&ck.dir, rank, Some(entry.digest))?;
+    if step != man.step {
+        return Err(CheckpointError::StepMismatch { manifest: man.step, shard: step });
+    }
+    let mut r = StateReader::new(&body, &entry.file);
+    r.expect_tag("rank")?;
+    opt.load_state(&mut r)?;
+    ledger.load_state(&mut r)?;
+    *losses = r.take_f64s()?;
+    r.finish()?;
+    Ok(step)
 }
 
 /// Export one successful rank's run-event stream (ISSUE 9): a meta

@@ -10,6 +10,10 @@ use crate::comm::volume::VolumeLedger;
 use crate::comm::{ReduceBackend, Topology};
 use crate::grad::GradientSource;
 use crate::optim::{DistOptimizer, StepInfo};
+use crate::runtime::checkpoint::{
+    read_shard, write_shard, CheckpointCfg, CheckpointError, StateReader, StateWriter,
+};
+use crate::runtime::manifest::RunManifest;
 
 use super::engine::{Engine, ExecMode};
 use super::metrics::{MetricLog, StepRecord};
@@ -114,6 +118,120 @@ impl Trainer {
         cfg: &TrainerConfig,
         observer: &mut dyn StepObserver,
     ) -> RunResult {
+        Self::run_inner(source, opt, cfg, observer, None)
+            .unwrap_or_else(|e| unreachable!("no checkpoint config, no checkpoint errors: {e}"))
+    }
+
+    /// Run with periodic checkpoints and (optionally) resume (ISSUE 10).
+    ///
+    /// The in-process flow writes a single `rank0.ckpt` shard holding
+    /// the whole snapshot — optimizer state (all replicas + EF error
+    /// memory), volume ledger, simulated clock, and the metric log —
+    /// plus a `manifest.json` (layout `"single"`) binding the shard
+    /// digest to the run's spec fingerprint. Resume-at-step-t then
+    /// continues the loop at `t` and is bit-for-bit identical to an
+    /// uninterrupted run: every per-step input (gradient noise, LR,
+    /// schedules) is a pure function of `t` and the restored state.
+    ///
+    /// Observer rows are deliberately *not* checkpointed: observers are
+    /// analysis taps (Fig-1 profiler), not training state, and a resumed
+    /// run only reports rows for the steps it actually executed.
+    pub fn run_checkpointed(
+        source: &mut dyn GradientSource,
+        opt: &mut dyn DistOptimizer,
+        cfg: &TrainerConfig,
+        observer: &mut dyn StepObserver,
+        ckpt: &CheckpointCfg,
+    ) -> Result<RunResult, CheckpointError> {
+        Self::run_inner(source, opt, cfg, observer, Some(ckpt))
+    }
+
+    /// Serialize the full in-process run state into one shard body.
+    fn save_local(
+        opt: &dyn DistOptimizer,
+        ledger: &VolumeLedger,
+        log: &MetricLog,
+        sim_total_ms: f64,
+        ck: &CheckpointCfg,
+        step: u64,
+    ) -> Result<(), CheckpointError> {
+        let mut w = StateWriter::new();
+        w.put_str("local");
+        opt.save_state(&mut w);
+        ledger.save_state(&mut w);
+        w.put_f64(sim_total_ms);
+        w.put_u64(log.records.len() as u64);
+        for r in &log.records {
+            w.put_u64(r.t);
+            w.put_f64(r.loss);
+            w.put_f64(r.lr);
+            w.put_bool(r.synced);
+            w.put_bool(r.var_updated);
+            w.put_u64(r.wire_bytes);
+            w.put_f64(r.sim_ms);
+            w.put_f64(r.sim_total_s);
+            w.put_bool(r.eval_loss.is_some());
+            w.put_f64(r.eval_loss.unwrap_or(0.0));
+        }
+        let info = write_shard(&ck.dir, 0, step, w.bytes())?;
+        RunManifest::new(step, ck.meta.clone(), "single", vec![info.into()]).write(&ck.dir)
+    }
+
+    /// Restore a `save_local` snapshot; returns the step to resume at.
+    fn resume_local(
+        opt: &mut dyn DistOptimizer,
+        ledger: &mut VolumeLedger,
+        log: &mut MetricLog,
+        sim_total_ms: &mut f64,
+        ck: &CheckpointCfg,
+    ) -> Result<u64, CheckpointError> {
+        let man = RunManifest::load(&ck.dir)?;
+        man.check(&ck.meta, "single", 1)?;
+        let entry = man.shard(0)?;
+        let (step, body) = read_shard(&ck.dir, 0, Some(entry.digest))?;
+        if step != man.step {
+            return Err(CheckpointError::StepMismatch { manifest: man.step, shard: step });
+        }
+        let mut r = StateReader::new(&body, &entry.file);
+        r.expect_tag("local")?;
+        opt.load_state(&mut r)?;
+        ledger.load_state(&mut r)?;
+        *sim_total_ms = r.take_f64()?;
+        let count = r.take_u64()?;
+        for _ in 0..count {
+            let t = r.take_u64()?;
+            let loss = r.take_f64()?;
+            let lr = r.take_f64()?;
+            let synced = r.take_bool()?;
+            let var_updated = r.take_bool()?;
+            let wire_bytes = r.take_u64()?;
+            let sim_ms = r.take_f64()?;
+            let sim_total_s = r.take_f64()?;
+            let has_eval = r.take_bool()?;
+            let eval = r.take_f64()?;
+            log.push(StepRecord {
+                t,
+                loss,
+                lr,
+                synced,
+                var_updated,
+                wire_bytes,
+                sim_ms,
+                sim_total_s,
+                eval_loss: has_eval.then_some(eval),
+            });
+        }
+        r.finish()?;
+        Ok(step)
+    }
+
+    fn run_inner(
+        source: &mut dyn GradientSource,
+        opt: &mut dyn DistOptimizer,
+        cfg: &TrainerConfig,
+        observer: &mut dyn StepObserver,
+        ckpt: Option<&CheckpointCfg>,
+    ) -> Result<RunResult, CheckpointError> {
         let d = opt.dim();
         assert_eq!(source.dim(), d, "source/optimizer dim mismatch");
         let n = opt.n_workers();
@@ -134,7 +252,17 @@ impl Trainer {
         let topology = cfg.topology.normalized(n);
         let wall = crate::util::Stopwatch::start();
 
-        for t in 0..cfg.steps {
+        // Resume before the first step: the restored state is exactly
+        // what an uninterrupted run held entering step `start_t`.
+        let mut start_t = 0u64;
+        if let Some(ck) = ckpt {
+            if ck.resume {
+                start_t =
+                    Self::resume_local(opt, &mut ledger, &mut log, &mut sim_total_ms, ck)?;
+            }
+        }
+
+        for t in start_t..cfg.steps {
             crate::obs::begin(crate::obs::PhaseId::Step);
             // Phase 1: each worker computes its local gradient. With a
             // threaded engine and a thread-shareable source, workers fan
@@ -226,6 +354,15 @@ impl Trainer {
                     );
                 }
             }
+
+            // Phase 5: checkpoint. Cut *after* the step completes, so a
+            // shard stamped `t + 1` means "steps 0..=t are done, resume
+            // at t + 1" — matching the manifest's `step` semantics.
+            if let Some(ck) = ckpt {
+                if ck.every > 0 && (t + 1) % ck.every == 0 {
+                    Self::save_local(&*opt, &ledger, &log, sim_total_ms, ck, t + 1)?;
+                }
+            }
             crate::obs::end(crate::obs::PhaseId::Step);
         }
 
@@ -233,7 +370,7 @@ impl Trainer {
         opt.mean_params(&mut final_params);
         let final_eval = source.eval_loss(&final_params);
 
-        RunResult {
+        Ok(RunResult {
             log,
             ledger,
             sim_total_s: sim_total_ms / 1e3,
@@ -241,7 +378,7 @@ impl Trainer {
             final_params,
             final_eval,
             observer_rows,
-        }
+        })
     }
 }
 
@@ -327,6 +464,84 @@ mod tests {
         assert!(times.windows(2).all(|w| w[1] >= w[0]));
         // 20 steps × ≥10ms compute
         assert!(res.sim_total_s >= 0.2);
+    }
+
+    #[test]
+    fn local_checkpoint_resume_is_bitwise() {
+        use crate::runtime::checkpoint::{CheckpointCfg, RunMeta};
+        let dir = std::env::temp_dir().join(format!("zo_trainer_ckpt_{}", std::process::id()));
+        let dir_s = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let cfg = TrainerConfig {
+            steps: 40,
+            log_every: 1,
+            eval_every: 10,
+            fabric: Some(ETHERNET),
+            sim_gpus: 8,
+            compute_ms: 3.0,
+            exec: ExecMode::Sequential,
+            topology: Topology::Star,
+            verbose: false,
+        };
+        let meta = RunMeta {
+            fingerprint: 0x1234_5678,
+            family: "adam".into(),
+            d: 24,
+            steps: 40,
+            world: 4,
+            topology: "star".into(),
+        };
+        let fresh = || {
+            (
+                NoisyQuadratic::new(24, 5.0, 0.05, 3),
+                Adam::new(vec![1.0; 24], 4, Hyper::default(), Box::new(ConstLr(0.05))),
+            )
+        };
+
+        // Uninterrupted baseline.
+        let (mut src, mut opt) = fresh();
+        let base = Trainer::run(&mut src, &mut opt, &cfg, &mut NoObserver);
+
+        // Save every 7 steps (last cut at step 35), then resume the
+        // tail 35..40 in fresh optimizer/source objects.
+        let save = CheckpointCfg {
+            dir: dir_s.clone(),
+            every: 7,
+            resume: false,
+            meta: meta.clone(),
+        };
+        let (mut src, mut opt) = fresh();
+        Trainer::run_checkpointed(&mut src, &mut opt, &cfg, &mut NoObserver, &save).unwrap();
+
+        let resume = CheckpointCfg { dir: dir_s, every: 0, resume: true, meta };
+        let (mut src, mut opt) = fresh();
+        let resumed =
+            Trainer::run_checkpointed(&mut src, &mut opt, &cfg, &mut NoObserver, &resume)
+                .unwrap();
+
+        assert_eq!(base.final_params.len(), resumed.final_params.len());
+        for (a, b) in base.final_params.iter().zip(&resumed.final_params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(base.sim_total_s.to_bits(), resumed.sim_total_s.to_bits());
+        assert_eq!(base.ledger.bytes_total, resumed.ledger.bytes_total);
+        assert_eq!(base.ledger.steps, resumed.ledger.steps);
+        assert_eq!(base.log.records.len(), resumed.log.records.len());
+        for (a, b) in base.log.records.iter().zip(&resumed.log.records) {
+            assert_eq!(a.t, b.t);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "t={}", a.t);
+            assert_eq!(
+                a.eval_loss.map(f64::to_bits),
+                b.eval_loss.map(f64::to_bits),
+                "t={}",
+                a.t
+            );
+        }
+        let _ = std::fs::remove_dir_all(std::env::temp_dir().join(format!(
+            "zo_trainer_ckpt_{}",
+            std::process::id()
+        )));
     }
 
     #[test]

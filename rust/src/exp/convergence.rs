@@ -11,7 +11,9 @@ use crate::optim::policy::{SyncSchedule, VarSchedule};
 use crate::optim::{
     Adam, BertLr, DistOptimizer, FrozenVarAdam, Hyper, LrSchedule, ZeroOneAdam,
 };
+use crate::runtime::checkpoint::{CheckpointCfg, RunMeta};
 use crate::runtime::Runtime;
+use crate::util::hash::fnv1a;
 
 use super::Algo;
 
@@ -34,6 +36,14 @@ pub struct ConvOpts {
     /// clock is unaffected; only real wall-clock changes).
     pub exec: ExecMode,
     pub verbose: bool,
+    /// Write checkpoints under this directory (ISSUE 10; None = off).
+    /// Only valid for single-algorithm runs — one directory holds one
+    /// run's manifest.
+    pub checkpoint_dir: Option<String>,
+    /// Cut a checkpoint every K completed steps (0 = never).
+    pub checkpoint_every: u64,
+    /// Resume from the manifest in `checkpoint_dir` before training.
+    pub resume: bool,
 }
 
 impl ConvOpts {
@@ -49,6 +59,9 @@ impl ConvOpts {
             eval_every: (steps / 10).max(1),
             exec: ExecMode::Sequential,
             verbose: false,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            resume: false,
         }
     }
 }
@@ -125,17 +138,60 @@ fn trainer_config(opts: &ConvOpts) -> TrainerConfig {
 /// [`rescale_sim_time`] before reporting.
 pub fn run_convergence(rt: &Runtime, opts: &ConvOpts, algos: &[Algo]) -> Result<Vec<(Algo, RunResult)>> {
     let init = rt.manifest.load_init(&opts.model)?;
+    let checkpointing = opts.checkpoint_dir.is_some();
+    anyhow::ensure!(
+        !checkpointing || algos.len() == 1,
+        "--checkpoint-dir/--resume apply to a single-algorithm run \
+         (one directory holds one run's manifest; got {} algorithms)",
+        algos.len()
+    );
     let mut out = Vec::new();
     for &algo in algos {
         let mut source = build_source(rt, opts)?;
         let mut opt = build_optimizer(algo, init.clone(), opts);
         let cfg = trainer_config(opts);
         crate::info!("fig-convergence: {} for {} steps", algo.name(), opts.steps);
-        let mut res = Trainer::run(source.as_mut(), opt.as_mut(), &cfg, &mut NoObserver);
+        let mut res = match &opts.checkpoint_dir {
+            Some(dir) => {
+                let ck = CheckpointCfg {
+                    dir: dir.clone(),
+                    every: opts.checkpoint_every,
+                    resume: opts.resume,
+                    meta: conv_run_meta(algo, init.len(), opts),
+                };
+                Trainer::run_checkpointed(source.as_mut(), opt.as_mut(), &cfg, &mut NoObserver, &ck)
+                    .map_err(|e| anyhow::anyhow!("checkpoint: {e}"))?
+            }
+            None => Trainer::run(source.as_mut(), opt.as_mut(), &cfg, &mut NoObserver),
+        };
         rescale_sim_time(&mut res, opts);
         out.push((algo, res));
     }
     Ok(out)
+}
+
+/// The identity a `train` checkpoint manifest records: unlike the
+/// transport flow there is no `DistSpec`, so the fingerprint hashes the
+/// run inputs that shape the trajectory here — algorithm, proxy model,
+/// dimension, steps, workers, and seed.
+fn conv_run_meta(algo: Algo, d: usize, opts: &ConvOpts) -> RunMeta {
+    let canon = format!(
+        "{}|{}|{}|{}|{}|{}",
+        algo.name(),
+        opts.model,
+        d,
+        opts.steps,
+        opts.workers,
+        opts.seed
+    );
+    RunMeta {
+        fingerprint: fnv1a(canon.as_bytes()),
+        family: algo.name().to_string(),
+        d,
+        steps: opts.steps,
+        world: opts.workers,
+        topology: "star".to_string(),
+    }
 }
 
 /// Rescale each record's simulated time from proxy-d wire bytes to the

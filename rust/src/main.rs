@@ -172,6 +172,9 @@ fn cmd_train(rest: &[String]) -> Result<()> {
                 .opt("seed", "0", "data seed")
                 .opt("threads", "1", "engine pool threads (1 = sequential; results are bitwise identical)")
                 .opt("trace-out", "", "append the run's JSONL run-event stream to this file ('' = off)")
+                .opt("checkpoint-dir", "", "write hash-verified checkpoints under this directory ('' = off)")
+                .opt("checkpoint-every", "0", "cut a checkpoint every K completed steps (0 = never)")
+                .opt("resume", "", "resume from the manifest in this directory ('' = off)")
                 .flag("events", "print step records to stdout as JSONL")
                 .flag("quiet", "suppress progress"),
         ),
@@ -196,6 +199,24 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     opts.seed = p.get_u64("seed");
     opts.exec = zo_adam::coordinator::ExecMode::with_threads(p.get_usize("threads"));
     opts.verbose = !p.get_flag("quiet");
+    // Checkpoint/resume (ISSUE 10). `--resume D` implies D is also the
+    // directory further checkpoints land in; naming both is fine as
+    // long as they agree (a run writes one manifest in one directory).
+    let ckpt_dir = p.get("checkpoint-dir");
+    let resume_dir = p.get("resume");
+    if !ckpt_dir.is_empty() && !resume_dir.is_empty() {
+        anyhow::ensure!(
+            ckpt_dir == resume_dir,
+            "--checkpoint-dir '{ckpt_dir}' and --resume '{resume_dir}' name different \
+             directories; a resumed run continues checkpointing in the directory it resumed from"
+        );
+    }
+    opts.checkpoint_dir = match (ckpt_dir, resume_dir) {
+        ("", "") => None,
+        ("", d) | (d, _) => Some(d.to_string()),
+    };
+    opts.checkpoint_every = p.get_u64("checkpoint-every");
+    opts.resume = !resume_dir.is_empty();
 
     let runs = run_convergence(&rt, &opts, &[algo])?;
     let (_, res) = &runs[0];
@@ -568,6 +589,9 @@ fn cmd_launch(rest: &[String]) -> Result<()> {
                 .opt("kill-rank", "", "chaos: worker rank that abort()s mid-run ('' = off)")
                 .opt("kill-at-step", "5", "chaos: step at which --kill-rank dies")
                 .opt("trace-out", "", "append every rank's JSONL run-event stream to this file ('' = off)")
+                .opt("checkpoint-dir", "", "write per-rank checkpoint shards + manifest under this directory ('' = off)")
+                .opt("checkpoint-every", "0", "cut a checkpoint every K completed steps (0 = never)")
+                .opt("resume", "", "resume every rank from the manifest in this directory ('' = off)")
                 .flag("events", "print step/round/recovery records to stdout as JSONL")
                 .flag("check-parity", "re-run in-process and require bitwise-identical results")
                 .flag("quiet", "suppress worker output"),
@@ -582,6 +606,15 @@ fn cmd_launch(rest: &[String]) -> Result<()> {
             s => Some(s.to_string()),
         },
         events: p.get_flag("events"),
+        checkpoint_dir: match p.get("checkpoint-dir") {
+            "" => None,
+            s => Some(s.to_string()),
+        },
+        checkpoint_every: p.get_u64("checkpoint-every"),
+        resume: match p.get("resume") {
+            "" => None,
+            s => Some(s.to_string()),
+        },
         ..Default::default()
     };
     anyhow::ensure!(
@@ -699,6 +732,13 @@ fn launch_tcp(
         if rank_opts.events {
             cmd.arg("--events");
         }
+        if let Some(dir) = &rank_opts.checkpoint_dir {
+            cmd.arg("--checkpoint-dir").arg(dir);
+            cmd.arg("--checkpoint-every").arg(rank_opts.checkpoint_every.to_string());
+        }
+        if let Some(dir) = &rank_opts.resume {
+            cmd.arg("--resume").arg(dir);
+        }
         if quiet {
             cmd.arg("--quiet").stdout(Stdio::null());
         }
@@ -758,6 +798,9 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
                 .opt("resume-window", "5", "reconnect-with-resume window, seconds")
                 .opt("die-at-step", "", "chaos: abort() at the start of this step ('' = off)")
                 .opt("trace-out", "", "append this rank's JSONL run-event stream to this file ('' = off)")
+                .opt("checkpoint-dir", "", "write this rank's checkpoint shards under this directory ('' = off)")
+                .opt("checkpoint-every", "0", "cut a checkpoint every K completed steps (0 = never)")
+                .opt("resume", "", "resume this rank from the manifest in this directory ('' = off)")
                 .flag("events", "print step/round/recovery records to stdout as JSONL")
                 .flag("quiet", "no output on success"),
         ),
@@ -798,6 +841,15 @@ fn cmd_worker(rest: &[String]) -> Result<()> {
             s => Some(s.to_string()),
         },
         events: p.get_flag("events"),
+        checkpoint_dir: match p.get("checkpoint-dir") {
+            "" => None,
+            s => Some(s.to_string()),
+        },
+        checkpoint_every: p.get_u64("checkpoint-every"),
+        resume: match p.get("resume") {
+            "" => None,
+            s => Some(s.to_string()),
+        },
     };
     let res = zo_adam::coordinator::run_rank_opts(&mut link, &spec, &opts)
         .map_err(|e| anyhow::anyhow!("worker rank {rank} failed: {e}"))?;

@@ -5,6 +5,7 @@ use super::{DistOptimizer, Hyper, LrSchedule, Rounds, StepInfo, StepScratch};
 use crate::comm::allreduce::ReduceBackend;
 use crate::comm::TransportError;
 use crate::coordinator::engine::Engine;
+use crate::runtime::checkpoint::{CheckpointError, StateReader, StateWriter};
 
 pub struct Adam {
     x: Vec<f32>,
@@ -107,6 +108,23 @@ impl DistOptimizer for Adam {
 
     fn variance(&self) -> Option<&[f32]> {
         Some(&self.v)
+    }
+
+    // Mutable state is exactly (x, m, v); the LR schedule is a pure
+    // function of t and the scratch is overwritten every step.
+    fn save_state(&self, w: &mut StateWriter) {
+        w.put_str(self.name());
+        w.put_f32s(&self.x);
+        w.put_f32s(&self.m);
+        w.put_f32s(&self.v);
+    }
+
+    fn load_state(&mut self, r: &mut StateReader<'_>) -> Result<(), CheckpointError> {
+        r.expect_tag(self.name())?;
+        r.take_f32s_exact(&mut self.x)?;
+        r.take_f32s_exact(&mut self.m)?;
+        r.take_f32s_exact(&mut self.v)?;
+        Ok(())
     }
 }
 

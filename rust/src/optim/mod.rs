@@ -29,6 +29,7 @@ pub use zeroone_adam::ZeroOneAdam;
 
 use crate::comm::{ReduceBackend, TransportError, WireStats};
 use crate::coordinator::engine::Engine;
+use crate::runtime::checkpoint::{CheckpointError, StateReader, StateWriter};
 
 /// Adam-family hyperparameters (paper: β1=0.9, β2=0.999, ε=1e-8).
 #[derive(Debug, Clone, Copy)]
@@ -223,6 +224,23 @@ pub trait DistOptimizer: Sync {
     fn variance(&self) -> Option<&[f32]> {
         None
     }
+
+    /// Serialize every piece of mutable optimizer state into `w`
+    /// (ISSUE 10 snapshot contract). Each implementation writes its
+    /// `name()` as a leading tag, then params, momentum/variance,
+    /// schedule positions and EF error memory — everything `step_comm`
+    /// reads or writes — such that `load_state` on a freshly
+    /// constructed optimizer of the same spec reproduces the exact
+    /// bit pattern and the resumed run is bitwise identical to an
+    /// uninterrupted one (`tests/checkpoint_resume.rs`).
+    fn save_state(&self, w: &mut StateWriter);
+
+    /// Restore state previously produced by `save_state`. The receiver
+    /// must already be constructed with the same `d`/`n_workers`/
+    /// hyperparameters; any structural disagreement (wrong family tag,
+    /// wrong tensor length) is a typed [`CheckpointError`], never a
+    /// partial or silently wrong restore.
+    fn load_state(&mut self, r: &mut StateReader<'_>) -> Result<(), CheckpointError>;
 
     /// Max pairwise worker divergence ‖xᵢ − x̄‖₂ (consensus metric).
     fn consensus_error(&self) -> f64 {

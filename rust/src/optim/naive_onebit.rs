@@ -13,6 +13,7 @@ use super::{DistOptimizer, Hyper, LrSchedule, Rounds, StepInfo, StepScratch};
 use crate::comm::allreduce::{EfAllReduce, ReduceBackend};
 use crate::comm::TransportError;
 use crate::coordinator::engine::Engine;
+use crate::runtime::checkpoint::{CheckpointError, StateReader, StateWriter};
 
 pub struct NaiveOneBitAdam {
     x: Vec<f32>,
@@ -120,6 +121,22 @@ impl DistOptimizer for NaiveOneBitAdam {
 
     fn variance(&self) -> Option<&[f32]> {
         Some(&self.v)
+    }
+
+    fn save_state(&self, w: &mut StateWriter) {
+        w.put_str(self.name());
+        w.put_f32s(&self.x);
+        w.put_f32s(&self.m);
+        w.put_f32s(&self.v);
+        self.ef.save_state(w);
+    }
+
+    fn load_state(&mut self, r: &mut StateReader<'_>) -> Result<(), CheckpointError> {
+        r.expect_tag(self.name())?;
+        r.take_f32s_exact(&mut self.x)?;
+        r.take_f32s_exact(&mut self.m)?;
+        r.take_f32s_exact(&mut self.v)?;
+        self.ef.load_state(r)
     }
 }
 

@@ -16,6 +16,7 @@ use super::{DistOptimizer, Hyper, LrSchedule, Rounds, StepInfo, StepScratch};
 use crate::comm::allreduce::{EfAllReduce, ReduceBackend};
 use crate::comm::TransportError;
 use crate::coordinator::engine::Engine;
+use crate::runtime::checkpoint::{CheckpointError, StateReader, StateWriter};
 
 pub struct FrozenVarAdam {
     x: Vec<f32>,
@@ -182,6 +183,30 @@ impl DistOptimizer for FrozenVarAdam {
 
     fn variance(&self) -> Option<&[f32]> {
         Some(&self.v)
+    }
+
+    // Mutable state: (x, m, v), the hoisted rsv (derived from v but
+    // saved anyway — recomputing 1/√(v+ε) reproduces the same bits,
+    // yet saving it keeps the restore a pure byte copy), the T_v
+    // schedule position, and the EF error memory.
+    fn save_state(&self, w: &mut StateWriter) {
+        w.put_str(self.name());
+        w.put_f32s(&self.x);
+        w.put_f32s(&self.m);
+        w.put_f32s(&self.v);
+        w.put_f32s(&self.rsv);
+        self.var_sched.save_state(w);
+        self.ef.save_state(w);
+    }
+
+    fn load_state(&mut self, r: &mut StateReader<'_>) -> Result<(), CheckpointError> {
+        r.expect_tag(self.name())?;
+        r.take_f32s_exact(&mut self.x)?;
+        r.take_f32s_exact(&mut self.m)?;
+        r.take_f32s_exact(&mut self.v)?;
+        r.take_f32s_exact(&mut self.rsv)?;
+        self.var_sched.load_state(r)?;
+        self.ef.load_state(r)
     }
 }
 

@@ -10,6 +10,8 @@
 //!   every `double_every` steps (the LR-halving horizon), clipped at
 //!   H = 16 (Assumption 5).
 
+use crate::runtime::checkpoint::{CheckpointError, StateReader, StateWriter};
+
 /// Variance-update policy: decides whether step t ∈ T_v.
 #[derive(Debug, Clone)]
 pub enum VarPolicy {
@@ -57,6 +59,23 @@ impl VarSchedule {
     /// Total updates so far (m = |T_v| consumed).
     pub fn updates(&self) -> u64 {
         self.j
+    }
+
+    /// Snapshot the schedule position (ISSUE 10). The policy itself is
+    /// construction-time configuration; only the stateful counters —
+    /// next fire step, update count, stop latch — need to persist for
+    /// a resumed run to walk the identical T_v sequence.
+    pub fn save_state(&self, w: &mut StateWriter) {
+        w.put_u64(self.next_update);
+        w.put_u64(self.j);
+        w.put_bool(self.stopped);
+    }
+
+    pub fn load_state(&mut self, r: &mut StateReader<'_>) -> Result<(), CheckpointError> {
+        self.next_update = r.take_u64()?;
+        self.j = r.take_u64()?;
+        self.stopped = r.take_bool()?;
+        Ok(())
     }
 
     /// Must be called once per step t (monotonically increasing);
@@ -170,6 +189,21 @@ impl SyncSchedule {
 
     pub fn syncs(&self) -> u64 {
         self.count
+    }
+
+    /// Snapshot the T_u schedule position (ISSUE 10): next sync step,
+    /// sync count, and the observed-H watermark.
+    pub fn save_state(&self, w: &mut StateWriter) {
+        w.put_u64(self.next_sync);
+        w.put_u64(self.count);
+        w.put_u64(self.max_interval);
+    }
+
+    pub fn load_state(&mut self, r: &mut StateReader<'_>) -> Result<(), CheckpointError> {
+        self.next_sync = r.take_u64()?;
+        self.count = r.take_u64()?;
+        self.max_interval = r.take_u64()?;
+        Ok(())
     }
 
     /// Must be called once per step t (monotonic); true iff t ∈ T_u.

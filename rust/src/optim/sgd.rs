@@ -13,6 +13,7 @@ use super::{DistOptimizer, LrSchedule, Rounds, StepInfo, StepScratch};
 use crate::comm::allreduce::{EfAllReduce, ReduceBackend};
 use crate::comm::TransportError;
 use crate::coordinator::engine::Engine;
+use crate::runtime::checkpoint::{CheckpointError, StateReader, StateWriter};
 
 pub struct MomentumSgd {
     x: Vec<f32>,
@@ -91,6 +92,19 @@ impl DistOptimizer for MomentumSgd {
     fn momentum(&self) -> Option<&[f32]> {
         Some(&self.m)
     }
+
+    fn save_state(&self, w: &mut StateWriter) {
+        w.put_str(self.name());
+        w.put_f32s(&self.x);
+        w.put_f32s(&self.m);
+    }
+
+    fn load_state(&mut self, r: &mut StateReader<'_>) -> Result<(), CheckpointError> {
+        r.expect_tag(self.name())?;
+        r.take_f32s_exact(&mut self.x)?;
+        r.take_f32s_exact(&mut self.m)?;
+        Ok(())
+    }
 }
 
 /// Error-feedback signSGD: x ← x − γ · EF-1bit-AllReduce(g).
@@ -155,6 +169,21 @@ impl DistOptimizer for SignSgd {
             crate::tensor::axpy(xc, -gamma, &gbar[off..off + xc.len()]);
         });
         Ok(StepInfo { lr: gamma as f64, synced: true, var_updated: false, rounds: Rounds::one(wire) })
+    }
+
+    // Mutable state: x plus the EF compressor's error memory (per-lane
+    // δᵢ and the server/leader δ̄s) — dropping the latter would change
+    // every post-resume 1-bit round.
+    fn save_state(&self, w: &mut StateWriter) {
+        w.put_str(self.name());
+        w.put_f32s(&self.x);
+        self.ef.save_state(w);
+    }
+
+    fn load_state(&mut self, r: &mut StateReader<'_>) -> Result<(), CheckpointError> {
+        r.expect_tag(self.name())?;
+        r.take_f32s_exact(&mut self.x)?;
+        self.ef.load_state(r)
     }
 }
 

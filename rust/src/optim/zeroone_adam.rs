@@ -29,6 +29,7 @@ use super::{DistOptimizer, Hyper, LrSchedule, Rounds, StepInfo, StepScratch};
 use crate::comm::allreduce::{EfAllReduce, ReduceBackend, WorkerBufs};
 use crate::comm::TransportError;
 use crate::coordinator::engine::Engine;
+use crate::runtime::checkpoint::{CheckpointError, StateReader, StateWriter};
 
 /// One worker's replica state — the unit the engine's local phase
 /// schedules: every lines-3–5 update touches exactly one `Replica`.
@@ -288,6 +289,55 @@ impl DistOptimizer for ZeroOneAdam {
 
     fn variance(&self) -> Option<&[f32]> {
         Some(&self.v)
+    }
+
+    // The fullest inventory of the seven families: per-replica (x, m,
+    // u), the shared frozen variance and its hoisted reciprocal, the
+    // sync anchor x_{t'}, the γ-sum since the last sync, both schedule
+    // positions, and the EF error memory. A transport deployment
+    // materializes one replica per rank, so the replica count is
+    // written and checked — a resume under a different world size
+    // cannot silently mix states.
+    fn save_state(&self, w: &mut StateWriter) {
+        w.put_str(self.name());
+        w.put_u64(self.reps.len() as u64);
+        for rep in &self.reps {
+            w.put_f32s(&rep.x);
+            w.put_f32s(&rep.m);
+            w.put_f32s(&rep.u);
+        }
+        w.put_f32s(&self.v);
+        w.put_f32s(&self.rsv);
+        w.put_f32s(&self.x_anchor);
+        w.put_f64(self.gamma_accum);
+        self.var_sched.save_state(w);
+        self.sync_sched.save_state(w);
+        self.ef.save_state(w);
+    }
+
+    fn load_state(&mut self, r: &mut StateReader<'_>) -> Result<(), CheckpointError> {
+        r.expect_tag(self.name())?;
+        let reps = r.take_u64()? as usize;
+        if reps != self.reps.len() {
+            return Err(CheckpointError::StateMismatch {
+                detail: format!(
+                    "01adam snapshot holds {reps} replicas, this optimizer has {}",
+                    self.reps.len()
+                ),
+            });
+        }
+        for rep in &mut self.reps {
+            r.take_f32s_exact(&mut rep.x)?;
+            r.take_f32s_exact(&mut rep.m)?;
+            r.take_f32s_exact(&mut rep.u)?;
+        }
+        r.take_f32s_exact(&mut self.v)?;
+        r.take_f32s_exact(&mut self.rsv)?;
+        r.take_f32s_exact(&mut self.x_anchor)?;
+        self.gamma_accum = r.take_f64()?;
+        self.var_sched.load_state(r)?;
+        self.sync_sched.load_state(r)?;
+        self.ef.load_state(r)
     }
 }
 

@@ -1,0 +1,675 @@
+//! Deterministic checkpoint/resume (ISSUE 10): the snapshot contract.
+//!
+//! Every layer that owns mutable run state — the optimizer families,
+//! the EF reducer's error memory, the volume ledger, the trainer's
+//! metric log — serializes itself through a [`StateWriter`] and
+//! restores through a [`StateReader`]. The byte stream is versioned,
+//! little-endian, and digest-verified end to end:
+//!
+//! ```text
+//! shard file ("rank<r>.ckpt"):
+//! offset  size  field
+//!      0     4  CKPT_MAGIC   0x5A43_4B31 ("ZCK1"), little-endian
+//!      4     2  CKPT_VERSION shard format version (1)
+//!      6     4  rank         owning rank
+//!     10     8  step         steps completed when this was written
+//!     18     8  body_len     bytes of state body following
+//!     26     …  body         the layered state stream
+//!   tail     8  digest       FNV-1a over ALL preceding bytes
+//! ```
+//!
+//! Any flipped byte surfaces as a typed [`CheckpointError`] naming the
+//! shard — never a panic, never a silently corrupt resume. A run's
+//! shards are described by a versioned JSON manifest with per-shard
+//! digests and the run-spec fingerprint (see `runtime::manifest::`
+//! [`crate::runtime::manifest::RunManifest`]); resume re-verifies both
+//! digest layers and the fingerprint before any state is applied, so a
+//! resume against a mismatched world/topology/family dies typed at
+//! load. The acceptance contract is bitwise: a run checkpointed at
+//! step t and resumed is bit-for-bit identical to the uninterrupted
+//! run under `--check-parity` (see `tests/checkpoint_resume.rs`).
+//!
+//! The three constants below are pinned in `wire.lock` (lint rule W1):
+//! changing the shard magic/version or the manifest schema without
+//! regenerating the lock via `zo-adam lint --write-lock` is a CI error.
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+use crate::util::hash::fnv1a;
+
+/// "ZCK1" — first bytes of every checkpoint shard.
+pub const CKPT_MAGIC: u32 = 0x5A43_4B31;
+/// Checkpoint shard format version; bumped on any layout change.
+pub const CKPT_VERSION: u16 = 1;
+/// Run-manifest JSON schema version; bumped on any schema change.
+pub const MANIFEST_SCHEMA: u32 = 1;
+
+/// Fixed shard header size (magic + version + rank + step + body_len).
+pub const SHARD_HEADER_BYTES: usize = 26;
+/// Name of the manifest file inside a checkpoint directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// File name of rank `r`'s shard.
+pub fn shard_name(rank: usize) -> String {
+    format!("rank{rank}.ckpt")
+}
+
+/// Everything that can go wrong writing, reading or applying a
+/// checkpoint — all typed, all naming the offending shard or field.
+/// Loading never panics and never silently accepts damaged state.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Filesystem failure (path + OS error text).
+    Io { path: String, err: String },
+    /// The shard (or manifest) named was not found in the directory.
+    MissingShard { shard: String },
+    /// Shard file shorter than header + digest trailer.
+    Truncated { shard: String },
+    /// First 4 bytes were not the checkpoint magic.
+    BadMagic { shard: String, got: u32 },
+    /// Shard format version this build does not speak.
+    BadVersion { shard: String, got: u16 },
+    /// The shard's own trailing digest disagrees with its contents.
+    DigestMismatch { shard: String, want: u64, got: u64 },
+    /// The manifest's recorded digest for this shard disagrees with
+    /// the file on disk (the cross-file integrity layer).
+    ShardDigestMismatch { shard: String, want: u64, got: u64 },
+    /// The state body ended early / a field failed to decode.
+    Decode { shard: String, detail: String },
+    /// Manifest file malformed (JSON or required fields).
+    Manifest { detail: String },
+    /// The manifest's self-digest disagrees with its contents.
+    ManifestDigest { want: u64, got: u64 },
+    /// Manifest written by a different schema version.
+    SchemaMismatch { got: u32 },
+    /// Run-spec fingerprint in the manifest disagrees with the spec
+    /// this process was launched with (different family/d/steps/seed/
+    /// topology — the same check the Hello handshake enforces).
+    SpecMismatch { want: u64, got: u64 },
+    /// World size recorded in the manifest disagrees with this launch.
+    WorldMismatch { want: usize, got: usize },
+    /// Topology recorded in the manifest disagrees with this launch.
+    TopologyMismatch { want: String, got: String },
+    /// Optimizer family recorded in the manifest disagrees.
+    FamilyMismatch { want: String, got: String },
+    /// Shard layout ("single" vs "per-rank") disagrees with how this
+    /// process deploys (a local run cannot resume a per-rank TCP
+    /// checkpoint and vice versa).
+    LayoutMismatch { want: String, got: String },
+    /// Shard step stamp disagrees with the manifest's step.
+    StepMismatch { manifest: u64, shard: u64 },
+    /// Decoded state disagrees with the live structure it must restore
+    /// into (wrong tensor length, wrong optimizer tag, wrong lane
+    /// count…).
+    StateMismatch { detail: String },
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use CheckpointError::*;
+        match self {
+            Io { path, err } => write!(f, "checkpoint I/O error at {path}: {err}"),
+            MissingShard { shard } => write!(f, "checkpoint shard {shard} not found"),
+            Truncated { shard } => write!(f, "checkpoint shard {shard} is truncated"),
+            BadMagic { shard, got } => write!(
+                f,
+                "shard {shard}: bad checkpoint magic {got:#010x} (want {CKPT_MAGIC:#010x})"
+            ),
+            BadVersion { shard, got } => write!(
+                f,
+                "shard {shard}: checkpoint format version {got} (this build speaks {CKPT_VERSION})"
+            ),
+            DigestMismatch { shard, want, got } => write!(
+                f,
+                "shard {shard}: digest mismatch (stored {want:#018x}, computed {got:#018x}) — file corrupted"
+            ),
+            ShardDigestMismatch { shard, want, got } => write!(
+                f,
+                "shard {shard}: manifest records digest {want:#018x}, file hashes to {got:#018x} — shard does not match its manifest"
+            ),
+            Decode { shard, detail } => write!(f, "shard {shard}: state decode failed: {detail}"),
+            Manifest { detail } => write!(f, "run manifest malformed: {detail}"),
+            ManifestDigest { want, got } => write!(
+                f,
+                "run manifest self-digest mismatch (stored {want:#018x}, computed {got:#018x}) — manifest corrupted"
+            ),
+            SchemaMismatch { got } => write!(
+                f,
+                "run manifest schema {got} (this build speaks {MANIFEST_SCHEMA})"
+            ),
+            SpecMismatch { want, got } => write!(
+                f,
+                "run-spec fingerprint mismatch: this launch runs {want:#018x}, checkpoint was written by {got:#018x} (different family/d/steps/seed/topology?)"
+            ),
+            WorldMismatch { want, got } => write!(
+                f,
+                "world size mismatch: this launch has {want} ranks, checkpoint was written by {got}"
+            ),
+            TopologyMismatch { want, got } => write!(
+                f,
+                "topology mismatch: this launch reduces over '{want}', checkpoint was written under '{got}'"
+            ),
+            FamilyMismatch { want, got } => write!(
+                f,
+                "optimizer family mismatch: this launch runs '{want}', checkpoint holds '{got}' state"
+            ),
+            LayoutMismatch { want, got } => write!(
+                f,
+                "shard layout mismatch: this deployment loads '{want}' checkpoints, directory holds '{got}'"
+            ),
+            StepMismatch { manifest, shard } => write!(
+                f,
+                "step mismatch: manifest says step {manifest}, shard is stamped step {shard}"
+            ),
+            StateMismatch { detail } => write!(f, "restored state mismatch: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+/// The run metadata a checkpoint must match before any state loads:
+/// the spec fingerprint (same FNV the Hello handshake carries) plus
+/// the human-readable fields a mismatch error should name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunMeta {
+    pub fingerprint: u64,
+    pub family: String,
+    pub d: usize,
+    pub steps: u64,
+    pub world: usize,
+    pub topology: String,
+}
+
+/// Checkpointing policy for one run: where shards go, how often they
+/// are cut, and whether to resume from `dir` before stepping.
+#[derive(Debug, Clone)]
+pub struct CheckpointCfg {
+    /// Directory shards + manifest live in.
+    pub dir: String,
+    /// Save after every step t with `(t + 1) % every == 0` (0 = never
+    /// save; useful for resume-only runs).
+    pub every: u64,
+    /// Load state from `dir` before the first step.
+    pub resume: bool,
+    /// The spec this run was launched with; verified against the
+    /// manifest on resume, recorded into the manifest on save.
+    pub meta: RunMeta,
+}
+
+// ---------------------------------------------------------------------
+// State stream: a length-prefixed, little-endian byte stream each layer
+// appends its fields to in a fixed order. No self-description beyond
+// slice lengths — the reader is the same code at the same version, and
+// the digest + version gates above guarantee that.
+// ---------------------------------------------------------------------
+
+/// Serializer half of the snapshot contract.
+#[derive(Debug, Default)]
+pub struct StateWriter {
+    buf: Vec<u8>,
+}
+
+impl StateWriter {
+    pub fn new() -> StateWriter {
+        StateWriter { buf: Vec::new() }
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed f32 slice (bit-exact: raw IEEE bits).
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed f64 slice (bit-exact: raw IEEE bits).
+    pub fn put_f64s(&mut self, v: &[f64]) {
+        self.put_u64(v.len() as u64);
+        self.buf.reserve(v.len() * 8);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+}
+
+/// Deserializer half: every take is bounds-checked and returns a typed
+/// error naming the shard — a truncated or over-long stream can never
+/// half-apply.
+pub struct StateReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    shard: String,
+}
+
+impl<'a> StateReader<'a> {
+    pub fn new(buf: &'a [u8], shard: &str) -> StateReader<'a> {
+        StateReader { buf, pos: 0, shard: shard.to_string() }
+    }
+
+    fn short(&self, what: &str) -> CheckpointError {
+        CheckpointError::Decode {
+            shard: self.shard.clone(),
+            detail: format!("stream ended reading {what} at byte {}", self.pos),
+        }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], CheckpointError> {
+        if self.buf.len() - self.pos < n {
+            return Err(self.short(what));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8, CheckpointError> {
+        Ok(self.take(1, "u8")?[0])
+    }
+
+    pub fn take_bool(&mut self) -> Result<bool, CheckpointError> {
+        match self.take_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(CheckpointError::Decode {
+                shard: self.shard.clone(),
+                detail: format!("bool byte {b} at byte {}", self.pos - 1),
+            }),
+        }
+    }
+
+    pub fn take_u32(&mut self) -> Result<u32, CheckpointError> {
+        let b = self.take(4, "u32")?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64, CheckpointError> {
+        let b = self.take(8, "u64")?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn take_f32(&mut self) -> Result<f32, CheckpointError> {
+        Ok(f32::from_bits(self.take_u32()?))
+    }
+
+    pub fn take_f64(&mut self) -> Result<f64, CheckpointError> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    pub fn take_str(&mut self) -> Result<String, CheckpointError> {
+        let n = self.take_u64()? as usize;
+        let b = self.take(n, "str")?;
+        String::from_utf8(b.to_vec()).map_err(|_| CheckpointError::Decode {
+            shard: self.shard.clone(),
+            detail: format!("non-utf8 string at byte {}", self.pos - n),
+        })
+    }
+
+    /// Read a string and require it to equal `want` — the cheap tag
+    /// gate every layer opens with, so a misaligned stream fails on
+    /// the tag instead of misinterpreting floats.
+    pub fn expect_tag(&mut self, want: &str) -> Result<(), CheckpointError> {
+        let got = self.take_str()?;
+        if got != want {
+            return Err(CheckpointError::StateMismatch {
+                detail: format!("state tag '{got}' where '{want}' belongs (shard {})", self.shard),
+            });
+        }
+        Ok(())
+    }
+
+    /// Variable-length f32 slice (allocates).
+    pub fn take_f32s(&mut self) -> Result<Vec<f32>, CheckpointError> {
+        let n = self.take_u64()? as usize;
+        if self.buf.len() - self.pos < n * 4 {
+            return Err(self.short("f32 slice"));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.take_f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Fixed-length f32 slice restored in place: the stored length must
+    /// equal `dst.len()` (the live structure's shape wins — a wrong-d
+    /// checkpoint is a typed error, not a resize).
+    pub fn take_f32s_exact(&mut self, dst: &mut [f32]) -> Result<(), CheckpointError> {
+        let n = self.take_u64()? as usize;
+        if n != dst.len() {
+            return Err(CheckpointError::StateMismatch {
+                detail: format!(
+                    "tensor length {n} in shard {} where the live structure holds {}",
+                    self.shard,
+                    dst.len()
+                ),
+            });
+        }
+        for slot in dst.iter_mut() {
+            *slot = self.take_f32()?;
+        }
+        Ok(())
+    }
+
+    pub fn take_f64s(&mut self) -> Result<Vec<f64>, CheckpointError> {
+        let n = self.take_u64()? as usize;
+        if self.buf.len() - self.pos < n * 8 {
+            return Err(self.short("f64 slice"));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.take_f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Require the stream to be fully consumed — trailing bytes mean
+    /// writer and reader disagree about the layout, which is exactly
+    /// the silent-drift case this contract exists to catch.
+    pub fn finish(self) -> Result<(), CheckpointError> {
+        if self.pos != self.buf.len() {
+            return Err(CheckpointError::Decode {
+                shard: self.shard,
+                detail: format!("{} trailing bytes after the last field", self.buf.len() - self.pos),
+            });
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shard files
+// ---------------------------------------------------------------------
+
+/// What `write_shard` produced — the fields the run manifest records.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardInfo {
+    pub file: String,
+    pub bytes: u64,
+    /// FNV-1a over the complete file (header + body + trailer).
+    pub digest: u64,
+}
+
+fn io_err(path: &Path, e: std::io::Error) -> CheckpointError {
+    CheckpointError::Io { path: path.display().to_string(), err: e.to_string() }
+}
+
+/// Assemble one shard's complete file bytes (header, body, digest
+/// trailer) — pure, for tests and for `write_shard`.
+pub fn build_shard(rank: usize, step: u64, body: &[u8]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(SHARD_HEADER_BYTES + body.len() + 8);
+    bytes.extend_from_slice(&CKPT_MAGIC.to_le_bytes());
+    bytes.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+    bytes.extend_from_slice(&(rank as u32).to_le_bytes());
+    bytes.extend_from_slice(&step.to_le_bytes());
+    bytes.extend_from_slice(&(body.len() as u64).to_le_bytes());
+    bytes.extend_from_slice(body);
+    let digest = fnv1a(&bytes);
+    bytes.extend_from_slice(&digest.to_le_bytes());
+    bytes
+}
+
+/// Write rank `rank`'s shard atomically (tmp + rename) into `dir`,
+/// creating the directory if needed.
+pub fn write_shard(
+    dir: &str,
+    rank: usize,
+    step: u64,
+    body: &[u8],
+) -> Result<ShardInfo, CheckpointError> {
+    let dirp = Path::new(dir);
+    fs::create_dir_all(dirp).map_err(|e| io_err(dirp, e))?;
+    let bytes = build_shard(rank, step, body);
+    let name = shard_name(rank);
+    let tmp = dirp.join(format!("{name}.tmp"));
+    let dst = dirp.join(&name);
+    fs::write(&tmp, &bytes).map_err(|e| io_err(&tmp, e))?;
+    fs::rename(&tmp, &dst).map_err(|e| io_err(&dst, e))?;
+    Ok(ShardInfo { file: name, bytes: bytes.len() as u64, digest: fnv1a(&bytes) })
+}
+
+/// Parse and fully verify one shard's file bytes: structure first
+/// (magic, version, rank stamp, body length), then the trailing digest
+/// over everything. Returns the step stamp and the state body.
+pub fn parse_shard(shard: &str, rank: usize, bytes: &[u8]) -> Result<(u64, Vec<u8>), CheckpointError> {
+    if bytes.len() < SHARD_HEADER_BYTES + 8 {
+        return Err(CheckpointError::Truncated { shard: shard.to_string() });
+    }
+    let magic = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+    if magic != CKPT_MAGIC {
+        return Err(CheckpointError::BadMagic { shard: shard.to_string(), got: magic });
+    }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if version != CKPT_VERSION {
+        return Err(CheckpointError::BadVersion { shard: shard.to_string(), got: version });
+    }
+    let stamped_rank = u32::from_le_bytes([bytes[6], bytes[7], bytes[8], bytes[9]]);
+    if stamped_rank != rank as u32 {
+        return Err(CheckpointError::Decode {
+            shard: shard.to_string(),
+            detail: format!("shard stamped rank {stamped_rank}, expected rank {rank}"),
+        });
+    }
+    let step = u64::from_le_bytes(bytes[10..18].try_into().expect("8 bytes"));
+    let body_len = u64::from_le_bytes(bytes[18..26].try_into().expect("8 bytes")) as usize;
+    if bytes.len() != SHARD_HEADER_BYTES + body_len + 8 {
+        return Err(CheckpointError::Truncated { shard: shard.to_string() });
+    }
+    let (data, tail) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().expect("8 bytes"));
+    let got = fnv1a(data);
+    if want != got {
+        return Err(CheckpointError::DigestMismatch { shard: shard.to_string(), want, got });
+    }
+    Ok((step, data[SHARD_HEADER_BYTES..].to_vec()))
+}
+
+/// Read rank `rank`'s shard from `dir` and verify it. If `want_digest`
+/// is given (the manifest's record), the whole-file hash must match it
+/// *before* the internal structure is even examined.
+pub fn read_shard(
+    dir: &str,
+    rank: usize,
+    want_digest: Option<u64>,
+) -> Result<(u64, Vec<u8>), CheckpointError> {
+    let shard = shard_name(rank);
+    let path = Path::new(dir).join(&shard);
+    let bytes = match fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Err(CheckpointError::MissingShard { shard });
+        }
+        Err(e) => return Err(io_err(&path, e)),
+    };
+    if let Some(want) = want_digest {
+        let got = fnv1a(&bytes);
+        if got != want {
+            return Err(CheckpointError::ShardDigestMismatch { shard, want, got });
+        }
+    }
+    parse_shard(&shard, rank, &bytes)
+}
+
+/// Hash a shard file on disk into a manifest entry (the root does this
+/// for every rank's shard after the save barrier).
+pub fn shard_info(dir: &str, rank: usize) -> Result<ShardInfo, CheckpointError> {
+    let name = shard_name(rank);
+    let path = Path::new(dir).join(&name);
+    let bytes = match fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Err(CheckpointError::MissingShard { shard: name });
+        }
+        Err(e) => return Err(io_err(&path, e)),
+    };
+    Ok(ShardInfo { file: name, bytes: bytes.len() as u64, digest: fnv1a(&bytes) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_stream_roundtrip() {
+        let mut w = StateWriter::new();
+        w.put_str("layer");
+        w.put_u64(42);
+        w.put_bool(true);
+        w.put_f32(1.5);
+        w.put_f64(-0.125);
+        w.put_f32s(&[1.0, -2.0, f32::MIN_POSITIVE]);
+        w.put_f64s(&[3.25]);
+        let mut r = StateReader::new(w.bytes(), "t");
+        r.expect_tag("layer").unwrap();
+        assert_eq!(r.take_u64().unwrap(), 42);
+        assert!(r.take_bool().unwrap());
+        assert_eq!(r.take_f32().unwrap().to_bits(), 1.5f32.to_bits());
+        assert_eq!(r.take_f64().unwrap().to_bits(), (-0.125f64).to_bits());
+        let mut dst = [0.0f32; 3];
+        r.take_f32s_exact(&mut dst).unwrap();
+        assert_eq!(dst[2].to_bits(), f32::MIN_POSITIVE.to_bits());
+        assert_eq!(r.take_f64s().unwrap(), vec![3.25]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn reader_catches_misuse_typed() {
+        let mut w = StateWriter::new();
+        w.put_str("tag");
+        w.put_u32(7);
+        // wrong tag
+        let mut r = StateReader::new(w.bytes(), "s");
+        assert!(matches!(
+            r.expect_tag("other"),
+            Err(CheckpointError::StateMismatch { .. })
+        ));
+        // short read
+        let mut r = StateReader::new(w.bytes(), "s");
+        r.expect_tag("tag").unwrap();
+        assert!(matches!(r.take_u64(), Err(CheckpointError::Decode { .. })));
+        // trailing bytes
+        let mut r = StateReader::new(w.bytes(), "s");
+        r.expect_tag("tag").unwrap();
+        assert!(matches!(r.finish(), Err(CheckpointError::Decode { .. })));
+        // wrong tensor length
+        let mut w = StateWriter::new();
+        w.put_f32s(&[1.0, 2.0]);
+        let mut r = StateReader::new(w.bytes(), "s");
+        let mut dst = [0.0f32; 3];
+        assert!(matches!(
+            r.take_f32s_exact(&mut dst),
+            Err(CheckpointError::StateMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn shard_roundtrip_and_every_flip_detected() {
+        let body: Vec<u8> = (0..123u8).collect();
+        let bytes = build_shard(3, 17, &body);
+        let (step, got) = parse_shard("rank3.ckpt", 3, &bytes).unwrap();
+        assert_eq!(step, 17);
+        assert_eq!(got, body);
+        // every single-byte flip anywhere in the file is a typed error
+        let mut mutated = bytes.clone();
+        for i in 0..mutated.len() {
+            mutated[i] ^= 0x40;
+            assert!(
+                parse_shard("rank3.ckpt", 3, &mutated).is_err(),
+                "flip at byte {i} slipped through"
+            );
+            mutated[i] ^= 0x40;
+        }
+        // and the specific classes are typed, not just "some error"
+        let mut m = bytes.clone();
+        m[0] ^= 0xff; // magic
+        assert!(matches!(
+            parse_shard("rank3.ckpt", 3, &m),
+            Err(CheckpointError::BadMagic { .. })
+        ));
+        let mut m = bytes.clone();
+        let mid = SHARD_HEADER_BYTES + 5; // body byte
+        m[mid] ^= 0x01;
+        assert!(matches!(
+            parse_shard("rank3.ckpt", 3, &m),
+            Err(CheckpointError::DigestMismatch { .. })
+        ));
+        assert!(matches!(
+            parse_shard("rank3.ckpt", 3, &bytes[..10]),
+            Err(CheckpointError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn shard_files_write_and_read_back() {
+        let dir = std::env::temp_dir().join(format!("zo_ckpt_test_{}", std::process::id()));
+        let dir_s = dir.to_str().unwrap().to_string();
+        let _ = fs::remove_dir_all(&dir);
+        let info = write_shard(&dir_s, 1, 9, b"hello state").unwrap();
+        assert_eq!(info.file, "rank1.ckpt");
+        let (step, body) = read_shard(&dir_s, 1, Some(info.digest)).unwrap();
+        assert_eq!(step, 9);
+        assert_eq!(body, b"hello state");
+        // wrong manifest digest → the cross-file typed error
+        assert!(matches!(
+            read_shard(&dir_s, 1, Some(info.digest ^ 1)),
+            Err(CheckpointError::ShardDigestMismatch { .. })
+        ));
+        // absent rank → MissingShard
+        assert!(matches!(
+            read_shard(&dir_s, 2, None),
+            Err(CheckpointError::MissingShard { .. })
+        ));
+        // shard_info agrees with what write_shard reported
+        assert_eq!(shard_info(&dir_s, 1).unwrap(), info);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -265,6 +265,298 @@ fn parse_model(name: &str, j: &Json) -> Result<ModelEntry> {
     })
 }
 
+// ---------------------------------------------------------------------
+// Run manifests (ISSUE 10): the versioned JSON description of one
+// checkpointed training run — spec fingerprint, topology, chunk
+// constants, shard layout, and a digest per shard — plus a self-digest
+// so the manifest itself cannot be silently edited. Hashes are hex
+// strings, never JSON numbers: the parser stores numbers as f64 and a
+// u64 digest does not survive that round trip.
+// ---------------------------------------------------------------------
+
+use crate::comm::allreduce::SERVER_CHUNK;
+use crate::comm::compress::CODEC_CHUNK;
+use crate::runtime::checkpoint::{
+    shard_name, CheckpointError, RunMeta, ShardInfo, MANIFEST_FILE, MANIFEST_SCHEMA,
+};
+use crate::util::hash::fnv1a;
+
+/// One shard recorded in a run manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardEntry {
+    pub file: String,
+    pub bytes: u64,
+    /// FNV-1a over the shard's complete file bytes.
+    pub digest: u64,
+}
+
+impl From<ShardInfo> for ShardEntry {
+    fn from(i: ShardInfo) -> ShardEntry {
+        ShardEntry { file: i.file, bytes: i.bytes, digest: i.digest }
+    }
+}
+
+/// The versioned description of one checkpointed run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunManifest {
+    pub schema: u32,
+    /// Steps completed when this checkpoint was cut (resume starts here).
+    pub step: u64,
+    pub meta: RunMeta,
+    /// Codec/server chunk constants baked into the writing build — the
+    /// same values `wire.lock` pins; recorded so a migrated run can
+    /// prove the bytes were produced under the same chunking.
+    pub codec_chunk: usize,
+    pub server_chunk: usize,
+    /// `"single"` (local trainer: one shard holds everything) or
+    /// `"per-rank"` (distributed: one shard per rank).
+    pub layout: String,
+    pub shards: Vec<ShardEntry>,
+}
+
+fn hex_u64(v: u64) -> String {
+    format!("{v:#018x}")
+}
+
+fn parse_hex(s: &str) -> Option<u64> {
+    u64::from_str_radix(s.strip_prefix("0x")?, 16).ok()
+}
+
+impl RunManifest {
+    /// Build the manifest for a fresh save.
+    pub fn new(step: u64, meta: RunMeta, layout: &str, shards: Vec<ShardEntry>) -> RunManifest {
+        RunManifest {
+            schema: MANIFEST_SCHEMA,
+            step,
+            meta,
+            codec_chunk: CODEC_CHUNK,
+            server_chunk: SERVER_CHUNK,
+            layout: layout.to_string(),
+            shards,
+        }
+    }
+
+    /// The JSON body *without* the self-digest key — the exact bytes
+    /// (compact form) the self-digest covers.
+    fn to_json_undigested(&self) -> Json {
+        let shards = self
+            .shards
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("file", Json::Str(s.file.clone())),
+                    ("bytes", Json::Num(s.bytes as f64)),
+                    ("digest", Json::Str(hex_u64(s.digest))),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Num(self.schema as f64)),
+            ("step", Json::Num(self.step as f64)),
+            ("fingerprint", Json::Str(hex_u64(self.meta.fingerprint))),
+            ("family", Json::Str(self.meta.family.clone())),
+            ("d", Json::Num(self.meta.d as f64)),
+            ("steps", Json::Num(self.meta.steps as f64)),
+            ("world", Json::Num(self.meta.world as f64)),
+            ("topology", Json::Str(self.meta.topology.clone())),
+            ("codec_chunk", Json::Num(self.codec_chunk as f64)),
+            ("server_chunk", Json::Num(self.server_chunk as f64)),
+            ("layout", Json::Str(self.layout.clone())),
+            ("shards", Json::Arr(shards)),
+        ])
+    }
+
+    /// Render the manifest text: pretty JSON with the self-digest
+    /// (FNV-1a over the compact undigested form) as the last key.
+    pub fn render(&self) -> String {
+        let undigested = self.to_json_undigested();
+        let digest = fnv1a(undigested.to_string_compact().as_bytes());
+        let mut j = undigested;
+        j.push("digest", Json::Str(hex_u64(digest)));
+        let mut text = j.to_string_pretty();
+        text.push('\n');
+        text
+    }
+
+    /// Parse + verify manifest text: JSON shape, schema version, and
+    /// the self-digest (recomputed over the compact form with the
+    /// digest key removed — any edited field changes it).
+    pub fn parse(text: &str) -> Result<RunManifest, CheckpointError> {
+        let bad = |detail: String| CheckpointError::Manifest { detail };
+        let j = Json::parse(text).map_err(|e| bad(format!("{e}")))?;
+        let entries = j.as_obj().ok_or_else(|| bad("not a JSON object".into()))?;
+        let undigested = Json::Obj(
+            entries.iter().filter(|(k, _)| k != "digest").cloned().collect(),
+        );
+        let want = j
+            .get("digest")
+            .and_then(Json::as_str)
+            .and_then(parse_hex)
+            .ok_or_else(|| bad("missing or malformed self-digest".into()))?;
+        let got = fnv1a(undigested.to_string_compact().as_bytes());
+        if want != got {
+            return Err(CheckpointError::ManifestDigest { want, got });
+        }
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad("missing schema".into()))? as u32;
+        if schema != MANIFEST_SCHEMA {
+            return Err(CheckpointError::SchemaMismatch { got: schema });
+        }
+        let req_num = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bad(format!("missing numeric key '{key}'")))
+        };
+        let req_str = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| bad(format!("missing string key '{key}'")))
+        };
+        let fingerprint = j
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .and_then(parse_hex)
+            .ok_or_else(|| bad("missing or malformed fingerprint".into()))?;
+        let mut shards = Vec::new();
+        for s in j
+            .get("shards")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("missing shards array".into()))?
+        {
+            shards.push(ShardEntry {
+                file: s
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("shard entry missing file".into()))?
+                    .to_string(),
+                bytes: s
+                    .get("bytes")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| bad("shard entry missing bytes".into()))? as u64,
+                digest: s
+                    .get("digest")
+                    .and_then(Json::as_str)
+                    .and_then(parse_hex)
+                    .ok_or_else(|| bad("shard entry missing digest".into()))?,
+            });
+        }
+        Ok(RunManifest {
+            schema,
+            step: req_num("step")? as u64,
+            meta: RunMeta {
+                fingerprint,
+                family: req_str("family")?,
+                d: req_num("d")? as usize,
+                steps: req_num("steps")? as u64,
+                world: req_num("world")? as usize,
+                topology: req_str("topology")?,
+            },
+            codec_chunk: req_num("codec_chunk")? as usize,
+            server_chunk: req_num("server_chunk")? as usize,
+            layout: req_str("layout")?,
+            shards,
+        })
+    }
+
+    /// Write atomically (tmp + rename) into `dir/manifest.json`.
+    pub fn write(&self, dir: &str) -> Result<(), CheckpointError> {
+        let dirp = Path::new(dir);
+        let io = |p: &Path, e: std::io::Error| CheckpointError::Io {
+            path: p.display().to_string(),
+            err: e.to_string(),
+        };
+        std::fs::create_dir_all(dirp).map_err(|e| io(dirp, e))?;
+        let tmp = dirp.join(format!("{MANIFEST_FILE}.tmp"));
+        let dst = dirp.join(MANIFEST_FILE);
+        std::fs::write(&tmp, self.render()).map_err(|e| io(&tmp, e))?;
+        std::fs::rename(&tmp, &dst).map_err(|e| io(&dst, e))?;
+        Ok(())
+    }
+
+    /// Load + verify `dir/manifest.json`.
+    pub fn load(dir: &str) -> Result<RunManifest, CheckpointError> {
+        let path = Path::new(dir).join(MANIFEST_FILE);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(CheckpointError::Manifest {
+                    detail: format!("{} not found (not a checkpoint directory?)", path.display()),
+                });
+            }
+            Err(e) => {
+                return Err(CheckpointError::Io {
+                    path: path.display().to_string(),
+                    err: e.to_string(),
+                });
+            }
+        };
+        Self::parse(&text)
+    }
+
+    /// Verify this manifest describes the run `want` is about to
+    /// resume: fingerprint first (the same gate the Hello handshake
+    /// applies), then the human-readable fields so a mismatch error
+    /// names what actually differs, then deployment shape.
+    pub fn check(
+        &self,
+        want: &RunMeta,
+        layout: &str,
+        shard_count: usize,
+    ) -> Result<(), CheckpointError> {
+        if self.meta.family != want.family {
+            return Err(CheckpointError::FamilyMismatch {
+                want: want.family.clone(),
+                got: self.meta.family.clone(),
+            });
+        }
+        if self.meta.topology != want.topology {
+            return Err(CheckpointError::TopologyMismatch {
+                want: want.topology.clone(),
+                got: self.meta.topology.clone(),
+            });
+        }
+        if self.meta.world != want.world {
+            return Err(CheckpointError::WorldMismatch {
+                want: want.world,
+                got: self.meta.world,
+            });
+        }
+        if self.meta.fingerprint != want.fingerprint {
+            return Err(CheckpointError::SpecMismatch {
+                want: want.fingerprint,
+                got: self.meta.fingerprint,
+            });
+        }
+        if self.layout != layout {
+            return Err(CheckpointError::LayoutMismatch {
+                want: layout.to_string(),
+                got: self.layout.clone(),
+            });
+        }
+        if self.shards.len() != shard_count {
+            return Err(CheckpointError::Manifest {
+                detail: format!(
+                    "manifest lists {} shards, deployment expects {shard_count}",
+                    self.shards.len()
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    /// The entry for rank `rank`'s shard.
+    pub fn shard(&self, rank: usize) -> Result<&ShardEntry, CheckpointError> {
+        let name = shard_name(rank);
+        self.shards
+            .iter()
+            .find(|s| s.file == name)
+            .ok_or(CheckpointError::MissingShard { shard: name })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -5,6 +5,7 @@
 //! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 
+pub mod checkpoint;
 pub mod manifest;
 
 use std::cell::RefCell;

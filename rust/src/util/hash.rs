@@ -1,0 +1,90 @@
+//! FNV-1a 64-bit hashing — the crate's one content-digest primitive.
+//!
+//! Used everywhere bytes must prove they arrived unchanged: the run-spec
+//! fingerprint in the Hello handshake, the per-frame payload checksum
+//! (`comm::transport::frame`), and the checkpoint shard + manifest
+//! digests (`runtime::checkpoint`). FNV-1a is deliberately simple: it
+//! is a *corruption* detector inside an already-trusted channel, not a
+//! cryptographic signature, and being a pure byte fold it is exactly
+//! reproducible across platforms — a requirement for digests that are
+//! pinned in manifests and compared bit-for-bit across processes.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a hasher: feed byte slices as they stream past,
+/// read the digest at any point (reading does not reset the state).
+#[derive(Debug, Clone)]
+pub struct Fnv64 {
+    h: u64,
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64 { h: FNV_OFFSET }
+    }
+
+    /// Fold `bytes` into the running digest.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.h;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.h = h;
+    }
+
+    /// The digest over everything fed so far.
+    pub fn digest(&self) -> u64 {
+        self.h
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+/// One-shot FNV-1a over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.digest()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn incremental_matches_one_shot() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let mut h = Fnv64::new();
+        for chunk in data.chunks(7) {
+            h.update(chunk);
+        }
+        assert_eq!(h.digest(), fnv1a(data));
+    }
+
+    #[test]
+    fn single_flipped_byte_changes_digest() {
+        let mut data = vec![0u8; 257];
+        let base = fnv1a(&data);
+        for i in 0..data.len() {
+            data[i] ^= 0x01;
+            assert_ne!(fnv1a(&data), base, "flip at {i} undetected");
+            data[i] ^= 0x01;
+        }
+    }
+}

@@ -1,6 +1,7 @@
 //! Self-contained utilities: JSON, CLI parsing, logging, timing.
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 
 use std::time::Instant;

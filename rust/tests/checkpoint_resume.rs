@@ -1,0 +1,319 @@
+//! ISSUE 10 acceptance: the checkpoint/resume contract end to end.
+//!
+//! * The run manifest round-trips through its JSON rendering and is
+//!   self-verifying — any edited byte flips the self-digest and the
+//!   load dies with a **typed** error, never a garbled resume.
+//! * Shard corruption is caught twice: the shard's own trailing digest
+//!   and the manifest's recorded cross-file digest.
+//! * A resume into a different spec (seed, family, world, topology)
+//!   dies typed at load, before any reduction traffic moves.
+//! * The core guarantee: save at step k, tear the whole group down,
+//!   resume in fresh processes — and the completed run is **bitwise
+//!   identical** to an uninterrupted one under [`check_parity`], for
+//!   plain Adam and 0/1 Adam, under star and tree schedules, over
+//!   in-proc channels and real loopback TCP.
+
+use zo_adam::comm::transport::tcp::Tcp;
+use zo_adam::comm::transport::RankLink;
+use zo_adam::comm::{Topology, SERVER_CHUNK};
+use zo_adam::coordinator::{
+    check_parity, launch_inproc_opts, run_local, run_rank_opts, DistSpec, ExecMode, RankOpts,
+};
+use zo_adam::runtime::checkpoint::{
+    read_shard, shard_name, write_shard, CheckpointError, RunMeta, SHARD_HEADER_BYTES,
+};
+use zo_adam::runtime::manifest::{RunManifest, ShardEntry};
+
+/// Fresh scratch directory under the OS temp dir; pid-stamped so
+/// parallel test binaries never collide.
+fn scratch(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("zo_ckpt_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir.to_str().expect("utf8 temp path").to_string()
+}
+
+fn spec(family: &str, topology: Topology) -> DistSpec {
+    DistSpec {
+        family: family.to_string(),
+        // spans two codec chunks off the 64-bit words: the chunked
+        // server leg and ragged sign words both cross the cut point
+        d: SERVER_CHUNK + 321,
+        steps: 12,
+        world: 4,
+        seed: 7,
+        lr: 0.01,
+        kappa: 4.0,
+        sigma: 0.15,
+        init: 0.8,
+        topology,
+    }
+}
+
+fn meta(fingerprint: u64) -> RunMeta {
+    RunMeta {
+        fingerprint,
+        family: "01adam".to_string(),
+        d: 4417,
+        steps: 12,
+        world: 4,
+        topology: "tree2".to_string(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Manifest golden round-trip
+// ---------------------------------------------------------------------
+
+#[test]
+fn manifest_round_trips_and_is_self_verifying() {
+    let shards = vec![
+        ShardEntry { file: shard_name(0), bytes: 1234, digest: 0x0011_2233_4455_6677 },
+        ShardEntry { file: shard_name(1), bytes: 1234, digest: 0x8899_aabb_ccdd_eeff },
+    ];
+    let man = RunManifest::new(10, meta(0xdead_beef_cafe_f00d), "per-rank", shards);
+    let text = man.render();
+
+    // Golden structure: versioned, hex-pinned u64s, self-digest last.
+    assert!(text.contains("\"schema\""), "{text}");
+    assert!(text.contains("0xdeadbeefcafef00d"), "{text}");
+    assert!(text.contains("0x8899aabbccddeeff"), "{text}");
+    assert!(text.trim_end().ends_with('}'), "{text}");
+
+    let back = RunManifest::parse(&text).expect("round trip parses");
+    assert_eq!(back, man);
+    // Rendering is a pure function of the content: re-render is stable.
+    assert_eq!(back.render(), text);
+
+    // check() accepts its own metadata...
+    back.check(&meta(0xdead_beef_cafe_f00d), "per-rank", 2).expect("self-check");
+    // ...and rejects every mismatched field with the *named* error.
+    let other = meta(0x1111_1111_1111_1111);
+    assert!(matches!(
+        back.check(&other, "per-rank", 2),
+        Err(CheckpointError::SpecMismatch { .. })
+    ));
+    let mut fam = meta(0xdead_beef_cafe_f00d);
+    fam.family = "adam".to_string();
+    assert!(matches!(
+        back.check(&fam, "per-rank", 2),
+        Err(CheckpointError::FamilyMismatch { .. })
+    ));
+    assert!(matches!(
+        back.check(&meta(0xdead_beef_cafe_f00d), "single", 1),
+        Err(CheckpointError::LayoutMismatch { .. })
+    ));
+}
+
+#[test]
+fn edited_manifest_text_fails_typed() {
+    let dir = scratch("manifest_edit");
+    let info = write_shard(&dir, 0, 5, b"some optimizer state").expect("write shard");
+    RunManifest::new(5, meta(0x42), "per-rank", vec![info.into()]).write(&dir).expect("write");
+
+    let path = format!("{dir}/manifest.json");
+    let text = std::fs::read_to_string(&path).expect("read manifest");
+
+    // A one-token edit (layout string) flips the self-digest.
+    std::fs::write(&path, text.replace("per-rank", "per-rankX")).expect("tamper");
+    match RunManifest::load(&dir) {
+        Err(CheckpointError::ManifestDigest { want, got }) => assert_ne!(want, got),
+        other => panic!("want ManifestDigest, got {other:?}"),
+    }
+
+    // Outright garbage is a typed Manifest error, not a panic.
+    std::fs::write(&path, "not json at all").expect("garbage");
+    assert!(matches!(
+        RunManifest::load(&dir),
+        Err(CheckpointError::Manifest { .. })
+    ));
+
+    // A directory with no manifest says so.
+    std::fs::remove_file(&path).expect("rm manifest");
+    match RunManifest::load(&dir) {
+        Err(CheckpointError::Manifest { detail }) => {
+            assert!(detail.contains("not found"), "{detail}");
+        }
+        other => panic!("want Manifest(not found), got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Shard corruption
+// ---------------------------------------------------------------------
+
+#[test]
+fn flipped_shard_byte_fails_typed_at_both_layers() {
+    let dir = scratch("shard_flip");
+    let body: Vec<u8> = (0..257u32).map(|i| (i * 7) as u8).collect();
+    let info = write_shard(&dir, 0, 9, &body).expect("write shard");
+
+    // Pristine file reads back exactly.
+    let (step, got) = read_shard(&dir, 0, Some(info.digest)).expect("clean read");
+    assert_eq!(step, 9);
+    assert_eq!(got, body);
+
+    // Flip one bit inside the state body.
+    let path = format!("{}/{}", dir, shard_name(0));
+    let mut bytes = std::fs::read(&path).expect("read file");
+    bytes[SHARD_HEADER_BYTES + 42] ^= 0x04;
+    std::fs::write(&path, &bytes).expect("corrupt");
+
+    // Layer 1: the manifest's recorded digest for the shard.
+    match read_shard(&dir, 0, Some(info.digest)) {
+        Err(CheckpointError::ShardDigestMismatch { shard, want, got }) => {
+            assert_eq!(shard, shard_name(0));
+            assert_eq!(want, info.digest);
+            assert_ne!(want, got);
+        }
+        other => panic!("want ShardDigestMismatch, got {other:?}"),
+    }
+    // Layer 2: the shard's own trailing digest, with no manifest at all.
+    assert!(matches!(
+        read_shard(&dir, 0, None),
+        Err(CheckpointError::DigestMismatch { .. })
+    ));
+
+    // Truncation and a stomped magic are their own errors.
+    std::fs::write(&path, &bytes[..SHARD_HEADER_BYTES - 1]).expect("truncate");
+    assert!(matches!(
+        read_shard(&dir, 0, None),
+        Err(CheckpointError::Truncated { .. })
+    ));
+    bytes[0] ^= 0xFF;
+    std::fs::write(&path, &bytes).expect("bad magic");
+    assert!(matches!(
+        read_shard(&dir, 0, None),
+        Err(CheckpointError::BadMagic { .. })
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Mismatched resume dies typed at load
+// ---------------------------------------------------------------------
+
+#[test]
+fn mismatched_spec_resume_dies_typed_before_traffic() {
+    let dir = scratch("mismatch");
+    let sp = spec("01adam", Topology::Star);
+    let save = RankOpts {
+        checkpoint_dir: Some(dir.clone()),
+        checkpoint_every: 5,
+        ..Default::default()
+    };
+    launch_inproc_opts(&sp, &save).expect("save run");
+
+    let resume = RankOpts { resume: Some(dir.clone()), ..Default::default() };
+    let expect_typed = |other: &DistSpec, needle: &str| {
+        let err = match launch_inproc_opts(other, &resume) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("{needle}: mismatched resume unexpectedly succeeded"),
+        };
+        assert!(err.contains("checkpoint error"), "{needle}: {err}");
+        assert!(err.contains(needle), "{err}");
+    };
+    // Same shape, different data seed → fingerprint gate.
+    expect_typed(&DistSpec { seed: sp.seed + 1, ..sp.clone() }, "fingerprint mismatch");
+    // Different optimizer family → named before the fingerprint diff.
+    expect_typed(&DistSpec { family: "adam".to_string(), ..sp.clone() }, "family mismatch");
+    // Different reduction schedule.
+    expect_typed(
+        &DistSpec { topology: Topology::Tree { group: 2 }, ..sp.clone() },
+        "topology mismatch",
+    );
+    // Different world size.
+    expect_typed(&DistSpec { world: 3, ..sp.clone() }, "world size mismatch");
+
+    // The matching spec still resumes fine after all those rejections.
+    launch_inproc_opts(&sp, &resume).expect("matching spec resumes");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Bitwise resume parity
+// ---------------------------------------------------------------------
+
+/// Save-at-10, resume-in-fresh-group, and the completed run must be
+/// bitwise the uninterrupted single-process reference: parameters,
+/// every per-step mean loss (restored prefix + resumed tail), final
+/// eval, and the ledger's round counts.
+#[test]
+fn inproc_resume_is_bitwise_for_star_and_tree() {
+    for family in ["adam", "01adam"] {
+        for topo in [Topology::Star, Topology::Tree { group: 2 }] {
+            let dir = scratch(&format!("parity_{family}_{topo}"));
+            let sp = spec(family, topo);
+            let save = RankOpts {
+                checkpoint_dir: Some(dir.clone()),
+                checkpoint_every: 5, // cuts at 5 and 10; manifest ends at 10
+                ..Default::default()
+            };
+            let full = launch_inproc_opts(&sp, &save)
+                .unwrap_or_else(|e| panic!("{family}/{topo} save run: {e}"));
+
+            // Fresh transports, fresh optimizers: steps 10..12 re-run
+            // from restored state (EF memory, RNG streams, ledger).
+            let resume = RankOpts { resume: Some(dir.clone()), ..Default::default() };
+            let resumed = launch_inproc_opts(&sp, &resume)
+                .unwrap_or_else(|e| panic!("{family}/{topo} resume run: {e}"));
+
+            let local = run_local(&sp, ExecMode::Sequential);
+            check_parity(&resumed[0], &local)
+                .unwrap_or_else(|e| panic!("{family}/{topo} resumed vs local: {e}"));
+
+            // And the resumed run is bitwise the uninterrupted
+            // *distributed* run too — checkpointing never feeds back.
+            for (a, b) in resumed[0].final_params.iter().zip(&full[0].final_params) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{family}/{topo}");
+            }
+            assert_eq!(resumed[0].losses.len(), full[0].losses.len(), "{family}/{topo}");
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn tcp_resume_is_bitwise_threaded4() {
+    let dir = scratch("tcp_parity");
+    let sp = spec("01adam", Topology::Star);
+
+    let run_group = |opts: &RankOpts| {
+        let group = Tcp::loopback_group(sp.world, sp.fingerprint())
+            .unwrap_or_else(|e| panic!("loopback group: {e}"));
+        let results: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = group
+                .into_iter()
+                .map(|tp| {
+                    let sp = &sp;
+                    s.spawn(move || {
+                        let mut link = RankLink::new(Box::new(tp));
+                        run_rank_opts(&mut link, sp, opts)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank thread").unwrap_or_else(|e| panic!("{e}")))
+                .collect()
+        });
+        results
+    };
+
+    // First life: real sockets, checkpoints at 5 and 10, then the
+    // whole group (sockets included) is torn down.
+    let save = RankOpts {
+        checkpoint_dir: Some(dir.clone()),
+        checkpoint_every: 5,
+        ..Default::default()
+    };
+    run_group(&save);
+
+    // Second life: brand-new sockets resume 10..12 from disk.
+    let resume = RankOpts { resume: Some(dir.clone()), ..Default::default() };
+    let results = run_group(&resume);
+
+    let local = run_local(&sp, ExecMode::Threaded(4));
+    check_parity(&results[0], &local).unwrap_or_else(|e| panic!("tcp resumed vs local: {e}"));
+    let _ = std::fs::remove_dir_all(&dir);
+}

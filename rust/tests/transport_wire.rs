@@ -133,6 +133,41 @@ fn prop_corrupted_headers_are_typed_errors() {
 }
 
 #[test]
+fn prop_corrupted_payloads_are_typed_errors() {
+    // Version 2 (ISSUE 10): the header stamps an FNV-1a over the
+    // payload; flipping ANY payload byte — or any stamped-digest byte —
+    // must surface as PayloadCorrupt, never as a silently wrong
+    // reduction.
+    property(120, |g: &mut Gen| {
+        let header = arbitrary_header(g);
+        let mut payload = arbitrary_payload(g);
+        if payload.is_empty() {
+            payload.push(g.u64_in(0..256) as u8);
+        }
+        let mut bytes = Vec::new();
+        encode_frame(header, &payload, &mut bytes);
+        let mut sink = Vec::new();
+
+        // flip one payload byte
+        let mut b = bytes.clone();
+        let i = HEADER_BYTES + g.usize_in(0..payload.len());
+        b[i] ^= 1 << g.usize_in(0..8);
+        assert!(matches!(
+            decode_frame(&b, &mut sink),
+            Err(TransportError::PayloadCorrupt { .. })
+        ));
+
+        // flip one stamped-digest byte (header bytes 36..44)
+        let mut b = bytes.clone();
+        b[36 + g.usize_in(0..8)] ^= 1 << g.usize_in(0..8);
+        assert!(matches!(
+            decode_frame(&b, &mut sink),
+            Err(TransportError::PayloadCorrupt { .. })
+        ));
+    });
+}
+
+#[test]
 fn prop_schedule_mismatches_are_typed_errors() {
     // FrameHeader::expect is the receiver-side schedule validator:
     // reordered seq, wrong sender, wrong dim, wrong chunk association
